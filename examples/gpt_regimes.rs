@@ -1,0 +1,54 @@
+//! GPT depth-vs-width demo (paper §4.2 "On the Importance of
+//! Inference-Awareness"): prune the SAME decoder for the same target
+//! under the throughput regime (big batches) and the latency regime
+//! (single short prompts) and print how differently ZipLM shapes the
+//! architecture — width shrinks in the former, depth in the latter.
+//!
+//!   cargo run --release --example gpt_regimes
+
+use anyhow::Result;
+use ziplm::data;
+use ziplm::eval::evaluate;
+use ziplm::latency;
+use ziplm::models::ModelState;
+use ziplm::pruner::{self, PruneCfg};
+use ziplm::runtime::Engine;
+use ziplm::train::{TrainCfg, Trainer};
+
+fn main() -> Result<()> {
+    let engine = Engine::open(std::path::Path::new("artifacts"))?;
+    let (model, task) = ("gpt-syn", "corpus-syn");
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 512, 128);
+
+    println!("== training dense GPT teacher ==");
+    let mut teacher = ModelState::init(&minfo, task, &tinfo, 0);
+    let mut trainer = Trainer::new(&engine, tinfo.n_params, None);
+    trainer.train(&mut teacher, &ds,
+        &TrainCfg { lr: 1e-3, epochs: 2.0, lambdas: [1.0, 0.0, 0.0], ..Default::default() })?;
+    let dense_ppl = evaluate(&engine, &teacher, &ds, "test")?.perplexity.unwrap();
+    println!("dense zero-shot PPL = {dense_ppl:.2}");
+
+    let target = 2.0;
+    for regime in ["throughput", "latency"] {
+        let table = latency::measure_cpu(&engine, model, regime, 10)?;
+        let mut st = teacher.clone();
+        let pcfg = PruneCfg { calib_samples: 64, spdy: pruner::SpdyCfgLite { iters: 40, seed: 7 }, ..Default::default() };
+        pruner::prune_to_target(&engine, &mut st, &ds, &table,
+            table.dense_time(minfo.n_layers), target, &pcfg)?;
+        // brief recovery (no KD for GPT, paper App. I)
+        let mut tr = Trainer::new(&engine, tinfo.n_params, None);
+        tr.train(&mut st, &ds, &TrainCfg { lr: 5e-4, epochs: 0.5, lambdas: [1.0, 0.0, 0.0], ..Default::default() })?;
+        let ppl = evaluate(&engine, &st, &ds, "test")?.perplexity.unwrap();
+        let anatomy = st.masks.summary();
+        let dropped = anatomy.iter().filter(|&&(h, f)| h == 0 && f == 0).count();
+        let mean_ffn: f64 = anatomy.iter().map(|&(_, f)| f as f64).sum::<f64>() / anatomy.len() as f64;
+        println!(
+            "\n[{regime}] {target}x: PPL {dense_ppl:.2} -> {ppl:.2}\n  per-layer (heads, ffn): {anatomy:?}\n  -> {dropped} modules fully dropped, mean ffn width {mean_ffn:.0}/{}",
+            minfo.d_ff
+        );
+    }
+    println!("\nExpected shape (paper Table 1): throughput regime keeps depth and\nshrinks width; latency regime keeps width and drops whole modules.");
+    Ok(())
+}

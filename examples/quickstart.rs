@@ -1,0 +1,49 @@
+//! Quickstart: load the AOT artifacts, train a small dense model for a
+//! few steps, one-shot prune it to 2x with ZipLM, and evaluate.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use ziplm::data;
+use ziplm::eval::evaluate;
+use ziplm::latency;
+use ziplm::models::ModelState;
+use ziplm::pruner::{self, PruneCfg};
+use ziplm::runtime::Engine;
+use ziplm::train::{TrainCfg, Trainer};
+
+fn main() -> Result<()> {
+    let engine = Engine::open(std::path::Path::new("artifacts"))?;
+    let (model, task) = ("bert-syn-base", "sst2-syn");
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    println!("model {model}: {} layers, d={}, {} heads, ffn={}, {} params",
+        minfo.n_layers, minfo.d_model, minfo.n_heads, minfo.d_ff, tinfo.n_params);
+
+    // 1. data + a briefly-trained dense model
+    let ds = data::load_sized(&minfo, task, 256, 128);
+    let mut state = ModelState::init(&minfo, task, &tinfo, 0);
+    let mut trainer = Trainer::new(&engine, tinfo.n_params, None);
+    let cfg = TrainCfg { lr: 1e-3, epochs: 2.0, lambdas: [1.0, 0.0, 0.0], ..Default::default() };
+    let loss = trainer.train(&mut state, &ds, &cfg)?;
+    let dense = evaluate(&engine, &state, &ds, "dev")?;
+    println!("dense: train_loss={loss:.3} dev_acc={:.3}", dense.metric);
+
+    // 2. measure the latency table on this machine (the paper's App. E)
+    let table = latency::measure_cpu(&engine, model, "throughput", 10)?;
+    println!("dense model latency estimate: {:.2} ms", table.dense_time(minfo.n_layers) * 1e3);
+
+    // 3. one-shot ZipLM prune to 2x
+    let mut pruned = state.clone();
+    let pcfg = PruneCfg { calib_samples: 64, spdy: pruner::SpdyCfgLite { iters: 20, seed: 7 }, ..Default::default() };
+    let report = pruner::prune_to_target(
+        &engine, &mut pruned, &ds, &table, table.dense_time(minfo.n_layers), 2.0, &pcfg)?;
+    let ev = evaluate(&engine, &pruned, &ds, "dev")?;
+    println!(
+        "ziplm 2x one-shot: est_speedup={:.2}x acc {:.3} -> {:.3}, per-layer (heads, ffn) = {:?}",
+        report.est_speedup, dense.metric, ev.metric, report.layer_profile
+    );
+    pruned.save(std::path::Path::new("runs/quickstart_2x.zlm"))?;
+    println!("saved runs/quickstart_2x.zlm — try: ziplm serve --ckpt runs/quickstart_2x.zlm");
+    Ok(())
+}

@@ -1,0 +1,273 @@
+"""AOT compiler: lowers every graph to HLO TEXT + writes the manifest.
+
+This is the ONLY entry point that runs Python; afterwards the Rust
+coordinator is self-contained. Interchange is HLO *text*, not
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts              # full build
+    python -m compile.aot --specialize spec.json --out d  # deployed model
+
+The manifest (artifacts/manifest.json) tells Rust everything: model
+configs, packed-parameter layouts, ladders, and per-artifact I/O
+signatures, so shapes are never duplicated by hand on the Rust side.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import blocks as BL
+from . import model as M
+from . import prune_graphs as PG
+from .configs import (CALIB_BATCH, EVAL_BATCH, MODELS, TASKS, TRAIN_BATCH,
+                      ffn_ladder, head_ladder, layout_offsets, n_params,
+                      param_layout)
+from .specialized import specialized_fwd
+
+F32, I32 = jnp.float32, jnp.int32
+
+# (model, task) pairs we train/prune — mirrors the paper's eval matrix.
+PAIRS = [
+    ("bert-syn-base", "sst2-syn"),
+    ("bert-syn-base", "qnli-syn"),
+    ("bert-syn-base", "mnli-syn"),
+    ("bert-syn-base", "qqp-syn"),
+    ("bert-syn-base", "squad-syn"),
+    ("bert-syn-large", "squad-syn"),
+    ("gpt-syn", "corpus-syn"),
+]
+
+# latency-table batch regimes (paper Sec. 4: throughput vs latency pruning)
+REGIMES = {"throughput": (16, None), "latency": (1, 16)}  # None -> model seq
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dt=F32):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def _sig(avals):
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": "i32" if a.dtype == jnp.int32 else "f32"})
+    return out
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        self.artifacts = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, meta=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        txt = to_hlo_text(lowered)
+        assert "custom-call" not in txt, f"{name}: custom-call leaked into HLO"
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(txt)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": _sig(in_specs),
+            "outputs": _sig(out_avals),
+            **(meta or {}),
+        }
+        print(f"  {name:56s} {len(txt)//1024:5d} KiB  {time.time()-t0:5.1f}s", flush=True)
+
+
+def emit_pair(em: Emitter, model_name: str, task_name: str):
+    cfg, task = MODELS[model_name], TASKS[task_name]
+    P = n_params(cfg, task)
+    L, H, F, SQ, D, V = cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.seq_len, cfg.d_model, cfg.vocab
+    pre = f"{model_name}__{task_name}"
+
+    if task.kind == "cls":
+        lab_e, lab_t = spec(EVAL_BATCH, dt=I32), spec(TRAIN_BATCH, dt=I32)
+        logits_t = spec(TRAIN_BATCH, task.n_classes)
+    elif task.kind == "span":
+        lab_e, lab_t = spec(EVAL_BATCH, dt=I32), spec(TRAIN_BATCH, dt=I32)
+        logits_t = spec(TRAIN_BATCH, SQ)
+    else:
+        lab_e, lab_t = spec(EVAL_BATCH, SQ, dt=I32), spec(TRAIN_BATCH, SQ, dt=I32)
+        logits_t = spec(TRAIN_BATCH, SQ, V)
+
+    em.emit(f"{pre}__fwd", functools.partial(M.fwd, cfg=cfg, task=task),
+            [spec(P), spec(EVAL_BATCH, SQ, dt=I32), spec(L, H), spec(L, F)])
+    em.emit(f"{pre}__eval_loss", functools.partial(M.eval_loss, cfg=cfg, task=task),
+            [spec(P), spec(EVAL_BATCH, SQ, dt=I32), lab_e, spec(L, H), spec(L, F)])
+    em.emit(f"{pre}__teacher_fwd", functools.partial(M.teacher_fwd, cfg=cfg, task=task),
+            [spec(P), spec(TRAIN_BATCH, SQ, dt=I32)])
+    em.emit(f"{pre}__train_step", functools.partial(M.train_step, cfg=cfg, task=task),
+            [spec(P), spec(P), spec(P), spec(), spec(),
+             spec(TRAIN_BATCH, SQ, dt=I32), lab_t, spec(L, H), spec(L, F),
+             logits_t, spec(L, TRAIN_BATCH, SQ, D), spec(TRAIN_BATCH, SQ),
+             spec(3), spec()])
+    em.emit(f"{pre}__train_step_nokd", functools.partial(M.train_step_nokd, cfg=cfg, task=task),
+            [spec(P), spec(P), spec(P), spec(), spec(),
+             spec(TRAIN_BATCH, SQ, dt=I32), lab_t, spec(L, H), spec(L, F), spec()])
+    em.emit(f"{pre}__calib", functools.partial(M.calib_capture, cfg=cfg, task=task),
+            [spec(P), spec(CALIB_BATCH, SQ, dt=I32), spec(L, H), spec(L, F)])
+
+
+def emit_prune(em: Emitter, model_name: str):
+    cfg = MODELS[model_name]
+    A, F, D = cfg.d_attn, cfg.d_ff, cfg.d_model
+    pre = model_name
+    em.emit(f"{pre}__score_attn", PG.make_score_attn(cfg),
+            [spec(D, A), spec(A, A), spec(cfg.n_heads)])
+    em.emit(f"{pre}__update_attn", PG.make_update_attn(cfg),
+            [spec(D, A), spec(A, A), spec(dt=I32)])
+    em.emit(f"{pre}__score_fc", PG.make_score_fc(cfg),
+            [spec(D, F), spec(F, F), spec(F)])
+    em.emit(f"{pre}__update_fc", PG.make_update_fc(cfg),
+            [spec(D, F), spec(F, F), spec(dt=I32)])
+    em.emit(f"{pre}__update_fc_multi", PG.update_fc_multi,
+            [spec(D, F), spec(F, F), spec(F), spec(dt=I32)])
+
+
+def measured_ladder(d_ff: int):
+    """Subset of the FFN ladder that gets real on-device measurements;
+    the Rust latency table linearly interpolates between them."""
+    lad = [x for x in ffn_ladder(d_ff) if x > 0]
+    return sorted(set(lad[::3] + [lad[0], lad[-1]]), reverse=True)
+
+
+def emit_blocks(em: Emitter, model_name: str):
+    cfg = MODELS[model_name]
+    for regime, (b, s) in REGIMES.items():
+        s_ = s or cfg.seq_len
+        for h in range(1, cfg.n_heads + 1):
+            em.emit(f"{model_name}__block_attn_h{h}__{regime}",
+                    BL.attn_block_fn(cfg, h), BL.attn_block_specs(cfg, h, b, s_),
+                    meta={"kind": "block_attn", "heads": h, "regime": regime,
+                          "batch": b, "seq": s_})
+        for f in measured_ladder(cfg.d_ff):
+            em.emit(f"{model_name}__block_mlp_f{f}__{regime}",
+                    BL.mlp_block_fn(cfg, f), BL.mlp_block_specs(cfg, f, b, s_),
+                    meta={"kind": "block_mlp", "inter": f, "regime": regime,
+                          "batch": b, "seq": s_})
+
+
+def build_manifest(em: Emitter):
+    models = {}
+    for name, cfg in MODELS.items():
+        tasks = {}
+        for tname, task in TASKS.items():
+            if (name, tname) not in PAIRS:
+                continue
+            layout = param_layout(cfg, task)
+            offs = layout_offsets(layout)
+            tasks[tname] = {
+                "n_params": n_params(cfg, task),
+                "kind": task.kind,
+                "n_classes": task.n_classes,
+                "layout": [
+                    {"name": n, "shape": list(shape), "offset": offs[n][0]}
+                    for n, shape in layout
+                ],
+            }
+        models[name] = {
+            "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab, "seq_len": cfg.seq_len, "causal": cfg.causal,
+            "tasks": tasks,
+            "ffn_ladder": ffn_ladder(cfg.d_ff),
+            "head_ladder": head_ladder(cfg.n_heads),
+            "measured_ffn": measured_ladder(cfg.d_ff),
+        }
+    return {
+        "version": 1,
+        "batch": {"train": TRAIN_BATCH, "eval": EVAL_BATCH, "calib": CALIB_BATCH},
+        "models": models,
+        "artifacts": em.artifacts,
+    }
+
+
+def specialize(spec_path: str, out_dir: str):
+    """Emit a shape-materialized pruned model (deployment export)."""
+    with open(spec_path) as f:
+        sp = json.load(f)
+    cfg, task = MODELS[sp["model"]], TASKS[sp["task"]]
+    heads, inters = sp["heads"], sp["inters"]
+    batch = sp.get("batch", 1)
+    seq = sp.get("seq", cfg.seq_len)
+    name = sp.get("name", "specialized")
+    em = Emitter(out_dir)
+    fn, layout = specialized_fwd(cfg, task, heads, inters)
+    total = 0
+    for _, shape in layout:
+        n = 1
+        for s_ in shape:
+            n *= s_
+        total += n
+    em.emit(name, fn, [spec(total), spec(batch, seq, dt=I32)],
+            meta={"kind": "specialized", "model": sp["model"], "task": sp["task"],
+                  "heads": heads, "inters": inters, "batch": batch, "seq": seq})
+    offs = layout_offsets(layout)
+    man = {
+        "n_params": total,
+        "layout": [{"name": n, "shape": list(shape), "offset": offs[n][0]}
+                   for n, shape in layout],
+        "artifacts": em.artifacts,
+    }
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"specialized -> {out_dir}/{name}.hlo.txt")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--specialize", default=None, help="spec JSON for deployed export")
+    ap.add_argument("--only", default=None, help="comma list: pairs,prune,blocks")
+    args = ap.parse_args()
+
+    if args.specialize:
+        specialize(args.specialize, args.out)
+        return
+
+    only = set(args.only.split(",")) if args.only else {"pairs", "prune", "blocks"}
+    em = Emitter(args.out)
+    t0 = time.time()
+    if "pairs" in only:
+        for m, t in PAIRS:
+            print(f"[pair] {m} / {t}", flush=True)
+            emit_pair(em, m, t)
+    if "prune" in only:
+        for m in MODELS:
+            print(f"[prune] {m}", flush=True)
+            emit_prune(em, m)
+    if "blocks" in only:
+        for m in MODELS:
+            print(f"[blocks] {m}", flush=True)
+            emit_blocks(em, m)
+    man = build_manifest(em)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"wrote {len(em.artifacts)} artifacts + manifest in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

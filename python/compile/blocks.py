@@ -1,0 +1,79 @@
+"""Standalone transformer sub-blocks at MATERIALIZED sizes.
+
+These are what the latency table is built from (paper Sec. 3.2 /
+App. E): "we record the time to run an attention block, including all
+overheads, with 0..N_heads-1 heads pruned, and similarly for the
+fully-connected block with the intermediate dimension shrunk by 0.9^i".
+
+Each graph is a real residual sub-block (projections + residual + LN),
+lowered at the exact pruned width, so the Rust latency/measure.rs
+harness times the same artifact kind the deployed model is built from.
+Two batch regimes are emitted per size: "throughput" (the model-native
+batch) and "latency" (batch 1, short prompt) — the distinction that
+drives the paper's Table 1 depth-vs-width finding.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import gelu_tanh, layer_norm
+
+
+def attn_block_fn(cfg: ModelConfig, n_heads: int):
+    """Materialized attention block with `n_heads` heads remaining."""
+    dh = cfg.d_head
+
+    def f(x, wq, bq, wk, bk, wv, bv, wo, bo, ln_g, ln_b):
+        b_, s_, d = x.shape
+
+        def split(t):
+            return t.reshape(b_, s_, n_heads, dh).transpose(0, 2, 1, 3)
+
+        q, k, v = split(x @ wq + bq), split(x @ wk + bk), split(x @ wv + bv)
+        s = jnp.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(dh)
+        if cfg.causal:
+            msk = jnp.tril(jnp.ones((s_, s_), bool))
+            s = jnp.where(msk[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bhjd->bhid", p, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b_, s_, n_heads * dh)
+        return (layer_norm(x + (o @ wo + bo), ln_g, ln_b),)
+
+    return f
+
+
+def mlp_block_fn(cfg: ModelConfig, inter: int):
+    """Materialized FFN block with intermediate width `inter`."""
+
+    def f(x, w1, b1, w2, b2, ln_g, ln_b):
+        a = gelu_tanh(x @ w1 + b1)
+        return (layer_norm(x + (a @ w2 + b2), ln_g, ln_b),)
+
+    return f
+
+
+def attn_block_specs(cfg: ModelConfig, n_heads: int, batch: int, seq: int):
+    d, a = cfg.d_model, n_heads * cfg.d_head
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((batch, seq, d), f32),
+        jax.ShapeDtypeStruct((d, a), f32), jax.ShapeDtypeStruct((a,), f32),
+        jax.ShapeDtypeStruct((d, a), f32), jax.ShapeDtypeStruct((a,), f32),
+        jax.ShapeDtypeStruct((d, a), f32), jax.ShapeDtypeStruct((a,), f32),
+        jax.ShapeDtypeStruct((a, d), f32), jax.ShapeDtypeStruct((d,), f32),
+        jax.ShapeDtypeStruct((d,), f32), jax.ShapeDtypeStruct((d,), f32),
+    ]
+
+
+def mlp_block_specs(cfg: ModelConfig, inter: int, batch: int, seq: int):
+    d = cfg.d_model
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((batch, seq, d), f32),
+        jax.ShapeDtypeStruct((d, inter), f32), jax.ShapeDtypeStruct((inter,), f32),
+        jax.ShapeDtypeStruct((inter, d), f32), jax.ShapeDtypeStruct((d,), f32),
+        jax.ShapeDtypeStruct((d,), f32), jax.ShapeDtypeStruct((d,), f32),
+    ]

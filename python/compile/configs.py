@@ -1,0 +1,138 @@
+"""Model / task configurations and the packed-parameter layout.
+
+This module is the single source of truth for:
+  * the synthetic model family (bert-syn-base, bert-syn-large, gpt-syn),
+  * the flat f32 parameter packing (name, shape, offset) shared with the
+    Rust coordinator via artifacts/manifest.json,
+  * the FFN shrink ladder (0.9^i steps, Sec. 3.2 of the paper).
+
+Everything downstream (model.py, prune_graphs.py, aot.py, the Rust side)
+derives shapes from here; nothing is duplicated by hand.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    causal: bool  # False => BERT-style post-LN encoder; True => GPT pre-LN decoder
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.d_head
+
+
+# Scaled for a single-core CPU testbed (see DESIGN.md §3): the pruning
+# algorithm and every trade-off the paper measures are shape phenomena.
+BERT_SYN_BASE = ModelConfig("bert-syn-base", 4, 128, 4, 32, 512, 2048, 64, False)
+BERT_SYN_LARGE = ModelConfig("bert-syn-large", 8, 192, 6, 32, 768, 2048, 64, False)
+GPT_SYN = ModelConfig("gpt-syn", 4, 128, 4, 32, 512, 2048, 128, True)
+
+MODELS: Dict[str, ModelConfig] = {
+    m.name: m for m in (BERT_SYN_BASE, BERT_SYN_LARGE, GPT_SYN)
+}
+
+
+@dataclass(frozen=True)
+class TaskConfig:
+    name: str
+    kind: str       # "cls" | "span" | "lm"
+    n_classes: int  # used by "cls" only
+
+
+TASKS: Dict[str, TaskConfig] = {
+    "sst2-syn": TaskConfig("sst2-syn", "cls", 2),
+    "qnli-syn": TaskConfig("qnli-syn", "cls", 2),
+    "mnli-syn": TaskConfig("mnli-syn", "cls", 3),
+    "qqp-syn": TaskConfig("qqp-syn", "cls", 2),
+    "squad-syn": TaskConfig("squad-syn", "span", 0),
+    "corpus-syn": TaskConfig("corpus-syn", "lm", 0),
+}
+
+# Batch sizes baked into the lowered graphs (XLA is shape-static).
+TRAIN_BATCH = 16
+EVAL_BATCH = 32
+CALIB_BATCH = 16
+
+
+def param_layout(cfg: ModelConfig, task: TaskConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list; packing offset = cumulative product sum."""
+    d, f, V, S = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    out: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (V, d)),
+        ("pos_emb", (S, d)),
+    ]
+    if not cfg.causal:
+        out += [("emb_ln_g", (d,)), ("emb_ln_b", (d,))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        out += [
+            (p + "wq", (d, cfg.d_attn)), (p + "bq", (cfg.d_attn,)),
+            (p + "wk", (d, cfg.d_attn)), (p + "bk", (cfg.d_attn,)),
+            (p + "wv", (d, cfg.d_attn)), (p + "bv", (cfg.d_attn,)),
+            (p + "wo", (cfg.d_attn, d)), (p + "bo", (d,)),
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+        ]
+    if task.kind == "cls":
+        out += [("cls_w", (d, task.n_classes)), ("cls_b", (task.n_classes,))]
+    elif task.kind == "span":
+        out += [("span_w", (d,)), ("span_b", (1,))]
+    else:  # lm: tied embeddings + final layer norm
+        out += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return out
+
+
+def layout_offsets(layout) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    offs, cur = {}, 0
+    for name, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        offs[name] = (cur, shape)
+        cur += n
+    return offs
+
+
+def n_params(cfg: ModelConfig, task: TaskConfig) -> int:
+    total = 0
+    for _, shape in param_layout(cfg, task):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def ffn_ladder(d_ff: int) -> List[int]:
+    """FFN shrink ladder: d_ff * 0.9^i, deduplicated, down to <1% then 0.
+
+    Mirrors the paper's latency-table granularity (Sec. 3.2 / App. E):
+    relative steps of 10% until ~99% sparsity, plus full removal.
+    """
+    out, i = [], 0
+    while True:
+        v = int(round(d_ff * (0.9 ** i)))
+        if v < max(1, d_ff // 100):
+            break
+        if not out or v < out[-1]:
+            out.append(v)
+        i += 1
+    out.append(0)
+    return out
+
+
+def head_ladder(n_heads: int) -> List[int]:
+    """Remaining-head counts from dense to fully dropped."""
+    return list(range(n_heads, -1, -1))

@@ -1,0 +1,90 @@
+"""Pure-HLO dense linear algebra used inside lowered graphs.
+
+jax 0.8 lowers `jnp.linalg.*` to LAPACK FFI custom-calls that the
+xla_extension 0.5.1 CPU runtime (used by the Rust `xla` crate) does not
+register, so none of those may appear in any lowered module. These
+routines use only elementwise ops, matmuls and `lax` loops, which lower
+to plain HLO and round-trip through the HLO-text interchange.
+
+All matrices here are symmetric positive definite (damped Hessians /
+their inverses), so Gauss-Jordan without pivoting is numerically safe.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gauss_jordan_inverse(a: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of an SPD matrix via Gauss-Jordan, plain-HLO only.
+
+    a: [n, n] float32. Returns [n, n].
+    """
+    n = a.shape[-1]
+    # Standard augmented [A | I] elimination.
+    aug0 = jnp.concatenate([a, jnp.eye(n, dtype=a.dtype)], axis=1)
+
+    def step(k, aug):
+        pivot = aug[k, k]
+        row = aug[k] / pivot
+        factors = aug[:, k].at[k].set(0.0)
+        aug = aug - factors[:, None] * row[None, :]
+        aug = aug.at[k].set(row)
+        return aug
+
+    aug = jax.lax.fori_loop(0, n, step, aug0)
+    return aug[:, n:]
+
+
+def batched_gauss_jordan_inverse(a: jnp.ndarray) -> jnp.ndarray:
+    """Batched SPD inverse. a: [m, n, n] -> [m, n, n], plain-HLO only."""
+    m, n, _ = a.shape
+    aug0 = jnp.concatenate(
+        [a, jnp.broadcast_to(jnp.eye(n, dtype=a.dtype), (m, n, n))], axis=2
+    )
+
+    def step(k, aug):
+        pivot = aug[:, k, k]  # [m]
+        row = aug[:, k, :] / pivot[:, None]  # [m, 2n]
+        factors = aug[:, :, k]  # [m, n]
+        factors = factors.at[:, k].set(0.0)
+        aug = aug - factors[:, :, None] * row[:, None, :]
+        aug = aug.at[:, k, :].set(row)
+        return aug
+
+    aug = jax.lax.fori_loop(0, n, step, aug0)
+    return aug[:, :, n:]
+
+
+def cholesky_inverse(a: jnp.ndarray) -> jnp.ndarray:
+    """SPD inverse via unblocked Cholesky + two triangular solves.
+
+    Kept as an alternative path (same plain-HLO constraint); used by
+    tests to cross-check gauss_jordan_inverse.
+    """
+    n = a.shape[-1]
+
+    def chol_step(j, l):
+        # l holds the partial Cholesky factor (lower), built column by column:
+        # l[i, j] = (a[i, j] - sum_{k<j} l[i, k] l[j, k]) / l[j, j]
+        lj = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=0)[0]  # row j
+        mask = jnp.arange(n) < j
+        ljm = jnp.where(mask, lj, 0.0)
+        col = a[:, j] - l @ ljm
+        diag = jnp.sqrt(col[j])
+        newcol = jnp.where(jnp.arange(n) > j, col / diag, 0.0)
+        newcol = newcol.at[j].set(diag)
+        return l.at[:, j].set(newcol)
+
+    l = jax.lax.fori_loop(0, n, chol_step, jnp.zeros_like(a))
+
+    # Invert L by row-by-row forward substitution on the identity block:
+    # x_i = (e_i - sum_{k<i} L[i,k] x_k) / L[i,i]
+    def fs_step(i, x):
+        li = l[i]
+        mask = jnp.arange(n) < i
+        lim = jnp.where(mask, li, 0.0)
+        xi = (jnp.eye(n, dtype=a.dtype)[i] - lim @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    linv = jax.lax.fori_loop(0, n, fs_step, jnp.zeros_like(a))
+    return linv.T @ linv

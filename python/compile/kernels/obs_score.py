@@ -1,0 +1,75 @@
+"""Pallas kernel: structured-OBS saliency scores (paper Eq. 2).
+
+For every candidate structure S_j (a group of g consecutive columns of
+the weight matrix W), compute
+
+    score_j = sum_i  W[i, S_j]  @  Binv_j  @  W[i, S_j]^T
+
+where Binv_j = ((H^{-1})_{S_j, S_j})^{-1} is the g x g inverse-Hessian
+block inverse, precomputed by the surrounding L2 graph (see
+prune_graphs.py) with the plain-HLO batched Gauss-Jordan.
+
+This is the pruning hot-spot: it touches all of W for every pruning
+step. TPU mapping (see DESIGN.md / EXPERIMENTS.md SPerf):
+
+  * grid over row-tiles of W: each step streams a [TR, n_s*g] tile of W
+    HBM->VMEM while Binv ([n_s, g, g]) and the score accumulator
+    ([n_s]) stay VMEM-resident across the whole grid;
+  * the quadratic form is evaluated as (Wt @ Binv_j) * Wt summed over
+    rows -- batched g x g matmuls that map onto the MXU when g = d_head
+    (>= 32); accumulation is f32;
+  * VMEM footprint = TR*d_col + n_s*g*g + n_s floats, with TR chosen
+    so the total stays far below ~16 MiB.
+
+Kernels are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned against kernels/ref.py by pytest +
+hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _obs_score_kernel(w_ref, binv_ref, out_ref):
+    """One grid step: accumulate scores for a row-tile of W.
+
+    w_ref:    [TR, n_s, g]  row-tile of W, columns grouped by structure
+    binv_ref: [n_s, g, g]   per-structure inverse blocks (resident)
+    out_ref:  [n_s]         score accumulator (revisited across grid)
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[...]  # [TR, n_s, g]
+    binv = binv_ref[...]  # [n_s, g, g]
+    # t[r, j, :] = W[r, S_j] @ Binv_j   -> einsum over the g dimension
+    t = jnp.einsum("rjg,jgh->rjh", w, binv, preferred_element_type=jnp.float32)
+    # score_j += sum_r <t[r, j], w[r, j]>
+    out_ref[...] += jnp.sum(t * w, axis=(0, 2))
+
+
+def obs_scores(w_grouped: jnp.ndarray, binv: jnp.ndarray, row_tile: int = 64) -> jnp.ndarray:
+    """Scores for all structures. w_grouped: [d_row, n_s, g], binv: [n_s, g, g]."""
+    d_row, n_s, g = w_grouped.shape
+    if d_row % row_tile != 0:
+        # pad rows with zeros; zero rows contribute zero to every score
+        pad = row_tile - d_row % row_tile
+        w_grouped = jnp.pad(w_grouped, ((0, pad), (0, 0), (0, 0)))
+        d_row = d_row + pad
+    grid = (d_row // row_tile,)
+    return pl.pallas_call(
+        _obs_score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, n_s, g), lambda r: (r, 0, 0)),
+            pl.BlockSpec((n_s, g, g), lambda r: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_s,), lambda r: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_s,), jnp.float32),
+        interpret=True,
+    )(w_grouped, binv)

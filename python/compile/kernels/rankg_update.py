@@ -1,0 +1,64 @@
+"""Pallas kernel: fused rank-g OBS update (paper Eqs. 3-4).
+
+After structure S (g columns) is selected, the remaining weights and
+the inverse Hessian are updated:
+
+    W'    = W    - W[:, S]    @ Binv @ Hinv[S, :]      (Eq. 3, delta_S)
+    Hinv' = Hinv - Hinv[:, S] @ Binv @ Hinv[S, :]      (Eq. 4, one step
+                                                        of block Gaussian
+                                                        elimination)
+
+Both share the g x d_col factor P = Binv @ Hinv[S, :], which the L2
+graph precomputes once; the kernel then applies the rank-g update to
+row-tiles of the target matrix:
+
+    out_tile = A_tile - C_tile @ P
+
+where (A, C) is (W, W[:, S]) or (Hinv, Hinv[:, S]). TPU mapping: grid
+over row-tiles; P ([g, d_col]) stays VMEM-resident, each grid step
+streams one [TR, d_col] tile plus its [TR, g] slab; the update is a
+[TR, g] x [g, d_col] MXU matmul. VMEM = TR*d_col*2 + TR*g + g*d_col
+floats.
+
+Extraction of the S-indexed slabs and re-zeroing of pruned columns are
+dynamic-slice ops in the surrounding graph (static shapes inside the
+kernel). interpret=True; oracle in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rankg_update_kernel(a_ref, c_ref, p_ref, out_ref):
+    """out_tile = a_tile - c_tile @ p   (all f32).
+
+    a_ref: [TR, d_col], c_ref: [TR, g], p_ref: [g, d_col], out_ref: [TR, d_col]
+    """
+    out_ref[...] = a_ref[...] - jnp.dot(
+        c_ref[...], p_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def rankg_update(a: jnp.ndarray, c: jnp.ndarray, p: jnp.ndarray, row_tile: int = 64) -> jnp.ndarray:
+    """Apply A - C @ P with row-tiling. a: [m, n], c: [m, g], p: [g, n]."""
+    m, n = a.shape
+    g = c.shape[1]
+    pad = (-m) % row_tile
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    grid = ((m + pad) // row_tile,)
+    out = pl.pallas_call(
+        _rankg_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, n), lambda r: (r, 0)),
+            pl.BlockSpec((row_tile, g), lambda r: (r, 0)),
+            pl.BlockSpec((g, n), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, n), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pad, n), jnp.float32),
+        interpret=True,
+    )(a, c, p)
+    return out[:m] if pad else out

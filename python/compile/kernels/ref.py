@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/test_kernels.py) asserts allclose between each
+kernel and its oracle, with hypothesis sweeping shapes; the Rust side
+additionally cross-checks its native mirrors against values produced
+through the full HLO round-trip.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_obs_scores(w_grouped, binv):
+    """score_j = sum_i W[i, S_j] Binv_j W[i, S_j]^T.
+
+    w_grouped: [d_row, n_s, g], binv: [n_s, g, g] -> [n_s]
+    """
+    return jnp.einsum("rjg,jgh,rjh->j", w_grouped, binv, w_grouped)
+
+
+def ref_rankg_update(a, c, p):
+    """A - C @ P."""
+    return a - c @ p
+
+
+def ref_mha(q, k, v, head_mask, causal):
+    """[B, H, S, dh] fused attention reference."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(dh)
+    if causal:
+        seq = q.shape[2]
+        msk = jnp.tril(jnp.ones((seq, seq), bool))
+        s = jnp.where(msk[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhij,bhjd->bhid", p, v)
+    return o * head_mask[None, :, None, None]
+
+
+def ref_inverse(a):
+    """numpy inverse (allowed in tests — never in lowered graphs)."""
+    return np.linalg.inv(np.asarray(a))
+
+
+def ref_obs_full_step(w, hinv, idx, g):
+    """One complete structured-OBS removal in numpy: returns (w', hinv').
+
+    w: [d_row, d_col] (paper orientation: structures are column groups),
+    hinv: [d_col, d_col], idx: structure index, g: structure size.
+    Mirrors Algorithm 1's inner loop exactly; used to pin both the
+    Pallas kernels (composed) and the Rust-native mirror.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    hinv = np.asarray(hinv, dtype=np.float64)
+    s = slice(idx * g, (idx + 1) * g)
+    binv = np.linalg.inv(hinv[s, s])
+    p = binv @ hinv[s, :]  # [g, d_col]
+    w_new = w - w[:, s] @ p
+    hinv_new = hinv - hinv[:, s] @ p
+    w_new[:, s] = 0.0
+    return w_new.astype(np.float32), hinv_new.astype(np.float32)

@@ -1,0 +1,266 @@
+"""L2: masked transformer (BERT-style encoder / GPT-style decoder) in JAX.
+
+Everything here is lowered ONCE by aot.py to HLO text and executed from
+the Rust coordinator via PJRT; Python never runs on the request path.
+
+Key design points (see DESIGN.md §2):
+
+* **Packed parameters** — all weights live in one flat f32 vector whose
+  layout comes from configs.param_layout; unpacking is static slicing,
+  so jax.grad differentiates straight through it and the Rust side
+  moves exactly three big literals (params, adam-m, adam-v) per step.
+* **Structural masks as runtime inputs** — head_mask [L, H] and
+  ffn_mask [L, F] make one executable serve every sparsity
+  configuration during gradual pruning; a module whose mask is all-zero
+  contributes exactly nothing (bias gated too), matching a materialized
+  removal bit-for-bit.
+* **Plain-HLO only** — tanh-GELU, no linalg custom-calls, no RNG, no
+  sort (argmax/sampling happen in Rust).
+* The attention core is the L1 Pallas kernel (kernels/mha.py).
+"""
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, TaskConfig, layout_offsets, param_layout
+from .kernels.mha import mha
+
+
+# --------------------------------------------------------------------------
+# parameter unpacking
+# --------------------------------------------------------------------------
+
+def unpack_params(flat: jnp.ndarray, cfg: ModelConfig, task: TaskConfig) -> Dict[str, jnp.ndarray]:
+    offs = layout_offsets(param_layout(cfg, task))
+    out = {}
+    for name, (off, shape) in offs.items():
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+    return out
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu_tanh(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximate GELU (erf lowers to a custom-call; tanh does not)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+# --------------------------------------------------------------------------
+# transformer blocks
+# --------------------------------------------------------------------------
+
+def attention_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray], l: int,
+                    head_mask_l: jnp.ndarray, cfg: ModelConfig):
+    """Head-masked MHA sub-block (residual/LN handled by the caller).
+
+    Returns (out-projection result, concatenated masked head outputs).
+    The output is gated to exact zero when every head is pruned (module
+    drop, Sec. 3.1 "removing entire residual parts").
+    """
+    pre = f"layer{l}."
+    b_, s_ = x.shape[0], x.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(t):
+        return t.reshape(b_, s_, h, dh).transpose(0, 2, 1, 3)  # [B, H, S, dh]
+
+    q = split(x @ p[pre + "wq"] + p[pre + "bq"])
+    k = split(x @ p[pre + "wk"] + p[pre + "bk"])
+    v = split(x @ p[pre + "wv"] + p[pre + "bv"])
+    o = mha(q, k, v, head_mask_l, cfg.causal)  # L1 Pallas kernel
+    o = o.transpose(0, 2, 1, 3).reshape(b_, s_, h * dh)  # concat heads
+    active = jnp.max(head_mask_l)
+    return (o @ p[pre + "wo"] + p[pre + "bo"]) * active, o
+
+
+def ffn_block(x: jnp.ndarray, p: Dict[str, jnp.ndarray], l: int,
+              ffn_mask_l: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    pre = f"layer{l}."
+    a = gelu_tanh(x @ p[pre + "w1"] + p[pre + "b1"]) * ffn_mask_l
+    active = jnp.max(ffn_mask_l)
+    return (a @ p[pre + "w2"] + p[pre + "b2"]) * active, a
+
+
+def encode(flat_params: jnp.ndarray, ids: jnp.ndarray,
+           head_mask: jnp.ndarray, ffn_mask: jnp.ndarray,
+           cfg: ModelConfig, task: TaskConfig,
+           collect: bool = False):
+    """Run the masked transformer trunk.
+
+    Returns (final hidden [B, S, d], per-layer hiddens [L, B, S, d],
+    calibration activations (attn-concat list, ffn-act list), params).
+    """
+    p = unpack_params(flat_params, cfg, task)
+    b_, s_ = ids.shape
+    x = p["tok_emb"][ids] + p["pos_emb"][None, :s_, :]
+    if not cfg.causal:
+        x = layer_norm(x, p["emb_ln_g"], p["emb_ln_b"])
+    hiddens = []
+    calib_attn, calib_ffn = [], []
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        if cfg.causal:  # pre-LN (GPT-2 style)
+            a, concat = attention_block(layer_norm(x, p[pre + "ln1_g"], p[pre + "ln1_b"]),
+                                        p, l, head_mask[l], cfg)
+            x = x + a
+            f, act = ffn_block(layer_norm(x, p[pre + "ln2_g"], p[pre + "ln2_b"]),
+                               p, l, ffn_mask[l])
+            x = x + f
+        else:  # post-LN (BERT style)
+            a, concat = attention_block(x, p, l, head_mask[l], cfg)
+            x = layer_norm(x + a, p[pre + "ln1_g"], p[pre + "ln1_b"])
+            f, act = ffn_block(x, p, l, ffn_mask[l])
+            x = layer_norm(x + f, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        hiddens.append(x)
+        if collect:
+            calib_attn.append(concat)
+            calib_ffn.append(act)
+    if cfg.causal:
+        x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    hs = jnp.stack(hiddens)
+    return x, hs, (calib_attn, calib_ffn), p
+
+
+def logits_fn(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
+              cfg: ModelConfig, task: TaskConfig) -> jnp.ndarray:
+    if task.kind == "cls":
+        return x[:, 0, :] @ p["cls_w"] + p["cls_b"]          # [B, C]
+    if task.kind == "span":
+        return x @ p["span_w"] + p["span_b"]                  # [B, S]
+    return x @ p["tok_emb"].T                                 # [B, S, V] (tied)
+
+
+# --------------------------------------------------------------------------
+# exported graphs
+# --------------------------------------------------------------------------
+
+def fwd(flat_params, ids, head_mask, ffn_mask, *, cfg: ModelConfig, task: TaskConfig):
+    """Inference forward: logits only (argmax/sampling done in Rust)."""
+    x, _, _, p = encode(flat_params, ids, head_mask, ffn_mask, cfg, task)
+    return (logits_fn(x, p, cfg, task),)
+
+
+def teacher_fwd(flat_params, ids, *, cfg: ModelConfig, task: TaskConfig):
+    """Dense-teacher forward: logits + all per-layer hiddens (distill targets)."""
+    hm = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+    fm = jnp.ones((cfg.n_layers, cfg.d_ff), jnp.float32)
+    x, hs, _, p = encode(flat_params, ids, hm, fm, cfg, task)
+    return logits_fn(x, p, cfg, task), hs
+
+
+def _task_loss(logits, labels, task: TaskConfig):
+    if task.kind in ("cls", "span"):
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - picked)
+    # lm: next-token cross-entropy
+    lg = logits[:, :-1, :]
+    tg = labels[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def _kd_losses(logits, t_logits, hs, t_hs, pad_mask, task: TaskConfig):
+    """KL(teacher || student) on logits + token-level hidden L2 (Eqs. 5-6)."""
+    t_logp = jax.nn.log_softmax(t_logits, axis=-1)
+    s_logp = jax.nn.log_softmax(logits, axis=-1)
+    kl = jnp.mean(jnp.sum(jnp.exp(t_logp) * (t_logp - s_logp), axis=-1))
+    # Eq. 6: squared distance between token vectors for each non-padded
+    # token, averaged over tokens and over layers.
+    diff = jnp.sum(jnp.square(hs - t_hs), axis=-1)            # [L, B, S]
+    w = pad_mask[None, :, :]
+    token = jnp.sum(diff * w) / (hs.shape[0] * jnp.maximum(jnp.sum(pad_mask), 1.0))
+    return kl, token
+
+
+def train_step(flat_params, m, v, t, lr, ids, labels, head_mask, ffn_mask,
+               t_logits, t_hs, pad_mask, lambdas, wd,
+               *, cfg: ModelConfig, task: TaskConfig):
+    """One fused fwd+bwd+AdamW step (a single HLO executable).
+
+    Inputs (runtime literals fed by the Rust trainer):
+      flat_params/m/v [P]    packed parameters and Adam moments
+      t []                   step count (float, bias correction)
+      lr []                  learning rate (schedule computed in Rust)
+      ids [B, S] int32       token ids
+      labels [B] or [B, S]   task labels (lm: = ids)
+      head_mask [L, H], ffn_mask [L, F]
+      t_logits, t_hs         teacher outputs (ignored when lambdas[1:] = 0)
+      pad_mask [B, S]        1 for non-padding tokens (Eq. 6's P-set)
+      lambdas [3]            (task, logit-KL, token-distill) weights (Eq. 5)
+      wd []                  decoupled weight decay
+    Returns (params', m', v', task_loss, kl_loss, token_loss).
+    """
+
+    def loss_fn(fp):
+        x, hs, _, p = encode(fp, ids, head_mask, ffn_mask, cfg, task)
+        logits = logits_fn(x, p, cfg, task)
+        lt = _task_loss(logits, labels, task)
+        kl, token = _kd_losses(logits, t_logits, hs, t_hs, pad_mask, task)
+        total = lambdas[0] * lt + lambdas[1] * kl + lambdas[2] * token
+        return total, (lt, kl, token)
+
+    (_, (lt, kl, token)), g = jax.value_and_grad(loss_fn, has_aux=True)(flat_params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * jnp.square(g)
+    mh = m2 / (1 - b1 ** t)
+    vh = v2 / (1 - b2 ** t)
+    upd = mh / (jnp.sqrt(vh) + eps) + wd * flat_params
+    fp2 = flat_params - lr * upd
+    return fp2, m2, v2, lt, kl, token
+
+
+def train_step_nokd(flat_params, m, v, t, lr, ids, labels, head_mask, ffn_mask,
+                    wd, *, cfg: ModelConfig, task: TaskConfig):
+    """train_step with distillation structurally elided (λ = (1,0,0)).
+
+    Used for GPT pruning (paper App. I disables KD there) and the
+    distillation ablation (Table 5); a separate graph guarantees the
+    teacher terms are absent from the HLO, not just multiplied by zero.
+    """
+
+    def loss_fn(fp):
+        x, _, _, p = encode(fp, ids, head_mask, ffn_mask, cfg, task)
+        return _task_loss(logits_fn(x, p, cfg, task), labels, task)
+
+    lt, g = jax.value_and_grad(loss_fn)(flat_params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * jnp.square(g)
+    mh = m2 / (1 - b1 ** t)
+    vh = v2 / (1 - b2 ** t)
+    fp2 = flat_params - lr * (mh / (jnp.sqrt(vh) + eps) + wd * flat_params)
+    return fp2, m2, v2, lt
+
+
+def eval_loss(flat_params, ids, labels, head_mask, ffn_mask,
+              *, cfg: ModelConfig, task: TaskConfig):
+    """Mean task loss on one batch (SPDY candidate scoring & perplexity)."""
+    x, _, _, p = encode(flat_params, ids, head_mask, ffn_mask, cfg, task)
+    return (_task_loss(logits_fn(x, p, cfg, task), labels, task),)
+
+
+def calib_capture(flat_params, ids, head_mask, ffn_mask, *, cfg: ModelConfig, task: TaskConfig):
+    """Per-layer Hessian contributions for the ZipLM pruner (Sec. 3.1).
+
+    Returns (H_attn [L, d_attn, d_attn], H_ffn [L, F, F]) where H = X X^T
+    over this batch: X are the inputs of the attention out-projection
+    (concatenated masked head outputs) and of FC2 (masked activations).
+    The Rust coordinator accumulates batches and adds the dampening.
+    """
+    _, _, (cal_a, cal_f), _ = encode(flat_params, ids, head_mask, ffn_mask,
+                                     cfg, task, collect=True)
+    h_attn = jnp.stack([jnp.einsum("bsi,bsj->ij", a, a) for a in cal_a])
+    h_ffn = jnp.stack([jnp.einsum("bsi,bsj->ij", f, f) for f in cal_f])
+    return h_attn, h_ffn

@@ -1,0 +1,174 @@
+"""L2 graphs implementing the ZipLM pruning step (paper Algorithm 1).
+
+Each graph is lowered per model architecture and executed from the Rust
+pruner. The split of responsibilities mirrors the paper exactly:
+
+  * `score_*`  — Eq. 2 saliencies for ALL candidate structures at once
+                 (L1 Pallas kernel `obs_scores` on the hot path);
+  * `update_*` — Eqs. 3-4 for the structure the coordinator selected
+                 (selection lives in Rust: that is where
+                 inference-awareness enters — the coordinator is free to
+                 pick by pure saliency, by loss-per-latency, or to
+                 snapshot database levels);
+  * `update_fc_multi` — a while-loop fused variant that performs `n`
+                 one-at-a-time FC-column removals per dispatch (the FC2
+                 ladder removes ~10% of columns between database levels,
+                 so per-step PJRT round-trips would dominate; see
+                 EXPERIMENTS.md §Perf).
+
+Conventions: W is in "paper orientation" [d_row, d_col] with structures
+as groups of g consecutive COLUMNS (attention: g = d_head over the
+out-projection's input dim; FC2: g = 1 over the intermediate dim);
+Hinv = (2 X X^T + λI)^{-1} is supplied by the Rust side (native
+Cholesky); `active` marks structures still present.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.linalg import batched_gauss_jordan_inverse
+from .kernels.obs_score import obs_scores
+from .kernels.rankg_update import rankg_update
+
+BIG = 1e30  # score assigned to already-pruned structures
+
+
+# --------------------------------------------------------------------------
+# scoring (Eq. 2)
+# --------------------------------------------------------------------------
+
+def _grouped(w: jnp.ndarray, g: int) -> jnp.ndarray:
+    d_row, d_col = w.shape
+    return w.reshape(d_row, d_col // g, g)
+
+
+def _diag_blocks(hinv: jnp.ndarray, g: int) -> jnp.ndarray:
+    n = hinv.shape[0] // g
+    hr = hinv.reshape(n, g, n, g)
+    idx = jnp.arange(n)
+    return hr[idx, :, idx, :]  # [n, g, g]
+
+
+def score_structures(w, hinv, active, *, g: int):
+    """Saliency for every g-column structure; pruned ones get BIG.
+
+    w: [d_row, n*g], hinv: [n*g, n*g], active: [n] (1 = present).
+    """
+    n = w.shape[1] // g
+    blocks = _diag_blocks(hinv, g)
+    eye = jnp.eye(g, dtype=w.dtype)
+    safe = jnp.where(active[:, None, None] > 0, blocks, eye)
+    binv = batched_gauss_jordan_inverse(safe)
+    scores = obs_scores(_grouped(w, g), binv)  # L1 Pallas kernel
+    return (jnp.where(active > 0, scores, BIG),)
+
+
+# --------------------------------------------------------------------------
+# update (Eqs. 3-4)
+# --------------------------------------------------------------------------
+
+def _zero_structure_cols(w, idx, g):
+    col = jnp.arange(w.shape[1]) // g == idx
+    return jnp.where(col[None, :], 0.0, w)
+
+
+def _scrub_hinv(hinv, idx, g):
+    """Zero rows/cols of the removed structure, put 1 on its diagonal.
+
+    Algebraically they are already ~0 after the downdate (Eq. 4); the
+    scrub removes float dust so later block inversions stay benign.
+    """
+    e = (jnp.arange(hinv.shape[0]) // g == idx).astype(hinv.dtype)
+    keep = (1.0 - e)[:, None] * (1.0 - e)[None, :]
+    return hinv * keep + jnp.diag(e)
+
+
+def update_structure(w, hinv, idx, *, g: int):
+    """Remove structure `idx`: apply delta_S to W and downdate Hinv.
+
+    w: [d_row, n*g], hinv: [n*g, n*g], idx: int32 scalar.
+    Returns (w', hinv').
+    """
+    d_col = w.shape[1]
+    start = idx * g
+    block = jax.lax.dynamic_slice(hinv, (start, start), (g, g))
+    binv = batched_gauss_jordan_inverse(block[None])[0]
+    rows = jax.lax.dynamic_slice(hinv, (start, jnp.int32(0)), (g, d_col))
+    p = binv @ rows                                             # [g, d_col]
+    wc = jax.lax.dynamic_slice(w, (jnp.int32(0), start), (w.shape[0], g))
+    hc = jax.lax.dynamic_slice(hinv, (jnp.int32(0), start), (d_col, g))
+    w2 = rankg_update(w, wc, p)        # L1 Pallas kernel (Eq. 3)
+    h2 = rankg_update(hinv, hc, p)     # L1 Pallas kernel (Eq. 4)
+    w2 = _zero_structure_cols(w2, idx, g)
+    h2 = _scrub_hinv(h2, idx, g)
+    return w2, h2
+
+
+# --------------------------------------------------------------------------
+# fused multi-step FC pruning (g = 1), selection by pure saliency
+# --------------------------------------------------------------------------
+
+def update_fc_multi(w, hinv, active, n):
+    """Run `n` one-at-a-time FC-column removals inside one executable.
+
+    Selection inside the loop follows Algorithm 1 exactly (argmin of
+    Eq. 2 with g=1: score_j = sum_i w_ij^2 / hinv_jj). Returns
+    (w', hinv', active', order) where order[k] is the k-th removed
+    column (-1 padding).
+    """
+    f = w.shape[1]
+
+    def cond(carry):
+        _, _, _, _, i = carry
+        return i < n
+
+    def body(carry):
+        w_, h_, act, order, i = carry
+        diag = jnp.diagonal(h_)
+        scores = jnp.sum(jnp.square(w_), axis=0) / jnp.where(act > 0, diag, 1.0)
+        scores = jnp.where(act > 0, scores, BIG)
+        j = jnp.argmin(scores).astype(jnp.int32)
+        pj = h_[:, j] / h_[j, j]          # [f]; Hinv is symmetric: col == row
+        w2 = w_ - jnp.outer(w_[:, j], pj)  # rank-1 Eq. 3
+        h2 = h_ - jnp.outer(h_[:, j], pj)  # rank-1 Eq. 4
+        e = (jnp.arange(f) == j).astype(w_.dtype)
+        w2 = w2 * (1.0 - e)[None, :]
+        h2 = h2 * ((1.0 - e)[:, None] * (1.0 - e)[None, :]) + jnp.diag(e)
+        act2 = act * (1.0 - e)
+        order2 = order.at[i].set(j)
+        return (w2, h2, act2, order2, i + 1)
+
+    order0 = jnp.full((f,), -1, jnp.int32)
+    w2, h2, act2, order, _ = jax.lax.while_loop(
+        cond, body, (w, hinv, active, order0, jnp.int32(0))
+    )
+    return w2, h2, act2, order
+
+
+# --------------------------------------------------------------------------
+# graph factories used by aot.py
+# --------------------------------------------------------------------------
+
+def make_score_attn(cfg: ModelConfig):
+    def f(w, hinv, active):
+        return score_structures(w, hinv, active, g=cfg.d_head)
+    return f
+
+
+def make_update_attn(cfg: ModelConfig):
+    def f(w, hinv, idx):
+        return update_structure(w, hinv, idx, g=cfg.d_head)
+    return f
+
+
+def make_score_fc(cfg: ModelConfig):
+    def f(w, hinv, active):
+        return score_structures(w, hinv, active, g=1)
+    return f
+
+
+def make_update_fc(cfg: ModelConfig):
+    def f(w, hinv, idx):
+        return update_structure(w, hinv, idx, g=1)
+    return f

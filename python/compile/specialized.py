@@ -1,0 +1,113 @@
+"""Shape-materialized (deployed) model: the final export path.
+
+During gradual pruning the Rust coordinator works on MASKED models (one
+executable, masks as inputs). For deployment and for measuring
+*achieved* speedup (paper Table 8), the pruned configuration is
+re-lowered here with every weight matrix at its real pruned size and
+fully-dropped modules removed from the graph — exactly the paper's
+"model can be reshaped to new dimensions" property of structured
+pruning.
+
+`aot.py --specialize spec.json` drives this; the spec carries per-layer
+remaining head counts and intermediate widths. The emitted manifest
+section gives Rust the packed layout so it can gather surviving
+rows/columns out of a masked checkpoint.
+"""
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, TaskConfig, layout_offsets
+from .model import gelu_tanh, layer_norm, logits_fn
+
+
+def specialized_layout(cfg: ModelConfig, task: TaskConfig,
+                       heads: List[int], inters: List[int]):
+    """(name, shape) list for a materialized pruned model."""
+    d, V, S = cfg.d_model, cfg.vocab, cfg.seq_len
+    out: List[Tuple[str, Tuple[int, ...]]] = [("tok_emb", (V, d)), ("pos_emb", (S, d))]
+    if not cfg.causal:
+        out += [("emb_ln_g", (d,)), ("emb_ln_b", (d,))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        a = heads[l] * cfg.d_head
+        if heads[l] > 0:
+            out += [
+                (p + "wq", (d, a)), (p + "bq", (a,)),
+                (p + "wk", (d, a)), (p + "bk", (a,)),
+                (p + "wv", (d, a)), (p + "bv", (a,)),
+                (p + "wo", (a, d)), (p + "bo", (d,)),
+            ]
+        out += [(p + "ln1_g", (d,)), (p + "ln1_b", (d,))]
+        f = inters[l]
+        if f > 0:
+            out += [(p + "w1", (d, f)), (p + "b1", (f,)),
+                    (p + "w2", (f, d)), (p + "b2", (d,))]
+        out += [(p + "ln2_g", (d,)), (p + "ln2_b", (d,))]
+    if task.kind == "cls":
+        out += [("cls_w", (d, task.n_classes)), ("cls_b", (task.n_classes,))]
+    elif task.kind == "span":
+        out += [("span_w", (d,)), ("span_b", (1,))]
+    else:
+        out += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return out
+
+
+def specialized_fwd(cfg: ModelConfig, task: TaskConfig,
+                    heads: List[int], inters: List[int]):
+    """Forward with per-layer materialized widths; dropped modules elided."""
+    layout = specialized_layout(cfg, task, heads, inters)
+    offs = layout_offsets(layout)
+
+    def f(flat, ids):
+        p = {}
+        for name, (off, shape) in offs.items():
+            n = 1
+            for s in shape:
+                n *= s
+            p[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        b_, s_ = ids.shape
+        x = p["tok_emb"][ids] + p["pos_emb"][None, :s_, :]
+        if not cfg.causal:
+            x = layer_norm(x, p["emb_ln_g"], p["emb_ln_b"])
+        for l in range(cfg.n_layers):
+            pre = f"layer{l}."
+            h, dh, fl = heads[l], cfg.d_head, inters[l]
+
+            def attn(xin):
+                def split(t):
+                    return t.reshape(b_, s_, h, dh).transpose(0, 2, 1, 3)
+                q = split(xin @ p[pre + "wq"] + p[pre + "bq"])
+                k = split(xin @ p[pre + "wk"] + p[pre + "bk"])
+                v = split(xin @ p[pre + "wv"] + p[pre + "bv"])
+                s = jnp.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(dh)
+                if cfg.causal:
+                    msk = jnp.tril(jnp.ones((s_, s_), bool))
+                    s = jnp.where(msk[None, None], s, -1e30)
+                pr = jax.nn.softmax(s, axis=-1)
+                o = jnp.einsum("bhij,bhjd->bhid", pr, v)
+                o = o.transpose(0, 2, 1, 3).reshape(b_, s_, h * dh)
+                return o @ p[pre + "wo"] + p[pre + "bo"]
+
+            def ffn(xin):
+                a = gelu_tanh(xin @ p[pre + "w1"] + p[pre + "b1"])
+                return a @ p[pre + "w2"] + p[pre + "b2"]
+
+            if cfg.causal:
+                if h > 0:
+                    x = x + attn(layer_norm(x, p[pre + "ln1_g"], p[pre + "ln1_b"]))
+                if fl > 0:
+                    x = x + ffn(layer_norm(x, p[pre + "ln2_g"], p[pre + "ln2_b"]))
+            else:
+                a_out = attn(x) if h > 0 else 0.0
+                x = layer_norm(x + a_out, p[pre + "ln1_g"], p[pre + "ln1_b"])
+                f_out = ffn(x) if fl > 0 else 0.0
+                x = layer_norm(x + f_out, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        if cfg.causal:
+            x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+        return (logits_fn(x, p, cfg, task),)
+
+    return f, layout

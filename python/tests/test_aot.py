@@ -1,0 +1,65 @@
+"""Manifest / artifact consistency (runs against a prebuilt artifacts/)."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_all_artifact_files_exist():
+    man = _manifest()
+    for name, a in man["artifacts"].items():
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+
+
+def test_no_custom_calls_anywhere():
+    man = _manifest()
+    for name, a in man["artifacts"].items():
+        with open(os.path.join(ART, a["file"])) as f:
+            txt = f.read()
+        assert "custom-call" not in txt, f"{name} contains a custom-call"
+
+
+def test_layout_offsets_are_contiguous():
+    man = _manifest()
+    for mname, m in man["models"].items():
+        for tname, t in m["tasks"].items():
+            cur = 0
+            for entry in t["layout"]:
+                assert entry["offset"] == cur, (mname, tname, entry["name"])
+                n = 1
+                for s in entry["shape"]:
+                    n *= s
+                cur += n
+            assert cur == t["n_params"]
+
+
+def test_train_step_signature_shapes():
+    man = _manifest()
+    a = man["artifacts"]["bert-syn-base__sst2-syn__train_step"]
+    P = man["models"]["bert-syn-base"]["tasks"]["sst2-syn"]["n_params"]
+    assert a["inputs"][0]["shape"] == [P]
+    assert a["outputs"][0]["shape"] == [P]
+    assert len(a["outputs"]) == 6
+
+
+def test_ladders_monotone():
+    man = _manifest()
+    for m in man["models"].values():
+        lad = m["ffn_ladder"]
+        assert lad[0] == m["d_ff"] and lad[-1] == 0
+        assert all(a > b for a, b in zip(lad, lad[1:]))

@@ -1,0 +1,202 @@
+"""L1 Pallas kernels vs pure-jnp/numpy oracles (the core correctness signal).
+
+hypothesis sweeps shapes; every kernel must match ref.py to tight
+tolerances. These tests run in interpret mode — the same lowering the
+AOT artifacts use — so passing here pins the numerics of the artifacts
+the Rust coordinator executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import linalg as KL
+from compile.kernels import ref as R
+from compile.kernels.mha import mha, _mha_pallas
+from compile.kernels.obs_score import obs_scores
+from compile.kernels.rankg_update import rankg_update
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _spd(rng, n, scale=1.0):
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    return a @ a.T + scale * n * np.eye(n, dtype=np.float32)
+
+
+# ---------------------------------------------------------------- obs_score
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d_row=st.sampled_from([8, 33, 64, 128]),
+    n_s=st.sampled_from([1, 4, 7, 16]),
+    g=st.sampled_from([1, 4, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_obs_scores_matches_ref(d_row, n_s, g, seed):
+    rng = _rng(seed)
+    w = rng.normal(size=(d_row, n_s, g)).astype(np.float32)
+    b = np.stack([_spd(rng, g) for _ in range(n_s)])
+    got = np.asarray(obs_scores(jnp.array(w), jnp.array(b), row_tile=32))
+    want = np.asarray(R.ref_obs_scores(w, b))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_obs_scores_zero_weights_zero_score():
+    w = np.zeros((64, 4, 8), np.float32)
+    b = np.stack([np.eye(8, dtype=np.float32)] * 4)
+    got = np.asarray(obs_scores(jnp.array(w), jnp.array(b)))
+    np.testing.assert_allclose(got, 0.0)
+
+
+def test_obs_scores_row_padding_invariant():
+    """Scores must not depend on the row-tile padding."""
+    rng = _rng(0)
+    w = rng.normal(size=(50, 3, 4)).astype(np.float32)  # 50 % 64 != 0
+    b = np.stack([_spd(rng, 4) for _ in range(3)])
+    a = np.asarray(obs_scores(jnp.array(w), jnp.array(b), row_tile=64))
+    c = np.asarray(obs_scores(jnp.array(w), jnp.array(b), row_tile=25))
+    np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- rankg_update
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([16, 63, 128]),
+    n=st.sampled_from([8, 96]),
+    g=st.sampled_from([1, 8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_rankg_update_matches_ref(m, n, g, seed):
+    rng = _rng(seed)
+    a = rng.normal(size=(m, n)).astype(np.float32)
+    c = rng.normal(size=(m, g)).astype(np.float32)
+    p = rng.normal(size=(g, n)).astype(np.float32)
+    got = np.asarray(rankg_update(jnp.array(a), jnp.array(c), jnp.array(p), row_tile=32))
+    np.testing.assert_allclose(got, R.ref_rankg_update(a, c, p), rtol=2e-4, atol=2e-4)
+
+
+def test_rankg_update_zero_c_is_identity():
+    rng = _rng(1)
+    a = rng.normal(size=(40, 16)).astype(np.float32)
+    got = np.asarray(rankg_update(jnp.array(a), jnp.zeros((40, 4), jnp.float32),
+                                  jnp.ones((4, 16), jnp.float32)))
+    np.testing.assert_allclose(got, a)
+
+
+# ---------------------------------------------------------------------- mha
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 3]),
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([4, 16, 33]),
+    dh=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_mha_matches_ref(b, h, s, dh, causal, seed):
+    rng = _rng(seed)
+    q = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    hm = (rng.random(h) > 0.3).astype(np.float32)
+    got = np.asarray(_mha_pallas(jnp.array(q), jnp.array(k), jnp.array(v),
+                                 jnp.array(hm), causal))
+    want = np.asarray(R.ref_mha(q, k, v, hm, causal))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_mha_masked_head_exact_zero():
+    rng = _rng(2)
+    q = rng.normal(size=(2, 3, 8, 8)).astype(np.float32)
+    hm = np.array([1, 0, 1], np.float32)
+    out = np.asarray(_mha_pallas(jnp.array(q), jnp.array(q), jnp.array(q),
+                                 jnp.array(hm), False))
+    assert np.all(out[:, 1] == 0.0)
+
+
+def test_mha_custom_vjp_matches_numeric():
+    """Hand-derived backward vs finite differences."""
+    import jax
+    rng = _rng(3)
+    q = rng.normal(size=(1, 2, 6, 4)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 6, 4)).astype(np.float32)
+    v = rng.normal(size=(1, 2, 6, 4)).astype(np.float32)
+    hm = np.array([1.0, 1.0], np.float32)
+
+    def f(q_, k_, v_):
+        return jnp.sum(jnp.sin(mha(q_, k_, v_, jnp.array(hm), True)))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(jnp.array(q), jnp.array(k), jnp.array(v))
+    eps = 1e-3
+    for argi, arr in enumerate([q, k, v]):
+        idx = (0, 1, 2, 1)
+        pert = arr.copy(); pert[idx] += eps
+        args = [q, k, v]; args[argi] = pert
+        fp = float(f(*map(jnp.array, args)))
+        pert2 = arr.copy(); pert2[idx] -= eps
+        args[argi] = pert2
+        fm = float(f(*map(jnp.array, args)))
+        num = (fp - fm) / (2 * eps)
+        assert abs(num - float(np.asarray(g[argi])[idx])) < 5e-2
+
+
+# -------------------------------------------------------------- linalg (HLO)
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([1, 2, 8, 17, 48]), seed=st.integers(0, 2**16))
+def test_gauss_jordan_inverse(n, seed):
+    a = _spd(_rng(seed), n)
+    got = np.asarray(KL.gauss_jordan_inverse(jnp.array(a)))
+    np.testing.assert_allclose(got @ a, np.eye(n), rtol=0, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([1, 3, 9]), n=st.sampled_from([1, 4, 16]),
+       seed=st.integers(0, 2**16))
+def test_batched_gauss_jordan_inverse(m, n, seed):
+    rng = _rng(seed)
+    a = np.stack([_spd(rng, n) for _ in range(m)])
+    got = np.asarray(KL.batched_gauss_jordan_inverse(jnp.array(a)))
+    for i in range(m):
+        np.testing.assert_allclose(got[i] @ a[i], np.eye(n), rtol=0, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([2, 8, 24]), seed=st.integers(0, 2**16))
+def test_cholesky_inverse_cross_check(n, seed):
+    a = _spd(_rng(seed), n)
+    gj = np.asarray(KL.gauss_jordan_inverse(jnp.array(a)))
+    ch = np.asarray(KL.cholesky_inverse(jnp.array(a)))
+    np.testing.assert_allclose(gj, ch, rtol=1e-2, atol=1e-3)
+
+
+# --------------------------------------------------- composed OBS step check
+
+@settings(max_examples=10, deadline=None)
+@given(d_row=st.sampled_from([8, 32]), n_s=st.sampled_from([4, 8]),
+       g=st.sampled_from([1, 4]), seed=st.integers(0, 2**16))
+def test_composed_obs_step_vs_numpy(d_row, n_s, g, seed):
+    """pallas score->select->pallas update == ref_obs_full_step."""
+    rng = _rng(seed)
+    d_col = n_s * g
+    w = rng.normal(size=(d_row, d_col)).astype(np.float32)
+    hinv = _spd(rng, d_col, scale=0.5)
+    # score all, select argmin, update
+    wg = w.reshape(d_row, n_s, g)
+    blocks = np.stack([hinv[i * g:(i + 1) * g, i * g:(i + 1) * g] for i in range(n_s)])
+    binv = np.stack([np.linalg.inv(b) for b in blocks])
+    scores = np.asarray(obs_scores(jnp.array(wg), jnp.array(binv.astype(np.float32))))
+    j = int(np.argmin(scores))
+    s = slice(j * g, (j + 1) * g)
+    p = binv[j] @ hinv[s, :]
+    w2 = np.array(rankg_update(jnp.array(w), jnp.array(w[:, s]), jnp.array(p.astype(np.float32))))
+    w2[:, s] = 0.0
+    w_ref, _ = R.ref_obs_full_step(w, hinv, j, g)
+    np.testing.assert_allclose(w2, w_ref, rtol=1e-3, atol=1e-3)

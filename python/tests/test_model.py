@@ -1,0 +1,213 @@
+"""L2 model-level invariants.
+
+The load-bearing test is mask/materialize equivalence: a masked model
+(the gradual-pruning workhorse) must agree with the shape-materialized
+model (the deployment export) to float tolerance for ANY pruning
+configuration — that is what makes speedups measured on specialized
+artifacts valid for masked checkpoints.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.configs import MODELS, TASKS, n_params, param_layout, layout_offsets
+from compile.specialized import specialized_fwd, specialized_layout
+
+CFG = MODELS["bert-syn-base"]
+GPT = MODELS["gpt-syn"]
+
+
+def rand_params(cfg, task, seed=0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    flat = (rng.normal(size=n_params(cfg, task)) * scale).astype(np.float32)
+    # make layernorm gains 1 (not 0-centered noise)
+    offs = layout_offsets(param_layout(cfg, task))
+    for name, (off, shape) in offs.items():
+        if name.endswith("_g"):
+            n = int(np.prod(shape))
+            flat[off:off + n] = 1.0
+    return flat
+
+
+def gather_specialized(flat, cfg, task, heads_keep, inter_keep):
+    """Extract surviving rows/cols of a masked checkpoint into the
+    specialized packed layout (mirrors rust models/export.rs)."""
+    offs = layout_offsets(param_layout(cfg, task))
+    full = {}
+    for name, (off, shape) in offs.items():
+        n = int(np.prod(shape))
+        full[name] = flat[off:off + n].reshape(shape)
+    heads = [len(h) for h in heads_keep]
+    inters = [len(f) for f in inter_keep]
+    slayout = specialized_layout(cfg, task, heads, inters)
+    out = []
+    for name, shape in slayout:
+        if name.startswith("layer"):
+            l = int(name.split(".")[0][5:])
+            key = name.split(".")[1]
+            hk = np.array(heads_keep[l], np.int64)
+            fk = np.array(inter_keep[l], np.int64)
+            cols_a = (hk[:, None] * cfg.d_head + np.arange(cfg.d_head)[None]).reshape(-1) \
+                if len(hk) else np.zeros(0, np.int64)
+            t = full[name]
+            if key in ("wq", "wk", "wv"):
+                t = t[:, cols_a]
+            elif key in ("bq", "bk", "bv"):
+                t = t[cols_a]
+            elif key == "wo":
+                t = t[cols_a, :]
+            elif key == "w1":
+                t = t[:, fk]
+            elif key == "b1":
+                t = t[fk]
+            elif key == "w2":
+                t = t[fk, :]
+            out.append(np.asarray(t, np.float32).reshape(-1))
+        else:
+            out.append(full[name].reshape(-1))
+    return np.concatenate(out), heads, inters
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_masked_equals_specialized_bert(seed):
+    task = TASKS["sst2-syn"]
+    rng = np.random.default_rng(seed)
+    flat = rand_params(CFG, task, seed)
+    # random pruning config (keep at least 1 head / 1 col in some layers)
+    heads_keep, inter_keep = [], []
+    for l in range(CFG.n_layers):
+        nh = int(rng.integers(0, CFG.n_heads + 1))
+        hk = sorted(rng.choice(CFG.n_heads, nh, replace=False).tolist())
+        nf = int(rng.integers(0, CFG.d_ff // 8)) * 4
+        fk = sorted(rng.choice(CFG.d_ff, nf, replace=False).tolist())
+        heads_keep.append(hk)
+        inter_keep.append(fk)
+    hm = np.zeros((CFG.n_layers, CFG.n_heads), np.float32)
+    fm = np.zeros((CFG.n_layers, CFG.d_ff), np.float32)
+    for l in range(CFG.n_layers):
+        hm[l, heads_keep[l]] = 1.0
+        fm[l, inter_keep[l]] = 1.0
+    # masked checkpoint must have pruned weights zeroed for equivalence
+    offs = layout_offsets(param_layout(CFG, task))
+    ids = rng.integers(0, CFG.vocab, (4, CFG.seq_len)).astype(np.int32)
+    masked_logits = np.asarray(M.fwd(jnp.array(flat), jnp.array(ids),
+                                     jnp.array(hm), jnp.array(fm),
+                                     cfg=CFG, task=task)[0])
+    sflat, heads, inters = gather_specialized(flat, CFG, task, heads_keep, inter_keep)
+    sfn, _ = specialized_fwd(CFG, task, heads, inters)
+    spec_logits = np.asarray(sfn(jnp.array(sflat), jnp.array(ids))[0])
+    np.testing.assert_allclose(masked_logits, spec_logits, rtol=1e-3, atol=1e-4)
+
+
+def test_masked_equals_specialized_gpt():
+    task = TASKS["corpus-syn"]
+    rng = np.random.default_rng(7)
+    flat = rand_params(GPT, task, 7)
+    heads_keep = [[0, 2], [1], list(range(GPT.n_heads)), []]
+    inter_keep = [sorted(rng.choice(GPT.d_ff, 100, replace=False).tolist()),
+                  [], list(range(GPT.d_ff)), [3, 500]]
+    hm = np.zeros((GPT.n_layers, GPT.n_heads), np.float32)
+    fm = np.zeros((GPT.n_layers, GPT.d_ff), np.float32)
+    for l in range(GPT.n_layers):
+        hm[l, heads_keep[l]] = 1.0
+        fm[l, inter_keep[l]] = 1.0
+    ids = rng.integers(0, GPT.vocab, (2, GPT.seq_len)).astype(np.int32)
+    masked = np.asarray(M.fwd(jnp.array(flat), jnp.array(ids), jnp.array(hm),
+                              jnp.array(fm), cfg=GPT, task=task)[0])
+    sflat, heads, inters = gather_specialized(flat, GPT, task, heads_keep, inter_keep)
+    sfn, _ = specialized_fwd(GPT, task, heads, inters)
+    spec = np.asarray(sfn(jnp.array(sflat), jnp.array(ids))[0])
+    np.testing.assert_allclose(masked, spec, rtol=2e-3, atol=2e-3)
+
+
+def test_module_drop_is_exact():
+    """All-zero mask row == module absent (bias gated too)."""
+    task = TASKS["sst2-syn"]
+    flat = rand_params(CFG, task, 1)
+    rng = np.random.default_rng(1)
+    ids = rng.integers(0, CFG.vocab, (2, CFG.seq_len)).astype(np.int32)
+    hm = np.ones((CFG.n_layers, CFG.n_heads), np.float32)
+    fm = np.ones((CFG.n_layers, CFG.d_ff), np.float32)
+    hm[1, :] = 0.0
+    base = np.asarray(M.fwd(jnp.array(flat), jnp.array(ids), jnp.array(hm),
+                            jnp.array(fm), cfg=CFG, task=task)[0])
+    # perturb the dropped layer's attention weights: output must not change
+    flat2 = flat.copy()
+    offs = layout_offsets(param_layout(CFG, task))
+    for key in ("wq", "wk", "wv", "wo", "bo", "bq", "bk", "bv"):
+        off, shape = offs[f"layer1.{key}"]
+        n = int(np.prod(shape))
+        flat2[off:off + n] += 123.0
+    pert = np.asarray(M.fwd(jnp.array(flat2), jnp.array(ids), jnp.array(hm),
+                            jnp.array(fm), cfg=CFG, task=task)[0])
+    np.testing.assert_allclose(base, pert, rtol=1e-5, atol=1e-6)
+
+
+def test_train_step_overfits_tiny_batch():
+    """A few steps of the fused train_step must drive task loss down."""
+    task = TASKS["sst2-syn"]
+    flat = rand_params(CFG, task, 3)
+    m = np.zeros_like(flat); v = np.zeros_like(flat)
+    rng = np.random.default_rng(3)
+    from compile.configs import TRAIN_BATCH
+    ids = rng.integers(0, CFG.vocab, (TRAIN_BATCH, CFG.seq_len)).astype(np.int32)
+    labels = rng.integers(0, 2, (TRAIN_BATCH,)).astype(np.int32)
+    hm = np.ones((CFG.n_layers, CFG.n_heads), np.float32)
+    fm = np.ones((CFG.n_layers, CFG.d_ff), np.float32)
+    tl = np.zeros((TRAIN_BATCH, 2), np.float32)
+    th = np.zeros((CFG.n_layers, TRAIN_BATCH, CFG.seq_len, CFG.d_model), np.float32)
+    pm = np.ones((TRAIN_BATCH, CFG.seq_len), np.float32)
+    lam = np.array([1.0, 0.0, 0.0], np.float32)
+    step = jax.jit(functools.partial(M.train_step, cfg=CFG, task=task))
+    first = None
+    for t in range(1, 51):
+        flat, m, v, lt, _, _ = step(flat, m, v, float(t), 1e-3, ids, labels,
+                                    hm, fm, tl, th, pm, lam, 0.0)
+        if first is None:
+            first = float(lt)
+    assert float(lt) < min(0.05, first * 0.1), (first, float(lt))
+
+
+def test_calib_capture_hessians_are_psd_and_match_manual():
+    task = TASKS["sst2-syn"]
+    flat = rand_params(CFG, task, 4)
+    rng = np.random.default_rng(4)
+    from compile.configs import CALIB_BATCH
+    ids = rng.integers(0, CFG.vocab, (CALIB_BATCH, CFG.seq_len)).astype(np.int32)
+    hm = np.ones((CFG.n_layers, CFG.n_heads), np.float32)
+    fm = np.ones((CFG.n_layers, CFG.d_ff), np.float32)
+    ha, hf = M.calib_capture(jnp.array(flat), jnp.array(ids), jnp.array(hm),
+                             jnp.array(fm), cfg=CFG, task=task)
+    ha, hf = np.asarray(ha), np.asarray(hf)
+    assert ha.shape == (CFG.n_layers, CFG.d_attn, CFG.d_attn)
+    assert hf.shape == (CFG.n_layers, CFG.d_ff, CFG.d_ff)
+    for l in range(CFG.n_layers):
+        np.testing.assert_allclose(ha[l], ha[l].T, rtol=1e-4, atol=1e-3)
+        ev = np.linalg.eigvalsh(ha[l].astype(np.float64))
+        assert ev.min() > -1e-2, ev.min()
+
+
+def test_eval_loss_matches_manual_ce():
+    task = TASKS["mnli-syn"]
+    flat = rand_params(CFG, task, 5)
+    rng = np.random.default_rng(5)
+    from compile.configs import EVAL_BATCH
+    ids = rng.integers(0, CFG.vocab, (EVAL_BATCH, CFG.seq_len)).astype(np.int32)
+    labels = rng.integers(0, 3, (EVAL_BATCH,)).astype(np.int32)
+    hm = np.ones((CFG.n_layers, CFG.n_heads), np.float32)
+    fm = np.ones((CFG.n_layers, CFG.d_ff), np.float32)
+    loss = float(M.eval_loss(jnp.array(flat), jnp.array(ids), jnp.array(labels),
+                             jnp.array(hm), jnp.array(fm), cfg=CFG, task=task)[0])
+    logits = np.asarray(M.fwd(jnp.array(flat), jnp.array(ids[:32]), jnp.array(hm),
+                              jnp.array(fm), cfg=CFG, task=task)[0])
+    lse = np.log(np.exp(logits).sum(-1))
+    manual = float(np.mean(lse - logits[np.arange(len(labels)), labels]))
+    assert abs(loss - manual) < 1e-3

@@ -1,0 +1,122 @@
+//! Hot-path micro-benchmarks (custom harness; criterion unavailable).
+//! Covers the L3 hot loops + PJRT dispatch overhead — the numbers
+//! EXPERIMENTS.md §Perf cites.
+//!
+//!   cargo bench --bench bench_hotpath
+
+use std::path::Path;
+
+use ziplm::runtime::{lit_f32_shaped, lit_scalar_i32, Engine};
+use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
+use ziplm::tensor::{linalg, Tensor};
+use ziplm::util::bench::{header, Bench};
+use ziplm::util::prop::gen;
+use ziplm::util::rng::Rng;
+use ziplm::ziplm::{NativeBackend, ObsOps};
+
+fn main() {
+    println!("{}", header());
+    let b = Bench::default();
+    let mut rng = Rng::new(0);
+
+    // native GEMM (coordinator-side math)
+    let a = Tensor::from_vec(&[256, 256], gen::vec_f32(&mut rng, 256 * 256, 1.0));
+    let c = Tensor::from_vec(&[256, 256], gen::vec_f32(&mut rng, 256 * 256, 1.0));
+    println!("{}", b.run("tensor::matmul 256x256x256", || a.matmul(&c)).line());
+
+    // SPD inverse (per-layer Hessian inversion, d_ff=512 realistic)
+    let h512 = Tensor::from_vec(&[512, 512], gen::spd(&mut rng, 512, 0.3));
+    let bq = Bench::quick();
+    println!("{}", bq.run_n("linalg::spd_inverse 512", 5, || linalg::spd_inverse(&h512).unwrap()).line());
+
+    // native OBS score + update at model scale (d=128, F=512)
+    let w = Tensor::from_vec(&[128, 512], gen::vec_f32(&mut rng, 128 * 512, 1.0));
+    let hinv = linalg::spd_inverse(&h512).unwrap();
+    let act = vec![1.0f32; 512];
+    let mut nb = NativeBackend::new(1);
+    println!("{}", bq.run_n("obs::scores native fc(128x512)", 10, || nb.scores(&w, &hinv, &act).unwrap()).line());
+    println!("{}", bq.run_n("obs::update native fc(128x512)", 10, || nb.update(&w, &hinv, 3).unwrap()).line());
+
+    // SPDY DP solve (8 modules x 43 levels)
+    let problem = SpdyProblem {
+        modules: (0..8)
+            .map(|i| ModuleLevels {
+                layer: i / 2,
+                is_attn: i % 2 == 0,
+                options: (0..43)
+                    .map(|k| LevelOpt {
+                        remaining: 43 - k,
+                        cost: (43 - k) as f64 * 1e-4,
+                        prior: k as f64 / 43.0,
+                    })
+                    .collect(),
+            })
+            .collect(),
+        overhead: 1e-3,
+    };
+    let coeffs = vec![1.0; 8];
+    println!(
+        "{}",
+        b.run("spdy::solve_dp 8mod x 43lvl", || spdy::solve_dp(&problem, &coeffs, 0.02)).line()
+    );
+
+    // PJRT paths (skipped without artifacts)
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::open(&dir).unwrap();
+        let model = "bert-syn-base";
+        let minfo = engine.manifest.model(model).clone();
+        // HLO OBS score dispatch (the pruning hot loop's unit of work)
+        let w_l = lit_f32_shaped(&[minfo.d_model, minfo.d_ff], &w.data).unwrap();
+        let h_l = lit_f32_shaped(&[minfo.d_ff, minfo.d_ff], &hinv.data).unwrap();
+        let a_l = lit_f32_shaped(&[minfo.d_ff], &act).unwrap();
+        let exe = engine.executable(&format!("{model}__score_fc")).unwrap();
+        println!(
+            "{}",
+            bq.run_n("pjrt dispatch score_fc", 20, || {
+                Engine::run_exe(&exe, &[w_l.clone(), h_l.clone(), a_l.clone()]).unwrap()
+            })
+            .line()
+        );
+        // multi-step fused FC pruning vs equivalent single steps
+        let exe_multi = engine.executable(&format!("{model}__update_fc_multi")).unwrap();
+        let n_l = lit_scalar_i32(45).unwrap();
+        println!(
+            "{}",
+            bq.run_n("pjrt update_fc_multi n=45", 8, || {
+                Engine::run_exe(&exe_multi, &[w_l.clone(), h_l.clone(), a_l.clone(), n_l.clone()])
+                    .unwrap()
+            })
+            .line()
+        );
+        let exe_single = engine.executable(&format!("{model}__update_fc")).unwrap();
+        let idx = lit_scalar_i32(3).unwrap();
+        println!(
+            "{}",
+            bq.run_n("pjrt update_fc single", 20, || {
+                Engine::run_exe(&exe_single, &[w_l.clone(), h_l.clone(), idx.clone()]).unwrap()
+            })
+            .line()
+        );
+        // fwd inference dispatch (serving hot path)
+        let task = "sst2-syn";
+        let tinfo = engine.manifest.task(model, task).clone();
+        let st = ziplm::models::ModelState::init(&minfo, task, &tinfo, 0);
+        let p_l = lit_f32_shaped(&[tinfo.n_params], &st.params).unwrap();
+        let ids = vec![1i32; engine.manifest.batch_eval * minfo.seq_len];
+        let i_l = ziplm::runtime::lit_i32(&[engine.manifest.batch_eval, minfo.seq_len], &ids).unwrap();
+        let hm = lit_f32_shaped(&[minfo.n_layers, minfo.n_heads], &st.masks.head).unwrap();
+        let fm = lit_f32_shaped(&[minfo.n_layers, minfo.d_ff], &st.masks.ffn).unwrap();
+        let exe_fwd = engine.executable(&format!("{model}__{task}__fwd")).unwrap();
+        println!(
+            "{}",
+            bq.run_n("pjrt fwd batch=32 (serving)", 10, || {
+                Engine::run_exe(&exe_fwd, &[p_l.clone(), i_l.clone(), hm.clone(), fm.clone()])
+                    .unwrap()
+            })
+            .line()
+        );
+    } else {
+        println!("(pjrt benches skipped: artifacts/ not built)");
+    }
+}

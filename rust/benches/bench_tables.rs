@@ -1,0 +1,30 @@
+//! Paper-table benches: CI-sized versions of every experiment driver
+//! (the full versions run via `ziplm experiment <id>` and are recorded
+//! in EXPERIMENTS.md). Each bench prints the same row shape the paper
+//! reports.
+//!
+//!   cargo bench --bench bench_tables
+
+use std::path::Path;
+
+use ziplm::exp::{self, ExpCtx};
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_tables skipped: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let ctx = ExpCtx::new(&dir, true).expect("ctx"); // fast mode
+    // fast, deterministic subset: the measurement/analytic tables (no
+    // training). Training-heavy experiments (fig2/3/4/5, table1/2/4/5/8)
+    // run via `ziplm experiment <id>` — see EXPERIMENTS.md.
+    for id in ["table3", "table7"] {
+        println!("=== bench {id} (fast) ===");
+        let t0 = std::time::Instant::now();
+        if let Err(e) = exp::run(&ctx, id) {
+            println!("{id} failed: {e:#}");
+        }
+        println!("=== {id} done in {:.1}s ===\n", t0.elapsed().as_secs_f64());
+    }
+}

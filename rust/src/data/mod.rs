@@ -1,0 +1,428 @@
+//! Synthetic task suite standing in for SQuAD / GLUE / OpenWebText
+//! (none of which are reachable offline — see DESIGN.md §3).
+//!
+//! Design goals, matching what the paper's curves actually measure:
+//!   * learnable but not trivial (teacher reaches high-but-<100% dev
+//!     accuracy),
+//!   * graded difficulty across tasks (sst2-syn easiest … mnli-syn
+//!     hardest 3-class),
+//!   * smooth degradation under capacity loss, so accuracy-vs-speedup
+//!     curves are informative,
+//!   * fully seeded: every experiment in EXPERIMENTS.md regenerates
+//!     bit-identical data.
+//!
+//! Mechanisms: class-conditional unigram bias + class-conditional
+//! bigram successors (cls), position-retrieval with a content-keyed
+//! trigger (span / squad-syn), and a Zipf+successor stochastic grammar
+//! (lm / corpus-syn).
+
+use crate::runtime::ModelInfo;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub label: i32, // cls: class; span: position; lm: unused (-1)
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub task: String,
+    pub kind: String, // "cls" | "span" | "lm"
+    pub n_classes: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub train: Vec<Example>,
+    pub dev: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+/// Per-task difficulty knobs (unigram signal, bigram signal).
+fn task_knobs(task: &str) -> (f64, f64, usize) {
+    // (p_unigram_signal, p_bigram_signal, n_classes)
+    match task {
+        "sst2-syn" => (0.22, 0.25, 2),
+        "qqp-syn" => (0.18, 0.22, 2),
+        "qnli-syn" => (0.14, 0.18, 2),
+        "mnli-syn" => (0.10, 0.15, 3),
+        other => panic!("not a cls task: {other}"),
+    }
+}
+
+pub fn task_seed(task: &str) -> u64 {
+    // stable per-task seed
+    let mut h = 0xcbf29ce484222325u64;
+    for b in task.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Zipf sampler over [0, vocab) with exponent ~1 (precomputed weights).
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(vocab: usize) -> Zipf {
+        let mut cdf = Vec::with_capacity(vocab);
+        let mut acc = 0.0;
+        for i in 0..vocab {
+            acc += 1.0 / ((i + 2) as f64).powf(1.05);
+            cdf.push(acc);
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let t = rng.f64() * self.cdf.last().unwrap();
+        match self.cdf.binary_search_by(|x| x.partial_cmp(&t).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+fn gen_cls(info: &ModelInfo, task: &str, n_train: usize, n_eval: usize) -> Dataset {
+    let (p_uni, p_bi, n_classes) = task_knobs(task);
+    let mut rng = Rng::new(task_seed(task));
+    let vocab = info.vocab;
+    let zipf = Zipf::new(vocab);
+    // class-specific unigram pools + bigram successor permutations
+    let pools: Vec<Vec<usize>> = (0..n_classes)
+        .map(|_| rng.choose(vocab, vocab / 16))
+        .collect();
+    let succs: Vec<Vec<usize>> = (0..n_classes)
+        .map(|_| {
+            let mut p: Vec<usize> = (0..vocab).collect();
+            rng.shuffle(&mut p);
+            p
+        })
+        .collect();
+    let mut gen_split = |n: usize, rng: &mut Rng| -> Vec<Example> {
+        (0..n)
+            .map(|_| {
+                let c = rng.below(n_classes);
+                let mut ids = Vec::with_capacity(info.seq_len);
+                let mut prev = zipf.sample(rng);
+                ids.push(prev as i32);
+                for _ in 1..info.seq_len {
+                    let r = rng.f64();
+                    let tok = if r < p_uni {
+                        pools[c][rng.below(pools[c].len())]
+                    } else if r < p_uni + p_bi {
+                        succs[c][prev]
+                    } else {
+                        zipf.sample(rng)
+                    };
+                    ids.push(tok as i32);
+                    prev = tok;
+                }
+                Example { ids, label: c as i32 }
+            })
+            .collect()
+    };
+    let mut tr_rng = rng.split(1);
+    let mut dv_rng = rng.split(2);
+    let mut te_rng = rng.split(3);
+    Dataset {
+        task: task.to_string(),
+        kind: "cls".into(),
+        n_classes,
+        seq_len: info.seq_len,
+        vocab,
+        train: gen_split(n_train, &mut tr_rng),
+        dev: gen_split(n_eval, &mut dv_rng),
+        test: gen_split(n_eval, &mut te_rng),
+    }
+}
+
+fn gen_span(info: &ModelInfo, n_train: usize, n_eval: usize) -> Dataset {
+    let mut rng = Rng::new(task_seed("squad-syn"));
+    let vocab = info.vocab;
+    let zipf = Zipf::new(vocab);
+    // content-keyed trigger: the "question" token at position 0 determines
+    // which token marks the answer position (hash map via permutation)
+    let mut trig: Vec<usize> = (0..vocab).collect();
+    rng.shuffle(&mut trig);
+    let mut gen_split = |n: usize, rng: &mut Rng| -> Vec<Example> {
+        (0..n)
+            .map(|_| {
+                let q = zipf.sample(rng);
+                let t = trig[q];
+                let pos = 2 + rng.below(info.seq_len - 2);
+                let mut ids = Vec::with_capacity(info.seq_len);
+                ids.push(q as i32);
+                for i in 1..info.seq_len {
+                    if i == pos {
+                        ids.push(t as i32);
+                    } else {
+                        // avoid accidental trigger occurrences
+                        let mut tok = zipf.sample(rng);
+                        while tok == t {
+                            tok = zipf.sample(rng);
+                        }
+                        ids.push(tok as i32);
+                    }
+                }
+                Example { ids, label: pos as i32 }
+            })
+            .collect()
+    };
+    let mut tr = rng.split(1);
+    let mut dv = rng.split(2);
+    let mut te = rng.split(3);
+    Dataset {
+        task: "squad-syn".into(),
+        kind: "span".into(),
+        n_classes: 0,
+        seq_len: info.seq_len,
+        vocab,
+        train: gen_split(n_train, &mut tr),
+        dev: gen_split(n_eval, &mut dv),
+        test: gen_split(n_eval, &mut te),
+    }
+}
+
+fn gen_lm(info: &ModelInfo, n_train: usize, n_eval: usize) -> Dataset {
+    let mut rng = Rng::new(task_seed("corpus-syn"));
+    let vocab = info.vocab;
+    let zipf = Zipf::new(vocab);
+    // stochastic grammar: deterministic successor chains + Zipf restarts
+    let mut succ: Vec<usize> = (0..vocab).collect();
+    rng.shuffle(&mut succ);
+    let mut succ2: Vec<usize> = (0..vocab).collect();
+    rng.shuffle(&mut succ2);
+    let mut gen_split = |n: usize, rng: &mut Rng| -> Vec<Example> {
+        (0..n)
+            .map(|_| {
+                let mut ids = Vec::with_capacity(info.seq_len);
+                let mut prev = zipf.sample(rng);
+                ids.push(prev as i32);
+                for _ in 1..info.seq_len {
+                    let r = rng.f64();
+                    let tok = if r < 0.45 {
+                        succ[prev]
+                    } else if r < 0.60 {
+                        succ2[prev]
+                    } else {
+                        zipf.sample(rng)
+                    };
+                    ids.push(tok as i32);
+                    prev = tok;
+                }
+                Example { ids, label: -1 }
+            })
+            .collect()
+    };
+    let mut tr = rng.split(1);
+    let mut dv = rng.split(2);
+    let mut te = rng.split(3);
+    Dataset {
+        task: "corpus-syn".into(),
+        kind: "lm".into(),
+        n_classes: 0,
+        seq_len: info.seq_len,
+        vocab,
+        train: gen_split(n_train, &mut tr),
+        dev: gen_split(n_eval, &mut dv),
+        test: gen_split(n_eval, &mut te),
+    }
+}
+
+/// Standard sizes; experiment drivers may override.
+pub fn load(info: &ModelInfo, task: &str) -> Dataset {
+    load_sized(info, task, 2048, 512)
+}
+
+pub fn load_sized(info: &ModelInfo, task: &str, n_train: usize, n_eval: usize) -> Dataset {
+    match task {
+        "squad-syn" => gen_span(info, n_train, n_eval),
+        "corpus-syn" => gen_lm(info, n_train, n_eval),
+        t => gen_cls(info, t, n_train, n_eval),
+    }
+}
+
+impl Dataset {
+    /// Pack examples[range] into (ids, labels) batch vectors, padding by
+    /// cycling (datasets here are always ≥ batch).
+    pub fn batch(&self, idxs: &[usize]) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = Vec::with_capacity(idxs.len() * self.seq_len);
+        let mut labels = Vec::new();
+        for &i in idxs {
+            let ex = &self.train[i % self.train.len()];
+            ids.extend_from_slice(&ex.ids);
+            if self.kind == "lm" {
+                labels.extend_from_slice(&ex.ids);
+            } else {
+                labels.push(ex.label);
+            }
+        }
+        (ids, labels)
+    }
+
+    /// Batch from an explicit split.
+    pub fn batch_from(split: &[Example], kind: &str, seq_len: usize, idxs: &[usize]) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = Vec::with_capacity(idxs.len() * seq_len);
+        let mut labels = Vec::new();
+        for &i in idxs {
+            let ex = &split[i % split.len()];
+            ids.extend_from_slice(&ex.ids);
+            if kind == "lm" {
+                labels.extend_from_slice(&ex.ids);
+            } else {
+                labels.push(ex.label);
+            }
+        }
+        (ids, labels)
+    }
+
+    /// Calibration set: the first n train examples (paper: 2048 default).
+    pub fn calib_ids(&self, n: usize, batch: usize) -> Vec<Vec<i32>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let idxs: Vec<usize> = (i..i + batch).collect();
+            let (ids, _) = self.batch(&idxs);
+            out.push(ids);
+            i += batch;
+        }
+        out
+    }
+}
+
+/// Shuffled epoch index stream.
+pub struct Batcher {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Batcher {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Batcher { order, pos: 0, batch, rng }
+    }
+
+    /// Next batch of indices; reshuffles at epoch end.
+    pub fn next(&mut self) -> Vec<usize> {
+        if self.pos + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let out = self.order[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        out
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelInfo;
+    use std::collections::BTreeMap;
+
+    fn info() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            d_head: 8,
+            d_ff: 32,
+            vocab: 256,
+            seq_len: 16,
+            causal: false,
+            ffn_ladder: vec![],
+            head_ladder: vec![],
+            measured_ffn: vec![],
+            tasks: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = load_sized(&info(), "sst2-syn", 64, 32);
+        let b = load_sized(&info(), "sst2-syn", 64, 32);
+        assert_eq!(a.train[0].ids, b.train[0].ids);
+        assert_eq!(a.dev[5].label, b.dev[5].label);
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let d = load_sized(&info(), "qnli-syn", 64, 64);
+        assert_ne!(d.train[0].ids, d.dev[0].ids);
+        assert_ne!(d.dev[0].ids, d.test[0].ids);
+    }
+
+    #[test]
+    fn cls_labels_in_range_and_balanced() {
+        let d = load_sized(&info(), "mnli-syn", 600, 60);
+        assert_eq!(d.n_classes, 3);
+        let mut counts = [0usize; 3];
+        for e in &d.train {
+            assert!((0..3).contains(&(e.label as usize)));
+            counts[e.label as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 120, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn span_label_points_at_trigger() {
+        let d = load_sized(&info(), "squad-syn", 64, 16);
+        for e in &d.train {
+            let pos = e.label as usize;
+            assert!(pos >= 2 && pos < d.seq_len);
+            let t = e.ids[pos];
+            // trigger occurs exactly once outside position 0
+            let occurrences = e.ids[1..].iter().filter(|&&x| x == t).count();
+            assert_eq!(occurrences, 1);
+        }
+    }
+
+    #[test]
+    fn lm_has_predictable_structure() {
+        // successor bigrams should appear far more often than chance
+        let d = load_sized(&info(), "corpus-syn", 64, 16);
+        let mut best = std::collections::HashMap::new();
+        for e in &d.train {
+            for w in e.ids.windows(2) {
+                *best.entry((w[0], w[1])).or_insert(0usize) += 1;
+            }
+        }
+        let max = best.values().max().copied().unwrap_or(0);
+        assert!(max >= 5, "bigram structure too weak: {max}");
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = load_sized(&info(), "sst2-syn", 64, 16);
+        let (ids, labels) = d.batch(&[0, 1, 2, 3]);
+        assert_eq!(ids.len(), 4 * d.seq_len);
+        assert_eq!(labels.len(), 4);
+        let lm = load_sized(&info(), "corpus-syn", 64, 16);
+        let (ids, labels) = lm.batch(&[0, 1]);
+        assert_eq!(labels.len(), ids.len());
+    }
+
+    #[test]
+    fn batcher_covers_epoch() {
+        let mut b = Batcher::new(100, 10, 0);
+        let mut seen = vec![false; 100];
+        for _ in 0..10 {
+            for i in b.next() {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

@@ -1,0 +1,169 @@
+//! Evaluation: accuracy (cls), exact-match (span, the squad-syn "F1"),
+//! and perplexity (lm), all computed from the masked `fwd` / `eval_loss`
+//! artifacts. Argmax/aggregation happen here in Rust — no sort/top-k
+//! ops exist in the lowered graphs.
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Example};
+use crate::models::ModelState;
+use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine};
+
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    /// accuracy / EM in [0,1] for cls+span; for lm this is exp(-loss)
+    /// (inverse perplexity) so "higher = better" holds everywhere.
+    pub metric: f64,
+    pub loss: f64,
+    pub perplexity: Option<f64>,
+    pub n: usize,
+}
+
+pub fn mask_literals(state: &ModelState) -> Result<(xla::Literal, xla::Literal)> {
+    let m = &state.masks;
+    Ok((
+        lit_f32_shaped(&[m.n_layers, m.n_heads], &m.head)?,
+        lit_f32_shaped(&[m.n_layers, m.d_ff], &m.ffn)?,
+    ))
+}
+
+/// Evaluate on a split ("dev" or "test").
+pub fn evaluate(engine: &Engine, state: &ModelState, data: &Dataset, split: &str) -> Result<EvalResult> {
+    let examples: &[Example] = match split {
+        "test" => &data.test,
+        _ => &data.dev,
+    };
+    match data.kind.as_str() {
+        "lm" => eval_lm(engine, state, examples, data),
+        _ => eval_argmax(engine, state, examples, data),
+    }
+}
+
+fn eval_argmax(
+    engine: &Engine,
+    state: &ModelState,
+    examples: &[Example],
+    data: &Dataset,
+) -> Result<EvalResult> {
+    let b = engine.manifest.batch_eval;
+    let art = format!("{}__{}__fwd", state.model, state.task);
+    let tinfo = engine.manifest.task(&state.model, &state.task);
+    let (hm, fm) = mask_literals(state)?;
+    let params = lit_f32_shaped(&[tinfo.n_params], &state.params)?;
+    let n_out = if data.kind == "span" { data.seq_len } else { data.n_classes };
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut i = 0;
+    while i < examples.len() {
+        let idxs: Vec<usize> = (i..i + b).collect();
+        let (ids, labels) = Dataset::batch_from(examples, &data.kind, data.seq_len, &idxs);
+        let out = engine.run(
+            &art,
+            &[
+                params.clone(),
+                lit_i32(&[b, data.seq_len], &ids)?,
+                hm.clone(),
+                fm.clone(),
+            ],
+        )?;
+        let logits = lit_to_f32(&out[0])?;
+        let valid = (examples.len() - i).min(b);
+        for (k, &label) in labels.iter().enumerate().take(valid) {
+            let row = &logits[k * n_out..(k + 1) * n_out];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            if pred == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        i += b;
+    }
+    Ok(EvalResult { metric: correct as f64 / total.max(1) as f64, loss: 0.0, perplexity: None, n: total })
+}
+
+fn eval_lm(
+    engine: &Engine,
+    state: &ModelState,
+    examples: &[Example],
+    data: &Dataset,
+) -> Result<EvalResult> {
+    let b = engine.manifest.batch_eval;
+    let art = format!("{}__{}__eval_loss", state.model, state.task);
+    let tinfo = engine.manifest.task(&state.model, &state.task);
+    let (hm, fm) = mask_literals(state)?;
+    let params = lit_f32_shaped(&[tinfo.n_params], &state.params)?;
+    let mut loss_sum = 0f64;
+    let mut batches = 0usize;
+    let mut i = 0;
+    while i + b <= examples.len().max(b) {
+        let idxs: Vec<usize> = (i..i + b).collect();
+        let (ids, labels) = Dataset::batch_from(examples, "lm", data.seq_len, &idxs);
+        let out = engine.run(
+            &art,
+            &[
+                params.clone(),
+                lit_i32(&[b, data.seq_len], &ids)?,
+                lit_i32(&[b, data.seq_len], &labels)?,
+                hm.clone(),
+                fm.clone(),
+            ],
+        )?;
+        loss_sum += lit_to_f32(&out[0])?[0] as f64;
+        batches += 1;
+        i += b;
+        if i >= examples.len() {
+            break;
+        }
+    }
+    let loss = loss_sum / batches.max(1) as f64;
+    Ok(EvalResult {
+        metric: (-loss).exp(),
+        loss,
+        perplexity: Some(loss.exp()),
+        n: batches * b,
+    })
+}
+
+/// Mean task loss over calibration batches — the SPDY candidate score.
+pub fn calib_loss(
+    engine: &Engine,
+    state: &ModelState,
+    data: &Dataset,
+    n_samples: usize,
+) -> Result<f64> {
+    let b = engine.manifest.batch_eval;
+    let art = format!("{}__{}__eval_loss", state.model, state.task);
+    let tinfo = engine.manifest.task(&state.model, &state.task);
+    let (hm, fm) = mask_literals(state)?;
+    let params = lit_f32_shaped(&[tinfo.n_params], &state.params)?;
+    let mut loss_sum = 0f64;
+    let mut batches = 0usize;
+    let mut i = 0;
+    while i < n_samples {
+        let idxs: Vec<usize> = (i..i + b).collect();
+        let (ids, labels) = data.batch(&idxs);
+        let out = engine.run(
+            &art,
+            &[
+                params.clone(),
+                lit_i32(&[b, data.seq_len], &ids)?,
+                if data.kind == "lm" {
+                    lit_i32(&[b, data.seq_len], &labels)?
+                } else {
+                    lit_i32(&[b], &labels)?
+                },
+                hm.clone(),
+                fm.clone(),
+            ],
+        )?;
+        loss_sum += lit_to_f32(&out[0])?[0] as f64;
+        batches += 1;
+        i += b;
+    }
+    Ok(loss_sum / batches.max(1) as f64)
+}

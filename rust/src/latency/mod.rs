@@ -1,0 +1,459 @@
+//! Latency tables — the inference-awareness substrate (paper §3.2, App. E).
+//!
+//! A table records the runtime of one transformer layer's attention
+//! block with 0..N_heads heads remaining and of its FFN block at every
+//! measured intermediate width, for a given (device, batch regime).
+//! ZipLM consumes tables, never devices, so swapping a measured CPU
+//! table for an analytic V100/A100 model (unavailable hardware,
+//! DESIGN.md §3) changes nothing downstream.
+//!
+//! * [`measure_cpu`] — the real path: times the AOT block artifacts
+//!   (python/compile/blocks.py) through the same PJRT runtime the
+//!   deployed model uses, exactly the paper's methodology.
+//! * [`analytic`] — roofline-style device models calibrated to the
+//!   paper's Tables 3 & 7: V100 is near-linear in width; A100 saturates
+//!   (~4.4x) because small matrices underutilize it.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{lit_f32_shaped, lit_i32, Engine};
+use crate::util::bench::Bench;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Device {
+    CpuPjrt,
+    V100Sim,
+    A100Sim,
+}
+
+impl Device {
+    pub fn parse(s: &str) -> Result<Device> {
+        match s {
+            "cpu" | "cpu-pjrt" => Ok(Device::CpuPjrt),
+            "v100" | "v100-sim" => Ok(Device::V100Sim),
+            "a100" | "a100-sim" => Ok(Device::A100Sim),
+            other => Err(anyhow!("unknown device `{other}`")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Device::CpuPjrt => "cpu-pjrt",
+            Device::V100Sim => "v100-sim",
+            Device::A100Sim => "a100-sim",
+        }
+    }
+}
+
+/// Latency table for one (model, device, regime).
+#[derive(Clone, Debug)]
+pub struct LatencyTable {
+    pub model: String,
+    pub device: String,
+    pub regime: String, // "throughput" | "latency"
+    /// attn[h] = seconds with h heads remaining; attn[0] == 0 (dropped)
+    pub attn: Vec<f64>,
+    /// (intermediate width, seconds), decreasing width, plus (0, 0.0)
+    pub mlp: Vec<(usize, f64)>,
+    /// fixed per-model time (embeddings + task/LM head) — what caps the
+    /// maximum achievable speedup (paper: GPT2 ≤ ~3.5x from the vocab)
+    pub overhead: f64,
+}
+
+impl LatencyTable {
+    pub fn attn_time(&self, heads: usize) -> f64 {
+        self.attn[heads.min(self.attn.len() - 1)]
+    }
+
+    /// Linear interpolation between measured widths.
+    pub fn mlp_time(&self, width: usize) -> f64 {
+        if width == 0 {
+            return 0.0;
+        }
+        let mut upper = self.mlp[0];
+        for &(w, t) in &self.mlp {
+            if w >= width {
+                upper = (w, t);
+            }
+            if w <= width {
+                let lower = (w, t);
+                if upper.0 == lower.0 {
+                    return lower.1;
+                }
+                let frac = (width - lower.0) as f64 / (upper.0 - lower.0) as f64;
+                return lower.1 + frac * (upper.1 - lower.1);
+            }
+        }
+        // below smallest nonzero measurement: scale towards 0
+        let (w, t) = *self.mlp.iter().rev().find(|&&(w, _)| w > 0).unwrap();
+        t * width as f64 / w as f64
+    }
+
+    /// End-to-end model time for per-layer (heads, ffn width) profile.
+    pub fn model_time(&self, profile: &[(usize, usize)]) -> f64 {
+        self.overhead
+            + profile
+                .iter()
+                .map(|&(h, f)| self.attn_time(h) + self.mlp_time(f))
+                .sum::<f64>()
+    }
+
+    pub fn dense_time(&self, n_layers: usize) -> f64 {
+        let dense_h = self.attn.len() - 1;
+        let dense_f = self.mlp[0].0;
+        self.model_time(&vec![(dense_h, dense_f); n_layers])
+    }
+
+    pub fn speedup(&self, profile: &[(usize, usize)]) -> f64 {
+        self.dense_time(profile.len()) / self.model_time(profile)
+    }
+
+    // ----------------------------------------------------------- persist
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("device", Json::Str(self.device.clone())),
+            ("regime", Json::Str(self.regime.clone())),
+            ("attn", Json::arr_f64(&self.attn)),
+            (
+                "mlp",
+                Json::Arr(
+                    self.mlp
+                        .iter()
+                        .map(|&(w, t)| Json::Arr(vec![Json::Num(w as f64), Json::Num(t)]))
+                        .collect(),
+                ),
+            ),
+            ("overhead", Json::Num(self.overhead)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LatencyTable> {
+        let attn = j
+            .get("attn")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("no attn"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let mlp = j
+            .get("mlp")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("no mlp"))?
+            .iter()
+            .map(|e| {
+                (
+                    e.idx(0).and_then(Json::as_usize).unwrap_or(0),
+                    e.idx(1).and_then(Json::as_f64).unwrap_or(0.0),
+                )
+            })
+            .collect();
+        Ok(LatencyTable {
+            model: j.req_str("model").to_string(),
+            device: j.req_str("device").to_string(),
+            regime: j.req_str("regime").to_string(),
+            attn,
+            mlp,
+            overhead: j.get("overhead").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(d) = path.parent() {
+            std::fs::create_dir_all(d)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<LatencyTable> {
+        let text = std::fs::read_to_string(path)?;
+        LatencyTable::from_json(&Json::parse(&text).map_err(|e| anyhow!(e))?)
+    }
+
+    /// Pretty print (paper App. E, Table 7 format).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "# latency table: {} on {} ({} regime)\n{:<20}{:>12}\n",
+            self.model, self.device, self.regime, "intermediate", "latency(ms)"
+        );
+        for &(w, t) in &self.mlp {
+            s += &format!("{:<20}{:>12.3}\n", w, t * 1e3);
+        }
+        s += &format!("{:<20}{:>12}\n", "heads", "latency(ms)");
+        for (h, t) in self.attn.iter().enumerate().rev() {
+            s += &format!("{:<20}{:>12.3}\n", h, t * 1e3);
+        }
+        s += &format!("{:<20}{:>12.3}\n", "overhead", self.overhead * 1e3);
+        s
+    }
+}
+
+// --------------------------------------------------------------- measure
+
+/// Build a table by timing the AOT block artifacts on the CPU PJRT
+/// runtime (median over repetitions). `reps` trades precision for time.
+pub fn measure_cpu(engine: &Engine, model: &str, regime: &str, reps: usize) -> Result<LatencyTable> {
+    let info = engine.manifest.model(model).clone();
+    let bench = Bench { warmup: std::time::Duration::from_millis(30), budget: std::time::Duration::from_millis(400), max_iters: reps.max(5) };
+    let mut attn = vec![0.0f64; info.n_heads + 1];
+    for h in 1..=info.n_heads {
+        let name = format!("{model}__block_attn_h{h}__{regime}");
+        attn[h] = time_artifact(engine, &name, &bench)?;
+        engine.evict(&name);
+    }
+    let mut mlp: Vec<(usize, f64)> = Vec::new();
+    for &f in &info.measured_ffn {
+        let name = format!("{model}__block_mlp_f{f}__{regime}");
+        mlp.push((f, time_artifact(engine, &name, &bench)?));
+        engine.evict(&name);
+    }
+    mlp.sort_by(|a, b| b.0.cmp(&a.0));
+    mlp.push((0, 0.0));
+    // Fixed overhead: embeddings + task head, estimated from flops
+    // relative to one dense layer (measured), since the fwd artifact's
+    // batch differs per regime.
+    let (b, s) = block_regime(engine, model, regime)?;
+    let dense_layer = attn[info.n_heads] + mlp[0].1;
+    let layer_flops = flops_attn(&info, info.n_heads, b, s) + flops_mlp(&info, info.d_ff, b, s);
+    let head_flops = flops_overhead(&info, b, s);
+    let overhead = dense_layer * head_flops / layer_flops;
+    Ok(LatencyTable {
+        model: model.to_string(),
+        device: "cpu-pjrt".into(),
+        regime: regime.into(),
+        attn,
+        mlp,
+        overhead,
+    })
+}
+
+fn block_regime(engine: &Engine, model: &str, regime: &str) -> Result<(usize, usize)> {
+    let info = engine.manifest.model(model);
+    let name = format!("{model}__block_attn_h{}__{regime}", info.n_heads);
+    let a = engine
+        .manifest
+        .artifacts
+        .get(&name)
+        .ok_or_else(|| anyhow!("missing block artifact {name}"))?;
+    Ok((a.batch.unwrap_or(1), a.seq.unwrap_or(info.seq_len)))
+}
+
+fn time_artifact(engine: &Engine, name: &str, bench: &Bench) -> Result<f64> {
+    let info = engine
+        .manifest
+        .artifacts
+        .get(name)
+        .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+        .clone();
+    // random-ish inputs of the right shapes
+    let mut lits = Vec::new();
+    for (i, sig) in info.inputs.iter().enumerate() {
+        let n: usize = sig.shape.iter().product();
+        if sig.dtype == "i32" {
+            lits.push(lit_i32(&sig.shape, &vec![1i32; n])?);
+        } else {
+            let data: Vec<f32> = (0..n).map(|k| ((k + i) % 13) as f32 * 0.01).collect();
+            lits.push(lit_f32_shaped(&sig.shape, &data)?);
+        }
+    }
+    let exe = engine.executable(name)?;
+    let stats = bench.run(name, || Engine::run_exe(&exe, &lits).expect("block exec"));
+    Ok(stats.median_ns / 1e9)
+}
+
+// --------------------------------------------------------------- analytic
+
+/// Architectural dims for analytic tables (decoupled from our synthetic
+/// models so Table 3 can be reproduced at the paper's BERT-base scale).
+#[derive(Clone, Copy, Debug)]
+pub struct ArchDims {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl ArchDims {
+    pub fn bert_base_paper() -> ArchDims {
+        ArchDims { d_model: 768, n_heads: 12, d_head: 64, d_ff: 3072, vocab: 30522, n_layers: 12, batch: 128, seq: 128 }
+    }
+}
+
+fn flops_attn(info: &crate::runtime::ModelInfo, heads: usize, b: usize, s: usize) -> f64 {
+    let dims = ArchDims {
+        d_model: info.d_model,
+        n_heads: info.n_heads,
+        d_head: info.d_head,
+        d_ff: info.d_ff,
+        vocab: info.vocab,
+        n_layers: info.n_layers,
+        batch: b,
+        seq: s,
+    };
+    flops_attn_d(&dims, heads)
+}
+
+fn flops_mlp(info: &crate::runtime::ModelInfo, width: usize, b: usize, s: usize) -> f64 {
+    (b * s) as f64 * 4.0 * info.d_model as f64 * width as f64
+}
+
+fn flops_overhead(info: &crate::runtime::ModelInfo, b: usize, s: usize) -> f64 {
+    // embedding gather is cheap; the head matmul dominates: 2*d*V per tok
+    (b * s) as f64 * 2.0 * info.d_model as f64 * info.vocab as f64 * 0.25
+}
+
+fn flops_attn_d(d: &ArchDims, heads: usize) -> f64 {
+    let a = heads * d.d_head;
+    let toks = (d.batch * d.seq) as f64;
+    // q,k,v,out projections + score/context matmuls
+    toks * (8.0 * d.d_model as f64 * a as f64) + toks * (4.0 * d.seq as f64 * a as f64)
+}
+
+fn flops_mlp_d(d: &ArchDims, width: usize) -> f64 {
+    (d.batch * d.seq) as f64 * 4.0 * d.d_model as f64 * width as f64
+}
+
+/// Device model: t(work) = max(floor, t_fix + work / peak).
+/// Calibrated against the paper:
+///  * V100 (Tables 3 & 7): near-linear in width with a small intercept
+///    (fit of Table 7 gives intercept ≈ 4.9% of the dense block);
+///  * A100 (Table 3): much higher peak but saturates — speedup capped
+///    at ≈ 4.4x regardless of how small the matrices get.
+struct DeviceModel {
+    peak_flops: f64,
+    t_fix: f64,
+    floor_frac: f64, // min block time as fraction of dense block (0 = none)
+}
+
+fn device_model(dev: Device, dense_flops: f64) -> DeviceModel {
+    match dev {
+        Device::V100Sim => {
+            // dense FFN block 11.9ms at paper scale => derive peak
+            let t_dense = 11.9e-3 * dense_flops / flops_mlp_d(&ArchDims::bert_base_paper(), 3072);
+            DeviceModel { peak_flops: dense_flops / (t_dense * 0.951), t_fix: t_dense * 0.049, floor_frac: 0.0 }
+        }
+        Device::A100Sim => {
+            let t_dense = 4.1e-3 * dense_flops / flops_mlp_d(&ArchDims::bert_base_paper(), 3072);
+            DeviceModel { peak_flops: dense_flops / (t_dense * 0.90), t_fix: t_dense * 0.10, floor_frac: 1.0 / 4.4 }
+        }
+        Device::CpuPjrt => DeviceModel { peak_flops: 5e9, t_fix: 20e-6, floor_frac: 0.0 },
+    }
+}
+
+/// Build an analytic table for arbitrary architecture dims.
+pub fn analytic(dev: Device, dims: &ArchDims, regime: &str, mlp_widths: &[usize]) -> LatencyTable {
+    let dense_mlp = flops_mlp_d(dims, dims.d_ff);
+    let m = device_model(dev, dense_mlp);
+    let block_time = |flops: f64, dense: f64| -> f64 {
+        let t = m.t_fix + flops / m.peak_flops;
+        let floor = m.floor_frac * (m.t_fix + dense / m.peak_flops);
+        t.max(floor)
+    };
+    let dense_attn = flops_attn_d(dims, dims.n_heads);
+    let mut attn = vec![0.0f64];
+    for h in 1..=dims.n_heads {
+        attn.push(block_time(flops_attn_d(dims, h), dense_attn));
+    }
+    let mut mlp: Vec<(usize, f64)> = mlp_widths
+        .iter()
+        .filter(|&&w| w > 0)
+        .map(|&w| (w, block_time(flops_mlp_d(dims, w), dense_mlp)))
+        .collect();
+    mlp.sort_by(|a, b| b.0.cmp(&a.0));
+    mlp.push((0, 0.0));
+    let head_flops = (dims.batch * dims.seq) as f64 * 2.0 * dims.d_model as f64 * dims.vocab as f64 * 0.25;
+    let overhead = block_time(head_flops, dense_mlp);
+    LatencyTable {
+        model: format!("analytic-d{}", dims.d_model),
+        device: dev.name().into(),
+        regime: regime.into(),
+        attn,
+        mlp,
+        overhead,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> LatencyTable {
+        LatencyTable {
+            model: "m".into(),
+            device: "test".into(),
+            regime: "throughput".into(),
+            attn: vec![0.0, 1.0e-3, 1.8e-3, 2.5e-3, 3.1e-3],
+            mlp: vec![(512, 8e-3), (256, 4.2e-3), (64, 1.5e-3), (0, 0.0)],
+            overhead: 1e-3,
+        }
+    }
+
+    #[test]
+    fn mlp_interpolation_monotone() {
+        let t = table();
+        assert!((t.mlp_time(512) - 8e-3).abs() < 1e-12);
+        let mid = t.mlp_time(384);
+        assert!(mid > 4.2e-3 && mid < 8e-3);
+        assert!(t.mlp_time(32) < 1.5e-3);
+        assert_eq!(t.mlp_time(0), 0.0);
+        // monotone over a sweep
+        let mut prev = f64::INFINITY;
+        for w in (0..=512).rev().step_by(16) {
+            let v = t.mlp_time(w);
+            assert!(v <= prev + 1e-12, "w={w}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn model_time_and_speedup() {
+        let t = table();
+        let dense = t.dense_time(2);
+        assert!((dense - (1e-3 + 2.0 * (3.1e-3 + 8e-3))).abs() < 1e-9);
+        let s = t.speedup(&[(2, 256), (0, 0)]);
+        assert!(s > 1.0);
+        assert!((t.speedup(&vec![(4, 512); 2]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = table();
+        let j = t.to_json();
+        let t2 = LatencyTable::from_json(&j).unwrap();
+        assert_eq!(t.attn, t2.attn);
+        assert_eq!(t.mlp, t2.mlp);
+        assert_eq!(t.overhead, t2.overhead);
+    }
+
+    #[test]
+    fn analytic_v100_vs_a100_saturation() {
+        // Reproduces the *shape* of paper Table 3: V100 keeps speeding
+        // up as the MLP shrinks; A100 saturates around 4.4x.
+        let dims = ArchDims::bert_base_paper();
+        let widths = [3072usize, 1814, 1322, 302, 130, 76, 33];
+        let v = analytic(Device::V100Sim, &dims, "throughput", &widths);
+        let a = analytic(Device::A100Sim, &dims, "throughput", &widths);
+        let sp = |t: &LatencyTable, w: usize| t.mlp_time(3072) / t.mlp_time(w);
+        assert!(sp(&v, 33) > 10.0, "V100 33: {}", sp(&v, 33));
+        assert!(sp(&a, 33) < 5.0, "A100 33: {}", sp(&a, 33));
+        assert!((sp(&a, 33) - sp(&a, 76)).abs() < 0.2, "A100 saturated");
+        assert!(sp(&v, 302) > 2.0 * sp(&a, 302) / 2.0); // V100 ahead at mid sizes
+        // dense ratio ≈ 1 for both
+        assert!((sp(&v, 3072) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attn_time_zero_when_dropped() {
+        let t = table();
+        assert_eq!(t.attn_time(0), 0.0);
+    }
+}

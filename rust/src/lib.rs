@@ -1,0 +1,35 @@
+//! # ZipLM — Inference-Aware Structured Pruning of Language Models
+//!
+//! A from-scratch reproduction of *ZipLM* (Kurtic, Frantar, Alistarh;
+//! NeurIPS 2023) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: gradual/one-shot pruning
+//!   drivers, structured SPDY search, latency tables, fine-tuning loop,
+//!   baselines, evaluation, and an inference server used for runtime
+//!   measurements. Owns the event loop, CLI and metrics.
+//! * **L2 (python/compile, build-time only)** — masked transformer
+//!   fwd/train graphs + pruning score/update graphs, AOT-lowered to HLO
+//!   text once (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the pruning
+//!   hot-spots (structured-OBS scoring, rank-g updates) and the fused
+//!   head-masked attention core.
+//!
+//! The request path is pure Rust → PJRT; Python never executes after
+//! artifacts are built. See DESIGN.md for the full system inventory and
+//! EXPERIMENTS.md for the paper-vs-measured results.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod latency;
+pub mod models;
+pub mod pruner;
+pub mod quant;
+pub mod runtime;
+pub mod spdy;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod ziplm;

@@ -1,0 +1,220 @@
+//! `ziplm` — launcher CLI for the ZipLM reproduction.
+//!
+//! Subcommands:
+//!   train-teacher  --model M --task T [--epochs E]
+//!   latency-table  --model M [--regime throughput|latency]
+//!   prune-oneshot  --model M --task T --speedup S [--calib N]
+//!   prune-gradual  --model M --task T --speedups 2,3,4 [--epochs E]
+//!   eval           --ckpt path [--split dev|test]
+//!   serve          --ckpt path [--batch B] [--wait-ms W]
+//!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|all> [--fast]
+//!
+//! Global flags: --artifacts DIR (default ./artifacts), --fast.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use ziplm::coordinator::{self, ServerCfg};
+use ziplm::data;
+use ziplm::eval::evaluate;
+use ziplm::exp::{self, ExpCtx};
+use ziplm::latency;
+use ziplm::models::ModelState;
+use ziplm::pruner::{self, PruneCfg};
+use ziplm::runtime::Engine;
+use ziplm::train::TrainCfg;
+use ziplm::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let args = Args::parse(argv);
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "ziplm — inference-aware structured pruning (NeurIPS'23 reproduction)\n\
+         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|experiment> [flags]\n\
+         see README.md for the full flag reference"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train-teacher" => train_teacher(args),
+        "latency-table" => latency_table(args),
+        "prune-oneshot" => prune_oneshot(args),
+        "prune-gradual" => prune_gradual(args),
+        "eval" => eval_cmd(args),
+        "serve" => serve(args),
+        "experiment" => experiment(args),
+        _ => {
+            usage();
+            Err(anyhow!("unknown command `{cmd}`"))
+        }
+    }
+}
+
+fn ctx(args: &Args) -> Result<ExpCtx> {
+    ExpCtx::new(&artifacts_dir(args), args.bool("fast"))
+}
+
+fn train_teacher(args: &Args) -> Result<()> {
+    let ctx = ctx(args)?;
+    let model = args.str_or("model", "bert-syn-base");
+    let task = args.str_or("task", "sst2-syn");
+    let ds = ctx.dataset(&model, &task);
+    let st = ctx.teacher(&model, &task, &ds)?;
+    let ev = evaluate(&ctx.engine, &st, &ds, "dev")?;
+    println!("teacher {model}/{task}: dev metric {:.4} (ckpt in runs/)", ev.metric);
+    Ok(())
+}
+
+fn latency_table(args: &Args) -> Result<()> {
+    let engine = Engine::open(&artifacts_dir(args))?;
+    let model = args.str_or("model", "bert-syn-base");
+    let regime = args.str_or("regime", "throughput");
+    let reps = args.usize_or("reps", 30);
+    let t = latency::measure_cpu(&engine, &model, &regime, reps)?;
+    println!("{}", t.render());
+    let path = PathBuf::from("runs").join(format!("latency_{model}_{regime}.json"));
+    t.save(&path)?;
+    println!("saved to {}", path.display());
+    Ok(())
+}
+
+fn prune_oneshot(args: &Args) -> Result<()> {
+    let ctx = ctx(args)?;
+    let model = args.str_or("model", "bert-syn-base");
+    let task = args.str_or("task", "sst2-syn");
+    let speedup = args.f64_or("speedup", 2.0);
+    let ds = ctx.dataset(&model, &task);
+    let mut st = ctx.teacher(&model, &task, &ds)?;
+    let table = ctx.table(&model, &args.str_or("regime", "throughput"))?;
+    let minfo = ctx.engine.manifest.model(&model).clone();
+    let mut cfg = PruneCfg { calib_samples: args.usize_or("calib", 256), ..Default::default() };
+    cfg.spdy.iters = args.usize_or("spdy-iters", 120);
+    let dense = table.dense_time(minfo.n_layers);
+    let report = pruner::prune_to_target(&ctx.engine, &mut st, &ds, &table, dense, speedup, &cfg)?;
+    let ev = evaluate(&ctx.engine, &st, &ds, "dev")?;
+    println!(
+        "one-shot {speedup}x: est={:.2}x dev-metric={:.4} profile={:?}",
+        report.est_speedup, ev.metric, report.layer_profile
+    );
+    let default_out = format!("runs/oneshot_{model}_{task}_{speedup}x.zlm");
+    let out = PathBuf::from(args.str_or("out", &default_out));
+    st.save(&out)?;
+    println!("saved {}", out.display());
+    Ok(())
+}
+
+fn prune_gradual(args: &Args) -> Result<()> {
+    let ctx = ctx(args)?;
+    let model = args.str_or("model", "bert-syn-base");
+    let task = args.str_or("task", "sst2-syn");
+    let targets = args.f64_list("speedups", &[2.0, 3.0, 4.0]);
+    let ds = ctx.dataset(&model, &task);
+    let teacher = ctx.teacher(&model, &task, &ds)?;
+    let table = ctx.table(&model, &args.str_or("regime", "throughput"))?;
+    let cfg = PruneCfg { calib_samples: args.usize_or("calib", 256), ..Default::default() };
+    let kd = !ctx.engine.manifest.model(&model).causal;
+    let tcfg = TrainCfg {
+        lr: args.f64_or("lr", 5e-4),
+        epochs: args.f64_or("epochs", 2.0),
+        lambdas: if kd { [1.0, 0.5, 0.5] } else { [1.0, 0.0, 0.0] },
+        ..Default::default()
+    };
+    let stages = pruner::gradual(
+        &ctx.engine,
+        teacher.clone(),
+        &ds,
+        &table,
+        &targets,
+        &cfg,
+        &tcfg,
+        if kd { Some(teacher.params.clone()) } else { None },
+    )?;
+    for s in &stages {
+        let ev = evaluate(&ctx.engine, &s.state, &ds, "dev")?;
+        println!(
+            "{:>5.1}x  est={:.2}x  dev={:.4}  profile={:?}",
+            s.report.target, s.report.est_speedup, ev.metric, s.state.masks.summary()
+        );
+        s.state.save(Path::new(&format!("runs/ziplm_{model}_{task}_{:.0}x.zlm", s.report.target)))?;
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let engine = Engine::open(&artifacts_dir(args))?;
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+    let st = ModelState::load(Path::new(ckpt))?;
+    let info = engine.manifest.model(&st.model);
+    let ds = data::load_sized(info, &st.task, 1024, 256);
+    let split = args.str_or("split", "dev");
+    let ev = evaluate(&engine, &st, &ds, &split)?;
+    match ev.perplexity {
+        Some(p) => println!("{ckpt}: {split} loss={:.4} ppl={p:.2} (n={})", ev.loss, ev.n),
+        None => println!("{ckpt}: {split} metric={:.4} (n={})", ev.metric, ev.n),
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+    let st = ModelState::load(Path::new(ckpt))?;
+    let model = st.model.clone();
+    let task = st.task.clone();
+    let cfg = ServerCfg {
+        artifacts: artifacts_dir(args),
+        max_batch: args.usize_or("batch", 8),
+        max_wait: std::time::Duration::from_millis(args.u64_or("wait-ms", 2)),
+    };
+    // demo workload: submit n requests from the dev set, report stats
+    let n = args.usize_or("requests", 64);
+    let engine = Engine::open(&artifacts_dir(args))?;
+    let info = engine.manifest.model(&model);
+    let ds = data::load_sized(info, &task, 256, n.max(32));
+    drop(engine);
+    let handle = coordinator::start(cfg, st);
+    let t0 = std::time::Instant::now();
+    let mut latencies = Vec::new();
+    for ex in ds.dev.iter().take(n) {
+        let reply = handle.infer(ex.ids.clone())?;
+        latencies.push(reply.latency.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = handle.shutdown()?;
+    println!(
+        "served {n} requests ({} batches) in {wall:.2}s → {:.1} req/s, p50 {:.1}ms p95 {:.1}ms",
+        stats.batches,
+        n as f64 / wall,
+        latencies[n / 2] * 1e3,
+        latencies[(n as f64 * 0.95) as usize % n] * 1e3,
+    );
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: ziplm experiment <id> [--fast]"))?;
+    let ctx = ctx(args)?;
+    exp::run(&ctx, &id)
+}

@@ -1,0 +1,490 @@
+//! Model state on the coordinator side: packed parameters, structural
+//! masks, initialization, checkpoints, and the masked↔materialized
+//! weight plumbing the pruner needs.
+//!
+//! Shapes all come from the manifest (runtime/manifest.rs); this module
+//! never hard-codes a layout.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{ModelInfo, TaskInfo};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Structural masks: 1.0 = structure present. Row-major [L, H] / [L, F].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Masks {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub head: Vec<f32>, // [L * H]
+    pub ffn: Vec<f32>,  // [L * F]
+}
+
+impl Masks {
+    pub fn dense(info: &ModelInfo) -> Masks {
+        Masks {
+            n_layers: info.n_layers,
+            n_heads: info.n_heads,
+            d_ff: info.d_ff,
+            head: vec![1.0; info.n_layers * info.n_heads],
+            ffn: vec![1.0; info.n_layers * info.d_ff],
+        }
+    }
+
+    pub fn heads_alive(&self, layer: usize) -> usize {
+        self.head[layer * self.n_heads..(layer + 1) * self.n_heads]
+            .iter()
+            .filter(|&&m| m > 0.0)
+            .count()
+    }
+
+    pub fn ffn_alive(&self, layer: usize) -> usize {
+        self.ffn[layer * self.d_ff..(layer + 1) * self.d_ff]
+            .iter()
+            .filter(|&&m| m > 0.0)
+            .count()
+    }
+
+    pub fn head_row(&self, layer: usize) -> &[f32] {
+        &self.head[layer * self.n_heads..(layer + 1) * self.n_heads]
+    }
+
+    pub fn ffn_row(&self, layer: usize) -> &[f32] {
+        &self.ffn[layer * self.d_ff..(layer + 1) * self.d_ff]
+    }
+
+    pub fn kill_head(&mut self, layer: usize, h: usize) {
+        self.head[layer * self.n_heads + h] = 0.0;
+    }
+
+    pub fn kill_ffn_col(&mut self, layer: usize, c: usize) {
+        self.ffn[layer * self.d_ff + c] = 0.0;
+    }
+
+    /// Remaining-structure summary per layer: (heads, ffn cols).
+    pub fn summary(&self) -> Vec<(usize, usize)> {
+        (0..self.n_layers).map(|l| (self.heads_alive(l), self.ffn_alive(l))).collect()
+    }
+
+    /// Fraction of prunable encoder weight remaining.
+    pub fn density(&self) -> f64 {
+        let h: f64 =
+            self.head.iter().map(|&x| x as f64).sum::<f64>() / self.head.len() as f64;
+        let f: f64 = self.ffn.iter().map(|&x| x as f64).sum::<f64>() / self.ffn.len() as f64;
+        0.5 * h + 0.5 * f
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("head", Json::Arr(self.head.iter().map(|&x| Json::Num(x as f64)).collect())),
+            ("ffn", Json::Arr(self.ffn.iter().map(|&x| Json::Num(x as f64)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Masks> {
+        let getf = |k: &str| -> Vec<f32> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).map(|x| x as f32).collect())
+                .unwrap_or_default()
+        };
+        Ok(Masks {
+            n_layers: j.req_usize("n_layers"),
+            n_heads: j.req_usize("n_heads"),
+            d_ff: j.req_usize("d_ff"),
+            head: getf("head"),
+            ffn: getf("ffn"),
+        })
+    }
+}
+
+/// Full coordinator-side model state.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub model: String,
+    pub task: String,
+    pub params: Vec<f32>,
+    pub masks: Masks,
+}
+
+impl ModelState {
+    /// BERT-style init: N(0, 0.02) weights, zero biases, unit LN gains.
+    pub fn init(info: &ModelInfo, task_name: &str, tinfo: &TaskInfo, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed);
+        let mut params = vec![0f32; tinfo.n_params];
+        for e in &tinfo.layout {
+            let slice = &mut params[e.offset..e.offset + e.numel()];
+            let base = e.name.rsplit('.').next().unwrap_or(&e.name);
+            if base.ends_with("_g") {
+                slice.fill(1.0);
+            } else if base.starts_with('b') || base.ends_with("_b") {
+                slice.fill(0.0);
+            } else {
+                for x in slice.iter_mut() {
+                    *x = rng.normal_f32(0.02);
+                }
+            }
+        }
+        ModelState {
+            model: info.name.clone(),
+            task: task_name.to_string(),
+            params,
+            masks: Masks::dense(info),
+        }
+    }
+
+    /// View a layout entry as a 2-D tensor (copies).
+    pub fn get2(&self, tinfo: &TaskInfo, name: &str) -> Result<Tensor> {
+        let e = tinfo.entry(name).ok_or_else(|| anyhow!("no param `{name}`"))?;
+        if e.shape.len() != 2 {
+            return Err(anyhow!("`{name}` is not 2-D"));
+        }
+        Ok(Tensor::from_vec(&e.shape, self.params[e.offset..e.offset + e.numel()].to_vec()))
+    }
+
+    pub fn get1(&self, tinfo: &TaskInfo, name: &str) -> Result<Vec<f32>> {
+        let e = tinfo.entry(name).ok_or_else(|| anyhow!("no param `{name}`"))?;
+        Ok(self.params[e.offset..e.offset + e.numel()].to_vec())
+    }
+
+    pub fn set_flat(&mut self, tinfo: &TaskInfo, name: &str, data: &[f32]) -> Result<()> {
+        let e = tinfo.entry(name).ok_or_else(|| anyhow!("no param `{name}`"))?;
+        if data.len() != e.numel() {
+            return Err(anyhow!("size mismatch for `{name}`"));
+        }
+        self.params[e.offset..e.offset + e.numel()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// OBS orientation for the attention out-projection of `layer`:
+    /// W_paper = wo^T with shape [d_model, d_attn] (structures = head
+    /// column groups). Returns a copy.
+    pub fn attn_w_paper(&self, tinfo: &TaskInfo, layer: usize) -> Result<Tensor> {
+        Ok(self.get2(tinfo, &format!("layer{layer}.wo"))?.transpose2())
+    }
+
+    /// Write back an updated W_paper for the attention out-projection,
+    /// zeroing q/k/v columns + biases of pruned heads for hygiene.
+    pub fn set_attn_w_paper(
+        &mut self,
+        tinfo: &TaskInfo,
+        layer: usize,
+        w_paper: &Tensor,
+        dead_heads: &[usize],
+        d_head: usize,
+    ) -> Result<()> {
+        let wo = w_paper.transpose2();
+        self.set_flat(tinfo, &format!("layer{layer}.wo"), &wo.data)?;
+        for name in ["wq", "wk", "wv"] {
+            let full = format!("layer{layer}.{name}");
+            let mut t = self.get2(tinfo, &full)?;
+            let cols = t.cols();
+            for &h in dead_heads {
+                for r in 0..t.rows() {
+                    for c in h * d_head..(h + 1) * d_head {
+                        t.data[r * cols + c] = 0.0;
+                    }
+                }
+            }
+            self.set_flat(tinfo, &full, &t.data)?;
+        }
+        for name in ["bq", "bk", "bv"] {
+            let full = format!("layer{layer}.{name}");
+            let mut b = self.get1(tinfo, &full)?;
+            for &h in dead_heads {
+                for c in h * d_head..(h + 1) * d_head {
+                    b[c] = 0.0;
+                }
+            }
+            self.set_flat(tinfo, &full, &b)?;
+        }
+        Ok(())
+    }
+
+    /// OBS orientation for FC2 of `layer`: W_paper = w2^T, [d_model, d_ff].
+    pub fn fc_w_paper(&self, tinfo: &TaskInfo, layer: usize) -> Result<Tensor> {
+        Ok(self.get2(tinfo, &format!("layer{layer}.w2"))?.transpose2())
+    }
+
+    /// Write back FC2 and zero pruned intermediate columns in w1/b1.
+    pub fn set_fc_w_paper(
+        &mut self,
+        tinfo: &TaskInfo,
+        layer: usize,
+        w_paper: &Tensor,
+        dead_cols: &[usize],
+    ) -> Result<()> {
+        let w2 = w_paper.transpose2();
+        self.set_flat(tinfo, &format!("layer{layer}.w2"), &w2.data)?;
+        let full = format!("layer{layer}.w1");
+        let mut w1 = self.get2(tinfo, &full)?;
+        let cols = w1.cols();
+        for &c in dead_cols {
+            for r in 0..w1.rows() {
+                w1.data[r * cols + c] = 0.0;
+            }
+        }
+        self.set_flat(tinfo, &full, &w1.data)?;
+        let bfull = format!("layer{layer}.b1");
+        let mut b1 = self.get1(tinfo, &bfull)?;
+        for &c in dead_cols {
+            b1[c] = 0.0;
+        }
+        self.set_flat(tinfo, &bfull, &b1)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------- checkpoints
+
+    /// Binary checkpoint: magic, JSON header (model/task/masks), f32 LE params.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("task", Json::Str(self.task.clone())),
+            ("n_params", Json::Num(self.params.len() as f64)),
+            ("masks", self.masks.to_json()),
+        ])
+        .to_string();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"ZLM1")?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        let mut buf = Vec::with_capacity(self.params.len() * 4);
+        for &x in &self.params {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelState> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"ZLM1" {
+            return Err(anyhow!("bad checkpoint magic"));
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?).map_err(|e| anyhow!(e))?;
+        let n = header.req_usize("n_params");
+        let mut raw = Vec::new();
+        f.read_to_end(&mut raw)?;
+        if raw.len() != n * 4 {
+            return Err(anyhow!("checkpoint truncated: {} vs {}", raw.len(), n * 4));
+        }
+        let params = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(ModelState {
+            model: header.req_str("model").to_string(),
+            task: header.req_str("task").to_string(),
+            params,
+            masks: Masks::from_json(header.get("masks").ok_or_else(|| anyhow!("no masks"))?)?,
+        })
+    }
+}
+
+/// Shared fixtures for unit tests across modules (only in test builds).
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+    use crate::runtime::manifest::LayoutEntry;
+    use std::collections::BTreeMap;
+
+    /// A 2-layer toy model with a full BERT-style layout.
+    pub fn mini_state() -> (ModelInfo, TaskInfo, ModelState) {
+        let (d, a, f, v, s) = (8usize, 8usize, 8usize, 16usize, 4usize);
+        let mut names: Vec<(String, Vec<usize>)> = vec![
+            ("tok_emb".into(), vec![v, d]),
+            ("pos_emb".into(), vec![s, d]),
+            ("emb_ln_g".into(), vec![d]),
+            ("emb_ln_b".into(), vec![d]),
+        ];
+        for l in 0..2 {
+            for (n, shape) in [
+                ("wq", vec![d, a]), ("bq", vec![a]),
+                ("wk", vec![d, a]), ("bk", vec![a]),
+                ("wv", vec![d, a]), ("bv", vec![a]),
+                ("wo", vec![a, d]), ("bo", vec![d]),
+                ("ln1_g", vec![d]), ("ln1_b", vec![d]),
+                ("w1", vec![d, f]), ("b1", vec![f]),
+                ("w2", vec![f, d]), ("b2", vec![d]),
+                ("ln2_g", vec![d]), ("ln2_b", vec![d]),
+            ] {
+                names.push((format!("layer{l}.{n}"), shape));
+            }
+        }
+        names.push(("cls_w".into(), vec![d, 2]));
+        names.push(("cls_b".into(), vec![2]));
+        let mut layout = Vec::new();
+        let mut off = 0usize;
+        for (name, shape) in names {
+            let numel: usize = shape.iter().product();
+            layout.push(LayoutEntry { name, shape, offset: off });
+            off += numel;
+        }
+        let tinfo = TaskInfo { n_params: off, kind: "cls".into(), n_classes: 2, layout };
+        let minfo = ModelInfo {
+            name: "mini2".into(),
+            n_layers: 2,
+            d_model: d,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: f,
+            vocab: v,
+            seq_len: s,
+            causal: false,
+            ffn_ladder: vec![f, 6, 4, 2, 1, 0],
+            head_ladder: vec![2, 1, 0],
+            measured_ffn: vec![f, 4, 1],
+            tasks: BTreeMap::new(),
+        };
+        let st = ModelState::init(&minfo, "sst2-syn", &tinfo, 42);
+        (minfo, tinfo, st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayoutEntry;
+    use std::collections::BTreeMap;
+
+    pub(crate) fn mini_info() -> (ModelInfo, TaskInfo) {
+        let names: Vec<(&str, Vec<usize>)> = vec![
+            ("tok_emb", vec![8, 4]),
+            ("layer0.wo", vec![4, 4]),
+            ("layer0.bo", vec![4]),
+            ("layer0.ln1_g", vec![4]),
+            ("layer0.wq", vec![4, 4]),
+            ("layer0.wk", vec![4, 4]),
+            ("layer0.wv", vec![4, 4]),
+            ("layer0.bq", vec![4]),
+            ("layer0.bk", vec![4]),
+            ("layer0.bv", vec![4]),
+            ("layer0.w1", vec![4, 4]),
+            ("layer0.b1", vec![4]),
+            ("layer0.w2", vec![4, 4]),
+            ("layer0.b2", vec![4]),
+        ];
+        let mut layout = Vec::new();
+        let mut off = 0;
+        for (n, shape) in names {
+            let numel: usize = shape.iter().product();
+            layout.push(LayoutEntry { name: n.into(), shape, offset: off });
+            off += numel;
+        }
+        let tinfo = TaskInfo { n_params: off, kind: "cls".into(), n_classes: 2, layout };
+        let minfo = ModelInfo {
+            name: "mini".into(),
+            n_layers: 1,
+            d_model: 4,
+            n_heads: 2,
+            d_head: 2,
+            d_ff: 4,
+            vocab: 8,
+            seq_len: 4,
+            causal: false,
+            ffn_ladder: vec![4, 2, 0],
+            head_ladder: vec![2, 1, 0],
+            measured_ffn: vec![4, 2],
+            tasks: BTreeMap::new(),
+        };
+        (minfo, tinfo)
+    }
+
+    #[test]
+    fn init_respects_layout_conventions() {
+        let (mi, ti) = mini_info();
+        let st = ModelState::init(&mi, "t", &ti, 0);
+        assert_eq!(st.params.len(), ti.n_params);
+        let g = st.get1(&ti, "layer0.ln1_g").unwrap();
+        assert!(g.iter().all(|&x| x == 1.0));
+        let b = st.get1(&ti, "layer0.bo").unwrap();
+        assert!(b.iter().all(|&x| x == 0.0));
+        let w = st.get2(&ti, "layer0.wo").unwrap();
+        assert!(w.data.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn attn_w_paper_roundtrip_and_qkv_zeroing() {
+        let (mi, ti) = mini_info();
+        let mut st = ModelState::init(&mi, "t", &ti, 1);
+        let w = st.attn_w_paper(&ti, 0).unwrap();
+        assert_eq!(w.shape, vec![4, 4]);
+        let mut w2 = w.clone();
+        w2.data[0] = 9.0;
+        st.set_attn_w_paper(&ti, 0, &w2, &[1], 2).unwrap();
+        let back = st.attn_w_paper(&ti, 0).unwrap();
+        assert_eq!(back.data[0], 9.0);
+        let wq = st.get2(&ti, "layer0.wq").unwrap();
+        for r in 0..4 {
+            assert_eq!(wq.at2(r, 2), 0.0);
+            assert_eq!(wq.at2(r, 3), 0.0);
+        }
+        let bq = st.get1(&ti, "layer0.bq").unwrap();
+        assert_eq!(&bq[2..4], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn fc_w_paper_zeroes_w1_cols() {
+        let (mi, ti) = mini_info();
+        let mut st = ModelState::init(&mi, "t", &ti, 2);
+        let w = st.fc_w_paper(&ti, 0).unwrap();
+        st.set_fc_w_paper(&ti, 0, &w, &[1, 3]).unwrap();
+        let w1 = st.get2(&ti, "layer0.w1").unwrap();
+        for r in 0..4 {
+            assert_eq!(w1.at2(r, 1), 0.0);
+            assert_eq!(w1.at2(r, 3), 0.0);
+        }
+        let b1 = st.get1(&ti, "layer0.b1").unwrap();
+        assert_eq!(b1[1], 0.0);
+        assert_eq!(b1[3], 0.0);
+    }
+
+    #[test]
+    fn masks_accounting() {
+        let (mi, _) = mini_info();
+        let mut m = Masks::dense(&mi);
+        assert_eq!(m.heads_alive(0), 2);
+        m.kill_head(0, 0);
+        m.kill_ffn_col(0, 3);
+        assert_eq!(m.heads_alive(0), 1);
+        assert_eq!(m.ffn_alive(0), 3);
+        assert_eq!(m.summary(), vec![(1, 3)]);
+        let j = m.to_json();
+        let m2 = Masks::from_json(&j).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let (mi, ti) = mini_info();
+        let mut st = ModelState::init(&mi, "sst2-syn", &ti, 5);
+        st.masks.kill_head(0, 1);
+        let dir = std::env::temp_dir().join("ziplm_test_ckpt");
+        let path = dir.join("m.zlm");
+        st.save(&path).unwrap();
+        let st2 = ModelState::load(&path).unwrap();
+        assert_eq!(st.params, st2.params);
+        assert_eq!(st.masks, st2.masks);
+        assert_eq!(st2.task, "sst2-syn");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

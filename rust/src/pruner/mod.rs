@@ -1,0 +1,437 @@
+//! Pruning drivers: the ZipLM pipeline (paper Fig. 1).
+//!
+//!   1. capture calibration Hessians through the masked model,
+//!   2. build per-module databases (ziplm/) via the HLO OBS kernels,
+//!   3. structured SPDY search (spdy/) against the latency table for
+//!      the next speedup target,
+//!   4. apply the chosen profile (masks + OBS-updated weights),
+//!   5. gradual mode: fine-tune with token distillation and continue to
+//!      the next target — one run emits the whole model family.
+//!
+//! One-shot (post-training) mode is steps 1–4 only (paper §4.3).
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Dataset;
+use crate::eval::{calib_loss, mask_literals};
+use crate::latency::LatencyTable;
+use crate::models::ModelState;
+use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine, ModelInfo, TaskInfo};
+use crate::spdy::{self, LevelOpt, ModuleLevels, SearchCfg, SpdyProblem};
+use crate::tensor::Tensor;
+use crate::train::{TrainCfg, Trainer};
+use crate::ziplm::{assemble_hessian, build_module_db, HloBackend, ModuleDb, NativeBackend, ObsOps};
+
+#[derive(Clone, Debug)]
+pub struct PruneCfg {
+    /// number of calibration samples (paper default 2048; Table 4
+    /// studies sensitivity down to 4)
+    pub calib_samples: usize,
+    pub damp_frac: f32,
+    pub spdy: SpdyCfgLite,
+    /// use the HLO (Pallas) backend; false = native mirror (tests)
+    pub use_hlo: bool,
+    /// "speedup" (ZipLM) or "sparsity" (Fig. 4 ablation baseline mode)
+    pub target_mode: TargetMode,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TargetMode {
+    Speedup,
+    Sparsity,
+}
+
+#[derive(Clone, Debug)]
+pub struct SpdyCfgLite {
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for PruneCfg {
+    fn default() -> Self {
+        PruneCfg {
+            calib_samples: 256,
+            damp_frac: 0.01,
+            spdy: SpdyCfgLite { iters: 120, seed: 7 },
+            use_hlo: true,
+            target_mode: TargetMode::Speedup,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PruneReport {
+    pub target: f64,
+    pub est_speedup: f64,
+    pub layer_profile: Vec<(usize, usize)>,
+    pub calib_loss: f64,
+    pub obs_dispatches: usize,
+}
+
+/// Accumulated calibration Hessians: one XX^T per prunable module.
+pub struct Hessians {
+    pub attn: Vec<Tensor>, // per layer [d_attn, d_attn]
+    pub ffn: Vec<Tensor>,  // per layer [d_ff, d_ff]
+}
+
+/// Run the calib artifact over `n_samples` and accumulate XX^T.
+pub fn capture_hessians(
+    engine: &Engine,
+    state: &ModelState,
+    data: &Dataset,
+    n_samples: usize,
+) -> Result<Hessians> {
+    let minfo = engine.manifest.model(&state.model).clone();
+    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
+    let b = engine.manifest.batch_calib;
+    let art = format!("{}__{}__calib", state.model, state.task);
+    let (hm, fm) = mask_literals(state)?;
+    let params = lit_f32_shaped(&[tinfo.n_params], &state.params)?;
+    let da = minfo.d_attn();
+    let f = minfo.d_ff;
+    let l = minfo.n_layers;
+    let mut attn = vec![Tensor::zeros(&[da, da]); l];
+    let mut ffn = vec![Tensor::zeros(&[f, f]); l];
+    let mut i = 0;
+    while i < n_samples.max(b) {
+        let idxs: Vec<usize> = (i..i + b).collect();
+        let (ids, _) = data.batch(&idxs);
+        let out = engine.run(
+            &art,
+            &[params.clone(), lit_i32(&[b, data.seq_len], &ids)?, hm.clone(), fm.clone()],
+        )?;
+        let ha = lit_to_f32(&out[0])?; // [L, da, da]
+        let hf = lit_to_f32(&out[1])?; // [L, f, f]
+        for li in 0..l {
+            let sa = &ha[li * da * da..(li + 1) * da * da];
+            for (dst, src) in attn[li].data.iter_mut().zip(sa) {
+                *dst += src;
+            }
+            let sf = &hf[li * f * f..(li + 1) * f * f];
+            for (dst, src) in ffn[li].data.iter_mut().zip(sf) {
+                *dst += src;
+            }
+        }
+        i += b;
+    }
+    Ok(Hessians { attn, ffn })
+}
+
+/// Build all 2L module databases. Module order: (attn, fc) per layer.
+pub fn build_databases(
+    engine: &Engine,
+    state: &ModelState,
+    hs: &Hessians,
+    cfg: &PruneCfg,
+) -> Result<Vec<ModuleDb>> {
+    let minfo = engine.manifest.model(&state.model).clone();
+    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
+    let mut dbs = Vec::with_capacity(2 * minfo.n_layers);
+    for l in 0..minfo.n_layers {
+        // ---- attention module
+        let w0 = state.attn_w_paper(&tinfo, l)?;
+        let (h, hinv) = assemble_hessian(&hs.attn[l], cfg.damp_frac)?;
+        let cur_heads = state.masks.heads_alive(l);
+        let levels: Vec<usize> = (0..=cur_heads).rev().collect();
+        let db = if cfg.use_hlo {
+            let mut ops = HloBackend::attn(engine, &state.model)?;
+            build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))?
+        } else {
+            let mut ops = NativeBackend::new(minfo.d_head);
+            build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))?
+        };
+        dbs.push(db);
+        // ---- FC module
+        let w0 = state.fc_w_paper(&tinfo, l)?;
+        let (h, hinv) = assemble_hessian(&hs.ffn[l], cfg.damp_frac)?;
+        let cur = state.masks.ffn_alive(l);
+        let mut levels: Vec<usize> = vec![cur];
+        levels.extend(minfo.ffn_ladder.iter().copied().filter(|&x| x < cur));
+        let db = if cfg.use_hlo {
+            let mut ops = HloBackend::fc(engine, &state.model)?;
+            build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))?
+        } else {
+            let mut ops = NativeBackend::new(1);
+            build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))?
+        };
+        dbs.push(db);
+    }
+    Ok(dbs)
+}
+
+/// build_module_db wrapper that respects an existing structural mask
+/// (gradual pruning continues from the current model).
+fn build_db_with_mask(
+    ops: &mut dyn ObsOps,
+    layer: usize,
+    is_attn: bool,
+    w0: &Tensor,
+    hinv: &Tensor,
+    h: &Tensor,
+    levels: &[usize],
+    mask_row: &[f32],
+) -> Result<ModuleDb> {
+    let g = ops.group();
+    let n_structs = w0.cols() / g;
+    let already_dead: Vec<usize> =
+        (0..n_structs).filter(|&j| mask_row.get(j).copied().unwrap_or(1.0) == 0.0).collect();
+    if already_dead.is_empty() {
+        return build_module_db(ops, layer, is_attn, w0, hinv, h, levels);
+    }
+    // Re-anchor: treat currently-alive structures as the dense level.
+    let mut db = build_module_db_masked(ops, layer, is_attn, w0, hinv, h, levels, &already_dead)?;
+    for lvl in &mut db.levels {
+        // make dead lists absolute (include pre-existing dead)
+        let mut dead = already_dead.clone();
+        dead.extend(lvl.dead.iter().copied());
+        lvl.dead = dead;
+    }
+    Ok(db)
+}
+
+fn build_module_db_masked(
+    ops: &mut dyn ObsOps,
+    layer: usize,
+    is_attn: bool,
+    w0: &Tensor,
+    hinv: &Tensor,
+    h: &Tensor,
+    levels: &[usize],
+    already_dead: &[usize],
+) -> Result<ModuleDb> {
+    // emulate build_module_db but with initial active mask
+    let g = ops.group();
+    let n_structs = w0.cols() / g;
+    let mut active = vec![1.0f32; n_structs];
+    for &j in already_dead {
+        active[j] = 0.0;
+    }
+    let alive = n_structs - already_dead.len();
+    assert_eq!(levels[0], alive, "levels must start at current alive count");
+    let mut out = Vec::with_capacity(levels.len());
+    out.push(crate::ziplm::LevelSnapshot {
+        remaining: alive,
+        dead: vec![],
+        w: w0.clone(),
+        prior: 0.0,
+    });
+    let mut w = w0.clone();
+    let mut hv = hinv.clone();
+    let mut dead: Vec<usize> = Vec::new();
+    for &target in &levels[1..] {
+        let cur = alive - dead.len();
+        if target >= cur {
+            continue;
+        }
+        if target == 0 {
+            let wz = Tensor::zeros(&w0.shape);
+            let mut all = dead.clone();
+            for j in 0..n_structs {
+                if active[j] > 0.0 {
+                    all.push(j);
+                }
+            }
+            out.push(crate::ziplm::LevelSnapshot { remaining: 0, dead: all, w: wz, prior: 1.0 });
+            continue;
+        }
+        let n_remove = cur - target;
+        if g == 1 && n_remove > 1 {
+            let (w2, h2, act2, order) = ops.multi_update(&w, &hv, &active, n_remove)?;
+            w = w2;
+            hv = h2;
+            active = act2;
+            dead.extend(order);
+        } else {
+            for _ in 0..n_remove {
+                let scores = ops.scores(&w, &hv, &active)?;
+                let j = crate::ziplm::argmin(&scores);
+                let (w2, h2) = ops.update(&w, &hv, j)?;
+                w = w2;
+                hv = h2;
+                active[j] = 0.0;
+                dead.push(j);
+            }
+        }
+        let prior = crate::ziplm::relative_error(w0, &w, h);
+        out.push(crate::ziplm::LevelSnapshot {
+            remaining: target,
+            dead: dead.clone(),
+            w: w.clone(),
+            prior,
+        });
+    }
+    Ok(ModuleDb { layer, is_attn, levels: out })
+}
+
+/// Module parameter counts for sparsity-target mode (Fig. 4).
+fn module_params(minfo: &ModelInfo, is_attn: bool, remaining: usize) -> f64 {
+    if is_attn {
+        // q,k,v,o weights+biases per head
+        (remaining * minfo.d_head * minfo.d_model * 4 + remaining * minfo.d_head * 3) as f64
+    } else {
+        (remaining * minfo.d_model * 2 + remaining) as f64
+    }
+}
+
+/// Assemble the SPDY problem from databases + latency table.
+pub fn spdy_problem(
+    dbs: &[ModuleDb],
+    table: &LatencyTable,
+    minfo: &ModelInfo,
+    mode: TargetMode,
+) -> SpdyProblem {
+    let modules = dbs
+        .iter()
+        .map(|db| ModuleLevels {
+            layer: db.layer,
+            is_attn: db.is_attn,
+            options: db
+                .levels
+                .iter()
+                .map(|lvl| LevelOpt {
+                    remaining: lvl.remaining,
+                    cost: match mode {
+                        TargetMode::Speedup => {
+                            if db.is_attn {
+                                table.attn_time(lvl.remaining)
+                            } else {
+                                table.mlp_time(lvl.remaining)
+                            }
+                        }
+                        TargetMode::Sparsity => module_params(minfo, db.is_attn, lvl.remaining),
+                    },
+                    prior: lvl.prior,
+                })
+                .collect(),
+        })
+        .collect();
+    SpdyProblem {
+        modules,
+        overhead: match mode {
+            TargetMode::Speedup => table.overhead,
+            TargetMode::Sparsity => 0.0,
+        },
+    }
+}
+
+/// Apply a chosen profile: write snapshot weights + kill masks.
+pub fn apply_profile(
+    state: &mut ModelState,
+    dbs: &[ModuleDb],
+    profile: &[usize],
+    minfo: &ModelInfo,
+    tinfo: &TaskInfo,
+) -> Result<()> {
+    for (db, &li) in dbs.iter().zip(profile) {
+        let lvl = &db.levels[li];
+        if db.is_attn {
+            state.set_attn_w_paper(tinfo, db.layer, &lvl.w, &lvl.dead, minfo.d_head)?;
+            for &h in &lvl.dead {
+                state.masks.kill_head(db.layer, h);
+            }
+        } else {
+            state.set_fc_w_paper(tinfo, db.layer, &lvl.w, &lvl.dead)?;
+            for &c in &lvl.dead {
+                state.masks.kill_ffn_col(db.layer, c);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One pruning stage: Hessians → databases → SPDY → apply.
+/// `dense_time` is the original dense model's latency (speedup anchor).
+pub fn prune_to_target(
+    engine: &Engine,
+    state: &mut ModelState,
+    data: &Dataset,
+    table: &LatencyTable,
+    dense_cost: f64,
+    target: f64,
+    cfg: &PruneCfg,
+) -> Result<PruneReport> {
+    let minfo = engine.manifest.model(&state.model).clone();
+    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
+    let hs = capture_hessians(engine, state, data, cfg.calib_samples)?;
+    let dbs = build_databases(engine, state, &hs, cfg)?;
+    let problem = spdy_problem(&dbs, table, &minfo, cfg.target_mode);
+    let budget = dense_cost / target;
+    if problem.min_cost() > budget {
+        return Err(anyhow!(
+            "target {target}x infeasible: min cost {:.3e} > budget {:.3e}",
+            problem.min_cost(),
+            budget
+        ));
+    }
+    let base = state.clone();
+    let mut evals = 0usize;
+    let search_cfg = SearchCfg { iters: cfg.spdy.iters, seed: cfg.spdy.seed, ..Default::default() };
+    let (profile, best_loss) = spdy::search(&problem, budget, &search_cfg, |prof| {
+        evals += 1;
+        let mut cand = base.clone();
+        if apply_profile(&mut cand, &dbs, prof, &minfo, &tinfo).is_err() {
+            return f64::INFINITY;
+        }
+        calib_loss(engine, &cand, data, cfg.calib_samples.min(128)).unwrap_or(f64::INFINITY)
+    })
+    .ok_or_else(|| anyhow!("SPDY found no feasible profile for {target}x"))?;
+    apply_profile(state, &dbs, &profile, &minfo, &tinfo)?;
+    let layer_profile = problem.as_layer_profile(&profile);
+    let est = match cfg.target_mode {
+        TargetMode::Speedup => dense_cost / problem.profile_cost(&profile),
+        TargetMode::Sparsity => {
+            // report the latency-table speedup this sparsity happens to give
+            table.dense_time(minfo.n_layers) / table.model_time(&layer_profile)
+        }
+    };
+    crate::zlog!(
+        "info",
+        "pruned to {target}x: est_speedup={est:.2} profile={layer_profile:?} candidates={evals}"
+    );
+    Ok(PruneReport {
+        target,
+        est_speedup: est,
+        layer_profile,
+        calib_loss: best_loss,
+        obs_dispatches: 0,
+    })
+}
+
+/// Gradual pruning: the full family pipeline (paper Fig. 1).
+pub struct StageResult {
+    pub report: PruneReport,
+    pub state: ModelState,
+    pub final_train_loss: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn gradual(
+    engine: &Engine,
+    mut state: ModelState,
+    data: &Dataset,
+    table: &LatencyTable,
+    targets: &[f64],
+    prune_cfg: &PruneCfg,
+    train_cfg: &TrainCfg,
+    teacher: Option<Vec<f32>>,
+) -> Result<Vec<StageResult>> {
+    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
+    let minfo = engine.manifest.model(&state.model).clone();
+    let dense_cost = match prune_cfg.target_mode {
+        TargetMode::Speedup => table.dense_time(minfo.n_layers),
+        TargetMode::Sparsity => {
+            (0..minfo.n_layers)
+                .map(|_| module_params(&minfo, true, minfo.n_heads) + module_params(&minfo, false, minfo.d_ff))
+                .sum()
+        }
+    };
+    let mut trainer = Trainer::new(engine, tinfo.n_params, teacher);
+    let mut out = Vec::new();
+    for &target in targets {
+        let report = prune_to_target(engine, &mut state, data, table, dense_cost, target, prune_cfg)?;
+        trainer.reset_moments();
+        let final_loss = trainer.train(&mut state, data, train_cfg)?;
+        out.push(StageResult { report, state: state.clone(), final_train_loss: final_loss });
+    }
+    Ok(out)
+}

@@ -1,0 +1,155 @@
+//! Compound compression for edge deployment (paper §5 + Appendix A):
+//! on top of a ZipLM structurally-pruned model, apply
+//!
+//!   1. unstructured magnitude pruning of the remaining weights
+//!      (oBERT's role in the paper's pipeline), and
+//!   2. symmetric per-row INT8 weight quantization (QAT's role —
+//!      post-training here),
+//!
+//! and estimate single-core CPU latency with a DeepSparse-like analytic
+//! engine model: compute scales with effective nonzeros (sub-linearly —
+//! sparse kernels have overheads) and INT8 gives a ~2.5x dense-compute
+//! boost. This reproduces the *shape* of Fig. 6 (speedup-vs-accuracy on
+//! CPU); see DESIGN.md §3 for the substitution rationale.
+
+use anyhow::Result;
+
+use crate::models::ModelState;
+use crate::runtime::TaskInfo;
+
+/// Symmetric per-row INT8 quantize→dequantize of all 2-D weights.
+/// Returns mean absolute quantization error (diagnostic).
+pub fn int8_quantize(state: &mut ModelState, tinfo: &TaskInfo) -> Result<f64> {
+    let mut err_sum = 0f64;
+    let mut n = 0usize;
+    let entries: Vec<_> = tinfo
+        .layout
+        .iter()
+        .filter(|e| e.shape.len() == 2 && !e.name.contains("emb"))
+        .cloned()
+        .collect();
+    for e in entries {
+        let rows = e.shape[0];
+        let cols = e.shape[1];
+        let base = e.offset;
+        for r in 0..rows {
+            let row = &mut state.params[base + r * cols..base + (r + 1) * cols];
+            let maxabs = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            if maxabs == 0.0 {
+                continue;
+            }
+            let scale = maxabs / 127.0;
+            for x in row.iter_mut() {
+                let q = (*x / scale).round().clamp(-127.0, 127.0);
+                let dq = q * scale;
+                err_sum += (dq - *x).abs() as f64;
+                *x = dq;
+                n += 1;
+            }
+        }
+    }
+    Ok(err_sum / n.max(1) as f64)
+}
+
+/// Unstructured global magnitude pruning of 2-D weights to `sparsity`
+/// (fraction of remaining nonzero weights to remove). Returns achieved
+/// overall sparsity among those tensors.
+pub fn unstructured_magnitude(state: &mut ModelState, tinfo: &TaskInfo, sparsity: f64) -> Result<f64> {
+    let mut idx: Vec<(usize, f32)> = Vec::new();
+    for e in tinfo.layout.iter().filter(|e| e.shape.len() == 2 && !e.name.contains("emb")) {
+        for i in e.offset..e.offset + e.numel() {
+            let v = state.params[i];
+            if v != 0.0 {
+                idx.push((i, v.abs()));
+            }
+        }
+    }
+    let kill = ((idx.len() as f64) * sparsity) as usize;
+    idx.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for &(i, _) in idx.iter().take(kill) {
+        state.params[i] = 0.0;
+    }
+    Ok(kill as f64 / idx.len().max(1) as f64)
+}
+
+/// DeepSparse-like single-core latency model.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuEngineModel {
+    /// dense f32 GFLOP/s on one core
+    pub dense_gflops: f64,
+    /// INT8 speedup factor over f32
+    pub int8_factor: f64,
+    /// sparse kernels scale sub-linearly: t ∝ (1-s)^alpha
+    pub sparse_alpha: f64,
+    /// fixed per-inference overhead (s)
+    pub overhead: f64,
+}
+
+impl Default for CpuEngineModel {
+    fn default() -> Self {
+        CpuEngineModel { dense_gflops: 40.0, int8_factor: 2.5, sparse_alpha: 0.75, overhead: 1e-3 }
+    }
+}
+
+impl CpuEngineModel {
+    /// Latency for a model with `dense_flops` per inference, structural
+    /// density `struct_density` (fraction of dense compute left after
+    /// structured pruning), unstructured sparsity `s`, INT8 on/off.
+    pub fn latency(&self, dense_flops: f64, struct_density: f64, s: f64, int8: bool) -> f64 {
+        let mut compute = dense_flops * struct_density / (self.dense_gflops * 1e9);
+        compute *= (1.0 - s).powf(self.sparse_alpha);
+        if int8 {
+            compute /= self.int8_factor;
+        }
+        self.overhead + compute
+    }
+
+    pub fn speedup(&self, dense_flops: f64, struct_density: f64, s: f64, int8: bool) -> f64 {
+        self.latency(dense_flops, 1.0, 0.0, false)
+            / self.latency(dense_flops, struct_density, s, int8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::tests_support::mini_state;
+
+    #[test]
+    fn int8_small_error_and_idempotent_zero() {
+        let (_mi, ti, mut st) = mini_state();
+        let before = st.params.clone();
+        let err = int8_quantize(&mut st, &ti).unwrap();
+        assert!(err < 1e-3, "mean err {err}");
+        // zeros stay zero
+        for (a, b) in before.iter().zip(&st.params) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn unstructured_hits_requested_sparsity() {
+        let (_mi, ti, mut st) = mini_state();
+        let got = unstructured_magnitude(&mut st, &ti, 0.8).unwrap();
+        assert!((got - 0.8).abs() < 0.02, "{got}");
+        // embeddings untouched
+        let emb = st.get1(&ti, "tok_emb").unwrap();
+        assert!(emb.iter().all(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn engine_model_monotone() {
+        let m = CpuEngineModel::default();
+        let f = 1e9;
+        assert!(m.speedup(f, 1.0, 0.0, false) == 1.0);
+        let s1 = m.speedup(f, 0.5, 0.0, false);
+        let s2 = m.speedup(f, 0.5, 0.8, false);
+        let s3 = m.speedup(f, 0.5, 0.8, true);
+        assert!(s1 > 1.0 && s2 > s1 && s3 > s2, "{s1} {s2} {s3}");
+        // overhead caps speedup
+        let extreme = m.speedup(f, 0.01, 0.99, true);
+        assert!(extreme < 1000.0);
+    }
+}

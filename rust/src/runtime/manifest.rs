@@ -1,0 +1,240 @@
+//! Typed view of artifacts/manifest.json (written by python/compile/aot.py).
+//!
+//! The manifest is the single source of truth for shapes: model configs,
+//! packed-parameter layouts, ladders, and per-artifact I/O signatures.
+//! Nothing about shapes is hard-coded on the Rust side.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SigEntry {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub inputs: Vec<SigEntry>,
+    pub outputs: Vec<SigEntry>,
+    /// block metadata (latency sweep artifacts only)
+    pub kind: Option<String>,
+    pub heads: Option<usize>,
+    pub inter: Option<usize>,
+    pub regime: Option<String>,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskInfo {
+    pub n_params: usize,
+    pub kind: String, // "cls" | "span" | "lm"
+    pub n_classes: usize,
+    pub layout: Vec<LayoutEntry>,
+}
+
+impl TaskInfo {
+    pub fn entry(&self, name: &str) -> Option<&LayoutEntry> {
+        self.layout.iter().find(|e| e.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub causal: bool,
+    pub ffn_ladder: Vec<usize>,
+    pub head_ladder: Vec<usize>,
+    pub measured_ffn: Vec<usize>,
+    pub tasks: BTreeMap<String, TaskInfo>,
+}
+
+impl ModelInfo {
+    pub fn d_attn(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub batch_calib: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+fn sig(j: &Json) -> Vec<SigEntry> {
+    j.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|e| SigEntry {
+            shape: e.get("shape").map(|s| s.usize_array()).unwrap_or_default(),
+            dtype: e.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let batch = j.get("batch").ok_or("missing batch")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj).ok_or("missing models")? {
+            let mut tasks = BTreeMap::new();
+            if let Some(ts) = m.get("tasks").and_then(Json::as_obj) {
+                for (tname, t) in ts {
+                    let layout = t
+                        .get("layout")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|e| LayoutEntry {
+                            name: e.req_str("name").to_string(),
+                            shape: e.get("shape").map(|s| s.usize_array()).unwrap_or_default(),
+                            offset: e.req_usize("offset"),
+                        })
+                        .collect();
+                    tasks.insert(
+                        tname.clone(),
+                        TaskInfo {
+                            n_params: t.req_usize("n_params"),
+                            kind: t.req_str("kind").to_string(),
+                            n_classes: t.get("n_classes").and_then(Json::as_usize).unwrap_or(0),
+                            layout,
+                        },
+                    );
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    n_layers: m.req_usize("n_layers"),
+                    d_model: m.req_usize("d_model"),
+                    n_heads: m.req_usize("n_heads"),
+                    d_head: m.req_usize("d_head"),
+                    d_ff: m.req_usize("d_ff"),
+                    vocab: m.req_usize("vocab"),
+                    seq_len: m.req_usize("seq_len"),
+                    causal: m.get("causal").and_then(Json::as_bool).unwrap_or(false),
+                    ffn_ladder: m.get("ffn_ladder").map(|v| v.usize_array()).unwrap_or_default(),
+                    head_ladder: m.get("head_ladder").map(|v| v.usize_array()).unwrap_or_default(),
+                    measured_ffn: m.get("measured_ffn").map(|v| v.usize_array()).unwrap_or_default(),
+                    tasks,
+                },
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts").and_then(Json::as_obj).ok_or("missing artifacts")? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    file: a.req_str("file").to_string(),
+                    inputs: a.get("inputs").map(sig).unwrap_or_default(),
+                    outputs: a.get("outputs").map(sig).unwrap_or_default(),
+                    kind: a.get("kind").and_then(Json::as_str).map(String::from),
+                    heads: a.get("heads").and_then(Json::as_usize),
+                    inter: a.get("inter").and_then(Json::as_usize),
+                    regime: a.get("regime").and_then(Json::as_str).map(String::from),
+                    batch: a.get("batch").and_then(Json::as_usize),
+                    seq: a.get("seq").and_then(Json::as_usize),
+                },
+            );
+        }
+        Ok(Manifest {
+            batch_train: batch.req_usize("train"),
+            batch_eval: batch.req_usize("eval"),
+            batch_calib: batch.req_usize("calib"),
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> &ModelInfo {
+        self.models.get(name).unwrap_or_else(|| panic!("unknown model `{name}`"))
+    }
+
+    pub fn task(&self, model: &str, task: &str) -> &TaskInfo {
+        self.model(model)
+            .tasks
+            .get(task)
+            .unwrap_or_else(|| panic!("unknown task `{task}` for model `{model}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "batch": {"train": 16, "eval": 32, "calib": 16},
+      "models": {
+        "m": {"n_layers": 2, "d_model": 8, "n_heads": 2, "d_head": 4,
+               "d_ff": 16, "vocab": 32, "seq_len": 4, "causal": false,
+               "ffn_ladder": [16, 8, 0], "head_ladder": [2, 1, 0],
+               "measured_ffn": [16, 8],
+               "tasks": {"t": {"n_params": 10, "kind": "cls", "n_classes": 2,
+                 "layout": [{"name": "w", "shape": [2, 5], "offset": 0}]}}}
+      },
+      "artifacts": {
+        "m__t__fwd": {"file": "f.hlo.txt",
+          "inputs": [{"shape": [10], "dtype": "f32"}],
+          "outputs": [{"shape": [32, 2], "dtype": "f32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_mini() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.batch_train, 16);
+        let mi = m.model("m");
+        assert_eq!(mi.d_attn(), 8);
+        let t = m.task("m", "t");
+        assert_eq!(t.layout[0].numel(), 10);
+        let a = &m.artifacts["m__t__fwd"];
+        assert_eq!(a.inputs[0].shape, vec![10]);
+        assert_eq!(a.outputs[0].dtype, "f32");
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(txt) = std::fs::read_to_string(p) {
+            let m = Manifest::parse(&txt).unwrap();
+            assert!(m.models.contains_key("bert-syn-base"));
+            assert!(m.artifacts.contains_key("bert-syn-base__sst2-syn__train_step"));
+            let t = m.task("bert-syn-base", "sst2-syn");
+            // layout must be contiguous
+            let mut cur = 0;
+            for e in &t.layout {
+                assert_eq!(e.offset, cur, "{}", e.name);
+                cur += e.numel();
+            }
+            assert_eq!(cur, t.n_params);
+        }
+    }
+}

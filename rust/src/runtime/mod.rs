@@ -1,0 +1,174 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//!
+//! This is the ONLY bridge between the Rust coordinator and the
+//! compiled L1/L2 graphs. The flow (see /opt/xla-example):
+//!
+//! ```text
+//! artifacts/<name>.hlo.txt --HloModuleProto::from_text_file-->
+//!   XlaComputation --PjRtClient::compile--> PjRtLoadedExecutable
+//!   --execute(&[Literal])--> tuple Literal --decompose--> outputs
+//! ```
+//!
+//! Executables are compiled once and cached; Python never runs here.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TaskInfo};
+
+/// A host-side tensor paired with its logical shape (row-major f32).
+#[derive(Clone, Debug)]
+pub struct HostF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostF32 {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostF32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostF32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostF32 { shape: vec![], data: vec![v] }
+    }
+}
+
+/// Literal constructors.
+pub fn lit_f32(t: &HostF32) -> Result<xla::Literal> {
+    let v = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims)?)
+}
+
+pub fn lit_f32_shaped(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let v = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims)?)
+}
+
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let v = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(v.reshape(&dims)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&[v]).reshape(&[])?)
+}
+
+pub fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&[v]).reshape(&[])?)
+}
+
+pub fn lit_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+pub fn lit_to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+/// The PJRT engine: one CPU client + a compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    art_dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    compile_count: Mutex<usize>,
+}
+
+impl Engine {
+    /// Open the artifact directory (expects manifest.json inside).
+    pub fn open(art_dir: &Path) -> Result<Engine> {
+        let man_path = art_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            art_dir: art_dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_count: Mutex::new(0),
+        })
+    }
+
+    /// Default artifact dir: $ZIPLM_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Engine> {
+        let dir = std::env::var("ZIPLM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Engine::open(Path::new(&dir))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn art_dir(&self) -> &Path {
+        &self.art_dir
+    }
+
+    /// Compile-or-fetch an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let info = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.art_dir.join(&info.file);
+        let exe = self.compile_file(&path)?;
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Compile an HLO-text file outside the manifest (specialized exports).
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        *self.compile_count.lock().unwrap() += 1;
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple outputs (aot.py lowers with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        Self::run_exe(&exe, inputs)
+    }
+
+    pub fn run_exe(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Number of PJRT compilations so far (perf accounting).
+    pub fn compiles(&self) -> usize {
+        *self.compile_count.lock().unwrap()
+    }
+
+    /// Drop a cached executable (memory control for block sweeps).
+    pub fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+}

@@ -1,0 +1,227 @@
+//! Native dense linear algebra: Cholesky, triangular solves, SPD
+//! inverse, and the structured-OBS primitives' Rust mirror.
+//!
+//! Used by the coordinator for (a) building H^{-1} = (2XX^T + λI)^{-1}
+//! once per layer before pruning, (b) error priors p_s = ||ŴX − WX||/
+//! ||WX|| via trace identities, and (c) cross-checking the HLO kernels
+//! in tests. All SPD matrices here are damped Hessians, so unpivoted
+//! Cholesky is safe.
+
+use super::Tensor;
+
+/// Cholesky factor L (lower) of SPD `a`, in place semantics: returns L.
+pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut l = Tensor::zeros(&[n, n]);
+    for j in 0..n {
+        let mut d = a.at2(j, j);
+        for k in 0..j {
+            d -= l.at2(j, k) * l.at2(j, k);
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(format!("cholesky: non-PD at pivot {j} (d={d})"));
+        }
+        let d = d.sqrt();
+        l.set2(j, j, d);
+        for i in (j + 1)..n {
+            let mut s = a.at2(i, j);
+            for k in 0..j {
+                s -= l.at2(i, k) * l.at2(j, k);
+            }
+            l.set2(i, j, s / d);
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at2(i, k) * y[k];
+        }
+        y[i] = s / l.at2(i, i);
+    }
+    y
+}
+
+/// Solve L^T x = y (backward substitution).
+pub fn solve_upper_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    let mut x = vec![0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l.at2(k, i) * x[k];
+        }
+        x[i] = s / l.at2(i, i);
+    }
+    x
+}
+
+/// SPD inverse via Cholesky (A^{-1} = solve for each unit vector).
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut e = vec![0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper_t(&l, &y);
+        for i in 0..n {
+            inv.set2(i, j, x[i]);
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// Small general inverse via Gauss-Jordan with partial pivoting (used
+/// for g×g inverse-Hessian blocks in the native OBS mirror).
+pub fn gj_inverse(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut inv = Tensor::eye(n);
+    for k in 0..n {
+        // pivot
+        let mut p = k;
+        for i in (k + 1)..n {
+            if m.at2(i, k).abs() > m.at2(p, k).abs() {
+                p = i;
+            }
+        }
+        if m.at2(p, k).abs() < 1e-20 {
+            return Err(format!("gj_inverse: singular at {k}"));
+        }
+        if p != k {
+            for j in 0..n {
+                let (a1, a2) = (m.at2(k, j), m.at2(p, j));
+                m.set2(k, j, a2);
+                m.set2(p, j, a1);
+                let (b1, b2) = (inv.at2(k, j), inv.at2(p, j));
+                inv.set2(k, j, b2);
+                inv.set2(p, j, b1);
+            }
+        }
+        let piv = m.at2(k, k);
+        for j in 0..n {
+            m.set2(k, j, m.at2(k, j) / piv);
+            inv.set2(k, j, inv.at2(k, j) / piv);
+        }
+        for i in 0..n {
+            if i == k {
+                continue;
+            }
+            let f = m.at2(i, k);
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let mv = m.at2(i, j) - f * m.at2(k, j);
+                m.set2(i, j, mv);
+                let iv = inv.at2(i, j) - f * inv.at2(k, j);
+                inv.set2(i, j, iv);
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// trace(W H W^T) = Σ_i w_i H w_i^T — the squared output norm ||W X||_F^2
+/// when H = X X^T. Used for the SPDY error prior denominators.
+pub fn trace_whwt(w: &Tensor, h: &Tensor) -> f64 {
+    let (_m, n) = (w.rows(), w.cols());
+    assert_eq!(h.rows(), n);
+    let mut total = 0f64;
+    for i in 0..w.rows() {
+        let wi = w.row(i);
+        let hw = h.matvec(wi);
+        let mut s = 0f64;
+        for (a, b) in wi.iter().zip(&hw) {
+            s += (*a as f64) * (*b as f64);
+        }
+        total += s;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    fn spd_t(rng: &mut Rng, n: usize) -> Tensor {
+        Tensor::from_vec(&[n, n], gen::spd(rng, n, 0.5))
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        Prop::new(20).check_msg(
+            "LL^T = A",
+            |r| { let n = 1 + r.below(24); spd_t(r, n) },
+            |a| {
+                let l = cholesky(a).map_err(|e| e)?;
+                let rec = l.matmul(&l.transpose2());
+                let d = rec.max_abs_diff(a);
+                if d < 1e-2 * a.rows() as f32 {
+                    Ok(())
+                } else {
+                    Err(format!("max diff {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        Prop::new(15).check_msg(
+            "A A^{-1} = I",
+            |r| { let n = 2 + r.below(20); spd_t(r, n) },
+            |a| {
+                let inv = spd_inverse(a)?;
+                let prod = a.matmul(&inv);
+                let d = prod.max_abs_diff(&Tensor::eye(a.rows()));
+                if d < 5e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gj_matches_spd_inverse() {
+        let mut rng = Rng::new(5);
+        let a = spd_t(&mut rng, 12);
+        let i1 = spd_inverse(&a).unwrap();
+        let i2 = gj_inverse(&a).unwrap();
+        assert!(i1.max_abs_diff(&i2) < 1e-3);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn trace_identity_matches_direct() {
+        // ||W X||_F^2 == trace(W (X X^T) W^T)
+        let mut rng = Rng::new(7);
+        let (m, n, s) = (6, 9, 30);
+        let w = Tensor::from_vec(&[m, n], gen::vec_f32(&mut rng, m * n, 1.0));
+        let x = Tensor::from_vec(&[n, s], gen::vec_f32(&mut rng, n * s, 1.0));
+        let h = x.matmul(&x.transpose2());
+        let wx = w.matmul(&x);
+        let direct = wx.frob_sq();
+        let via_trace = trace_whwt(&w, &h);
+        assert!((direct - via_trace).abs() / direct < 1e-4);
+    }
+}

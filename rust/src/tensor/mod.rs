@@ -1,0 +1,285 @@
+//! Dense f32 tensor substrate: the native math used by the coordinator
+//! (Hessian assembly, error priors, baselines, quantization, tests).
+//!
+//! This intentionally mirrors a small slice of ndarray: row-major
+//! storage, shape vector, blocked GEMM with optional threading. The
+//! model hot path runs through PJRT (runtime/), NOT through this — the
+//! native mirror exists for Hessian/inverse work on the coordinator
+//! side and to cross-check the HLO kernels.
+
+pub mod linalg;
+
+use crate::util::threadpool::parallel_for_chunks;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.cols();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn add_diag(&mut self, v: f32) {
+        let n = self.cols();
+        assert_eq!(self.rows(), n);
+        for i in 0..n {
+            self.data[i * n + i] += v;
+        }
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// C = A @ B (2-D, row-major, blocked, threaded for large sizes).
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul inner dim");
+        let mut out = Tensor::zeros(&[m, n]);
+        let a = &self.data;
+        let bb = &b.data;
+        let cdata = &mut out.data;
+        // i-k-j loop order: streams B rows, vector-friendly over j
+        let work = |rows: std::ops::Range<usize>, c: &mut [f32]| {
+            for i in rows.clone() {
+                let crow = &mut c[(i - rows.start) * n..(i - rows.start + 1) * n];
+                for kk in 0..k {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bb[kk * n..kk * n + n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        };
+        if m * n * k < 64 * 64 * 64 {
+            work(0..m, cdata);
+        } else {
+            // parallel over row chunks, each into its own slice
+            let chunks: Vec<std::ops::Range<usize>> = {
+                let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+                let per = m.div_ceil(threads.max(1));
+                (0..m).step_by(per.max(1)).map(|s| s..(s + per).min(m)).collect()
+            };
+            let mut slices: Vec<&mut [f32]> = Vec::new();
+            let mut rest = cdata.as_mut_slice();
+            for r in &chunks {
+                let (head, tail) = rest.split_at_mut((r.end - r.start) * n);
+                slices.push(head);
+                rest = tail;
+            }
+            std::thread::scope(|s| {
+                for (r, slice) in chunks.iter().zip(slices.into_iter()) {
+                    let r = r.clone();
+                    s.spawn(move || work(r, slice));
+                }
+            });
+        }
+        out
+    }
+
+    /// y = A @ x for vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let (m, k) = (self.rows(), self.cols());
+        assert_eq!(k, x.len());
+        let mut y = vec![0f32; m];
+        parallel_for_chunks(m, 256, |range| {
+            // SAFETY-free approach: recompute into local then copy — instead
+            // we use the fact that disjoint rows write disjoint y entries.
+            // parallel_for_chunks gives disjoint ranges; use raw pointer.
+            let yptr = y.as_ptr() as *mut f32;
+            for i in range {
+                let mut s = 0f32;
+                let row = &self.data[i * k..(i + 1) * k];
+                for (a, b) in row.iter().zip(x) {
+                    s += a * b;
+                }
+                unsafe { *yptr.add(i) = s };
+            }
+        });
+        y
+    }
+
+    /// Gather columns into a new matrix.
+    pub fn gather_cols(&self, cols: &[usize]) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[m, cols.len()]);
+        for i in 0..m {
+            for (jj, &j) in cols.iter().enumerate() {
+                debug_assert!(j < n);
+                out.data[i * cols.len() + jj] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn gather_rows(&self, rows: &[usize]) -> Tensor {
+        let n = self.cols();
+        let mut out = Tensor::zeros(&[rows.len(), n]);
+        for (ii, &i) in rows.iter().enumerate() {
+            out.row_mut(ii).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect())
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_large() {
+        let mut rng = Rng::new(1);
+        let a = randt(&mut rng, &[70, 90]);
+        let b = randt(&mut rng, &[90, 110]);
+        let c = a.matmul(&b);
+        // naive check on a few random entries
+        for _ in 0..50 {
+            let i = rng.below(70);
+            let j = rng.below(110);
+            let mut s = 0f64;
+            for k in 0..90 {
+                s += a.at2(i, k) as f64 * b.at2(k, j) as f64;
+            }
+            assert!((c.at2(i, j) as f64 - s).abs() < 1e-3, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = randt(&mut rng, &[33, 47]);
+        let x: Vec<f32> = (0..47).map(|_| rng.normal_f32(1.0)).collect();
+        let y = a.matvec(&x);
+        let xm = Tensor::from_vec(&[47, 1], x);
+        let ym = a.matmul(&xm);
+        for i in 0..33 {
+            assert!((y[i] - ym.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = randt(&mut rng, &[5, 9]);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn gather_cols_rows() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let g = a.gather_cols(&[2, 0]);
+        assert_eq!(g.data, vec![3., 1., 6., 4.]);
+        let r = a.gather_rows(&[1]);
+        assert_eq!(r.data, vec![4., 5., 6.]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let mut t = Tensor::eye(3);
+        t.add_diag(2.0);
+        assert_eq!(t.at2(1, 1), 3.0);
+        assert_eq!(t.at2(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Fine-tuning driver: runs the fused `train_step` HLO (fwd+bwd+AdamW in
+//! one executable) with the paper's distillation objective (Eq. 5):
+//!
+//!   L = λ1·L_task + λ2·KL(teacher‖student logits) + λ3·L_token
+//!
+//! The teacher is the dense checkpoint; its logits + per-layer hidden
+//! states are produced by the `teacher_fwd` artifact per batch and fed
+//! into the student step. λ = (1,0,0) routes through the `_nokd`
+//! executable so the teacher terms are absent from the graph entirely
+//! (GPT setting, App. I; ablations, Table 5).
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Dataset};
+use crate::eval::mask_literals;
+use crate::models::ModelState;
+use crate::runtime::{lit_f32_shaped, lit_i32, lit_scalar_f32, lit_to_f32, Engine};
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub lr: f64,
+    pub weight_decay: f64,
+    /// (λ_task, λ_logit, λ_token) — Eq. 5
+    pub lambdas: [f32; 3],
+    pub epochs: f64,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            lr: 1e-3,
+            weight_decay: 0.01,
+            lambdas: [1.0, 0.5, 0.5],
+            epochs: 1.0,
+            seed: 0,
+            log_every: 0,
+        }
+    }
+}
+
+impl TrainCfg {
+    pub fn kd_enabled(&self) -> bool {
+        self.lambdas[1] > 0.0 || self.lambdas[2] > 0.0
+    }
+}
+
+/// Adam state + step counter, persisted across pruning stages.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: usize,
+    /// dense teacher parameters (packed), if distillation is used
+    pub teacher: Option<Vec<f32>>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, n_params: usize, teacher: Option<Vec<f32>>) -> Trainer<'e> {
+        Trainer { engine, m: vec![0.0; n_params], v: vec![0.0; n_params], step: 0, teacher }
+    }
+
+    pub fn reset_moments(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+    }
+
+    /// Train for cfg.epochs over `data.train`; linear LR decay across
+    /// the whole run. Returns mean task loss of the final 10 steps.
+    pub fn train(&mut self, state: &mut ModelState, data: &Dataset, cfg: &TrainCfg) -> Result<f64> {
+        let b = self.engine.manifest.batch_train;
+        let tinfo = self.engine.manifest.task(&state.model, &state.task).clone();
+        let minfo = self.engine.manifest.model(&state.model).clone();
+        let kd = cfg.kd_enabled() && self.teacher.is_some();
+        let art = if kd {
+            format!("{}__{}__train_step", state.model, state.task)
+        } else {
+            format!("{}__{}__train_step_nokd", state.model, state.task)
+        };
+        let teach_art = format!("{}__{}__teacher_fwd", state.model, state.task);
+        let total_steps = ((data.train.len() as f64 * cfg.epochs) / b as f64).ceil() as usize;
+        let mut batcher = Batcher::new(data.train.len(), b, cfg.seed);
+        let (hm, fm) = mask_literals(state)?;
+        let pad = lit_f32_shaped(&[b, data.seq_len], &vec![1.0f32; b * data.seq_len])?;
+        let lam = lit_f32_shaped(&[3], &cfg.lambdas)?;
+        let teacher_params = match (&self.teacher, kd) {
+            (Some(t), true) => Some(lit_f32_shaped(&[tinfo.n_params], t)?),
+            _ => None,
+        };
+        let mut tail_losses = Vec::new();
+        for s in 0..total_steps {
+            self.step += 1;
+            let lr_now = cfg.lr * (1.0 - s as f64 / total_steps.max(1) as f64).max(0.05);
+            let idxs = batcher.next();
+            let (ids, labels) = data.batch(&idxs);
+            let ids_l = lit_i32(&[b, data.seq_len], &ids)?;
+            let labels_l = if data.kind == "lm" {
+                lit_i32(&[b, data.seq_len], &labels)?
+            } else {
+                lit_i32(&[b], &labels)?
+            };
+            let params_l = lit_f32_shaped(&[tinfo.n_params], &state.params)?;
+            let m_l = lit_f32_shaped(&[tinfo.n_params], &self.m)?;
+            let v_l = lit_f32_shaped(&[tinfo.n_params], &self.v)?;
+            let t_l = lit_scalar_f32(self.step as f32)?;
+            let lr_l = lit_scalar_f32(lr_now as f32)?;
+            let wd_l = lit_scalar_f32(cfg.weight_decay as f32)?;
+            let out = if kd {
+                let tp = teacher_params.as_ref().unwrap();
+                let tout = self.engine.run(&teach_art, &[tp.clone(), ids_l.clone()])?;
+                // tout = (logits, hiddens)
+                self.engine.run(
+                    &art,
+                    &[
+                        params_l, m_l, v_l, t_l, lr_l, ids_l, labels_l,
+                        hm.clone(), fm.clone(),
+                        tout[0].clone(), tout[1].clone(), pad.clone(), lam.clone(), wd_l,
+                    ],
+                )?
+            } else {
+                self.engine.run(
+                    &art,
+                    &[params_l, m_l, v_l, t_l, lr_l, ids_l, labels_l, hm.clone(), fm.clone(), wd_l],
+                )?
+            };
+            state.params = lit_to_f32(&out[0])?;
+            self.m = lit_to_f32(&out[1])?;
+            self.v = lit_to_f32(&out[2])?;
+            let task_loss = lit_to_f32(&out[3])?[0];
+            if tail_losses.len() >= 10 {
+                tail_losses.remove(0);
+            }
+            tail_losses.push(task_loss as f64);
+            if cfg.log_every > 0 && s % cfg.log_every == 0 {
+                crate::zlog!(
+                    "info",
+                    "train[{}/{}] step={} lr={:.2e} task_loss={:.4}",
+                    s,
+                    total_steps,
+                    self.step,
+                    lr_now,
+                    task_loss
+                );
+            }
+        }
+        // Masked structures must stay dead: the optimizer nudges them
+        // via weight decay/moments only when masks are 1, and the graph
+        // multiplies activations by the mask — but we re-zero weights of
+        // dead structures for checkpoint hygiene.
+        rezero_dead(state, &tinfo, &minfo);
+        Ok(tail_losses.iter().sum::<f64>() / tail_losses.len().max(1) as f64)
+    }
+}
+
+/// Zero out parameters of pruned structures (they receive no gradient
+/// through the masked graph, but Adam moments / weight decay could
+/// still drift them).
+pub fn rezero_dead(
+    state: &mut ModelState,
+    tinfo: &crate::runtime::TaskInfo,
+    minfo: &crate::runtime::ModelInfo,
+) {
+    let masks = state.masks.clone();
+    for l in 0..masks.n_layers {
+        let dead_heads: Vec<usize> = (0..masks.n_heads)
+            .filter(|&h| masks.head_row(l)[h] == 0.0)
+            .collect();
+        if !dead_heads.is_empty() {
+            if let Ok(mut w) = state.attn_w_paper(tinfo, l) {
+                let cols = w.cols();
+                for &h in &dead_heads {
+                    for r in 0..w.rows() {
+                        for c in h * minfo.d_head..(h + 1) * minfo.d_head {
+                            w.data[r * cols + c] = 0.0;
+                        }
+                    }
+                }
+                let _ = state.set_attn_w_paper(tinfo, l, &w, &dead_heads, minfo.d_head);
+            }
+        }
+        let dead_cols: Vec<usize> = (0..masks.d_ff)
+            .filter(|&c| masks.ffn_row(l)[c] == 0.0)
+            .collect();
+        if !dead_cols.is_empty() {
+            if let Ok(mut w) = state.fc_w_paper(tinfo, l) {
+                let cols = w.cols();
+                for &c in &dead_cols {
+                    for r in 0..w.rows() {
+                        w.data[r * cols + c] = 0.0;
+                    }
+                }
+                let _ = state.set_fc_w_paper(tinfo, l, &w, &dead_cols);
+            }
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Micro-benchmark harness substrate (criterion is unavailable offline).
+//!
+//! criterion-style methodology on a budget: warmup, then timed batches
+//! until a wall-clock budget is spent, reporting min/median/mean/p95
+//! and a median-absolute-deviation noise estimate. `cargo bench`
+//! targets use `harness = false` and drive this directly.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub mad_ns: f64,
+}
+
+impl Stats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<48} {:>10} {:>12} {:>12} {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: Duration::from_millis(200), budget: Duration::from_secs(2), max_iters: 10_000 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: Duration::from_millis(50), budget: Duration::from_millis(500), max_iters: 2_000 }
+    }
+
+    /// Run `f` repeatedly, return timing stats. `f` should return some
+    /// value; we black-box it to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget && samples.len() < self.max_iters {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        stats_from(name, &mut samples)
+    }
+
+    /// Time one already-running closure N times exactly (for expensive ops).
+    pub fn run_n<T, F: FnMut() -> T>(&self, name: &str, n: usize, mut f: F) -> Stats {
+        std::hint::black_box(f()); // single warmup
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        stats_from(name, &mut samples)
+    }
+}
+
+fn stats_from(name: &str, samples: &mut [f64]) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let median = samples[n / 2];
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let p95 = samples[(n as f64 * 0.95) as usize % n];
+    let mut dev: Vec<f64> = samples.iter().map(|x| (x - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        min_ns: samples[0],
+        median_ns: median,
+        mean_ns: mean,
+        p95_ns: p95,
+        mad_ns: dev[n / 2],
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<48} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "min", "median", "mean", "p95"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let b = Bench { warmup: Duration::from_millis(1), budget: Duration::from_millis(20), max_iters: 1000 };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.iters > 10);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn run_n_counts() {
+        let b = Bench::quick();
+        let s = b.run_n("n", 17, || std::hint::black_box(3u64.pow(7)));
+        assert_eq!(s.iters, 17);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert!(fmt_ns(2_500.0).ends_with("us"));
+        assert!(fmt_ns(2_500_000.0).ends_with("ms"));
+        assert!(fmt_ns(2.5e9).ends_with('s'));
+    }
+}

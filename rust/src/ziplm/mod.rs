@@ -1,0 +1,533 @@
+//! The ZipLM structured-OBS core (paper §3.1, Algorithm 1).
+//!
+//! Two interchangeable backends implement the per-step math:
+//!
+//! * [`HloBackend`] — the production path: executes the AOT-compiled
+//!   score/update graphs (whose hot loops are the L1 Pallas kernels)
+//!   through PJRT;
+//! * [`NativeBackend`] — a pure-Rust mirror used for unit/property
+//!   tests and for cross-checking the HLO path bit-for-bit(ish).
+//!
+//! On top of either backend, [`build_module_db`] produces the paper's
+//! per-layer *database*: weight snapshots + error priors at every
+//! sparsity level of the head/FFN ladders, which the structured SPDY
+//! search (spdy/) consumes. Selection inside a database build is pure
+//! saliency (Algorithm 1); *inference-awareness* enters at the SPDY
+//! level where levels are traded off against latency-table entries.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{lit_f32_shaped, lit_scalar_i32, lit_to_f32, lit_to_i32, Engine};
+use crate::tensor::{linalg, Tensor};
+
+pub const BIG: f32 = 1e30;
+
+/// Assemble H = 2·XX^T + λI and H^{-1} from an accumulated XX^T.
+/// `damp_frac` follows the OBC convention: λ = damp_frac · mean(diag).
+pub fn assemble_hessian(acc_xxt: &Tensor, damp_frac: f32) -> Result<(Tensor, Tensor)> {
+    let n = acc_xxt.rows();
+    let mut h = acc_xxt.clone();
+    h.scale(2.0);
+    let mean_diag = (0..n).map(|i| h.at2(i, i) as f64).sum::<f64>() / n as f64;
+    let lambda = (damp_frac as f64 * mean_diag).max(1e-8) as f32;
+    h.add_diag(lambda);
+    let hinv = linalg::spd_inverse(&h).map_err(|e| anyhow!("hessian inverse: {e}"))?;
+    Ok((h, hinv))
+}
+
+/// One structured-OBS problem: W [d_row, n·g] with column-group
+/// structures of width g, inverse Hessian [n·g, n·g].
+pub trait ObsOps {
+    /// Eq. 2 saliencies for all structures (BIG for inactive).
+    fn scores(&mut self, w: &Tensor, hinv: &Tensor, active: &[f32]) -> Result<Vec<f32>>;
+    /// Eqs. 3–4: remove structure `idx`, return (W', Hinv').
+    fn update(&mut self, w: &Tensor, hinv: &Tensor, idx: usize) -> Result<(Tensor, Tensor)>;
+    /// Fused n-step one-at-a-time removal (g = 1 only). Returns
+    /// (W', Hinv', active', removal order).
+    fn multi_update(
+        &mut self,
+        w: &Tensor,
+        hinv: &Tensor,
+        active: &[f32],
+        n: usize,
+    ) -> Result<(Tensor, Tensor, Vec<f32>, Vec<usize>)>;
+    fn group(&self) -> usize;
+}
+
+// ---------------------------------------------------------------- native
+
+/// Pure-Rust mirror of the L1/L2 pruning math.
+pub struct NativeBackend {
+    pub g: usize,
+}
+
+impl NativeBackend {
+    pub fn new(g: usize) -> Self {
+        NativeBackend { g }
+    }
+
+    fn block_inv(&self, hinv: &Tensor, j: usize) -> Result<Tensor> {
+        let g = self.g;
+        let idx: Vec<usize> = (j * g..(j + 1) * g).collect();
+        let block = hinv.gather_rows(&idx).gather_cols(&idx);
+        linalg::gj_inverse(&block).map_err(|e| anyhow!(e))
+    }
+}
+
+impl ObsOps for NativeBackend {
+    fn scores(&mut self, w: &Tensor, hinv: &Tensor, active: &[f32]) -> Result<Vec<f32>> {
+        let g = self.g;
+        let n = w.cols() / g;
+        let mut out = vec![BIG; n];
+        for j in 0..n {
+            if active[j] <= 0.0 {
+                continue;
+            }
+            let binv = self.block_inv(hinv, j)?;
+            // score_j = Σ_i w_i,Sj Binv w_i,Sj^T
+            let mut s = 0f64;
+            for i in 0..w.rows() {
+                let wi = &w.row(i)[j * g..(j + 1) * g];
+                let bw = binv.matvec(wi);
+                for (a, b) in wi.iter().zip(&bw) {
+                    s += (*a as f64) * (*b as f64);
+                }
+            }
+            out[j] = s as f32;
+        }
+        Ok(out)
+    }
+
+    fn update(&mut self, w: &Tensor, hinv: &Tensor, idx: usize) -> Result<(Tensor, Tensor)> {
+        let g = self.g;
+        let d_col = w.cols();
+        let cols: Vec<usize> = (idx * g..(idx + 1) * g).collect();
+        let binv = self.block_inv(hinv, idx)?;
+        // P = Binv @ Hinv[S, :]
+        let rows = hinv.gather_rows(&cols);
+        let p = binv.matmul(&rows); // [g, d_col]
+        // W' = W - W[:, S] @ P ; Hinv' = Hinv - Hinv[:, S] @ P
+        let wc = w.gather_cols(&cols);
+        let hc = hinv.gather_cols(&cols);
+        let mut w2 = w.clone();
+        let dw = wc.matmul(&p);
+        for i in 0..w2.len() {
+            w2.data[i] -= dw.data[i];
+        }
+        let mut h2 = hinv.clone();
+        let dh = hc.matmul(&p);
+        for i in 0..h2.len() {
+            h2.data[i] -= dh.data[i];
+        }
+        // scrub: zero removed cols of W, zero rows/cols of Hinv, unit diag
+        for i in 0..w2.rows() {
+            for &c in &cols {
+                w2.data[i * d_col + c] = 0.0;
+            }
+        }
+        for &c in &cols {
+            for k in 0..d_col {
+                h2.data[c * d_col + k] = 0.0;
+                h2.data[k * d_col + c] = 0.0;
+            }
+            h2.data[c * d_col + c] = 1.0;
+        }
+        Ok((w2, h2))
+    }
+
+    fn multi_update(
+        &mut self,
+        w: &Tensor,
+        hinv: &Tensor,
+        active: &[f32],
+        n: usize,
+    ) -> Result<(Tensor, Tensor, Vec<f32>, Vec<usize>)> {
+        assert_eq!(self.g, 1, "multi_update is a g=1 path");
+        let mut w = w.clone();
+        let mut h = hinv.clone();
+        let mut act = active.to_vec();
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            let scores = self.scores(&w, &h, &act)?;
+            let j = argmin(&scores);
+            let (w2, h2) = self.update(&w, &h, j)?;
+            w = w2;
+            h = h2;
+            act[j] = 0.0;
+            order.push(j);
+        }
+        Ok((w, h, act, order))
+    }
+
+    fn group(&self) -> usize {
+        self.g
+    }
+}
+
+pub fn argmin(scores: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &s) in scores.iter().enumerate() {
+        if s < scores[best] {
+            best = i;
+        }
+        let _ = i;
+    }
+    best
+}
+
+// ------------------------------------------------------------------ hlo
+
+/// Production backend: drives the AOT score/update executables (L1
+/// Pallas kernels inside) through PJRT.
+pub struct HloBackend<'e> {
+    engine: &'e Engine,
+    score_art: String,
+    update_art: String,
+    multi_art: Option<String>,
+    g: usize,
+    d_row: usize,
+    d_col: usize,
+    /// PJRT dispatch counter (perf accounting, EXPERIMENTS.md §Perf).
+    pub dispatches: usize,
+}
+
+impl<'e> HloBackend<'e> {
+    pub fn attn(engine: &'e Engine, model: &str) -> Result<Self> {
+        let info = engine.manifest.model(model);
+        Ok(HloBackend {
+            engine,
+            score_art: format!("{model}__score_attn"),
+            update_art: format!("{model}__update_attn"),
+            multi_art: None,
+            g: info.d_head,
+            d_row: info.d_model,
+            d_col: info.d_attn(),
+            dispatches: 0,
+        })
+    }
+
+    pub fn fc(engine: &'e Engine, model: &str) -> Result<Self> {
+        let info = engine.manifest.model(model);
+        Ok(HloBackend {
+            engine,
+            score_art: format!("{model}__score_fc"),
+            update_art: format!("{model}__update_fc"),
+            multi_art: Some(format!("{model}__update_fc_multi")),
+            g: 1,
+            d_row: info.d_model,
+            d_col: info.d_ff,
+            dispatches: 0,
+        })
+    }
+}
+
+impl<'e> ObsOps for HloBackend<'e> {
+    fn scores(&mut self, w: &Tensor, hinv: &Tensor, active: &[f32]) -> Result<Vec<f32>> {
+        let n = self.d_col / self.g;
+        let out = self.engine.run(
+            &self.score_art,
+            &[
+                lit_f32_shaped(&[self.d_row, self.d_col], &w.data)?,
+                lit_f32_shaped(&[self.d_col, self.d_col], &hinv.data)?,
+                lit_f32_shaped(&[n], active)?,
+            ],
+        )?;
+        self.dispatches += 1;
+        lit_to_f32(&out[0])
+    }
+
+    fn update(&mut self, w: &Tensor, hinv: &Tensor, idx: usize) -> Result<(Tensor, Tensor)> {
+        let out = self.engine.run(
+            &self.update_art,
+            &[
+                lit_f32_shaped(&[self.d_row, self.d_col], &w.data)?,
+                lit_f32_shaped(&[self.d_col, self.d_col], &hinv.data)?,
+                lit_scalar_i32(idx as i32)?,
+            ],
+        )?;
+        self.dispatches += 1;
+        Ok((
+            Tensor::from_vec(&[self.d_row, self.d_col], lit_to_f32(&out[0])?),
+            Tensor::from_vec(&[self.d_col, self.d_col], lit_to_f32(&out[1])?),
+        ))
+    }
+
+    fn multi_update(
+        &mut self,
+        w: &Tensor,
+        hinv: &Tensor,
+        active: &[f32],
+        n: usize,
+    ) -> Result<(Tensor, Tensor, Vec<f32>, Vec<usize>)> {
+        let art = self
+            .multi_art
+            .clone()
+            .ok_or_else(|| anyhow!("multi_update only lowered for FC (g=1)"))?;
+        let out = self.engine.run(
+            &art,
+            &[
+                lit_f32_shaped(&[self.d_row, self.d_col], &w.data)?,
+                lit_f32_shaped(&[self.d_col, self.d_col], &hinv.data)?,
+                lit_f32_shaped(&[self.d_col], active)?,
+                lit_scalar_i32(n as i32)?,
+            ],
+        )?;
+        self.dispatches += 1;
+        let w2 = Tensor::from_vec(&[self.d_row, self.d_col], lit_to_f32(&out[0])?);
+        let h2 = Tensor::from_vec(&[self.d_col, self.d_col], lit_to_f32(&out[1])?);
+        let act2 = lit_to_f32(&out[2])?;
+        let order: Vec<usize> = lit_to_i32(&out[3])?
+            .into_iter()
+            .take(n)
+            .map(|x| x as usize)
+            .collect();
+        Ok((w2, h2, act2, order))
+    }
+
+    fn group(&self) -> usize {
+        self.g
+    }
+}
+
+// ------------------------------------------------------------- database
+
+/// One sparsity level of a module: snapshot + SPDY prior.
+#[derive(Clone, Debug)]
+pub struct LevelSnapshot {
+    /// remaining structures (heads or FFN columns)
+    pub remaining: usize,
+    /// cumulative removed structure indices, in removal order
+    pub dead: Vec<usize>,
+    /// W_paper at this level ([d_row, d_col], removed columns zeroed)
+    pub w: Tensor,
+    /// p_s = ||Ŵ_s X − W X|| / ||W X|| (paper §3.2); 1.0 for full drop
+    pub prior: f64,
+}
+
+/// Per-module database: all ladder levels of one layer's attn or FC2.
+#[derive(Clone, Debug)]
+pub struct ModuleDb {
+    pub layer: usize,
+    pub is_attn: bool,
+    pub levels: Vec<LevelSnapshot>,
+}
+
+impl ModuleDb {
+    /// Find the level with exactly `remaining` structures.
+    pub fn level(&self, remaining: usize) -> Option<&LevelSnapshot> {
+        self.levels.iter().find(|l| l.remaining == remaining)
+    }
+}
+
+/// Relative reconstruction error ||(Ŵ−W)X|| / ||WX|| via the trace
+/// identity with the ORIGINAL (undamped-ish) Hessian.
+pub fn relative_error(w0: &Tensor, w_s: &Tensor, h: &Tensor) -> f64 {
+    let mut diff = w_s.clone();
+    for i in 0..diff.len() {
+        diff.data[i] -= w0.data[i];
+    }
+    let num = linalg::trace_whwt(&diff, h).max(0.0);
+    let den = linalg::trace_whwt(w0, h).max(1e-12);
+    (num / den).sqrt().min(1.0)
+}
+
+/// Build the database for one module by one-at-a-time structured OBS.
+///
+/// `levels` lists the remaining-structure counts to snapshot, in
+/// decreasing order, starting with the dense count (e.g. heads
+/// [4,3,2,1,0] or the FFN 0.9^i ladder). The final level 0 is the
+/// module-drop level with prior 1.0 (paper §3.2's structured prior).
+pub fn build_module_db(
+    ops: &mut dyn ObsOps,
+    layer: usize,
+    is_attn: bool,
+    w0: &Tensor,
+    hinv0: &Tensor,
+    h: &Tensor,
+    levels: &[usize],
+) -> Result<ModuleDb> {
+    let g = ops.group();
+    let n_structs = w0.cols() / g;
+    assert_eq!(levels[0], n_structs, "levels must start dense");
+    let mut out = Vec::with_capacity(levels.len());
+    out.push(LevelSnapshot { remaining: n_structs, dead: vec![], w: w0.clone(), prior: 0.0 });
+
+    let mut w = w0.clone();
+    let mut hinv = hinv0.clone();
+    let mut active = vec![1.0f32; n_structs];
+    let mut dead: Vec<usize> = Vec::new();
+
+    for &target in &levels[1..] {
+        let cur = n_structs - dead.len();
+        if target >= cur {
+            continue;
+        }
+        let n_remove = cur - target;
+        if target == 0 {
+            // full module drop: W = 0, prior = 1 by definition
+            let wz = Tensor::zeros(&w0.shape);
+            let mut all_dead = dead.clone();
+            for j in 0..n_structs {
+                if active[j] > 0.0 {
+                    all_dead.push(j);
+                }
+            }
+            out.push(LevelSnapshot { remaining: 0, dead: all_dead, w: wz, prior: 1.0 });
+            continue;
+        }
+        if g == 1 && n_remove > 1 {
+            let (w2, h2, act2, order) = ops.multi_update(&w, &hinv, &active, n_remove)?;
+            w = w2;
+            hinv = h2;
+            active = act2;
+            dead.extend(order);
+        } else {
+            for _ in 0..n_remove {
+                let scores = ops.scores(&w, &hinv, &active)?;
+                let j = argmin(&scores);
+                let (w2, h2) = ops.update(&w, &hinv, j)?;
+                w = w2;
+                hinv = h2;
+                active[j] = 0.0;
+                dead.push(j);
+            }
+        }
+        let prior = relative_error(w0, &w, h);
+        out.push(LevelSnapshot { remaining: target, dead: dead.clone(), w: w.clone(), prior });
+    }
+    Ok(ModuleDb { layer, is_attn, levels: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen;
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng, d_row: usize, n: usize, g: usize) -> (Tensor, Tensor, Tensor) {
+        let d_col = n * g;
+        let w = Tensor::from_vec(&[d_row, d_col], gen::vec_f32(rng, d_row * d_col, 1.0));
+        let h = Tensor::from_vec(&[d_col, d_col], gen::spd(rng, d_col, 0.3));
+        let hinv = linalg::spd_inverse(&h).unwrap();
+        (w, h, hinv)
+    }
+
+    #[test]
+    fn native_update_reduces_output_error_vs_plain_zeroing() {
+        // The OBS update must beat naive column-zeroing in ||ΔW X||.
+        let mut rng = Rng::new(21);
+        let (w, h, hinv) = setup(&mut rng, 12, 8, 1);
+        let mut ops = NativeBackend::new(1);
+        let scores = ops.scores(&w, &hinv, &vec![1.0; 8]).unwrap();
+        let j = argmin(&scores);
+        let (w_obs, _) = ops.update(&w, &hinv, j).unwrap();
+        let mut w_naive = w.clone();
+        for i in 0..w.rows() {
+            w_naive.data[i * 8 + j] = 0.0;
+        }
+        let err_obs = relative_error(&w, &w_obs, &h);
+        let err_naive = relative_error(&w, &w_naive, &h);
+        assert!(err_obs <= err_naive + 1e-9, "obs {err_obs} naive {err_naive}");
+    }
+
+    #[test]
+    fn native_score_equals_error_increase_g1() {
+        // For g=1 the OBS score equals the exact increase in squared
+        // error: score_j = ||(W' - W) X||^2 when H is the data Gram.
+        let mut rng = Rng::new(22);
+        let (w, h, hinv) = setup(&mut rng, 6, 5, 1);
+        let mut ops = NativeBackend::new(1);
+        let scores = ops.scores(&w, &hinv, &vec![1.0; 5]).unwrap();
+        for j in 0..5 {
+            let (wj, _) = ops.update(&w, &hinv, j).unwrap();
+            let mut diff = wj.clone();
+            for i in 0..diff.len() {
+                diff.data[i] -= w.data[i];
+            }
+            let err = linalg::trace_whwt(&diff, &h);
+            assert!(
+                (err - scores[j] as f64).abs() / err.max(1e-6) < 5e-2,
+                "j={j}: score {} vs err {err}",
+                scores[j]
+            );
+        }
+    }
+
+    #[test]
+    fn native_multi_matches_sequential() {
+        let mut rng = Rng::new(23);
+        let (w, _h, hinv) = setup(&mut rng, 8, 10, 1);
+        let act = vec![1.0f32; 10];
+        let mut a = NativeBackend::new(1);
+        let (wm, _, actm, order) = a.multi_update(&w, &hinv, &act, 4).unwrap();
+        // sequential
+        let mut ws = w.clone();
+        let mut hs = hinv.clone();
+        let mut acts = act.clone();
+        let mut order_s = Vec::new();
+        for _ in 0..4 {
+            let sc = a.scores(&ws, &hs, &acts).unwrap();
+            let j = argmin(&sc);
+            let (w2, h2) = a.update(&ws, &hs, j).unwrap();
+            ws = w2;
+            hs = h2;
+            acts[j] = 0.0;
+            order_s.push(j);
+        }
+        assert_eq!(order, order_s);
+        assert!(wm.max_abs_diff(&ws) < 1e-4);
+        assert_eq!(actm, acts);
+    }
+
+    #[test]
+    fn db_priors_monotone_and_bounded() {
+        let mut rng = Rng::new(24);
+        let (w, h, hinv) = setup(&mut rng, 8, 12, 1);
+        let mut ops = NativeBackend::new(1);
+        let levels = vec![12, 9, 6, 3, 1, 0];
+        let db = build_module_db(&mut ops, 0, false, &w, &hinv, &h, &levels).unwrap();
+        assert_eq!(db.levels.len(), levels.len());
+        for pair in db.levels.windows(2) {
+            assert!(pair[1].prior >= pair[0].prior - 1e-6, "{:?}", pair.iter().map(|l| l.prior).collect::<Vec<_>>());
+        }
+        assert_eq!(db.levels.last().unwrap().prior, 1.0);
+        assert_eq!(db.levels.last().unwrap().remaining, 0);
+        // dead lists grow and stay consistent with `remaining`
+        for l in &db.levels {
+            assert_eq!(l.dead.len(), 12 - l.remaining);
+            // snapshot has removed columns zeroed
+            for &c in &l.dead {
+                for r in 0..l.w.rows() {
+                    assert_eq!(l.w.at2(r, c), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_update_zeroes_whole_structure() {
+        let mut rng = Rng::new(25);
+        let (w, _h, hinv) = setup(&mut rng, 6, 4, 4);
+        let mut ops = NativeBackend::new(4);
+        let (w2, h2) = ops.update(&w, &hinv, 2).unwrap();
+        for r in 0..6 {
+            for c in 8..12 {
+                assert_eq!(w2.at2(r, c), 0.0);
+            }
+        }
+        // scrubbed hinv has unit diag on removed block
+        for c in 8..12 {
+            assert_eq!(h2.at2(c, c), 1.0);
+        }
+    }
+
+    #[test]
+    fn assemble_hessian_sane() {
+        let mut rng = Rng::new(26);
+        let x = Tensor::from_vec(&[6, 40], gen::vec_f32(&mut rng, 240, 1.0));
+        let acc = x.matmul(&x.transpose2());
+        let (h, hinv) = assemble_hessian(&acc, 0.01).unwrap();
+        let prod = h.matmul(&hinv);
+        assert!(prod.max_abs_diff(&Tensor::eye(6)) < 1e-2);
+    }
+}

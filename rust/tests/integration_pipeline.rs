@@ -1,0 +1,195 @@
+//! End-to-end pipeline integration: teacher → Hessians → databases →
+//! SPDY → apply → evaluate, and the serving coordinator. Skipped when
+//! artifacts/ is absent.
+
+use std::path::Path;
+
+use ziplm::data;
+use ziplm::eval;
+use ziplm::latency::LatencyTable;
+use ziplm::models::ModelState;
+use ziplm::pruner::{self, PruneCfg, TargetMode};
+use ziplm::runtime::Engine;
+use ziplm::train::{TrainCfg, Trainer};
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::open(&dir).expect("engine"))
+}
+
+/// Synthetic latency table so the test does not depend on measurement noise.
+fn toy_table(engine: &Engine, model: &str) -> LatencyTable {
+    let info = engine.manifest.model(model);
+    let attn: Vec<f64> = (0..=info.n_heads).map(|h| h as f64 * 1.0e-3).collect();
+    let mut mlp: Vec<(usize, f64)> = info
+        .ffn_ladder
+        .iter()
+        .map(|&w| (w, w as f64 * 1.6e-5 + if w > 0 { 5e-4 } else { 0.0 }))
+        .collect();
+    mlp.sort_by(|a, b| b.0.cmp(&a.0));
+    LatencyTable {
+        model: model.into(),
+        device: "toy".into(),
+        regime: "throughput".into(),
+        attn,
+        mlp,
+        overhead: 1e-3,
+    }
+}
+
+#[test]
+fn oneshot_prune_meets_speedup_and_keeps_signal() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 128, 64);
+    // brief teacher training so the model has structure worth keeping
+    let mut st = ModelState::init(&minfo, task, &tinfo, 3);
+    let mut tr = Trainer::new(&engine, tinfo.n_params, None);
+    tr.train(
+        &mut st,
+        &ds,
+        &TrainCfg { lr: 1e-3, epochs: 2.0, lambdas: [1.0, 0.0, 0.0], weight_decay: 0.0, seed: 0, log_every: 0 },
+    )
+    .unwrap();
+    let dense_eval = eval::evaluate(&engine, &st, &ds, "dev").unwrap();
+
+    let table = toy_table(&engine, model);
+    let cfg = PruneCfg {
+        calib_samples: 32,
+        spdy: pruner::SpdyCfgLite { iters: 10, seed: 1 },
+        ..Default::default()
+    };
+    let dense_cost = table.dense_time(minfo.n_layers);
+    let target = 2.0;
+    let mut pruned = st.clone();
+    let report =
+        pruner::prune_to_target(&engine, &mut pruned, &ds, &table, dense_cost, target, &cfg)
+            .unwrap();
+    // speedup guarantee (the paper's headline property)
+    assert!(report.est_speedup >= target * 0.999, "est {}", report.est_speedup);
+    // masks consistent with profile
+    for (l, &(h, f)) in report.layer_profile.iter().enumerate() {
+        assert_eq!(pruned.masks.heads_alive(l), h);
+        assert_eq!(pruned.masks.ffn_alive(l), f);
+    }
+    // pruned weights zeroed
+    for l in 0..minfo.n_layers {
+        let w = pruned.fc_w_paper(&tinfo, l).unwrap();
+        for c in 0..minfo.d_ff {
+            if pruned.masks.ffn_row(l)[c] == 0.0 {
+                for r in 0..w.rows() {
+                    assert_eq!(w.at2(r, c), 0.0, "layer {l} col {c}");
+                }
+            }
+        }
+    }
+    // one-shot 2x should retain most of the dense quality
+    let pruned_eval = eval::evaluate(&engine, &pruned, &ds, "dev").unwrap();
+    assert!(
+        pruned_eval.metric >= dense_eval.metric - 0.25,
+        "dense {} pruned {}",
+        dense_eval.metric,
+        pruned_eval.metric
+    );
+}
+
+#[test]
+fn sparsity_mode_also_runs() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "qnli-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 64, 32);
+    let mut st = ModelState::init(&minfo, task, &tinfo, 4);
+    let table = toy_table(&engine, model);
+    let mut cfg = PruneCfg {
+        calib_samples: 16,
+        spdy: pruner::SpdyCfgLite { iters: 4, seed: 2 },
+        ..Default::default()
+    };
+    cfg.target_mode = TargetMode::Sparsity;
+    // dense cost in parameter mode comes from gradual(); call the
+    // stage API directly with a parameter budget
+    let dense_params: f64 = 2.0 * minfo.n_layers as f64
+        * (minfo.d_model * minfo.d_attn()) as f64
+        + 2.0 * minfo.n_layers as f64 * (minfo.d_model * minfo.d_ff) as f64;
+    let rep = pruner::prune_to_target(&engine, &mut st, &ds, &table, dense_params, 2.0, &cfg);
+    assert!(rep.is_ok(), "{rep:?}");
+}
+
+#[test]
+fn gradual_two_targets_monotone_masks() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 64, 32);
+    let st = ModelState::init(&minfo, task, &tinfo, 6);
+    let table = toy_table(&engine, model);
+    let cfg = PruneCfg {
+        calib_samples: 16,
+        spdy: pruner::SpdyCfgLite { iters: 4, seed: 3 },
+        ..Default::default()
+    };
+    let tcfg = TrainCfg { lr: 5e-4, epochs: 0.5, lambdas: [1.0, 0.0, 0.0], weight_decay: 0.0, seed: 0, log_every: 0 };
+    let stages =
+        pruner::gradual(&engine, st, &ds, &table, &[1.5, 2.5], &cfg, &tcfg, None).unwrap();
+    assert_eq!(stages.len(), 2);
+    // gradual: stage 2 masks are a subset of stage 1 masks (monotone pruning)
+    let m1 = &stages[0].state.masks;
+    let m2 = &stages[1].state.masks;
+    for (a, b) in m1.head.iter().zip(&m2.head) {
+        assert!(!(*a == 0.0 && *b == 1.0), "head resurrected");
+    }
+    for (a, b) in m1.ffn.iter().zip(&m2.ffn) {
+        assert!(!(*a == 0.0 && *b == 1.0), "ffn col resurrected");
+    }
+    assert!(stages[1].report.est_speedup >= 2.5 * 0.999);
+}
+
+#[test]
+fn serving_coordinator_batches_and_replies() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let st = ModelState::init(&minfo, task, &tinfo, 9);
+    drop(engine);
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let handle = ziplm::coordinator::start(
+        ziplm::coordinator::ServerCfg {
+            artifacts: dir,
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(3),
+        },
+        st,
+    );
+    // concurrent submissions to exercise the batcher
+    let mut receivers = Vec::new();
+    for i in 0..20 {
+        receivers.push(handle.submit(vec![(i % 7) as i32; minfo.seq_len]).unwrap());
+    }
+    let mut batched = false;
+    for rx in receivers {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(r.logits.len(), tinfo.n_classes);
+        assert!(r.logits.iter().all(|x| x.is_finite()));
+        if r.batch_size > 1 {
+            batched = true;
+        }
+    }
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.requests, 20);
+    assert!(stats.batches <= 20);
+    assert!(batched || stats.batches < 20, "dynamic batching never engaged");
+}

@@ -1,0 +1,206 @@
+//! Integration: PJRT runtime × AOT artifacts × the HLO pruning kernels.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they are
+//! skipped gracefully when it is absent so `cargo test` stays green on
+//! a fresh clone.
+
+use std::path::Path;
+
+use ziplm::models::ModelState;
+use ziplm::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine};
+use ziplm::tensor::{linalg, Tensor};
+use ziplm::util::prop::gen;
+use ziplm::util::rng::Rng;
+use ziplm::ziplm::{HloBackend, NativeBackend, ObsOps};
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::open(&dir).expect("engine"))
+}
+
+#[test]
+fn fwd_artifact_runs_and_shapes_match() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let st = ModelState::init(&minfo, task, &tinfo, 0);
+    let b = engine.manifest.batch_eval;
+    let ids = vec![3i32; b * minfo.seq_len];
+    let out = engine
+        .run(
+            &format!("{model}__{task}__fwd"),
+            &[
+                lit_f32_shaped(&[tinfo.n_params], &st.params).unwrap(),
+                lit_i32(&[b, minfo.seq_len], &ids).unwrap(),
+                lit_f32_shaped(&[minfo.n_layers, minfo.n_heads], &st.masks.head).unwrap(),
+                lit_f32_shaped(&[minfo.n_layers, minfo.d_ff], &st.masks.ffn).unwrap(),
+            ],
+        )
+        .expect("fwd");
+    let logits = lit_to_f32(&out[0]).unwrap();
+    assert_eq!(logits.len(), b * 2);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn hlo_obs_backend_matches_native_mirror_fc() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let minfo = engine.manifest.model(model).clone();
+    let mut rng = Rng::new(99);
+    let d = minfo.d_model;
+    let f = minfo.d_ff;
+    let w = Tensor::from_vec(&[d, f], gen::vec_f32(&mut rng, d * f, 0.5));
+    let h = Tensor::from_vec(&[f, f], gen::spd(&mut rng, f, 0.2));
+    let hinv = linalg::spd_inverse(&h).unwrap();
+    let active = vec![1.0f32; f];
+
+    let mut hlo = HloBackend::fc(&engine, model).unwrap();
+    let mut native = NativeBackend::new(1);
+
+    let s_h = hlo.scores(&w, &hinv, &active).unwrap();
+    let s_n = native.scores(&w, &hinv, &active).unwrap();
+    let mut max_rel = 0f64;
+    for (a, b) in s_h.iter().zip(&s_n) {
+        let rel = ((a - b).abs() / b.abs().max(1e-3)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 5e-2, "score mismatch {max_rel}");
+
+    let j = ziplm::ziplm::argmin(&s_h);
+    let (w_h, hinv_h) = hlo.update(&w, &hinv, j).unwrap();
+    let (w_n, hinv_n) = native.update(&w, &hinv, j).unwrap();
+    assert!(w_h.max_abs_diff(&w_n) < 1e-2, "update W mismatch {}", w_h.max_abs_diff(&w_n));
+    assert!(hinv_h.max_abs_diff(&hinv_n) < 1e-2);
+}
+
+#[test]
+fn hlo_obs_backend_matches_native_mirror_attn() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let minfo = engine.manifest.model(model).clone();
+    let mut rng = Rng::new(7);
+    let d = minfo.d_model;
+    let a = minfo.d_attn();
+    let w = Tensor::from_vec(&[d, a], gen::vec_f32(&mut rng, d * a, 0.5));
+    let h = Tensor::from_vec(&[a, a], gen::spd(&mut rng, a, 0.3));
+    let hinv = linalg::spd_inverse(&h).unwrap();
+    let active = vec![1.0f32; minfo.n_heads];
+
+    let mut hlo = HloBackend::attn(&engine, model).unwrap();
+    let mut native = NativeBackend::new(minfo.d_head);
+    let s_h = hlo.scores(&w, &hinv, &active).unwrap();
+    let s_n = native.scores(&w, &hinv, &active).unwrap();
+    for (x, y) in s_h.iter().zip(&s_n) {
+        assert!((x - y).abs() / y.abs().max(1e-3) < 5e-2, "{s_h:?} vs {s_n:?}");
+    }
+    let j = ziplm::ziplm::argmin(&s_h);
+    let (w_h, _) = hlo.update(&w, &hinv, j).unwrap();
+    let (w_n, _) = native.update(&w, &hinv, j).unwrap();
+    assert!(w_h.max_abs_diff(&w_n) < 2e-2);
+}
+
+#[test]
+fn hlo_multi_update_matches_native_sequence() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let minfo = engine.manifest.model(model).clone();
+    let mut rng = Rng::new(13);
+    let d = minfo.d_model;
+    let f = minfo.d_ff;
+    let w = Tensor::from_vec(&[d, f], gen::vec_f32(&mut rng, d * f, 0.5));
+    let h = Tensor::from_vec(&[f, f], gen::spd(&mut rng, f, 0.2));
+    let hinv = linalg::spd_inverse(&h).unwrap();
+    let active = vec![1.0f32; f];
+    let n = 12;
+    let mut hlo = HloBackend::fc(&engine, model).unwrap();
+    let (w_h, _, act_h, order_h) = hlo.multi_update(&w, &hinv, &active, n).unwrap();
+    let mut native = NativeBackend::new(1);
+    let (w_n, _, act_n, order_n) = native.multi_update(&w, &hinv, &active, n).unwrap();
+    assert_eq!(order_h, order_n, "removal order differs");
+    assert_eq!(act_h, act_n);
+    assert!(w_h.max_abs_diff(&w_n) < 2e-2, "{}", w_h.max_abs_diff(&w_n));
+}
+
+#[test]
+fn train_step_decreases_loss_through_pjrt() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let mut st = ModelState::init(&minfo, task, &tinfo, 1);
+    let ds = ziplm::data::load_sized(&minfo, task, 64, 32);
+    let mut tr = ziplm::train::Trainer::new(&engine, tinfo.n_params, None);
+    let cfg = ziplm::train::TrainCfg {
+        lr: 1e-3,
+        epochs: 3.0,
+        lambdas: [1.0, 0.0, 0.0],
+        weight_decay: 0.0,
+        seed: 0,
+        log_every: 0,
+    };
+    let final_loss = tr.train(&mut st, &ds, &cfg).unwrap();
+    assert!(final_loss < 0.6, "training did not learn: {final_loss}");
+}
+
+#[test]
+fn masked_fwd_ignores_dead_structures() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let mut st = ModelState::init(&minfo, task, &tinfo, 5);
+    st.masks.kill_head(1, 2);
+    for c in 0..minfo.d_ff / 2 {
+        st.masks.kill_ffn_col(2, c);
+    }
+    let ds = ziplm::data::load_sized(&minfo, task, 64, 32);
+    let base = ziplm::eval::calib_loss(&engine, &st, &ds, 32).unwrap();
+    // perturb exactly the dead head's q-columns; loss must not change
+    let mut st3 = st.clone();
+    let mut wq = st3.get2(&tinfo, "layer1.wq").unwrap();
+    let cols = wq.cols();
+    for r in 0..wq.rows() {
+        for c in 2 * minfo.d_head..3 * minfo.d_head {
+            wq.data[r * cols + c] += 55.0;
+        }
+    }
+    let data = wq.data.clone();
+    st3.set_flat(&tinfo, "layer1.wq", &data).unwrap();
+    let l3 = ziplm::eval::calib_loss(&engine, &st3, &ds, 32).unwrap();
+    assert!((base - l3).abs() < 1e-4, "dead head leaked: {base} vs {l3}");
+}
+
+#[test]
+fn measured_latency_table_is_monotone() {
+    let Some(engine) = engine() else { return };
+    let t = ziplm::latency::measure_cpu(&engine, "bert-syn-base", "latency", 15).unwrap();
+    // Sub-ms blocks on a shared single core are noisy; require
+    // monotonicity only above the noise floor and with generous slack.
+    const FLOOR: f64 = 0.4e-3;
+    for h in 1..t.attn.len() - 1 {
+        if t.attn[h] < FLOOR && t.attn[h + 1] < FLOOR {
+            continue;
+        }
+        assert!(t.attn[h] <= t.attn[h + 1] * 2.0, "attn not ~monotone at {h}: {:?}", t.attn);
+    }
+    let widths: Vec<usize> = t.mlp.iter().map(|&(w, _)| w).collect();
+    for pair in widths.windows(2) {
+        let (a, b) = (t.mlp_time(pair[0]), t.mlp_time(pair[1]));
+        if a < FLOOR && b < FLOOR {
+            continue;
+        }
+        assert!(a * 2.0 >= b, "mlp not ~monotone: {:?}", t.mlp);
+    }
+    // dense entries must dominate the tail regardless of noise
+    assert!(t.mlp_time(widths[0]) > t.mlp_time(*widths.iter().rev().nth(1).unwrap()));
+    assert!(t.attn[t.attn.len() - 1] > t.attn[0]);
+}

@@ -1,0 +1,265 @@
+//! Property tests on coordinator invariants (hand-rolled harness —
+//! proptest is unavailable offline; see util::prop).
+
+use ziplm::latency::LatencyTable;
+use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
+use ziplm::tensor::{linalg, Tensor};
+use ziplm::util::prop::{gen, Prop};
+use ziplm::util::rng::Rng;
+use ziplm::ziplm::{argmin, relative_error, NativeBackend, ObsOps};
+
+fn random_problem(rng: &mut Rng) -> SpdyProblem {
+    let n_layers = 1 + rng.below(4);
+    let mut modules = Vec::new();
+    for l in 0..n_layers {
+        for is_attn in [true, false] {
+            let n_levels = 2 + rng.below(5);
+            let dense_cost = 1.0 + rng.f64() * 9.0;
+            let mut options = Vec::new();
+            for k in 0..n_levels {
+                let frac = 1.0 - k as f64 / (n_levels - 1) as f64;
+                options.push(LevelOpt {
+                    remaining: (frac * 8.0) as usize,
+                    cost: dense_cost * frac,
+                    prior: 1.0 - frac,
+                });
+            }
+            modules.push(ModuleLevels { layer: l, is_attn, options });
+        }
+    }
+    SpdyProblem { modules, overhead: rng.f64() }
+}
+
+#[test]
+fn prop_spdy_dp_always_respects_budget() {
+    Prop::new(60).check_msg(
+        "dp ≤ budget",
+        |r| {
+            let p = random_problem(r);
+            let dense = p.dense_cost();
+            let budget = p.overhead + (dense - p.overhead) * (0.2 + 0.8 * r.f64());
+            (p, budget)
+        },
+        |(p, budget)| {
+            let coeffs = vec![1.0; p.modules.len()];
+            match spdy::solve_dp(p, &coeffs, *budget) {
+                Some(prof) => {
+                    let c = p.profile_cost(&prof);
+                    if c <= *budget + 1e-9 {
+                        Ok(())
+                    } else {
+                        Err(format!("cost {c} > budget {budget}"))
+                    }
+                }
+                None => {
+                    // must only fail when even the min config misses budget
+                    if p.min_cost() > *budget {
+                        Ok(())
+                    } else {
+                        Err("dp failed though feasible".into())
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_spdy_monotone_budget_monotone_error() {
+    // more budget → no worse total prior error
+    Prop::new(30).check_msg(
+        "budget monotone",
+        |r| random_problem(r),
+        |p| {
+            let coeffs = vec![1.0; p.modules.len()];
+            let lo = p.min_cost() * 1.2 + p.overhead;
+            let hi = p.dense_cost();
+            let err = |budget: f64| -> Option<f64> {
+                spdy::solve_dp(p, &coeffs, budget).map(|prof| {
+                    prof.iter()
+                        .zip(&p.modules)
+                        .map(|(&l, m)| m.options[l].prior.powi(2))
+                        .sum()
+                })
+            };
+            match (err(lo), err(hi)) {
+                (Some(e_lo), Some(e_hi)) => {
+                    if e_hi <= e_lo + 1e-9 {
+                        Ok(())
+                    } else {
+                        Err(format!("e_hi {e_hi} > e_lo {e_lo}"))
+                    }
+                }
+                _ => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_obs_update_exactness_on_redundant_column() {
+    // If column j is an exact linear combination of the others in the
+    // data, removing it with the OBS update preserves outputs ~exactly.
+    Prop::new(20).check_msg(
+        "obs exact on redundancy",
+        |r| {
+            let n = 4 + r.below(6);
+            let d_row = 3 + r.below(5);
+            let nsamp = 20 * n;
+            let mut x = vec![0f32; n * nsamp];
+            for v in x.iter_mut() {
+                *v = r.normal_f32(1.0);
+            }
+            // make row `dep` of X a combination of two others
+            let dep = r.below(n);
+            let (a, b) = ((dep + 1) % n, (dep + 2) % n);
+            let (ca, cb) = (r.normal_f32(0.7), r.normal_f32(0.7));
+            for s in 0..nsamp {
+                x[dep * nsamp + s] = ca * x[a * nsamp + s] + cb * x[b * nsamp + s];
+            }
+            let w = gen::vec_f32(r, d_row * n, 1.0);
+            (n, d_row, nsamp, x, w, dep)
+        },
+        |(n, d_row, nsamp, x, w, dep)| {
+            let xt = Tensor::from_vec(&[*n, *nsamp], x.clone());
+            let mut h = xt.matmul(&xt.transpose2());
+            h.scale(2.0);
+            h.add_diag(1e-4 * *n as f32);
+            let hinv = linalg::spd_inverse(&h).map_err(|e| e)?;
+            let w = Tensor::from_vec(&[*d_row, *n], w.clone());
+            let mut ops = NativeBackend::new(1);
+            let scores = ops.scores(&w, &hinv, &vec![1.0; *n]).map_err(|e| e.to_string())?;
+            // the redundant column must be near-free to remove: tiny
+            // relative to the typical column (another column may tie by
+            // chance when its weights are tiny, so exact-argmin is too
+            // strong a property)
+            let max = scores.iter().cloned().fold(0f32, f32::max);
+            if scores[*dep] > 0.05 * max {
+                return Err(format!("redundant col {dep} not cheap: {scores:?}"));
+            }
+            let _ = argmin(&scores);
+            let (w2, _) = ops.update(&w, &hinv, *dep).map_err(|e| e.to_string())?;
+            let rel = relative_error(&w, &w2, &h);
+            if rel < 0.05 {
+                Ok(())
+            } else {
+                Err(format!("rel err {rel}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_obs_scores_nonnegative_and_masked_big() {
+    Prop::new(30).check_msg(
+        "scores ≥ 0, masked = BIG",
+        |r| {
+            let n = 3 + r.below(8);
+            let d_row = 2 + r.below(6);
+            let w = gen::vec_f32(r, d_row * n, 1.0);
+            let h = gen::spd(r, n, 0.4);
+            let dead = r.below(n);
+            (n, d_row, w, h, dead)
+        },
+        |(n, d_row, w, h, dead)| {
+            let h = Tensor::from_vec(&[*n, *n], h.clone());
+            let hinv = linalg::spd_inverse(&h).map_err(|e| e)?;
+            let w = Tensor::from_vec(&[*d_row, *n], w.clone());
+            let mut act = vec![1.0f32; *n];
+            act[*dead] = 0.0;
+            let mut ops = NativeBackend::new(1);
+            let s = ops.scores(&w, &hinv, &act).map_err(|e| e.to_string())?;
+            if s[*dead] < 1e29 {
+                return Err("dead structure not BIG".into());
+            }
+            for (i, &v) in s.iter().enumerate() {
+                if i != *dead && v < -1e-3 {
+                    return Err(format!("negative score {v} at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_table_speedup_bounds() {
+    // 1 ≤ speedup(profile) ≤ dense/overhead for any profile
+    Prop::new(40).check_msg(
+        "speedup bounds",
+        |r| {
+            let heads = 2 + r.below(6);
+            let f = 8 + r.below(500);
+            let per_head = 1e-4 + r.f64() * 1e-3; // one rate: tables are monotone
+            let attn: Vec<f64> = (0..=heads).map(|h| h as f64 * per_head).collect();
+            let t_dense = 1e-3 + r.f64() * 1e-2;
+            let mlp = vec![(f, t_dense), (f / 2, t_dense * (0.3 + 0.5 * r.f64())), (0, 0.0)];
+            let n_layers = 1 + r.below(6);
+            let profile: Vec<(usize, usize)> =
+                (0..n_layers).map(|_| (r.below(heads + 1), r.below(f + 1))).collect();
+            (
+                LatencyTable {
+                    model: "p".into(),
+                    device: "t".into(),
+                    regime: "throughput".into(),
+                    attn,
+                    mlp,
+                    overhead: 1e-4 + r.f64() * 1e-3,
+                },
+                profile,
+            )
+        },
+        |(t, profile)| {
+            // sanitize: mlp interpolation needs sorted desc — it is.
+            let s = t.speedup(profile);
+            let cap = t.dense_time(profile.len()) / t.overhead;
+            if s >= 1.0 - 1e-6 && s <= cap + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("speedup {s} outside [1, {cap}]"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_masks() {
+    use ziplm::models::{Masks, ModelState};
+    Prop::new(15).check_msg(
+        "ckpt roundtrip",
+        |r| {
+            let n_layers = 1 + r.below(3);
+            let n_heads = 1 + r.below(4);
+            let d_ff = 4 + r.below(16);
+            let head: Vec<f32> = (0..n_layers * n_heads).map(|_| if r.f64() < 0.3 { 0.0 } else { 1.0 }).collect();
+            let ffn: Vec<f32> = (0..n_layers * d_ff).map(|_| if r.f64() < 0.3 { 0.0 } else { 1.0 }).collect();
+            let n_params = 64 + r.below(512);
+            let params = gen::vec_f32(r, n_params, 1.0);
+            (n_layers, n_heads, d_ff, head, ffn, params)
+        },
+        |(n_layers, n_heads, d_ff, head, ffn, params)| {
+            let st = ModelState {
+                model: "m".into(),
+                task: "t".into(),
+                params: params.clone(),
+                masks: Masks {
+                    n_layers: *n_layers,
+                    n_heads: *n_heads,
+                    d_ff: *d_ff,
+                    head: head.clone(),
+                    ffn: ffn.clone(),
+                },
+            };
+            let dir = std::env::temp_dir().join(format!("ziplm_prop_{}", params.len()));
+            let path = dir.join("x.zlm");
+            st.save(&path).map_err(|e| e.to_string())?;
+            let st2 = ModelState::load(&path).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_dir_all(dir);
+            if st2.params == st.params && st2.masks == st.masks {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        },
+    );
+}
