@@ -3,13 +3,19 @@
 //! EXPERIMENTS.md §Perf cites.
 //!
 //!   cargo bench --bench bench_hotpath
+//!
+//! Every `obs::*`/`linalg::*` fast-path entry has a `*_ref` sibling
+//! driving the retained reference implementation, so one run produces
+//! the before/after pair. Results are also written machine-readably to
+//! `BENCH_hotpath.json` at the repo root (flat `name → ns/iter`
+//! median; see util::bench::JsonReport) for cross-PR tracking.
 
 use std::path::Path;
 
 use ziplm::runtime::{lit_f32_shaped, lit_scalar_i32, Engine};
 use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
 use ziplm::tensor::{linalg, Tensor};
-use ziplm::util::bench::{header, Bench};
+use ziplm::util::bench::{header, Bench, JsonReport};
 use ziplm::util::prop::gen;
 use ziplm::util::rng::Rng;
 use ziplm::ziplm::{NativeBackend, ObsOps};
@@ -17,25 +23,56 @@ use ziplm::ziplm::{NativeBackend, ObsOps};
 fn main() {
     println!("{}", header());
     let b = Bench::default();
+    let bq = Bench::quick();
+    let mut rep = JsonReport::new();
     let mut rng = Rng::new(0);
 
-    // native GEMM (coordinator-side math)
+    // native GEMM + transpose (coordinator-side math)
     let a = Tensor::from_vec(&[256, 256], gen::vec_f32(&mut rng, 256 * 256, 1.0));
     let c = Tensor::from_vec(&[256, 256], gen::vec_f32(&mut rng, 256 * 256, 1.0));
-    println!("{}", b.run("tensor::matmul 256x256x256", || a.matmul(&c)).line());
+    rep.record(b.run("tensor::matmul 256x256x256", || a.matmul(&c)));
+    let t512 = Tensor::from_vec(&[512, 512], gen::vec_f32(&mut rng, 512 * 512, 1.0));
+    rep.record(b.run("tensor::transpose2 512x512", || t512.transpose2()));
 
-    // SPD inverse (per-layer Hessian inversion, d_ff=512 realistic)
+    // SPD inverse (per-layer Hessian inversion, d_ff=512 realistic):
+    // fast (column-sparsity + symmetry) vs reference (two full solves)
     let h512 = Tensor::from_vec(&[512, 512], gen::spd(&mut rng, 512, 0.3));
-    let bq = Bench::quick();
-    println!("{}", bq.run_n("linalg::spd_inverse 512", 5, || linalg::spd_inverse(&h512).unwrap()).line());
+    rep.record(bq.run_n("linalg::spd_inverse 512", 5, || linalg::spd_inverse(&h512).unwrap()));
+    rep.record(bq.run_n("linalg::spd_inverse_ref 512", 3, || linalg::spd_inverse_ref(&h512).unwrap()));
 
     // native OBS score + update at model scale (d=128, F=512)
     let w = Tensor::from_vec(&[128, 512], gen::vec_f32(&mut rng, 128 * 512, 1.0));
     let hinv = linalg::spd_inverse(&h512).unwrap();
     let act = vec![1.0f32; 512];
     let mut nb = NativeBackend::new(1);
-    println!("{}", bq.run_n("obs::scores native fc(128x512)", 10, || nb.scores(&w, &hinv, &act).unwrap()).line());
-    println!("{}", bq.run_n("obs::update native fc(128x512)", 10, || nb.update(&w, &hinv, 3).unwrap()).line());
+    rep.record(bq.run_n("obs::scores native fc(128x512)", 10, || nb.scores(&w, &hinv, &act).unwrap()));
+    rep.record(bq.run_n("obs::scores native_ref fc(128x512)", 3, || {
+        nb.scores_ref(&w, &hinv, &act).unwrap()
+    }));
+    rep.record(bq.run_n("obs::update native fc(128x512)", 10, || nb.update(&w, &hinv, 3).unwrap()));
+    rep.record(bq.run_n("obs::update native_ref fc(128x512)", 10, || {
+        nb.update_ref(&w, &hinv, 3).unwrap()
+    }));
+
+    // fused multi-step pruning: 45 one-at-a-time removals (the ladder
+    // step the database build actually takes), in-place vs clone-based
+    rep.record(bq.run_n("obs::multi_update native fc(128x512) n=45", 5, || {
+        nb.multi_update(&w, &hinv, &act, 45).unwrap()
+    }));
+    rep.record(bq.run_n("obs::multi_update native_ref fc(128x512) n=45", 2, || {
+        nb.multi_update_ref(&w, &hinv, &act, 45).unwrap()
+    }));
+
+    // grouped scoring (attention heads): batched block path, g=64
+    let wg = Tensor::from_vec(&[128, 512], gen::vec_f32(&mut rng, 128 * 512, 1.0));
+    let actg = vec![1.0f32; 8];
+    let mut nbg = NativeBackend::new(64);
+    rep.record(bq.run_n("obs::scores native attn(g=64, 8 heads)", 10, || {
+        nbg.scores(&wg, &hinv, &actg).unwrap()
+    }));
+    rep.record(bq.run_n("obs::scores native_ref attn(g=64, 8 heads)", 5, || {
+        nbg.scores_ref(&wg, &hinv, &actg).unwrap()
+    }));
 
     // SPDY DP solve (8 modules x 43 levels)
     let problem = SpdyProblem {
@@ -55,10 +92,7 @@ fn main() {
         overhead: 1e-3,
     };
     let coeffs = vec![1.0; 8];
-    println!(
-        "{}",
-        b.run("spdy::solve_dp 8mod x 43lvl", || spdy::solve_dp(&problem, &coeffs, 0.02)).line()
-    );
+    rep.record(b.run("spdy::solve_dp 8mod x 43lvl", || spdy::solve_dp(&problem, &coeffs, 0.02)));
 
     // PJRT paths (skipped without artifacts)
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -71,33 +105,21 @@ fn main() {
         let h_l = lit_f32_shaped(&[minfo.d_ff, minfo.d_ff], &hinv.data).unwrap();
         let a_l = lit_f32_shaped(&[minfo.d_ff], &act).unwrap();
         let exe = engine.executable(&format!("{model}__score_fc")).unwrap();
-        println!(
-            "{}",
-            bq.run_n("pjrt dispatch score_fc", 20, || {
-                Engine::run_exe(&exe, &[w_l.clone(), h_l.clone(), a_l.clone()]).unwrap()
-            })
-            .line()
-        );
+        rep.record(bq.run_n("pjrt dispatch score_fc", 20, || {
+            Engine::run_exe(&exe, &[w_l.clone(), h_l.clone(), a_l.clone()]).unwrap()
+        }));
         // multi-step fused FC pruning vs equivalent single steps
         let exe_multi = engine.executable(&format!("{model}__update_fc_multi")).unwrap();
         let n_l = lit_scalar_i32(45).unwrap();
-        println!(
-            "{}",
-            bq.run_n("pjrt update_fc_multi n=45", 8, || {
-                Engine::run_exe(&exe_multi, &[w_l.clone(), h_l.clone(), a_l.clone(), n_l.clone()])
-                    .unwrap()
-            })
-            .line()
-        );
+        rep.record(bq.run_n("pjrt update_fc_multi n=45", 8, || {
+            Engine::run_exe(&exe_multi, &[w_l.clone(), h_l.clone(), a_l.clone(), n_l.clone()])
+                .unwrap()
+        }));
         let exe_single = engine.executable(&format!("{model}__update_fc")).unwrap();
         let idx = lit_scalar_i32(3).unwrap();
-        println!(
-            "{}",
-            bq.run_n("pjrt update_fc single", 20, || {
-                Engine::run_exe(&exe_single, &[w_l.clone(), h_l.clone(), idx.clone()]).unwrap()
-            })
-            .line()
-        );
+        rep.record(bq.run_n("pjrt update_fc single", 20, || {
+            Engine::run_exe(&exe_single, &[w_l.clone(), h_l.clone(), idx.clone()]).unwrap()
+        }));
         // fwd inference dispatch (serving hot path)
         let task = "sst2-syn";
         let tinfo = engine.manifest.task(model, task).clone();
@@ -108,15 +130,17 @@ fn main() {
         let hm = lit_f32_shaped(&[minfo.n_layers, minfo.n_heads], &st.masks.head).unwrap();
         let fm = lit_f32_shaped(&[minfo.n_layers, minfo.d_ff], &st.masks.ffn).unwrap();
         let exe_fwd = engine.executable(&format!("{model}__{task}__fwd")).unwrap();
-        println!(
-            "{}",
-            bq.run_n("pjrt fwd batch=32 (serving)", 10, || {
-                Engine::run_exe(&exe_fwd, &[p_l.clone(), i_l.clone(), hm.clone(), fm.clone()])
-                    .unwrap()
-            })
-            .line()
-        );
+        rep.record(bq.run_n("pjrt fwd batch=32 (serving)", 10, || {
+            Engine::run_exe(&exe_fwd, &[p_l.clone(), i_l.clone(), hm.clone(), fm.clone()]).unwrap()
+        }));
     } else {
         println!("(pjrt benches skipped: artifacts/ not built)");
+        rep.note("pjrt", "skipped: artifacts/ not built");
+    }
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_hotpath.json");
+    match rep.write(&out) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
 }

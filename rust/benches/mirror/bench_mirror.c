@@ -1,0 +1,499 @@
+/* C mirror of rust/benches/bench_hotpath.rs OBS/linalg entries.
+ * Reproduces the seed ("ref") and fast implementations' loop structure
+ * and heap-allocation behavior 1:1, compiled with gcc -O2 (baseline
+ * x86-64, no fast-math) as a proxy for rustc -O in a container without
+ * a Rust toolchain. Single-threaded, matching the Rust OBS paths. */
+#define _POSIX_C_SOURCE 199309L
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <math.h>
+#include <time.h>
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec * 1e9 + ts.tv_nsec;
+}
+
+static unsigned long long rstate = 0x243F6A8885A308D3ull;
+static float frand(void) { /* xorshift normal-ish via sum of uniforms */
+    rstate ^= rstate << 13; rstate ^= rstate >> 7; rstate ^= rstate << 17;
+    double u = (double)(rstate >> 11) / 9007199254740992.0;
+    rstate ^= rstate << 13; rstate ^= rstate >> 7; rstate ^= rstate << 17;
+    double v = (double)(rstate >> 11) / 9007199254740992.0;
+    return (float)((u + v) - 1.0);
+}
+
+static volatile float SINK;
+
+/* ---------------------------------------------------------------- spd */
+static void make_spd(float *h, int n, float damp) {
+    float *a = malloc(sizeof(float) * n * n);
+    for (int i = 0; i < n * n; i++) a[i] = frand();
+    for (int i = 0; i < n; i++)
+        for (int j = 0; j < n; j++) {
+            float s = 0;
+            for (int k = 0; k < n; k++) s += a[i * n + k] * a[j * n + k];
+            h[i * n + j] = s;
+        }
+    for (int i = 0; i < n; i++) h[i * n + i] += damp * n;
+    free(a);
+}
+
+/* seed cholesky: element-wise at2 access (same flops; gcc sees same deps) */
+static int cholesky(const float *a, float *l, int n) {
+    memset(l, 0, sizeof(float) * n * n);
+    for (int j = 0; j < n; j++) {
+        float d = a[j * n + j];
+        for (int k = 0; k < j; k++) d -= l[j * n + k] * l[j * n + k];
+        if (d <= 0) return -1;
+        d = sqrtf(d);
+        l[j * n + j] = d;
+        for (int i = j + 1; i < n; i++) {
+            float s = a[i * n + j];
+            for (int k = 0; k < j; k++) s -= l[i * n + k] * l[j * n + k];
+            l[i * n + j] = s / d;
+        }
+    }
+    return 0;
+}
+
+/* ref spd_inverse: full forward+backward solve per unit vector */
+static void spd_inverse_ref(const float *a, float *inv, int n) {
+    float *l = malloc(sizeof(float) * n * n);
+    float *e = calloc(n, sizeof(float));
+    float *y = malloc(sizeof(float) * n);
+    float *x = malloc(sizeof(float) * n);
+    cholesky(a, l, n);
+    for (int j = 0; j < n; j++) {
+        e[j] = 1.0f;
+        for (int i = 0; i < n; i++) {
+            float s = e[i];
+            for (int k = 0; k < i; k++) s -= l[i * n + k] * y[k];
+            y[i] = s / l[i * n + i];
+        }
+        for (int i = n - 1; i >= 0; i--) {
+            float s = y[i];
+            for (int k = i + 1; k < n; k++) s -= l[k * n + i] * x[k];
+            x[i] = s / l[i * n + i];
+        }
+        for (int i = 0; i < n; i++) inv[i * n + j] = x[i];
+        e[j] = 0.0f;
+    }
+    free(l); free(e); free(y); free(x);
+}
+
+/* fast spd_inverse: start fwd at j, stop bwd at j, mirror symmetric */
+static void spd_inverse_fast(const float *a, float *inv, int n) {
+    float *l = malloc(sizeof(float) * n * n);
+    float *lt = malloc(sizeof(float) * n * n);
+    float *y = malloc(sizeof(float) * n);
+    float *x = malloc(sizeof(float) * n);
+    cholesky(a, l, n);
+    for (int i = 0; i < n; i++)
+        for (int j = 0; j < n; j++) lt[j * n + i] = l[i * n + j];
+    for (int j = 0; j < n; j++) {
+        y[j] = 1.0f / l[j * n + j];
+        for (int i = j + 1; i < n; i++) {
+            float s = 0;
+            const float *li = &l[i * n + j];
+            for (int t = 0; t < i - j; t++) s += li[t] * y[j + t];
+            y[i] = -s / l[i * n + i];
+        }
+        for (int i = n - 1; i >= j; i--) {
+            float s = y[i];
+            const float *row = &lt[i * n + i + 1];
+            for (int t = 0; t < n - i - 1; t++) s -= row[t] * x[i + 1 + t];
+            x[i] = s / l[i * n + i];
+        }
+        for (int i = j; i < n; i++) { inv[i * n + j] = x[i]; inv[j * n + i] = x[i]; }
+    }
+    free(l); free(lt); free(y); free(x);
+}
+
+/* ------------------------------------------------------------- matmul */
+/* seed kernel: i-k-j with zero skip */
+static void matmul_old(const float *a, const float *b, float *c, int m, int k, int n) {
+    memset(c, 0, sizeof(float) * m * n);
+    for (int i = 0; i < m; i++) {
+        float *crow = &c[i * n];
+        for (int kk = 0; kk < k; kk++) {
+            float aik = a[i * k + kk];
+            if (aik == 0.0f) continue;
+            const float *brow = &b[kk * n];
+            for (int j = 0; j < n; j++) crow[j] += aik * brow[j];
+        }
+    }
+}
+
+/* new kernel: KC/NC tiles + quad-row inner */
+static void matmul_new(const float *a, const float *b, float *c, int m, int k, int n) {
+    const int KC = 64, NC = 256;
+    memset(c, 0, sizeof(float) * m * n);
+    for (int jb = 0; jb < n; jb += NC) {
+        int jend = jb + NC < n ? jb + NC : n;
+        int jl = jend - jb;
+        for (int kb = 0; kb < k; kb += KC) {
+            int kend = kb + KC < k ? kb + KC : k;
+            int kc = kend - kb, kq = kc - kc % 4;
+            for (int i = 0; i < m; i++) {
+                const float *arow = &a[i * k + kb];
+                float *crow = &c[i * n + jb];
+                int kk = 0;
+                for (; kk < kq; kk += 4) {
+                    float a0 = arow[kk], a1 = arow[kk + 1], a2 = arow[kk + 2], a3 = arow[kk + 3];
+                    if (a0 != 0.0f || a1 != 0.0f || a2 != 0.0f || a3 != 0.0f) {
+                        int r = kb + kk;
+                        const float *b0 = &b[r * n + jb], *b1 = &b[(r + 1) * n + jb];
+                        const float *b2 = &b[(r + 2) * n + jb], *b3 = &b[(r + 3) * n + jb];
+                        for (int j = 0; j < jl; j++)
+                            crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                }
+                for (; kk < kc; kk++) {
+                    float aik = arow[kk];
+                    if (aik == 0.0f) continue;
+                    const float *brow = &b[(kb + kk) * n + jb];
+                    for (int j = 0; j < jl; j++) crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/* ------------------------------------------------------- gj inverse */
+static int gj_inverse_flat(float *m, float *inv, int n) {
+    for (int k = 0; k < n; k++) {
+        int p = k;
+        for (int i = k + 1; i < n; i++)
+            if (fabsf(m[i * n + k]) > fabsf(m[p * n + k])) p = i;
+        if (fabsf(m[p * n + k]) < 1e-20f) return -1;
+        if (p != k)
+            for (int j = 0; j < n; j++) {
+                float t = m[k * n + j]; m[k * n + j] = m[p * n + j]; m[p * n + j] = t;
+                t = inv[k * n + j]; inv[k * n + j] = inv[p * n + j]; inv[p * n + j] = t;
+            }
+        float piv = m[k * n + k];
+        for (int j = 0; j < n; j++) { m[k * n + j] /= piv; inv[k * n + j] /= piv; }
+        for (int i = 0; i < n; i++) {
+            if (i == k) continue;
+            float f = m[i * n + k];
+            if (f == 0.0f) continue;
+            for (int j = 0; j < n; j++) {
+                m[i * n + j] -= f * m[k * n + j];
+                inv[i * n + j] -= f * inv[k * n + j];
+            }
+        }
+    }
+    return 0;
+}
+
+/* block_inv of seed: gather_rows → gather_cols → gj_inverse, with the
+ * same temporary allocations the Rust Tensor path makes */
+static float *block_inv_ref(const float *hinv, int d, int j, int g) {
+    float *rows = malloc(sizeof(float) * g * d);          /* gather_rows */
+    for (int r = 0; r < g; r++) memcpy(&rows[r * d], &hinv[(j * g + r) * d], sizeof(float) * d);
+    float *block = malloc(sizeof(float) * g * g);         /* gather_cols */
+    for (int r = 0; r < g; r++)
+        for (int c = 0; c < g; c++) block[r * g + c] = rows[r * d + j * g + c];
+    float *mcopy = malloc(sizeof(float) * g * g);         /* gj clone */
+    memcpy(mcopy, block, sizeof(float) * g * g);
+    float *inv = calloc(g * g, sizeof(float));            /* eye */
+    for (int t = 0; t < g; t++) inv[t * g + t] = 1.0f;
+    gj_inverse_flat(mcopy, inv, g);
+    free(rows); free(block); free(mcopy);
+    return inv;
+}
+
+/* ------------------------------------------------------- scores paths */
+static void scores_ref(const float *w, const float *hinv, const float *act,
+                       int d_row, int d, int g, float *out) {
+    int nst = d / g;
+    for (int j = 0; j < nst; j++) {
+        out[j] = 1e30f;
+        if (act[j] <= 0.0f) continue;
+        float *binv = block_inv_ref(hinv, d, j, g);
+        double s = 0.0;
+        for (int i = 0; i < d_row; i++) {
+            const float *wi = &w[i * d + j * g];
+            float *bw = malloc(sizeof(float) * g);        /* matvec alloc */
+            for (int r = 0; r < g; r++) {
+                float t = 0;
+                for (int c = 0; c < g; c++) t += binv[r * g + c] * wi[c];
+                bw[r] = t;
+            }
+            for (int r = 0; r < g; r++) s += (double)wi[r] * (double)bw[r];
+            free(bw);
+        }
+        out[j] = (float)s;
+        free(binv);
+    }
+}
+
+static void scores_fast_g1(const float *w, const float *hinv, const float *act,
+                           int d_row, int d, float *out, double *colsq) {
+    for (int j = 0; j < d; j++) colsq[j] = 0.0;
+    for (int i = 0; i < d_row; i++) {
+        const float *row = &w[i * d];
+        for (int j = 0; j < d; j++) colsq[j] += (double)row[j] * (double)row[j];
+    }
+    for (int j = 0; j < d; j++)
+        out[j] = act[j] > 0.0f ? (float)(colsq[j] / (double)hinv[j * d + j]) : 1e30f;
+}
+
+static void scores_fast_grouped(const float *w, const float *hinv, const float *act,
+                                int d_row, int d, int g, float *out) {
+    int nst = d / g;
+    /* batched gather of diagonal blocks */
+    float *blocks = calloc(nst * g * g, sizeof(float));
+    for (int r = 0; r < d; r++) {
+        int j = r / g;
+        if (act[j] <= 0.0f) continue;
+        memcpy(&blocks[j * g * g + (r - j * g) * g], &hinv[r * d + j * g], sizeof(float) * g);
+    }
+    float *scratch = malloc(sizeof(float) * g * g);
+    float *ident = malloc(sizeof(float) * g * g);
+    for (int j = 0; j < nst; j++) {
+        if (act[j] <= 0.0f) continue;
+        memcpy(scratch, &blocks[j * g * g], sizeof(float) * g * g);
+        memset(ident, 0, sizeof(float) * g * g);
+        for (int t = 0; t < g; t++) ident[t * g + t] = 1.0f;
+        gj_inverse_flat(scratch, ident, g);
+        memcpy(&blocks[j * g * g], ident, sizeof(float) * g * g);
+    }
+    for (int j = 0; j < nst; j++) {
+        out[j] = 1e30f;
+        if (act[j] <= 0.0f) continue;
+        const float *b = &blocks[j * g * g];
+        double s = 0.0;
+        for (int i = 0; i < d_row; i++) {
+            const float *wseg = &w[i * d + j * g];
+            for (int r = 0; r < g; r++) {
+                float t = 0;
+                for (int c = 0; c < g; c++) t += b[r * g + c] * wseg[c];
+                s += (double)wseg[r] * (double)t;
+            }
+        }
+        out[j] = (float)s;
+    }
+    free(blocks); free(scratch); free(ident);
+}
+
+/* ------------------------------------------------------- update paths */
+static int argmin_f(const float *s, int n) {
+    int best = 0;
+    for (int i = 0; i < n; i++) if (s[i] < s[best]) best = i;
+    return best;
+}
+
+/* seed update (g=1): clones + gathers + dense matmuls (same allocs) */
+static void update_ref_g1(const float *w, const float *hinv, int idx,
+                          int d_row, int d, float **w2out, float **h2out) {
+    float *binv = block_inv_ref(hinv, d, idx, 1);
+    float *rows = malloc(sizeof(float) * d);              /* gather_rows */
+    memcpy(rows, &hinv[idx * d], sizeof(float) * d);
+    float *p = malloc(sizeof(float) * d);                 /* binv.matmul */
+    for (int j = 0; j < d; j++) p[j] = binv[0] * rows[j];
+    float *wc = malloc(sizeof(float) * d_row);            /* gather_cols W */
+    for (int i = 0; i < d_row; i++) wc[i] = w[i * d + idx];
+    float *hc = malloc(sizeof(float) * d);                /* gather_cols H */
+    for (int i = 0; i < d; i++) hc[i] = hinv[i * d + idx];
+    float *w2 = malloc(sizeof(float) * d_row * d);        /* clone W */
+    memcpy(w2, w, sizeof(float) * d_row * d);
+    float *dw = calloc(d_row * d, sizeof(float));         /* matmul out */
+    for (int i = 0; i < d_row; i++) {
+        float aik = wc[i];
+        if (aik != 0.0f)
+            for (int j = 0; j < d; j++) dw[i * d + j] = aik * p[j];
+    }
+    for (int i = 0; i < d_row * d; i++) w2[i] -= dw[i];
+    float *h2 = malloc(sizeof(float) * d * d);            /* clone H */
+    memcpy(h2, hinv, sizeof(float) * d * d);
+    float *dh = calloc(d * d, sizeof(float));
+    for (int i = 0; i < d; i++) {
+        float aik = hc[i];
+        if (aik != 0.0f)
+            for (int j = 0; j < d; j++) dh[i * d + j] = aik * p[j];
+    }
+    for (int i = 0; i < d * d; i++) h2[i] -= dh[i];
+    for (int i = 0; i < d_row; i++) w2[i * d + idx] = 0.0f;
+    for (int k = 0; k < d; k++) { h2[idx * d + k] = 0.0f; h2[k * d + idx] = 0.0f; }
+    h2[idx * d + idx] = 1.0f;
+    free(binv); free(rows); free(p); free(wc); free(hc); free(dw); free(dh);
+    *w2out = w2; *h2out = h2;
+}
+
+/* seed multi_update: scores_ref + clone-based update per step */
+static void multi_update_ref(const float *w0, const float *h0, const float *act0,
+                             int d_row, int d, int nrm) {
+    float *w = malloc(sizeof(float) * d_row * d);
+    float *h = malloc(sizeof(float) * d * d);
+    float *act = malloc(sizeof(float) * d);
+    float *sc = malloc(sizeof(float) * d);
+    memcpy(w, w0, sizeof(float) * d_row * d);
+    memcpy(h, h0, sizeof(float) * d * d);
+    memcpy(act, act0, sizeof(float) * d);
+    for (int s = 0; s < nrm; s++) {
+        scores_ref(w, h, act, d_row, d, 1, sc);
+        int j = argmin_f(sc, d);
+        float *w2, *h2;
+        update_ref_g1(w, h, j, d_row, d, &w2, &h2);
+        free(w); free(h);
+        w = w2; h = h2;
+        act[j] = 0.0f;
+    }
+    SINK = w[0] + h[0];
+    free(w); free(h); free(act); free(sc);
+}
+
+/* fast single update (g=1): clone once + in-place rank-1 downdate */
+static void update_fast_g1(const float *w0, const float *h0, int idx, int d_row, int d) {
+    float *w = malloc(sizeof(float) * d_row * d);
+    float *h = malloc(sizeof(float) * d * d);
+    memcpy(w, w0, sizeof(float) * d_row * d);
+    memcpy(h, h0, sizeof(float) * d * d);
+    float *p = malloc(sizeof(float) * d);
+    float *cbuf = malloc(sizeof(float) * d);
+    float binv = 1.0f / h[idx * d + idx];
+    for (int k = 0; k < d; k++) p[k] = binv * h[idx * d + k];
+    for (int i = 0; i < d_row; i++) {
+        float *row = &w[i * d];
+        float wij = row[idx];
+        if (wij != 0.0f)
+            for (int k = 0; k < d; k++) row[k] -= wij * p[k];
+        row[idx] = 0.0f;
+    }
+    for (int r = 0; r < d; r++) cbuf[r] = h[r * d + idx];
+    for (int r = 0; r < d; r++) {
+        float c = cbuf[r];
+        if (c == 0.0f) continue;
+        float *hrow = &h[r * d];
+        for (int k = 0; k < d; k++) hrow[k] -= c * p[k];
+    }
+    for (int k = 0; k < d; k++) { h[idx * d + k] = 0.0f; h[k * d + idx] = 0.0f; }
+    h[idx * d + idx] = 1.0f;
+    SINK = w[1] + h[1];
+    free(w); free(h); free(p); free(cbuf);
+}
+
+/* fast multi_update: one clone, in-place downdates, alive list */
+static void multi_update_fast(const float *w0, const float *h0, const float *act0,
+                              int d_row, int d, int nrm) {
+    float *w = malloc(sizeof(float) * d_row * d);
+    float *h = malloc(sizeof(float) * d * d);
+    float *act = malloc(sizeof(float) * d);
+    memcpy(w, w0, sizeof(float) * d_row * d);
+    memcpy(h, h0, sizeof(float) * d * d);
+    memcpy(act, act0, sizeof(float) * d);
+    int *alive = malloc(sizeof(int) * d);
+    int n_alive = 0;
+    for (int j = 0; j < d; j++) if (act[j] > 0.0f) alive[n_alive++] = j;
+    double *colsq = malloc(sizeof(double) * d);
+    float *p = malloc(sizeof(float) * d);
+    float *cbuf = malloc(sizeof(float) * d);
+    for (int s = 0; s < nrm; s++) {
+        for (int j = 0; j < d; j++) colsq[j] = 0.0;
+        for (int i = 0; i < d_row; i++) {
+            const float *row = &w[i * d];
+            for (int j = 0; j < d; j++) colsq[j] += (double)row[j] * (double)row[j];
+        }
+        int best = alive[0];
+        float best_s = INFINITY;
+        for (int t = 0; t < n_alive; t++) {
+            int j = alive[t];
+            float sc = (float)(colsq[j] / (double)h[j * d + j]);
+            if (sc < best_s) { best_s = sc; best = j; }
+        }
+        int j = best;
+        float hjj_inv = 1.0f / h[j * d + j];
+        for (int k = 0; k < d; k++) p[k] = h[j * d + k] * hjj_inv;
+        for (int i = 0; i < d_row; i++) {
+            float *row = &w[i * d];
+            float wij = row[j];
+            if (wij != 0.0f)
+                for (int k = 0; k < d; k++) row[k] -= wij * p[k];
+            row[j] = 0.0f;
+        }
+        for (int r = 0; r < d; r++) cbuf[r] = h[r * d + j];
+        for (int r = 0; r < d; r++) {
+            float c = cbuf[r];
+            if (c == 0.0f) continue;
+            float *hrow = &h[r * d];
+            for (int k = 0; k < d; k++) hrow[k] -= c * p[k];
+        }
+        for (int k = 0; k < d; k++) { h[j * d + k] = 0.0f; h[k * d + j] = 0.0f; }
+        h[j * d + j] = 1.0f;
+        act[j] = 0.0f;
+        for (int t = 0; t < n_alive; t++)
+            if (alive[t] == j) { memmove(&alive[t], &alive[t + 1], sizeof(int) * (n_alive - t - 1)); n_alive--; break; }
+    }
+    SINK = w[0] + h[0];
+    free(w); free(h); free(act); free(alive); free(colsq); free(p); free(cbuf);
+}
+
+/* ----------------------------------------------------------- harness */
+static int cmp_d(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+#define TIME(name, iters, stmt) do { \
+    double samples[64]; \
+    int nn = (iters) < 64 ? (iters) : 64; \
+    { stmt; } /* warmup */ \
+    for (int it = 0; it < nn; it++) { \
+        double t0 = now_ns(); \
+        { stmt; } \
+        samples[it] = now_ns() - t0; \
+    } \
+    qsort(samples, nn, sizeof(double), cmp_d); \
+    printf("%-48s min %14.0f  median %14.0f ns/iter (n=%d)\n", name, samples[0], samples[nn / 2], nn); \
+} while (0)
+
+int main(void) {
+    const int D = 512, DR = 128;
+    float *h512 = malloc(sizeof(float) * D * D);
+    make_spd(h512, D, 0.3f * D > 1 ? 0.3f : 0.3f); /* damp*n applied inside */
+    float *hinv = malloc(sizeof(float) * D * D);
+    spd_inverse_fast(h512, hinv, D);
+    float *w = malloc(sizeof(float) * DR * D);
+    for (int i = 0; i < DR * D; i++) w[i] = frand();
+    float *act = malloc(sizeof(float) * D);
+    for (int i = 0; i < D; i++) act[i] = 1.0f;
+    float *out = malloc(sizeof(float) * D);
+    double *colsq = malloc(sizeof(double) * D);
+
+    /* matmul 256 */
+    int M = 256;
+    float *ma = malloc(sizeof(float) * M * M), *mb = malloc(sizeof(float) * M * M), *mc = malloc(sizeof(float) * M * M);
+    for (int i = 0; i < M * M; i++) { ma[i] = frand(); mb[i] = frand(); }
+    TIME("tensor::matmul 256 (old i-k-j)", 30, { matmul_old(ma, mb, mc, M, M, M); SINK = mc[7]; });
+    TIME("tensor::matmul 256 (new tiled quad)", 30, { matmul_new(ma, mb, mc, M, M, M); SINK = mc[7]; });
+
+    /* spd_inverse 512 */
+    float *inv = malloc(sizeof(float) * D * D);
+    TIME("linalg::spd_inverse_ref 512", 5, { spd_inverse_ref(h512, inv, D); SINK = inv[3]; });
+    TIME("linalg::spd_inverse 512 (fast)", 5, { spd_inverse_fast(h512, inv, D); SINK = inv[3]; });
+
+    /* scores fc 128x512 g=1 */
+    TIME("obs::scores native_ref fc(128x512)", 30, { scores_ref(w, hinv, act, DR, D, 1, out); SINK = out[5]; });
+    TIME("obs::scores native fc(128x512)", 60, { scores_fast_g1(w, hinv, act, DR, D, out, colsq); SINK = out[5]; });
+
+    /* scores attn g=64, 8 heads */
+    float act8[8]; for (int i = 0; i < 8; i++) act8[i] = 1.0f;
+    float out8[8];
+    TIME("obs::scores native_ref attn(g=64)", 30, { scores_ref(w, hinv, act8, DR, D, 64, out8); SINK = out8[3]; });
+    TIME("obs::scores native attn(g=64)", 30, { scores_fast_grouped(w, hinv, act8, DR, D, 64, out8); SINK = out8[3]; });
+
+    /* single update g=1 */
+    { float *w2, *h2;
+      TIME("obs::update native_ref fc(128x512)", 40, { update_ref_g1(w, hinv, 3, DR, D, &w2, &h2); SINK = w2[9] + h2[9]; free(w2); free(h2); }); }
+    TIME("obs::update native fc(128x512)", 40, { update_fast_g1(w, hinv, 3, DR, D); });
+
+    /* multi_update n=45 */
+    TIME("obs::multi_update native_ref n=45", 5, { multi_update_ref(w, hinv, act, DR, D, 45); });
+    TIME("obs::multi_update native n=45", 20, { multi_update_fast(w, hinv, act, DR, D, 45); });
+
+    return 0;
+}

@@ -1,7 +1,8 @@
 //! Pruning drivers: the ZipLM pipeline (paper Fig. 1).
 //!
 //!   1. capture calibration Hessians through the masked model,
-//!   2. build per-module databases (ziplm/) via the HLO OBS kernels,
+//!   2. build per-module databases (ziplm/) via the OBS kernels — all
+//!      2L modules fan out in parallel across the machine,
 //!   3. structured SPDY search (spdy/) against the latency table for
 //!      the next speedup target,
 //!   4. apply the chosen profile (masks + OBS-updated weights),
@@ -20,7 +21,11 @@ use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine, ModelInfo, Tas
 use crate::spdy::{self, LevelOpt, ModuleLevels, SearchCfg, SpdyProblem};
 use crate::tensor::Tensor;
 use crate::train::{TrainCfg, Trainer};
-use crate::ziplm::{assemble_hessian, build_module_db, HloBackend, ModuleDb, NativeBackend, ObsOps};
+use crate::util::threadpool::parallel_tasks;
+use crate::ziplm::{
+    assemble_hessian, build_module_db, build_module_db_masked, HloBackend, ModuleDb,
+    NativeBackend, ObsOps,
+};
 
 #[derive(Clone, Debug)]
 pub struct PruneCfg {
@@ -118,6 +123,12 @@ pub fn capture_hessians(
 }
 
 /// Build all 2L module databases. Module order: (attn, fc) per layer.
+///
+/// Modules are independent once the per-module Hessian is accumulated,
+/// so every (layer, attn|fc) build — including its O(d³) Hessian
+/// inversion — runs as one [`parallel_tasks`] job, capped at the
+/// hardware parallelism: a full per-layer database build saturates
+/// the machine instead of running layer-by-layer.
 pub fn build_databases(
     engine: &Engine,
     state: &ModelState,
@@ -126,41 +137,42 @@ pub fn build_databases(
 ) -> Result<Vec<ModuleDb>> {
     let minfo = engine.manifest.model(&state.model).clone();
     let tinfo = engine.manifest.task(&state.model, &state.task).clone();
-    let mut dbs = Vec::with_capacity(2 * minfo.n_layers);
-    for l in 0..minfo.n_layers {
-        // ---- attention module
-        let w0 = state.attn_w_paper(&tinfo, l)?;
-        let (h, hinv) = assemble_hessian(&hs.attn[l], cfg.damp_frac)?;
-        let cur_heads = state.masks.heads_alive(l);
-        let levels: Vec<usize> = (0..=cur_heads).rev().collect();
-        let db = if cfg.use_hlo {
-            let mut ops = HloBackend::attn(engine, &state.model)?;
-            build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))?
+    let n_modules = 2 * minfo.n_layers;
+    let dbs = parallel_tasks(n_modules, |m| -> Result<ModuleDb> {
+        let (l, is_attn) = (m / 2, m % 2 == 0);
+        if is_attn {
+            let w0 = state.attn_w_paper(&tinfo, l)?;
+            let (h, hinv) = assemble_hessian(&hs.attn[l], cfg.damp_frac)?;
+            let cur_heads = state.masks.heads_alive(l);
+            let levels: Vec<usize> = (0..=cur_heads).rev().collect();
+            if cfg.use_hlo {
+                let mut ops = HloBackend::attn(engine, &state.model)?;
+                build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))
+            } else {
+                let mut ops = NativeBackend::new(minfo.d_head);
+                build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))
+            }
         } else {
-            let mut ops = NativeBackend::new(minfo.d_head);
-            build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))?
-        };
-        dbs.push(db);
-        // ---- FC module
-        let w0 = state.fc_w_paper(&tinfo, l)?;
-        let (h, hinv) = assemble_hessian(&hs.ffn[l], cfg.damp_frac)?;
-        let cur = state.masks.ffn_alive(l);
-        let mut levels: Vec<usize> = vec![cur];
-        levels.extend(minfo.ffn_ladder.iter().copied().filter(|&x| x < cur));
-        let db = if cfg.use_hlo {
-            let mut ops = HloBackend::fc(engine, &state.model)?;
-            build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))?
-        } else {
-            let mut ops = NativeBackend::new(1);
-            build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))?
-        };
-        dbs.push(db);
-    }
-    Ok(dbs)
+            let w0 = state.fc_w_paper(&tinfo, l)?;
+            let (h, hinv) = assemble_hessian(&hs.ffn[l], cfg.damp_frac)?;
+            let cur = state.masks.ffn_alive(l);
+            let mut levels: Vec<usize> = vec![cur];
+            levels.extend(minfo.ffn_ladder.iter().copied().filter(|&x| x < cur));
+            if cfg.use_hlo {
+                let mut ops = HloBackend::fc(engine, &state.model)?;
+                build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))
+            } else {
+                let mut ops = NativeBackend::new(1);
+                build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))
+            }
+        }
+    });
+    dbs.into_iter().collect()
 }
 
 /// build_module_db wrapper that respects an existing structural mask
 /// (gradual pruning continues from the current model).
+#[allow(clippy::too_many_arguments)]
 fn build_db_with_mask(
     ops: &mut dyn ObsOps,
     layer: usize,
@@ -187,80 +199,6 @@ fn build_db_with_mask(
         lvl.dead = dead;
     }
     Ok(db)
-}
-
-fn build_module_db_masked(
-    ops: &mut dyn ObsOps,
-    layer: usize,
-    is_attn: bool,
-    w0: &Tensor,
-    hinv: &Tensor,
-    h: &Tensor,
-    levels: &[usize],
-    already_dead: &[usize],
-) -> Result<ModuleDb> {
-    // emulate build_module_db but with initial active mask
-    let g = ops.group();
-    let n_structs = w0.cols() / g;
-    let mut active = vec![1.0f32; n_structs];
-    for &j in already_dead {
-        active[j] = 0.0;
-    }
-    let alive = n_structs - already_dead.len();
-    assert_eq!(levels[0], alive, "levels must start at current alive count");
-    let mut out = Vec::with_capacity(levels.len());
-    out.push(crate::ziplm::LevelSnapshot {
-        remaining: alive,
-        dead: vec![],
-        w: w0.clone(),
-        prior: 0.0,
-    });
-    let mut w = w0.clone();
-    let mut hv = hinv.clone();
-    let mut dead: Vec<usize> = Vec::new();
-    for &target in &levels[1..] {
-        let cur = alive - dead.len();
-        if target >= cur {
-            continue;
-        }
-        if target == 0 {
-            let wz = Tensor::zeros(&w0.shape);
-            let mut all = dead.clone();
-            for j in 0..n_structs {
-                if active[j] > 0.0 {
-                    all.push(j);
-                }
-            }
-            out.push(crate::ziplm::LevelSnapshot { remaining: 0, dead: all, w: wz, prior: 1.0 });
-            continue;
-        }
-        let n_remove = cur - target;
-        if g == 1 && n_remove > 1 {
-            let (w2, h2, act2, order) = ops.multi_update(&w, &hv, &active, n_remove)?;
-            w = w2;
-            hv = h2;
-            active = act2;
-            dead.extend(order);
-        } else {
-            for _ in 0..n_remove {
-                let scores = ops.scores(&w, &hv, &active)?;
-                let j = crate::ziplm::argmin(&scores);
-                let (w2, h2) = ops.update(&w, &hv, j)?;
-                w = w2;
-                hv = h2;
-                active[j] = 0.0;
-                dead.push(j);
-            }
-        }
-        let prior = crate::ziplm::relative_error(w0, &w, h);
-        out.push(crate::ziplm::LevelSnapshot {
-            remaining: target,
-            dead: dead.clone(),
-            w: w.clone(),
-            prior,
-        });
-    }
-    Ok(ModuleDb { layer, is_attn, levels: out })
 }
 
 /// Module parameter counts for sparsity-target mode (Fig. 4).

@@ -86,6 +86,11 @@ pub struct Engine {
     art_dir: PathBuf,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Per-artifact compile gates: concurrent callers (the parallel
+    /// database build) serialize per name so an executable is compiled
+    /// exactly once, while different artifacts still compile in
+    /// parallel.
+    inflight: Mutex<HashMap<String, Arc<Mutex<()>>>>,
     compile_count: Mutex<usize>,
 }
 
@@ -102,6 +107,7 @@ impl Engine {
             art_dir: art_dir.to_path_buf(),
             manifest,
             cache: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashMap::new()),
             compile_count: Mutex::new(0),
         })
     }
@@ -120,8 +126,19 @@ impl Engine {
         &self.art_dir
     }
 
-    /// Compile-or-fetch an executable by artifact name.
+    /// Compile-or-fetch an executable by artifact name. Thread-safe:
+    /// a per-name gate makes the check-then-compile atomic, so
+    /// concurrent module builds never compile the same artifact twice.
     pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let gate = {
+            let mut inflight = self.inflight.lock().unwrap();
+            Arc::clone(inflight.entry(name.to_string()).or_default())
+        };
+        let _compiling = gate.lock().unwrap();
+        // re-check under the gate: a racing caller may have finished
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(Arc::clone(e));
         }

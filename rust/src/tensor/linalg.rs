@@ -6,18 +6,33 @@
 //! ||WX|| via trace identities, and (c) cross-checking the HLO kernels
 //! in tests. All SPD matrices here are damped Hessians, so unpivoted
 //! Cholesky is safe.
+//!
+//! Two implementations of the SPD inverse live here:
+//!
+//! * [`spd_inverse`] — the fast path. Per unit-vector column e_j the
+//!   forward solve starts at row j (everything above is structurally
+//!   zero), the backward solve stops at row j, and the strictly-upper
+//!   triangle is mirrored from the lower one (A^{-1} is symmetric).
+//!   ~3× fewer flops than the naive two-full-solves-per-column loop,
+//!   and the backward solve reads L^T row-contiguously.
+//! * [`spd_inverse_ref`] — the original reference loop, kept for
+//!   property tests and before/after benchmarks.
 
 use super::Tensor;
 
 /// Cholesky factor L (lower) of SPD `a`, in place semantics: returns L.
+/// Inner dots run over contiguous row slices of L.
 pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
     let n = a.rows();
     assert_eq!(n, a.cols());
     let mut l = Tensor::zeros(&[n, n]);
     for j in 0..n {
         let mut d = a.at2(j, j);
-        for k in 0..j {
-            d -= l.at2(j, k) * l.at2(j, k);
+        {
+            let lj = &l.data[j * n..j * n + j];
+            for v in lj {
+                d -= v * v;
+            }
         }
         if d <= 0.0 || !d.is_finite() {
             return Err(format!("cholesky: non-PD at pivot {j} (d={d})"));
@@ -25,10 +40,15 @@ pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
         let d = d.sqrt();
         l.set2(j, j, d);
         for i in (j + 1)..n {
-            let mut s = a.at2(i, j);
-            for k in 0..j {
-                s -= l.at2(i, k) * l.at2(j, k);
-            }
+            let s = {
+                let li = &l.data[i * n..i * n + j];
+                let lj = &l.data[j * n..j * n + j];
+                let mut s = a.at2(i, j);
+                for (x, y) in li.iter().zip(lj) {
+                    s -= x * y;
+                }
+                s
+            };
             l.set2(i, j, s / d);
         }
     }
@@ -63,8 +83,54 @@ pub fn solve_upper_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
     x
 }
 
-/// SPD inverse via Cholesky (A^{-1} = solve for each unit vector).
+/// SPD inverse via Cholesky. Fast path: per unit-vector column the
+/// forward solve skips the structural zeros above row j, the backward
+/// solve stops once rows < j are no longer needed, and the upper
+/// triangle is mirrored from the lower (the inverse is symmetric) —
+/// ~3× fewer flops than [`spd_inverse_ref`].
 pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let lt = l.transpose2(); // row-contiguous access for the backward solve
+    let ld = &l.data;
+    let ltd = &lt.data;
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut y = vec![0f32; n];
+    let mut x = vec![0f32; n];
+    for j in 0..n {
+        // forward: L y = e_j; y[i < j] = 0 structurally, so start at j.
+        y[j] = 1.0 / ld[j * n + j];
+        for i in (j + 1)..n {
+            let li = &ld[i * n + j..i * n + i]; // L[i, j..i]
+            let mut s = 0f32;
+            for (v, yk) in li.iter().zip(&y[j..i]) {
+                s += v * yk;
+            }
+            y[i] = -s / ld[i * n + i];
+        }
+        // backward: L^T x = y; only x[i ≥ j] is needed for this column,
+        // and x[i] depends only on x[k > i], so stop at i = j.
+        for i in (j..n).rev() {
+            let row = &ltd[i * n + i + 1..i * n + n]; // L^T[i, i+1..] = L[i+1.., i]
+            let mut s = y[i];
+            for (v, xk) in row.iter().zip(&x[i + 1..n]) {
+                s -= v * xk;
+            }
+            x[i] = s / ld[i * n + i];
+        }
+        // column j of the inverse, mirrored across the diagonal.
+        for i in j..n {
+            inv.data[i * n + j] = x[i];
+            inv.data[j * n + i] = x[i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Reference SPD inverse (solve both triangles fully for each unit
+/// vector). Kept as the equivalence oracle for [`spd_inverse`] in
+/// property tests and as the "before" entry in the hot-path benches.
+pub fn spd_inverse_ref(a: &Tensor) -> Result<Tensor, String> {
     let n = a.rows();
     let l = cholesky(a)?;
     let mut inv = Tensor::zeros(&[n, n]);
@@ -85,51 +151,56 @@ pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
 /// for g×g inverse-Hessian blocks in the native OBS mirror).
 pub fn gj_inverse(a: &Tensor) -> Result<Tensor, String> {
     let n = a.rows();
-    let mut m = a.clone();
+    let mut m = a.data.clone();
     let mut inv = Tensor::eye(n);
+    gj_inverse_flat(&mut m, &mut inv.data, n)?;
+    Ok(inv)
+}
+
+/// Allocation-free core of [`gj_inverse`], for callers that batch many
+/// small blocks (the structured-OBS score path inverts one g×g block
+/// per active structure). `m` is destroyed; `inv` must hold the n×n
+/// identity on entry and receives the inverse.
+pub fn gj_inverse_flat(m: &mut [f32], inv: &mut [f32], n: usize) -> Result<(), String> {
+    assert_eq!(m.len(), n * n);
+    assert_eq!(inv.len(), n * n);
     for k in 0..n {
         // pivot
         let mut p = k;
         for i in (k + 1)..n {
-            if m.at2(i, k).abs() > m.at2(p, k).abs() {
+            if m[i * n + k].abs() > m[p * n + k].abs() {
                 p = i;
             }
         }
-        if m.at2(p, k).abs() < 1e-20 {
+        if m[p * n + k].abs() < 1e-20 {
             return Err(format!("gj_inverse: singular at {k}"));
         }
         if p != k {
             for j in 0..n {
-                let (a1, a2) = (m.at2(k, j), m.at2(p, j));
-                m.set2(k, j, a2);
-                m.set2(p, j, a1);
-                let (b1, b2) = (inv.at2(k, j), inv.at2(p, j));
-                inv.set2(k, j, b2);
-                inv.set2(p, j, b1);
+                m.swap(k * n + j, p * n + j);
+                inv.swap(k * n + j, p * n + j);
             }
         }
-        let piv = m.at2(k, k);
+        let piv = m[k * n + k];
         for j in 0..n {
-            m.set2(k, j, m.at2(k, j) / piv);
-            inv.set2(k, j, inv.at2(k, j) / piv);
+            m[k * n + j] /= piv;
+            inv[k * n + j] /= piv;
         }
         for i in 0..n {
             if i == k {
                 continue;
             }
-            let f = m.at2(i, k);
+            let f = m[i * n + k];
             if f == 0.0 {
                 continue;
             }
             for j in 0..n {
-                let mv = m.at2(i, j) - f * m.at2(k, j);
-                m.set2(i, j, mv);
-                let iv = inv.at2(i, j) - f * inv.at2(k, j);
-                inv.set2(i, j, iv);
+                m[i * n + j] -= f * m[k * n + j];
+                inv[i * n + j] -= f * inv[k * n + j];
             }
         }
     }
-    Ok(inv)
+    Ok(())
 }
 
 /// trace(W H W^T) = Σ_i w_i H w_i^T — the squared output norm ||W X||_F^2
@@ -192,6 +263,34 @@ mod tests {
                 } else {
                     Err(format!("residual {d}"))
                 }
+            },
+        );
+    }
+
+    #[test]
+    fn fast_spd_inverse_matches_ref_and_is_symmetric() {
+        Prop::new(15).check_msg(
+            "spd_inverse == spd_inverse_ref, exactly symmetric",
+            |r| {
+                let n = 2 + r.below(24);
+                spd_t(r, n)
+            },
+            |a| {
+                let f = spd_inverse(a)?;
+                let g = spd_inverse_ref(a)?;
+                let d = f.max_abs_diff(&g);
+                if d > 1e-3 {
+                    return Err(format!("fast vs ref diff {d}"));
+                }
+                let n = a.rows();
+                for i in 0..n {
+                    for j in 0..n {
+                        if f.at2(i, j) != f.at2(j, i) {
+                            return Err(format!("asymmetric at ({i},{j})"));
+                        }
+                    }
+                }
+                Ok(())
             },
         );
     }

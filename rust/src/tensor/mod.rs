@@ -2,14 +2,27 @@
 //! (Hessian assembly, error priors, baselines, quantization, tests).
 //!
 //! This intentionally mirrors a small slice of ndarray: row-major
-//! storage, shape vector, blocked GEMM with optional threading. The
+//! storage, shape vector, tiled GEMM with optional threading. The
 //! model hot path runs through PJRT (runtime/), NOT through this — the
 //! native mirror exists for Hessian/inverse work on the coordinator
 //! side and to cross-check the HLO kernels.
+//!
+//! Kernel notes (the coordinator-side OBS loop lives or dies on these):
+//!
+//! * [`Tensor::matmul`] tiles over `KC`×`NC` blocks of B so the active
+//!   panel stays cache-resident, with a quad-row FMA inner kernel
+//!   (four broadcast multiply-adds over contiguous B rows — the
+//!   auto-vectorizer turns this into packed FMAs). Rows of C are split
+//!   across scoped threads for large problems. Zero rows of A are
+//!   skipped, which matters once pruning has zeroed whole columns.
+//! * [`Tensor::transpose2`] is cache-blocked (32×32 tiles) so both the
+//!   read and write sides stay within a few cache lines per tile.
+//! * [`Tensor::matvec`] parallelizes over disjoint `&mut` output
+//!   chunks via `parallel_for_slices_mut` — no raw-pointer writes.
 
 pub mod linalg;
 
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::{enter_leaf_region, parallel_for_slices_mut, thread_budget};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -71,11 +84,18 @@ impl Tensor {
     }
 
     pub fn transpose2(&self) -> Tensor {
+        const BS: usize = 32; // tile edge: 32×32 f32 = 4 KiB, L1-resident
         let (m, n) = (self.rows(), self.cols());
         let mut out = Tensor::zeros(&[n, m]);
-        for i in 0..m {
-            for j in 0..n {
-                out.data[j * m + i] = self.data[i * n + j];
+        for ib in (0..m).step_by(BS) {
+            let iend = (ib + BS).min(m);
+            for jb in (0..n).step_by(BS) {
+                let jend = (jb + BS).min(n);
+                for i in ib..iend {
+                    for j in jb..jend {
+                        out.data[j * m + i] = self.data[i * n + j];
+                    }
+                }
             }
         }
         out
@@ -114,8 +134,17 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
-    /// C = A @ B (2-D, row-major, blocked, threaded for large sizes).
+    /// C = A @ B (2-D, row-major, tiled, threaded for large sizes).
+    ///
+    /// The kernel walks B in `KC`×`NC` tiles so the active panel stays
+    /// cache-resident across every row of A that a thread owns, and
+    /// consumes A four scalars at a time (quad-row inner kernel: four
+    /// broadcast FMAs over contiguous B row segments). All-zero A
+    /// quads are skipped — after pruning, whole columns of W are zero
+    /// and this turns into a cheap structural sparsity win.
     pub fn matmul(&self, b: &Tensor) -> Tensor {
+        const KC: usize = 64; // B-tile rows: 64×NC f32 panel ≈ 64 KiB
+        const NC: usize = 256; // B-tile cols: C row segment ≈ 1 KiB
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (b.rows(), b.cols());
         assert_eq!(k, k2, "matmul inner dim");
@@ -123,29 +152,58 @@ impl Tensor {
         let a = &self.data;
         let bb = &b.data;
         let cdata = &mut out.data;
-        // i-k-j loop order: streams B rows, vector-friendly over j
+        // `c` holds rows [rows.start, rows.end) of C, row-major.
         let work = |rows: std::ops::Range<usize>, c: &mut [f32]| {
-            for i in rows.clone() {
-                let crow = &mut c[(i - rows.start) * n..(i - rows.start + 1) * n];
-                for kk in 0..k {
-                    let aik = a[i * k + kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bb[kk * n..kk * n + n];
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
+            for jb in (0..n).step_by(NC) {
+                let jend = (jb + NC).min(n);
+                for kb in (0..k).step_by(KC) {
+                    let kend = (kb + KC).min(k);
+                    let kc = kend - kb;
+                    let kq = kc - kc % 4;
+                    for i in rows.clone() {
+                        let arow = &a[i * k + kb..i * k + kend];
+                        let cbase = (i - rows.start) * n;
+                        let crow = &mut c[cbase + jb..cbase + jend];
+                        let mut kk = 0;
+                        while kk < kq {
+                            let (a0, a1, a2, a3) =
+                                (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                            if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                                let r = kb + kk;
+                                let b0 = &bb[r * n + jb..r * n + jend];
+                                let b1 = &bb[(r + 1) * n + jb..(r + 1) * n + jend];
+                                let b2 = &bb[(r + 2) * n + jb..(r + 2) * n + jend];
+                                let b3 = &bb[(r + 3) * n + jb..(r + 3) * n + jend];
+                                for j in 0..crow.len() {
+                                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                                }
+                            }
+                            kk += 4;
+                        }
+                        for kk in kq..kc {
+                            let aik = arow[kk];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let r = kb + kk;
+                            let brow = &bb[r * n + jb..r * n + jend];
+                            for j in 0..crow.len() {
+                                crow[j] += aik * brow[j];
+                            }
+                        }
                     }
                 }
             }
         };
-        if m * n * k < 64 * 64 * 64 {
+        // inline for small problems or when the enclosing parallel
+        // region (e.g. a per-module database build) left no budget
+        let budget = thread_budget();
+        if m * n * k < 64 * 64 * 64 || budget <= 1 {
             work(0..m, cdata);
         } else {
             // parallel over row chunks, each into its own slice
             let chunks: Vec<std::ops::Range<usize>> = {
-                let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
-                let per = m.div_ceil(threads.max(1));
+                let per = m.div_ceil(budget);
                 (0..m).step_by(per.max(1)).map(|s| s..(s + per).min(m)).collect()
             };
             let mut slices: Vec<&mut [f32]> = Vec::new();
@@ -158,30 +216,31 @@ impl Tensor {
             std::thread::scope(|s| {
                 for (r, slice) in chunks.iter().zip(slices.into_iter()) {
                     let r = r.clone();
-                    s.spawn(move || work(r, slice));
+                    s.spawn(move || {
+                        enter_leaf_region();
+                        work(r, slice)
+                    });
                 }
             });
         }
         out
     }
 
-    /// y = A @ x for vector x.
+    /// y = A @ x for vector x. Parallel rows write through disjoint
+    /// `&mut` output chunks — safety by construction, no raw pointers.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         let (m, k) = (self.rows(), self.cols());
         assert_eq!(k, x.len());
         let mut y = vec![0f32; m];
-        parallel_for_chunks(m, 256, |range| {
-            // SAFETY-free approach: recompute into local then copy — instead
-            // we use the fact that disjoint rows write disjoint y entries.
-            // parallel_for_chunks gives disjoint ranges; use raw pointer.
-            let yptr = y.as_ptr() as *mut f32;
-            for i in range {
-                let mut s = 0f32;
+        parallel_for_slices_mut(&mut y, 256, |start, ys| {
+            for (off, yi) in ys.iter_mut().enumerate() {
+                let i = start + off;
                 let row = &self.data[i * k..(i + 1) * k];
+                let mut s = 0f32;
                 for (a, b) in row.iter().zip(x) {
                     s += a * b;
                 }
-                unsafe { *yptr.add(i) = s };
+                *yi = s;
             }
         });
         y
@@ -264,6 +323,39 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = randt(&mut rng, &[5, 9]);
         assert_eq!(a.transpose2().transpose2(), a);
+        // non-multiple-of-tile dims exercise the blocked edges
+        let b = randt(&mut rng, &[70, 45]);
+        assert_eq!(b.transpose2().transpose2(), b);
+        let bt = b.transpose2();
+        for i in 0..70 {
+            for j in 0..45 {
+                assert_eq!(bt.at2(j, i), b.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tile_boundaries_and_zero_quads() {
+        // k not a multiple of 4, n larger than one j-tile, plus whole
+        // zero column-quads of A (the pruned-weight case).
+        let mut rng = Rng::new(4);
+        let mut a = randt(&mut rng, &[40, 130]);
+        for i in 0..40 {
+            for kk in 64..72 {
+                a.set2(i, kk, 0.0);
+            }
+        }
+        let b = randt(&mut rng, &[130, 300]);
+        let c = a.matmul(&b);
+        for _ in 0..40 {
+            let i = rng.below(40);
+            let j = rng.below(300);
+            let mut s = 0f64;
+            for kk in 0..130 {
+                s += a.at2(i, kk) as f64 * b.at2(kk, j) as f64;
+            }
+            assert!((c.at2(i, j) as f64 - s).abs() < 2e-3, "({i},{j})");
+        }
     }
 
     #[test]

@@ -4,8 +4,16 @@
 //! until a wall-clock budget is spent, reporting min/median/mean/p95
 //! and a median-absolute-deviation noise estimate. `cargo bench`
 //! targets use `harness = false` and drive this directly.
+//!
+//! [`JsonReport`] collects the per-benchmark stats and writes the
+//! machine-readable `BENCH_hotpath.json` (flat `name → ns/iter`
+//! median, with a `_meta` provenance object) that future PRs diff to
+//! track the perf trajectory.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -112,6 +120,59 @@ fn stats_from(name: &str, samples: &mut [f64]) -> Stats {
     }
 }
 
+/// Machine-readable bench output: a flat `name → median ns/iter` map
+/// plus a `_meta` object (unit, harness, free-form notes). The flat
+/// shape keeps `jq '."obs::scores native fc(128x512)"'`-style diffs
+/// trivial across PRs.
+#[derive(Default)]
+pub struct JsonReport {
+    entries: Vec<Stats>,
+    notes: Vec<(String, String)>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record a finished benchmark (call right after `Bench::run*`).
+    pub fn push(&mut self, s: &Stats) {
+        self.entries.push(s.clone());
+    }
+
+    /// Print the human-readable line AND record the stats — the one
+    /// call every bench entry makes.
+    pub fn record(&mut self, s: Stats) {
+        println!("{}", s.line());
+        self.entries.push(s);
+    }
+
+    /// Attach a provenance note to `_meta` (e.g. host, commit, caveat).
+    pub fn note(&mut self, key: &str, value: &str) {
+        self.notes.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut meta = vec![
+            ("unit".to_string(), Json::Str("ns/iter (median)".into())),
+            ("harness".to_string(), Json::Str("ziplm::util::bench".into())),
+        ];
+        for (k, v) in &self.notes {
+            meta.push((k.clone(), Json::Str(v.clone())));
+        }
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("_meta".to_string(), Json::Obj(meta.into_iter().collect()));
+        for s in &self.entries {
+            map.insert(s.name.clone(), Json::Num(s.median_ns));
+        }
+        Json::Obj(map)
+    }
+
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty() + "\n")
+    }
+}
+
 pub fn header() -> String {
     format!(
         "{:<48} {:>10} {:>12} {:>12} {:>12}",
@@ -136,6 +197,24 @@ mod tests {
         let b = Bench::quick();
         let s = b.run_n("n", 17, || std::hint::black_box(3u64.pow(7)));
         assert_eq!(s.iters, 17);
+    }
+
+    #[test]
+    fn json_report_flat_name_to_ns() {
+        let b = Bench::quick();
+        let mut rep = JsonReport::new();
+        rep.push(&b.run_n("fake::op", 3, || std::hint::black_box(2u64 * 21)));
+        rep.note("host", "testbox");
+        let j = rep.to_json();
+        assert!(j.get("fake::op").and_then(crate::util::json::Json::as_f64).unwrap() >= 0.0);
+        assert_eq!(
+            j.get("_meta").and_then(|m| m.get("unit")).and_then(crate::util::json::Json::as_str),
+            Some("ns/iter (median)")
+        );
+        // round-trips through the writer/parser
+        let text = j.to_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert!(back.get("_meta").is_some());
     }
 
     #[test]

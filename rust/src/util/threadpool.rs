@@ -1,15 +1,64 @@
 //! Thread-pool / parallel-for substrate (tokio & rayon unavailable offline).
 //!
-//! A small fixed worker pool with a work queue, plus a scoped
-//! `parallel_for` used by the tensor GEMM and the SPDY search. On this
-//! single-core testbed the pool mostly degenerates to sequential
-//! execution, but the coordinator (request batcher) still relies on it
-//! for concurrency (I/O-style waiting), and on multi-core hosts the
-//! GEMM scales.
+//! A small fixed worker pool with a work queue (for long-lived
+//! fire-and-forget jobs; currently exercised only by its tests), plus
+//! three scoped data-parallel primitives:
+//!
+//! * [`parallel_for_chunks`] — read-only range fan-out (general
+//!   primitive; the tensor GEMM does its own `split_at_mut` row split
+//!   because each chunk needs exclusive output slices);
+//! * [`parallel_for_slices_mut`] — disjoint `&mut` chunk fan-out
+//!   (matvec output) with safety coming from `chunks_mut` rather than
+//!   raw-pointer arithmetic;
+//! * [`parallel_tasks`] — N independent borrowing jobs with results in
+//!   index order (per-module pruning-database builds).
+//!
+//! All three are nesting-aware via [`thread_budget`]: a
+//! `parallel_tasks` fan-out divides the hardware parallelism among
+//! its workers, so inner kernels thread across the leftover share
+//! when tasks are few and run inline when the fan-out already
+//! saturates the machine. On a single-core testbed everything
+//! degenerates to sequential execution.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+
+thread_local! {
+    /// Per-thread parallelism budget set by enclosing parallel
+    /// regions. 0 = unset (top level): the full hardware parallelism
+    /// is available. [`parallel_tasks`] divides its budget among its
+    /// workers, so an undersubscribed fan-out (4 modules on 16 cores)
+    /// leaves each task a share of cores for its inner GEMM/matvec,
+    /// while a saturated fan-out drives inner kernels inline instead
+    /// of oversubscribing the machine with P×P threads.
+    static PAR_BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+/// How many threads the current thread may fan out across: the
+/// hardware parallelism at top level, or the share left over by the
+/// enclosing parallel region (≥1; 1 means "run inline").
+pub fn thread_budget() -> usize {
+    let b = PAR_BUDGET.with(|c| c.get());
+    if b == 0 {
+        thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    } else {
+        b
+    }
+}
+
+/// Whether the current thread is already inside a parallel region.
+pub fn in_parallel_region() -> bool {
+    PAR_BUDGET.with(|c| c.get()) != 0
+}
+
+/// Mark the current thread as a leaf worker: no parallelism budget
+/// left, so any nested budget-gated kernel runs inline. Call only on
+/// dedicated worker threads (the flag lives until the thread dies).
+pub fn enter_leaf_region() {
+    PAR_BUDGET.with(|c| c.set(1));
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -80,7 +129,7 @@ where
     if n == 0 {
         return;
     }
-    let threads = thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    let threads = thread_budget();
     if threads <= 1 || n <= min_chunk {
         f(0..n);
         return;
@@ -90,15 +139,106 @@ where
     let next = AtomicUsize::new(0);
     thread::scope(|s| {
         for _ in 0..chunks {
-            s.spawn(|| loop {
-                let start = next.fetch_add(per, Ordering::Relaxed);
-                if start >= n {
-                    break;
+            s.spawn(|| {
+                enter_leaf_region();
+                loop {
+                    let start = next.fetch_add(per, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    f(start..(start + per).min(n));
                 }
-                f(start..(start + per).min(n));
             });
         }
     });
+}
+
+/// Scoped data-parallel loop over disjoint `&mut` chunks of a slice:
+/// `f(start, chunk)` gets the chunk's offset into `data` plus exclusive
+/// access to it. This is the safe replacement for the old "disjoint
+/// ranges write through a shared raw pointer" pattern — disjointness is
+/// now proven by `chunks_mut`, not asserted in a comment.
+pub fn parallel_for_slices_mut<T, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let threads = thread_budget();
+    if threads <= 1 || n <= min_chunk {
+        f(0, data);
+        return;
+    }
+    let nchunks = threads.min(n.div_ceil(min_chunk)).max(1);
+    let per = n.div_ceil(nchunks);
+    // LIFO work bag of (offset, chunk) pairs; each worker pops until empty.
+    let bag: Mutex<Vec<(usize, &mut [T])>> =
+        Mutex::new(data.chunks_mut(per).enumerate().map(|(ci, c)| (ci * per, c)).collect());
+    thread::scope(|s| {
+        for _ in 0..nchunks {
+            s.spawn(|| {
+                enter_leaf_region();
+                loop {
+                    let item = bag.lock().unwrap().pop();
+                    match item {
+                        Some((start, chunk)) => f(start, chunk),
+                        None => break,
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Run `n` independent tasks `f(0..n)` concurrently and return their
+/// results in index order. Concurrency is capped at the calling
+/// thread's [`thread_budget`] (the hardware parallelism at top
+/// level); the tasks run on scoped threads — not a queue whose jobs
+/// must be `'static` — so they may borrow from the caller, which is
+/// what the per-module database builds need: each task borrows the
+/// PJRT engine and calibration Hessians while owning its backend.
+/// The budget is divided among workers: with fewer tasks than cores
+/// each task keeps a share for its inner threaded kernels
+/// (GEMM/matvec), and with many tasks the inner kernels run inline
+/// instead of oversubscribing the machine. Panics in a task
+/// propagate after the scope joins.
+pub fn parallel_tasks<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let budget = thread_budget();
+    let workers = budget.min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let child_budget = (budget / workers).max(1);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                PAR_BUDGET.with(|c| c.set(child_budget));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    *slots[i].lock().unwrap() = Some(f(i));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_tasks: missing result"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -140,5 +280,67 @@ mod tests {
     #[test]
     fn parallel_for_empty_ok() {
         parallel_for_chunks(0, 8, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn slices_mut_writes_every_element_once() {
+        let n = 5_000;
+        let mut data = vec![0u64; n];
+        parallel_for_slices_mut(&mut data, 64, |start, chunk| {
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v += (start + off) as u64 + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn slices_mut_small_runs_inline() {
+        let mut data = vec![1u8; 3];
+        parallel_for_slices_mut(&mut data, 64, |start, chunk| {
+            assert_eq!(start, 0);
+            assert_eq!(chunk.len(), 3);
+            chunk.fill(9);
+        });
+        assert_eq!(data, vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn tasks_return_in_index_order() {
+        let inputs: Vec<usize> = (0..97).collect();
+        let out = parallel_tasks(inputs.len(), |i| inputs[i] * 3);
+        assert_eq!(out, (0..97).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_empty_ok() {
+        let out: Vec<u32> = parallel_tasks(0, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn nested_parallel_runs_inline_and_stays_correct() {
+        // inner parallel_for_chunks inside a parallel_tasks worker must
+        // degrade to inline execution (no nested spawning) yet still
+        // cover every index exactly once.
+        let outer = 6;
+        let out = parallel_tasks(outer, |t| {
+            let hw = thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+            assert!(hw <= 1 || in_parallel_region());
+            let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+            parallel_for_chunks(1000, 8, |range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            let total: u64 = hits.iter().map(|h| h.load(Ordering::Relaxed)).sum();
+            (t, total)
+        });
+        for (idx, (t, total)) in out.iter().enumerate() {
+            assert_eq!(*t, idx);
+            assert_eq!(*total, 1000);
+        }
     }
 }

@@ -8,6 +8,17 @@
 //! * [`NativeBackend`] — a pure-Rust mirror used for unit/property
 //!   tests and for cross-checking the HLO path bit-for-bit(ish).
 //!
+//! The native mirror itself has two tiers. The trait methods are the
+//! **fast path**: closed-form g=1 scoring (one column-sum-of-squares
+//! pass divided by diag(Hinv)), batched block extraction + inversion
+//! for g>1, and in-place rank-g downdates — `multi_update` clones W
+//! and Hinv once and then streams every removal step in place with an
+//! incrementally-maintained alive list. The original gather+matmul
+//! formulation survives as `scores_ref`/`update_ref`/
+//! `multi_update_ref`: the equivalence oracle for property tests
+//! (rust/tests/proptests.rs) and the "before" half of the hot-path
+//! benches (benches/bench_hotpath.rs → BENCH_hotpath.json).
+//!
 //! On top of either backend, [`build_module_db`] produces the paper's
 //! per-layer *database*: weight snapshots + error priors at every
 //! sparsity level of the head/FFN ladders, which the structured SPDY
@@ -57,6 +68,18 @@ pub trait ObsOps {
 // ---------------------------------------------------------------- native
 
 /// Pure-Rust mirror of the L1/L2 pruning math.
+///
+/// Each [`ObsOps`] method has two implementations:
+///
+/// * the **fast path** (the trait methods) — closed-form g=1 scoring
+///   (`score_j = Σ_i w_ij² / Hinv_jj` in one column-sum-of-squares
+///   pass), batched g×g block extraction/inversion for g>1, and
+///   in-place rank-g downdates that never clone the full W/Hinv per
+///   removal step;
+/// * the **reference path** (`scores_ref` / `update_ref` /
+///   `multi_update_ref`) — the original paper-faithful gather+matmul
+///   formulation, kept as the equivalence oracle for property tests
+///   and as the "before" entries in the hot-path benches.
 pub struct NativeBackend {
     pub g: usize,
 }
@@ -72,10 +95,46 @@ impl NativeBackend {
         let block = hinv.gather_rows(&idx).gather_cols(&idx);
         linalg::gj_inverse(&block).map_err(|e| anyhow!(e))
     }
-}
 
-impl ObsOps for NativeBackend {
-    fn scores(&mut self, w: &Tensor, hinv: &Tensor, active: &[f32]) -> Result<Vec<f32>> {
+    /// Gather every active g×g diagonal block of Hinv in one streaming
+    /// pass and invert them in place. Returns the flat `[n][g*g]`
+    /// inverse-block array (inactive blocks are left as garbage and
+    /// must not be read).
+    fn batch_block_inverses(&self, hinv: &Tensor, active: &[f32]) -> Result<Vec<f32>> {
+        let g = self.g;
+        let d_col = hinv.cols();
+        let n = d_col / g;
+        let mut blocks = vec![0f32; n * g * g];
+        for r in 0..d_col {
+            let j = r / g;
+            if active[j] <= 0.0 {
+                continue;
+            }
+            let src = &hinv.data[r * d_col + j * g..r * d_col + (j + 1) * g];
+            blocks[j * g * g + (r - j * g) * g..j * g * g + (r - j * g + 1) * g]
+                .copy_from_slice(src);
+        }
+        let mut scratch = vec![0f32; g * g];
+        let mut ident = vec![0f32; g * g];
+        for j in 0..n {
+            if active[j] <= 0.0 {
+                continue;
+            }
+            let blk = &mut blocks[j * g * g..(j + 1) * g * g];
+            scratch.copy_from_slice(blk);
+            ident.fill(0.0);
+            for t in 0..g {
+                ident[t * g + t] = 1.0;
+            }
+            linalg::gj_inverse_flat(&mut scratch, &mut ident, g).map_err(|e| anyhow!(e))?;
+            blk.copy_from_slice(&ident);
+        }
+        Ok(blocks)
+    }
+
+    /// Reference Eq. 2 scoring: per-structure gather + g×g inverse +
+    /// per-row matvec. O(n) temporary tensors per call.
+    pub fn scores_ref(&self, w: &Tensor, hinv: &Tensor, active: &[f32]) -> Result<Vec<f32>> {
         let g = self.g;
         let n = w.cols() / g;
         let mut out = vec![BIG; n];
@@ -98,7 +157,9 @@ impl ObsOps for NativeBackend {
         Ok(out)
     }
 
-    fn update(&mut self, w: &Tensor, hinv: &Tensor, idx: usize) -> Result<(Tensor, Tensor)> {
+    /// Reference Eqs. 3–4 update: gathers + dense matmuls over cloned
+    /// W/Hinv (two full-matrix clones + four temporaries per call).
+    pub fn update_ref(&self, w: &Tensor, hinv: &Tensor, idx: usize) -> Result<(Tensor, Tensor)> {
         let g = self.g;
         let d_col = w.cols();
         let cols: Vec<usize> = (idx * g..(idx + 1) * g).collect();
@@ -135,8 +196,9 @@ impl ObsOps for NativeBackend {
         Ok((w2, h2))
     }
 
-    fn multi_update(
-        &mut self,
+    /// Reference fused removal: one clone-based `update_ref` per step.
+    pub fn multi_update_ref(
+        &self,
         w: &Tensor,
         hinv: &Tensor,
         active: &[f32],
@@ -148,12 +210,252 @@ impl ObsOps for NativeBackend {
         let mut act = active.to_vec();
         let mut order = Vec::with_capacity(n);
         for _ in 0..n {
-            let scores = self.scores(&w, &h, &act)?;
+            let scores = self.scores_ref(&w, &h, &act)?;
             let j = argmin(&scores);
-            let (w2, h2) = self.update(&w, &h, j)?;
+            if scores[j] >= BIG {
+                return Err(anyhow!("multi_update: no active structure left"));
+            }
+            let (w2, h2) = self.update_ref(&w, &h, j)?;
             w = w2;
             h = h2;
             act[j] = 0.0;
+            order.push(j);
+        }
+        Ok((w, h, act, order))
+    }
+}
+
+/// Eqs. 3–4 as an in-place rank-g downdate of (W, Hinv), streamed
+/// row-major: `g` axpy passes per row instead of clone + gather +
+/// dense matmul. Removed rows/cols are scrubbed to the same exact
+/// zeros/unit-diagonal the reference path produces.
+fn obs_update_inplace(
+    w: &mut Tensor,
+    hinv: &mut Tensor,
+    idx: usize,
+    g: usize,
+    binv: &[f32],      // [g, g] inverse of Hinv[S, S]
+    p: &mut Vec<f32>,  // scratch, resized to [g, d_col]
+    cbuf: &mut Vec<f32>, // scratch, resized to [d_col, g] (Hinv[:, S] copy)
+) {
+    let d_col = w.cols();
+    let s0 = idx * g;
+    // P = Binv @ Hinv[S, :], built from the still-unmodified rows.
+    p.clear();
+    p.resize(g * d_col, 0.0);
+    for r in 0..g {
+        let prow = &mut p[r * d_col..(r + 1) * d_col];
+        for t in 0..g {
+            let f = binv[r * g + t];
+            if f == 0.0 {
+                continue;
+            }
+            let hrow = &hinv.data[(s0 + t) * d_col..(s0 + t + 1) * d_col];
+            for (pv, hv) in prow.iter_mut().zip(hrow) {
+                *pv += f * hv;
+            }
+        }
+    }
+    // W rows: w_i -= Σ_t w_i,S[t] · P[t, :], then exact-zero the block.
+    let mut wseg = vec![0f32; g];
+    for i in 0..w.rows() {
+        let row = w.row_mut(i);
+        wseg[..g].copy_from_slice(&row[s0..s0 + g]);
+        for (t, &wt) in wseg[..g].iter().enumerate() {
+            if wt == 0.0 {
+                continue;
+            }
+            let prow = &p[t * d_col..(t + 1) * d_col];
+            for (rv, pv) in row.iter_mut().zip(prow) {
+                *rv -= wt * pv;
+            }
+        }
+        row[s0..s0 + g].fill(0.0);
+    }
+    // Hinv: copy the S column block first (it is modified mid-pass),
+    // then h_r -= Σ_t Hinv[r, S[t]] · P[t, :] for every row r.
+    cbuf.clear();
+    cbuf.resize(d_col * g, 0.0);
+    for r in 0..d_col {
+        cbuf[r * g..(r + 1) * g].copy_from_slice(&hinv.data[r * d_col + s0..r * d_col + s0 + g]);
+    }
+    for r in 0..d_col {
+        for t in 0..g {
+            let c = cbuf[r * g + t];
+            if c == 0.0 {
+                continue;
+            }
+            let prow = &p[t * d_col..(t + 1) * d_col];
+            let hrow = &mut hinv.data[r * d_col..(r + 1) * d_col];
+            for (hv, pv) in hrow.iter_mut().zip(prow) {
+                *hv -= c * pv;
+            }
+        }
+    }
+    // scrub removed rows/cols, unit diagonal
+    for c in s0..s0 + g {
+        hinv.data[c * d_col..(c + 1) * d_col].fill(0.0);
+        for r in 0..d_col {
+            hinv.data[r * d_col + c] = 0.0;
+        }
+        hinv.data[c * d_col + c] = 1.0;
+    }
+}
+
+impl ObsOps for NativeBackend {
+    fn scores(&mut self, w: &Tensor, hinv: &Tensor, active: &[f32]) -> Result<Vec<f32>> {
+        let g = self.g;
+        let d_col = w.cols();
+        let n = d_col / g;
+        let mut out = vec![BIG; n];
+        if g == 1 {
+            // Closed form: Binv is the scalar 1/Hinv_jj, so
+            // score_j = Σ_i w_ij² / Hinv_jj — one vectorized
+            // column-sum-of-squares pass over W, no temporaries.
+            let mut colsq = vec![0f64; d_col];
+            for i in 0..w.rows() {
+                for (acc, &v) in colsq.iter_mut().zip(w.row(i)) {
+                    *acc += (v as f64) * (v as f64);
+                }
+            }
+            for j in 0..n {
+                if active[j] > 0.0 {
+                    let hjj = hinv.at2(j, j);
+                    // mirror the reference path's gj_inverse guard
+                    if hjj.abs() < 1e-20 {
+                        return Err(anyhow!("scores: singular Hinv diagonal at {j}"));
+                    }
+                    out[j] = (colsq[j] / hjj as f64) as f32;
+                }
+            }
+            return Ok(out);
+        }
+        // g > 1: one batched gather+invert of all active blocks, then
+        // per-structure quadratic forms. Structure-outer loop order
+        // keeps the g×g inverse block L1-resident across all W rows.
+        let binvs = self.batch_block_inverses(hinv, active)?;
+        for (j, o) in out.iter_mut().enumerate() {
+            if active[j] <= 0.0 {
+                continue;
+            }
+            let b = &binvs[j * g * g..(j + 1) * g * g];
+            let mut s = 0f64;
+            for i in 0..w.rows() {
+                let wseg = &w.row(i)[j * g..(j + 1) * g];
+                for (r, &wr) in wseg.iter().enumerate() {
+                    let brow = &b[r * g..(r + 1) * g];
+                    let mut t = 0f32;
+                    for (bv, wv) in brow.iter().zip(wseg) {
+                        t += bv * wv;
+                    }
+                    s += (wr as f64) * (t as f64);
+                }
+            }
+            *o = s as f32;
+        }
+        Ok(out)
+    }
+
+    fn update(&mut self, w: &Tensor, hinv: &Tensor, idx: usize) -> Result<(Tensor, Tensor)> {
+        let g = self.g;
+        let binv = self.block_inv(hinv, idx)?;
+        let mut w2 = w.clone();
+        let mut h2 = hinv.clone();
+        let (mut p, mut cbuf) = (Vec::new(), Vec::new());
+        obs_update_inplace(&mut w2, &mut h2, idx, g, &binv.data, &mut p, &mut cbuf);
+        Ok((w2, h2))
+    }
+
+    fn multi_update(
+        &mut self,
+        w: &Tensor,
+        hinv: &Tensor,
+        active: &[f32],
+        n: usize,
+    ) -> Result<(Tensor, Tensor, Vec<f32>, Vec<usize>)> {
+        assert_eq!(self.g, 1, "multi_update is a g=1 path");
+        let d_col = w.cols();
+        let d_row = w.rows();
+        // One clone up front; every removal step then works in place
+        // (the reference path re-cloned both matrices per step:
+        // O(n·(d_col² + d_row·d_col)) copied floats).
+        let mut w = w.clone();
+        let mut h = hinv.clone();
+        let mut act = active.to_vec();
+        // Incremental bookkeeping: ascending list of still-active
+        // columns, shrunk as structures are removed.
+        let mut alive: Vec<usize> = (0..d_col.min(act.len())).filter(|&j| act[j] > 0.0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut colsq = vec![0f64; d_col];
+        let mut p = vec![0f32; d_col];
+        let mut cbuf = vec![0f32; d_col];
+        for _step in 0..n {
+            if alive.is_empty() {
+                return Err(anyhow!("multi_update: no active structure left"));
+            }
+            // Closed-form g=1 scores over the alive set; the argmin
+            // mirrors `argmin(&scores)` exactly (ascending scan,
+            // strict <, f32 compare) so removal order is identical to
+            // the step-by-step path.
+            colsq.fill(0.0);
+            for i in 0..d_row {
+                for (acc, &v) in colsq.iter_mut().zip(w.row(i)) {
+                    *acc += (v as f64) * (v as f64);
+                }
+            }
+            let mut best = alive[0];
+            let mut best_s = f32::INFINITY;
+            for &j in &alive {
+                let s = (colsq[j] / h.at2(j, j) as f64) as f32;
+                if s < best_s {
+                    best_s = s;
+                    best = j;
+                }
+            }
+            let j = best;
+            // g=1 downdate: p = Hinv[j, :] / Hinv_jj, one axpy per row.
+            // Guard the pivot like the reference path's gj_inverse does
+            // (repeated downdates can cancel H_jj toward 0 on an
+            // ill-conditioned Hessian near full removal).
+            let hjj = h.at2(j, j);
+            if hjj.abs() < 1e-20 {
+                return Err(anyhow!("multi_update: singular pivot at {j}"));
+            }
+            let hjj_inv = 1.0 / hjj;
+            p.copy_from_slice(h.row(j));
+            for v in p.iter_mut() {
+                *v *= hjj_inv;
+            }
+            for i in 0..d_row {
+                let row = w.row_mut(i);
+                let wij = row[j];
+                if wij != 0.0 {
+                    for (rv, pv) in row.iter_mut().zip(&p) {
+                        *rv -= wij * pv;
+                    }
+                }
+                row[j] = 0.0;
+            }
+            for (r, c) in cbuf.iter_mut().enumerate() {
+                *c = h.at2(r, j);
+            }
+            for r in 0..d_col {
+                let c = cbuf[r];
+                if c == 0.0 {
+                    continue; // dead rows stay untouched — alive-set bookkeeping
+                }
+                let hrow = h.row_mut(r);
+                for (hv, pv) in hrow.iter_mut().zip(&p) {
+                    *hv -= c * pv;
+                }
+            }
+            h.row_mut(j).fill(0.0);
+            for r in 0..d_col {
+                h.data[r * d_col + j] = 0.0;
+            }
+            h.data[j * d_col + j] = 1.0;
+            act[j] = 0.0;
+            alive.retain(|&x| x != j);
             order.push(j);
         }
         Ok((w, h, act, order))
@@ -164,13 +466,20 @@ impl ObsOps for NativeBackend {
     }
 }
 
+/// Index of the smallest score; the first occurrence wins ties.
+///
+/// When every structure is inactive all entries are the [`BIG`]
+/// sentinel and there is no meaningful choice: the function returns 0.
+/// Callers that remove structures must therefore never request more
+/// removals than there are active structures (the multi-step paths
+/// check `scores[argmin] < BIG` and error out instead).
 pub fn argmin(scores: &[f32]) -> usize {
+    debug_assert!(!scores.is_empty(), "argmin over empty scores");
     let mut best = 0;
     for (i, &s) in scores.iter().enumerate() {
         if s < scores[best] {
             best = i;
         }
-        let _ = i;
     }
     best
 }
@@ -346,19 +655,43 @@ pub fn build_module_db(
     h: &Tensor,
     levels: &[usize],
 ) -> Result<ModuleDb> {
+    build_module_db_masked(ops, layer, is_attn, w0, hinv0, h, levels, &[])
+}
+
+/// [`build_module_db`] continuing from an existing structural mask:
+/// structures in `already_dead` start inactive (gradual pruning
+/// re-anchors on the currently-alive set, so `levels[0]` must equal
+/// the alive count). Returned `dead` lists contain only structures
+/// removed by THIS build — callers that need absolute lists prepend
+/// `already_dead` themselves.
+#[allow(clippy::too_many_arguments)]
+pub fn build_module_db_masked(
+    ops: &mut dyn ObsOps,
+    layer: usize,
+    is_attn: bool,
+    w0: &Tensor,
+    hinv0: &Tensor,
+    h: &Tensor,
+    levels: &[usize],
+    already_dead: &[usize],
+) -> Result<ModuleDb> {
     let g = ops.group();
     let n_structs = w0.cols() / g;
-    assert_eq!(levels[0], n_structs, "levels must start dense");
+    let mut active = vec![1.0f32; n_structs];
+    for &j in already_dead {
+        active[j] = 0.0;
+    }
+    let alive = n_structs - already_dead.len();
+    assert_eq!(levels[0], alive, "levels must start at the current alive count");
     let mut out = Vec::with_capacity(levels.len());
-    out.push(LevelSnapshot { remaining: n_structs, dead: vec![], w: w0.clone(), prior: 0.0 });
+    out.push(LevelSnapshot { remaining: alive, dead: vec![], w: w0.clone(), prior: 0.0 });
 
     let mut w = w0.clone();
     let mut hinv = hinv0.clone();
-    let mut active = vec![1.0f32; n_structs];
     let mut dead: Vec<usize> = Vec::new();
 
     for &target in &levels[1..] {
-        let cur = n_structs - dead.len();
+        let cur = alive - dead.len();
         if target >= cur {
             continue;
         }
@@ -519,6 +852,64 @@ mod tests {
         for c in 8..12 {
             assert_eq!(h2.at2(c, c), 1.0);
         }
+    }
+
+    #[test]
+    fn argmin_first_min_wins_ties() {
+        assert_eq!(argmin(&[3.0, 1.0, 1.0, 2.0]), 1);
+        assert_eq!(argmin(&[0.5]), 0);
+        assert_eq!(argmin(&[2.0, -1.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn argmin_all_inactive_returns_zero() {
+        // every structure masked → all scores are the BIG sentinel;
+        // argmin degenerates to index 0 (documented), and the
+        // multi-step paths reject this case instead of removing.
+        assert_eq!(argmin(&[BIG, BIG, BIG]), 0);
+        let mut rng = Rng::new(27);
+        let (w, _h, hinv) = setup(&mut rng, 4, 6, 1);
+        let mut ops = NativeBackend::new(1);
+        let all_dead = vec![0.0f32; 6];
+        assert!(ops.multi_update(&w, &hinv, &all_dead, 1).is_err());
+        assert!(ops.multi_update_ref(&w, &hinv, &all_dead, 1).is_err());
+    }
+
+    #[test]
+    fn fast_scores_match_reference_g1_and_g4() {
+        let mut rng = Rng::new(28);
+        for &(d_row, n, g) in &[(10, 12, 1), (6, 5, 4)] {
+            let (w, _h, hinv) = setup(&mut rng, d_row, n, g);
+            let mut act = vec![1.0f32; n];
+            act[n / 2] = 0.0;
+            let mut ops = NativeBackend::new(g);
+            let fast = ops.scores(&w, &hinv, &act).unwrap();
+            let slow = ops.scores_ref(&w, &hinv, &act).unwrap();
+            for j in 0..n {
+                if act[j] <= 0.0 {
+                    assert!(fast[j] >= BIG && slow[j] >= BIG);
+                } else {
+                    let denom = slow[j].abs().max(1e-6);
+                    assert!(
+                        (fast[j] - slow[j]).abs() / denom < 1e-4,
+                        "g={g} j={j}: fast {} ref {}",
+                        fast[j],
+                        slow[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_update_matches_reference_g4() {
+        let mut rng = Rng::new(29);
+        let (w, _h, hinv) = setup(&mut rng, 7, 5, 4);
+        let mut ops = NativeBackend::new(4);
+        let (wf, hf) = ops.update(&w, &hinv, 2).unwrap();
+        let (wr, hr) = ops.update_ref(&w, &hinv, 2).unwrap();
+        assert!(wf.max_abs_diff(&wr) < 1e-4, "W diff {}", wf.max_abs_diff(&wr));
+        assert!(hf.max_abs_diff(&hr) < 1e-4, "H diff {}", hf.max_abs_diff(&hr));
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! Vendored, minimal `anyhow` stand-in so the workspace builds fully
+//! offline (crates.io is unreachable in the build environment).
+//!
+//! Implements exactly the surface the ziplm crate uses: [`Error`],
+//! [`Result`], the [`anyhow!`] macro, and [`Context::with_context`] /
+//! [`Context::context`] on `Result`. Like the real crate, `Error`
+//! deliberately does NOT implement `std::error::Error`, which is what
+//! makes the blanket `From<E: std::error::Error>` impl possible.
+
+use std::fmt;
+
+/// A string-backed error chain: context frames are joined with ": ".
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context frame (mirrors anyhow's `Context` output).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy or eager context to a failing `Result`.
+pub trait Context<T> {
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+}
+
+/// `anyhow!("...")` with full `format!` syntax; a single non-literal
+/// expression is taken by `Display` (e.g. `anyhow!(err_string)`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `bail!(...)` = `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e: Error = anyhow!("bad value {} at {}", 3, "layer");
+        assert_eq!(e.to_string(), "bad value 3 at layer");
+        let inline = 7;
+        assert_eq!(anyhow!("x={inline}").to_string(), "x=7");
+        let s = String::from("plain");
+        assert_eq!(anyhow!(s).to_string(), "plain");
+    }
+}

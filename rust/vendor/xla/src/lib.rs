@@ -1,0 +1,241 @@
+//! Vendored host-side stub of the `xla-rs` subset the ziplm runtime
+//! uses, so the crate builds and tests offline without the real PJRT
+//! C-API bindings.
+//!
+//! The [`Literal`] half is fully functional (shape/dtype-checked host
+//! tensors): literal construction, reshape and readback behave like the
+//! real crate, which keeps the runtime's literal round-trip helpers
+//! testable. The device half ([`PjRtClient`], [`PjRtLoadedExecutable`])
+//! is a stub: `PjRtClient::cpu()` returns an error, so any path that
+//! needs compiled artifacts fails with a clear message instead of
+//! crashing — and all artifact-dependent tests/benches already skip
+//! when `artifacts/` is absent. Swap this path dependency for the real
+//! `xla` bindings to run the compiled HLO paths.
+
+use std::fmt;
+use std::path::Path;
+
+// ------------------------------------------------------------------ error
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str =
+    "PJRT unavailable: built with the vendored host-only xla stub (rust/vendor/xla); \
+     point the `xla` dependency at the real bindings to execute artifacts";
+
+// ---------------------------------------------------------------- literal
+
+/// Element types the coordinator exchanges with artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host tensor: row-major payload + logical dims (empty dims = scalar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+/// Sealed-ish element trait for [`Literal::vec1`] / [`Literal::to_vec`].
+pub trait NativeType: Copy {
+    const DTYPE: DType;
+    fn wrap(v: Vec<Self>) -> Payload;
+    fn unwrap(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const DTYPE: DType = DType::F32;
+    fn wrap(v: Vec<Self>) -> Payload {
+        Payload::F32(v)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const DTYPE: DType = DType::I32;
+    fn wrap(v: Vec<Self>) -> Payload {
+        Payload::I32(v)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], payload: T::wrap(v.to_vec()) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.payload {
+            Payload::F32(_) => DType::F32,
+            Payload::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret the payload under new dims (size-checked; `&[]` is a
+    /// scalar of one element, matching the real crate).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count {} != {want}",
+                self.dims,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    /// Read the payload back as a host vector (dtype-checked).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| Error(format!("to_vec: literal is {:?}, not {:?}", self.dtype(), T::DTYPE)))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come back from device execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+// ------------------------------------------------------------------ hlo
+
+/// Parsed HLO module handle. The stub only records the source path.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        if !p.exists() {
+            return Err(Error(format!("no such HLO file {p:?}")));
+        }
+        Ok(HloModuleProto { path: p.display().to_string() })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub source: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { source: proto.path.clone() }
+    }
+}
+
+// ----------------------------------------------------------------- pjrt
+
+/// Device client stub: construction fails so callers degrade cleanly.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.into()))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_scalar_and_dtype_checks() {
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.dims(), &[] as &[i64]);
+        assert!(s.to_vec::<f32>().is_err());
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn device_paths_fail_loudly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
