@@ -1,0 +1,123 @@
+//! Family serving: produce a ZipLM model family with gradual pruning,
+//! then serve the whole family behind ONE SLA-aware coordinator.
+//!
+//!   make artifacts && cargo run --release --example family_serving
+//!
+//! The run: (1) quick-train a dense teacher, (2) gradual-prune it to
+//! two speedup targets — one run, a whole certified family (paper
+//! §3.2, App. F), (3) record the family manifest, (4) start the family
+//! coordinator and fire a mixed workload of best-effort,
+//! latency-bound, and min-speedup requests at it, (5) print per-class
+//! p50/p99 latency, SLA-hit rate, and the compile-cache counters that
+//! show every shared graph was compiled exactly once.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::Result;
+use ziplm::coordinator::family as famserve;
+use ziplm::data;
+use ziplm::eval::evaluate;
+use ziplm::exp;
+use ziplm::latency;
+use ziplm::models::ModelState;
+use ziplm::pruner::{self, PruneCfg};
+use ziplm::runtime::Engine;
+use ziplm::train::{TrainCfg, Trainer};
+
+fn main() -> Result<()> {
+    let engine = Engine::open(Path::new("artifacts"))?;
+    let (model, task) = ("bert-syn-base", "sst2-syn");
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+
+    // 1. data + a briefly-trained dense teacher
+    let ds = data::load_sized(&minfo, task, 256, 128);
+    let mut teacher = ModelState::init(&minfo, task, &tinfo, 0);
+    let mut trainer = Trainer::new(&engine, tinfo.n_params, None);
+    let tcfg = TrainCfg { lr: 1e-3, epochs: 2.0, lambdas: [1.0, 0.0, 0.0], ..Default::default() };
+    trainer.train(&mut teacher, &ds, &tcfg)?;
+    let dense_ev = evaluate(&engine, &teacher, &ds, "dev")?;
+    println!("dense teacher: dev acc {:.3}", dense_ev.metric);
+
+    // 2. latency table (the admission estimates the router will use)
+    let table = latency::measure_cpu(&engine, model, "throughput", 10)?;
+    let dense_ms = table.dense_time(minfo.n_layers) * 1e3;
+    println!("dense batched fwd estimate: {dense_ms:.2} ms");
+
+    // 3. gradual prune → a 3-member family (dense + 1.5x + 3x)
+    let targets = [1.5, 3.0];
+    let pcfg = PruneCfg {
+        calib_samples: 64,
+        spdy: pruner::SpdyCfgLite { iters: 20, seed: 7 },
+        ..Default::default()
+    };
+    let ft = TrainCfg { lr: 5e-4, epochs: 0.5, lambdas: [1.0, 0.5, 0.5], ..Default::default() };
+    let stages = pruner::gradual(
+        &engine,
+        teacher.clone(),
+        &ds,
+        &table,
+        &targets,
+        &pcfg,
+        &ft,
+        Some(teacher.params.clone()),
+    )?;
+    for s in &stages {
+        let ev = evaluate(&engine, &s.state, &ds, "dev")?;
+        println!(
+            "  member {:>4.1}x: est={:.2}x dev acc {:.3}",
+            s.report.target, s.report.est_speedup, ev.metric
+        );
+    }
+
+    // 4. record the family manifest (what `ziplm serve-family` loads)
+    let ctx = exp::ExpCtx::new(Path::new("artifacts"), true)?;
+    let fam = exp::emit_family(&ctx, &teacher, &stages, &table)?;
+    let members: Vec<(String, ModelState)> = fam
+        .load_states(Path::new("runs").join(format!("family_{model}_{task}")).as_path())?
+        .into_iter()
+        .map(|(m, st)| (m.tag, st))
+        .collect();
+    drop(engine); // the coordinator worker owns its own engine
+
+    // 5. serve the family: one front end, per-member queues, SLA routing
+    let handle = famserve::start(
+        famserve::FamilyCfg {
+            artifacts: "artifacts".into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            pressure: 64,
+        },
+        members,
+        &table,
+    )?;
+    // mixed workload, all submitted up front so the queues see pressure:
+    // best-effort (no SLA) / interactive (latency bound under one dense
+    // fwd, must spill to a pruned member) / cheap (min 1.5x speedup)
+    let bound = Duration::from_secs_f64(table.dense_time(minfo.n_layers) * 0.8);
+    let rows = exp::mixed_workload(&handle, &ds, 96, bound, 1.5)?;
+    let stats = handle.shutdown()?;
+
+    println!(
+        "\nper-class serving report ({} requests, {} batches):",
+        stats.requests, stats.batches
+    );
+    for r in famserve::summarize(&rows) {
+        println!(
+            "  [{:<12}] n={:<4} p50={:>7.1}ms  p99={:>7.1}ms  sla-hit={:>4.0}%",
+            r.class,
+            r.n,
+            r.p50.as_secs_f64() * 1e3,
+            r.p99.as_secs_f64() * 1e3,
+            r.hit_rate * 100.0
+        );
+    }
+    println!("per-member requests: {:?}", stats.per_member);
+    println!(
+        "compiled executables: {} build(s), {} cache hit(s) — one compile for the whole family",
+        stats.cache_builds, stats.cache_hits
+    );
+    assert!(stats.cache_builds <= 1, "family members must share the compiled graph");
+    Ok(())
+}

@@ -1,0 +1,599 @@
+//! Model-family serving: one SLA-aware front end over a whole ZipLM
+//! family (paper §3.2, App. F; DESIGN.md §6).
+//!
+//! ZipLM's gradual run emits a *family* of checkpoints — dense plus
+//! one member per speedup target, each certified against a latency
+//! table. This module serves the entire family behind a single
+//! request front end:
+//!
+//! * clients submit ids plus an optional per-request [`Sla`];
+//! * a router assigns each request to a family member: the most
+//!   accurate member whose certified speedup and latency-table
+//!   admission estimate satisfy the SLA, or the fastest member when
+//!   nothing qualifies or total backlog crosses the pressure
+//!   threshold;
+//! * each member has its own dynamic-batch queue, drained by the one
+//!   worker thread that owns the PJRT engine (handles are not `Send`,
+//!   exactly as in the single-model loop, DESIGN.md §4);
+//! * every member of one (model, task) shares the masked `fwd` graph,
+//!   so the engine's [`crate::runtime::CompileCache`] compiles it once
+//!   for the whole family — build/hit counts come back in
+//!   [`FamilyStats`].
+//!
+//! Routing is a pure function ([`route`]) over [`MemberRoute`] data so
+//! the policy is unit-testable without artifacts or PJRT.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::mask_literals;
+use crate::latency::LatencyTable;
+use crate::models::ModelState;
+use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine};
+
+/// Per-request service-level agreement. All bounds are optional; an
+/// absent bound never excludes a member.
+#[derive(Clone, Debug, Default)]
+pub struct Sla {
+    /// workload-class label used for per-class reporting
+    pub class: String,
+    /// admission bound on estimated end-to-end latency (queue + exec)
+    pub max_latency: Option<Duration>,
+    /// minimum certified family-member speedup (cost ceiling)
+    pub min_speedup: Option<f64>,
+}
+
+/// A queued family request (internal; built by [`FamilyHandle::submit`]).
+pub struct FamilyRequest {
+    /// token ids (padded to the graph's seq_len by the worker)
+    pub ids: Vec<i32>,
+    /// optional routing constraints
+    pub sla: Option<Sla>,
+    /// submission timestamp (queue-time accounting)
+    pub submitted: Instant,
+    /// reply channel
+    pub reply: mpsc::Sender<FamilyReply>,
+}
+
+/// Reply for one family request.
+#[derive(Clone, Debug)]
+pub struct FamilyReply {
+    /// task logits for this example
+    pub logits: Vec<f32>,
+    /// tag of the family member that served the request
+    pub member: String,
+    /// certified speedup of that member
+    pub member_speedup: f64,
+    /// time spent queued before the batch launched
+    pub queue_time: Duration,
+    /// number of real requests in the executed batch
+    pub batch_size: usize,
+    /// end-to-end latency (submit → reply)
+    pub latency: Duration,
+}
+
+/// Family-coordinator configuration.
+pub struct FamilyCfg {
+    /// artifact directory (manifest.json + HLO files)
+    pub artifacts: PathBuf,
+    /// max requests per executed batch (clamped to the graph batch)
+    pub max_batch: usize,
+    /// how long a batch waits for stragglers before launching
+    pub max_wait: Duration,
+    /// total backlog (requests queued across all members) at which
+    /// routing falls back to the fastest member; 0 disables
+    pub pressure: usize,
+}
+
+/// Routing view of one family member: pure data, so the routing policy
+/// can be exercised without PJRT.
+#[derive(Clone, Debug)]
+pub struct MemberRoute {
+    /// member tag (diagnostics)
+    pub tag: String,
+    /// certified speedup from the latency table (dense = 1.0)
+    pub est_speedup: f64,
+    /// latency-table estimate of one batched forward of this member
+    pub est_batch_time: f64,
+}
+
+/// Pick the member index for a request.
+///
+/// `members` must be sorted by ascending `est_speedup` (most accurate
+/// first) and `depths[i]` is the current queue length of member `i`.
+/// Policy, in order:
+///
+/// 1. total backlog ≥ `pressure` (and pressure enabled) → fastest
+///    member, regardless of SLA — the overload escape hatch;
+/// 2. no SLA → most accurate member;
+/// 3. otherwise the FIRST (most accurate) member with
+///    `est_speedup ≥ min_speedup` whose admission estimate fits
+///    inside `max_latency`;
+/// 4. no member qualifies → fastest member (best effort).
+///
+/// The admission estimate models the single engine-owning worker:
+/// every batch already queued on ANY member is older than this
+/// request and will be served first (oldest-head scheduling), so the
+/// estimate is the table-priced sum of all pending batches plus the
+/// marginal batch this request adds to member `i`'s queue.
+pub fn route(
+    sla: Option<&Sla>,
+    members: &[MemberRoute],
+    depths: &[usize],
+    max_batch: usize,
+    pressure: usize,
+) -> usize {
+    debug_assert_eq!(members.len(), depths.len());
+    let fastest = members.len() - 1;
+    if pressure > 0 && depths.iter().sum::<usize>() >= pressure {
+        return fastest;
+    }
+    let Some(sla) = sla else { return 0 };
+    let b = max_batch.max(1);
+    // worker time already committed, across ALL queues
+    let pending: f64 = members
+        .iter()
+        .zip(depths)
+        .map(|(m, &d)| d.div_ceil(b) as f64 * m.est_batch_time)
+        .sum();
+    for (i, (m, &depth)) in members.iter().zip(depths).enumerate() {
+        if let Some(min_s) = sla.min_speedup {
+            if m.est_speedup + 1e-9 < min_s {
+                continue;
+            }
+        }
+        if let Some(max_l) = sla.max_latency {
+            // batches member i must run that it wouldn't have without us
+            let marginal = ((depth + 1).div_ceil(b) - depth.div_ceil(b)) as f64 * m.est_batch_time;
+            if pending + marginal > max_l.as_secs_f64() {
+                continue;
+            }
+        }
+        return i;
+    }
+    fastest
+}
+
+/// Aggregate serving statistics returned by [`FamilyHandle::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct FamilyStats {
+    /// total requests served
+    pub requests: usize,
+    /// total executed batches
+    pub batches: usize,
+    /// cumulative execution time
+    pub busy_time: Duration,
+    /// requests served per member, in router order
+    pub per_member: Vec<(String, usize)>,
+    /// requests rerouted to the fastest member by queue pressure
+    pub pressure_reroutes: usize,
+    /// executable-cache builds — at most one per shared graph,
+    /// however many members the family has
+    pub cache_builds: usize,
+    /// executable-cache hits
+    pub cache_hits: usize,
+}
+
+/// Handle to a running family coordinator.
+pub struct FamilyHandle {
+    tx: Option<mpsc::Sender<FamilyRequest>>,
+    worker: Option<JoinHandle<Result<FamilyStats>>>,
+}
+
+impl FamilyHandle {
+    /// Enqueue a request; the receiver yields the [`FamilyReply`].
+    pub fn submit(&self, ids: Vec<i32>, sla: Option<Sla>) -> Result<mpsc::Receiver<FamilyReply>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("family server stopped"))?
+            .send(FamilyRequest { ids, sla, submitted: Instant::now(), reply: rtx })
+            .map_err(|_| anyhow!("family server gone"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, ids: Vec<i32>, sla: Option<Sla>) -> Result<FamilyReply> {
+        let rx = self.submit(ids, sla)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Stop accepting requests, flush all queues, and return stats.
+    pub fn shutdown(mut self) -> Result<FamilyStats> {
+        drop(self.tx.take());
+        self.worker
+            .take()
+            .ok_or_else(|| anyhow!("already stopped"))?
+            .join()
+            .map_err(|_| anyhow!("family worker panicked"))?
+    }
+}
+
+struct MemberSpec {
+    tag: String,
+    state: ModelState,
+    route: MemberRoute,
+}
+
+/// Start the family coordinator over `members` (tag, checkpoint).
+///
+/// All members must share one (model, task); their per-layer profiles
+/// are read from the checkpoint masks and priced with `table` to form
+/// the routing estimates. Members are served in ascending-speedup
+/// order (index 0 = most accurate).
+pub fn start(
+    cfg: FamilyCfg,
+    members: Vec<(String, ModelState)>,
+    table: &LatencyTable,
+) -> Result<FamilyHandle> {
+    if members.is_empty() {
+        return Err(anyhow!("family must have at least one member"));
+    }
+    let (model, task) = (members[0].1.model.clone(), members[0].1.task.clone());
+    let mut specs: Vec<MemberSpec> = Vec::with_capacity(members.len());
+    for (tag, state) in members {
+        if state.model != model || state.task != task {
+            return Err(anyhow!(
+                "family member `{tag}` is {}/{}, expected {model}/{task}",
+                state.model,
+                state.task
+            ));
+        }
+        let profile = state.masks.summary();
+        let route = MemberRoute {
+            tag: tag.clone(),
+            est_speedup: table.speedup(&profile),
+            est_batch_time: table.model_time(&profile),
+        };
+        specs.push(MemberSpec { tag, state, route });
+    }
+    specs.sort_by(|a, b| a.route.est_speedup.partial_cmp(&b.route.est_speedup).unwrap());
+    let (tx, rx) = mpsc::channel::<FamilyRequest>();
+    let worker = std::thread::Builder::new()
+        .name("ziplm-family".into())
+        .spawn(move || serve_family_loop(cfg, specs, rx))
+        .expect("spawn family server");
+    Ok(FamilyHandle { tx: Some(tx), worker: Some(worker) })
+}
+
+fn serve_family_loop(
+    cfg: FamilyCfg,
+    specs: Vec<MemberSpec>,
+    rx: mpsc::Receiver<FamilyRequest>,
+) -> Result<FamilyStats> {
+    let engine = Engine::open(&cfg.artifacts)?;
+    let (model, task) = (specs[0].state.model.clone(), specs[0].state.task.clone());
+    let minfo = engine.manifest.model(&model).clone();
+    let b = engine.manifest.batch_eval.min(cfg.max_batch.max(1));
+    let graph_b = engine.manifest.batch_eval;
+    let art = format!("{model}__{task}__fwd");
+    let n_out: usize = {
+        let a = engine
+            .manifest
+            .artifacts
+            .get(&art)
+            .ok_or_else(|| anyhow!("missing fwd artifact {art}"))?;
+        a.outputs[0].shape.iter().product::<usize>() / graph_b
+    };
+    // Per-member device literals, built once.
+    let mut lits = Vec::with_capacity(specs.len());
+    for s in &specs {
+        let (hm, fm) = mask_literals(&s.state)?;
+        let params = lit_f32_shaped(&[s.state.params.len()], &s.state.params)?;
+        lits.push((params, hm, fm));
+    }
+    let routes: Vec<MemberRoute> = specs.iter().map(|s| s.route.clone()).collect();
+    let mut queues: Vec<VecDeque<FamilyRequest>> = specs.iter().map(|_| VecDeque::new()).collect();
+    let mut served = vec![0usize; specs.len()];
+    let mut stats = FamilyStats::default();
+    let mut open = true;
+
+    fn enqueue(
+        req: FamilyRequest,
+        routes: &[MemberRoute],
+        queues: &mut [VecDeque<FamilyRequest>],
+        max_batch: usize,
+        pressure: usize,
+        stats: &mut FamilyStats,
+    ) {
+        let depths: Vec<usize> = queues.iter().map(VecDeque::len).collect();
+        let under_pressure = pressure > 0 && depths.iter().sum::<usize>() >= pressure;
+        let i = route(req.sla.as_ref(), routes, &depths, max_batch, pressure);
+        if under_pressure && i == routes.len() - 1 {
+            stats.pressure_reroutes += 1;
+        }
+        queues[i].push_back(req);
+    }
+
+    // Serve until the channel closes AND every queue is flushed.
+    while open || queues.iter().any(|q| !q.is_empty()) {
+        // drain everything already waiting on the channel
+        loop {
+            match rx.try_recv() {
+                Ok(r) => enqueue(r, &routes, &mut queues, b, cfg.pressure, &mut stats),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if queues.iter().all(|q| q.is_empty()) {
+            if !open {
+                break;
+            }
+            // idle: block for the next request (or shutdown)
+            match rx.recv() {
+                Ok(r) => enqueue(r, &routes, &mut queues, b, cfg.pressure, &mut stats),
+                Err(_) => open = false,
+            }
+            continue;
+        }
+        // serve the member whose head request has waited longest
+        let mi = queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(_, q)| q.front().map(|r| r.submitted).unwrap_or_else(Instant::now))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        // dynamic batching: let stragglers join this member's batch
+        if open {
+            let deadline = Instant::now() + cfg.max_wait;
+            while queues[mi].len() < b {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => enqueue(r, &routes, &mut queues, b, cfg.pressure, &mut stats),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        let take = queues[mi].len().min(b);
+        let batch: Vec<FamilyRequest> = queues[mi].drain(..take).collect();
+        // pad to the static graph batch and execute with this member's
+        // params/masks; the compiled fwd executable is shared by every
+        // member (one cache key), so only the first batch compiles
+        let t0 = Instant::now();
+        let ids =
+            super::pad_ids(batch.iter().map(|r| r.ids.as_slice()), graph_b, minfo.seq_len);
+        let (params, hm, fm) = &lits[mi];
+        let exe = engine.executable(&art)?;
+        let out = Engine::run_exe(
+            &exe,
+            &[params.clone(), lit_i32(&[graph_b, minfo.seq_len], &ids)?, hm.clone(), fm.clone()],
+        )?;
+        let logits = lit_to_f32(&out[0])?;
+        stats.busy_time += t0.elapsed();
+        stats.batches += 1;
+        served[mi] += batch.len();
+        for (k, r) in batch.iter().enumerate() {
+            stats.requests += 1;
+            let _ = r.reply.send(FamilyReply {
+                logits: logits[k * n_out..(k + 1) * n_out].to_vec(),
+                member: specs[mi].tag.clone(),
+                member_speedup: specs[mi].route.est_speedup,
+                queue_time: t0.duration_since(r.submitted),
+                batch_size: batch.len(),
+                latency: r.submitted.elapsed(),
+            });
+        }
+    }
+    let (builds, hits) = engine.cache_stats();
+    stats.cache_builds = builds;
+    stats.cache_hits = hits;
+    stats.per_member =
+        specs.iter().zip(&served).map(|(s, &n)| (s.tag.clone(), n)).collect();
+    Ok(stats)
+}
+
+// ------------------------------------------------------------ reporting
+
+/// Per-class latency/SLA report (client-side aggregation).
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    /// workload-class label
+    pub class: String,
+    /// requests in the class
+    pub n: usize,
+    /// median end-to-end latency
+    pub p50: Duration,
+    /// 99th-percentile end-to-end latency
+    pub p99: Duration,
+    /// fraction of requests whose latency met their SLA bound
+    pub hit_rate: f64,
+}
+
+/// Aggregate `(class, latency, sla_hit)` rows into per-class reports,
+/// sorted by class name.
+pub fn summarize(rows: &[(String, Duration, bool)]) -> Vec<ClassReport> {
+    use std::collections::BTreeMap;
+    let mut by: BTreeMap<&str, (Vec<f64>, usize)> = BTreeMap::new();
+    for (class, lat, hit) in rows {
+        let e = by.entry(class.as_str()).or_default();
+        e.0.push(lat.as_secs_f64());
+        e.1 += usize::from(*hit);
+    }
+    by.into_iter()
+        .map(|(class, (mut lats, hits))| {
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ClassReport {
+                class: class.to_string(),
+                n: lats.len(),
+                p50: Duration::from_secs_f64(percentile(&lats, 0.50)),
+                p99: Duration::from_secs_f64(percentile(&lats, 0.99)),
+                hit_rate: hits as f64 / lats.len().max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (q in [0, 1]).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ArtifactKey, CompileCache};
+
+    fn routes() -> Vec<MemberRoute> {
+        // sorted ascending by speedup, as `start` guarantees
+        vec![
+            MemberRoute { tag: "dense".into(), est_speedup: 1.0, est_batch_time: 80e-3 },
+            MemberRoute { tag: "2x".into(), est_speedup: 2.1, est_batch_time: 38e-3 },
+            MemberRoute { tag: "4x".into(), est_speedup: 4.3, est_batch_time: 19e-3 },
+        ]
+    }
+
+    fn sla(max_ms: Option<u64>, min_speedup: Option<f64>) -> Sla {
+        Sla {
+            class: "t".into(),
+            max_latency: max_ms.map(Duration::from_millis),
+            min_speedup,
+        }
+    }
+
+    #[test]
+    fn route_no_sla_prefers_most_accurate() {
+        assert_eq!(route(None, &routes(), &[0, 0, 0], 8, 0), 0);
+    }
+
+    #[test]
+    fn route_min_speedup_picks_most_accurate_qualifier() {
+        let s = sla(None, Some(2.0));
+        assert_eq!(route(Some(&s), &routes(), &[0, 0, 0], 8, 0), 1);
+        let s = sla(None, Some(4.0));
+        assert_eq!(route(Some(&s), &routes(), &[0, 0, 0], 8, 0), 2);
+        // unsatisfiable → fastest (best effort)
+        let s = sla(None, Some(9.0));
+        assert_eq!(route(Some(&s), &routes(), &[0, 0, 0], 8, 0), 2);
+    }
+
+    #[test]
+    fn route_max_latency_uses_queue_depth_admission_estimate() {
+        // 100ms bound: dense (80ms) fits when idle
+        let s = sla(Some(100), None);
+        assert_eq!(route(Some(&s), &routes(), &[0, 0, 0], 8, 0), 0);
+        // 16 dense requests = 2 pending batches (160ms of worker time):
+        // dense adds its own 3rd batch (240ms > 200) but the 2x member
+        // rides the backlog at 160 + 38 = 198ms ≤ 200 → spill to 2x
+        let s = sla(Some(200), None);
+        assert_eq!(route(Some(&s), &routes(), &[16, 0, 0], 8, 0), 1);
+        // tighter 185ms bound also excludes 2x (198) → 4x (179)
+        let s = sla(Some(185), None);
+        assert_eq!(route(Some(&s), &routes(), &[16, 0, 0], 8, 0), 2);
+        // a bound nothing meets even idle → fastest
+        let s = sla(Some(5), None);
+        assert_eq!(route(Some(&s), &routes(), &[0, 0, 0], 8, 0), 2);
+    }
+
+    #[test]
+    fn route_admission_counts_cross_queue_backlog() {
+        // One worker serves every queue oldest-first, so a 16-deep 2x
+        // queue (2 × 38ms pending) delays dense too: dense estimates
+        // 76 + 80 = 156ms > 100 even though its own queue is empty;
+        // joining the 2x backlog adds a whole batch (76 + 38 = 114);
+        // only 4x (76 + 19 = 95ms) admits under a 100ms bound.
+        let s = sla(Some(100), None);
+        assert_eq!(route(Some(&s), &routes(), &[0, 16, 0], 8, 0), 2);
+    }
+
+    #[test]
+    fn route_pressure_overrides_everything() {
+        let s = sla(Some(1_000), Some(1.0)); // dense would qualify
+        assert_eq!(route(Some(&s), &routes(), &[4, 4, 4], 8, 12), 2);
+        assert_eq!(route(None, &routes(), &[12, 0, 0], 8, 12), 2);
+        // pressure disabled (0) → normal policy
+        assert_eq!(route(None, &routes(), &[12, 0, 0], 8, 0), 0);
+    }
+
+    #[test]
+    fn route_combined_speedup_and_latency_constraints() {
+        // min_speedup 2 excludes dense; 30ms bound excludes 2x (38ms)
+        let s = sla(Some(30), Some(2.0));
+        assert_eq!(route(Some(&s), &routes(), &[0, 0, 0], 8, 0), 2);
+    }
+
+    #[test]
+    fn summarize_percentiles_and_hit_rate() {
+        let ms = Duration::from_millis;
+        let mut rows = Vec::new();
+        for i in 1..=100u64 {
+            rows.push(("a".to_string(), ms(i), i <= 90));
+        }
+        rows.push(("b".to_string(), ms(7), true));
+        let reps = summarize(&rows);
+        assert_eq!(reps.len(), 2);
+        let a = &reps[0];
+        assert_eq!(a.class, "a");
+        assert_eq!(a.n, 100);
+        assert!((a.hit_rate - 0.90).abs() < 1e-9);
+        assert!(a.p50 >= ms(49) && a.p50 <= ms(52), "{:?}", a.p50);
+        assert!(a.p99 >= ms(98), "{:?}", a.p99);
+        let b = &reps[1];
+        assert_eq!((b.n, b.p50, b.hit_rate), (1, ms(7), 1.0));
+    }
+
+    #[test]
+    fn family_members_share_one_compiled_artifact() {
+        // Acceptance: each compiled artifact is built at most once
+        // across the family. All masked variants of one (model, task)
+        // map to the same (artifact, batch-shape) cache key, so N
+        // members × M requests produce exactly one build; a
+        // shape-specialized variant gets its own key and one build.
+        let cache: CompileCache<&'static str> = CompileCache::new();
+        let shared = ArtifactKey::new("bert__sst2__fwd", 8, 128);
+        for _member in 0..3 {
+            for _req in 0..4 {
+                let exe = cache.get_or_build(&shared.encode(), || Ok("exe")).unwrap();
+                assert_eq!(*exe, "exe");
+            }
+        }
+        assert_eq!(cache.builds(), 1, "shared graph compiled more than once");
+        assert_eq!(cache.hits(), 11);
+        let spec = ArtifactKey::new("spec_bert_sst2_4x", 8, 128);
+        cache.get_or_build(&spec.encode(), || Ok("spec")).unwrap();
+        assert_eq!(cache.builds(), 2);
+    }
+
+    #[test]
+    fn start_rejects_empty_and_mixed_families() {
+        let t = LatencyTable {
+            model: "m".into(),
+            device: "test".into(),
+            regime: "throughput".into(),
+            attn: vec![0.0, 1e-3, 2e-3],
+            mlp: vec![(8, 4e-3), (0, 0.0)],
+            overhead: 1e-3,
+        };
+        let cfg = || FamilyCfg {
+            artifacts: std::path::PathBuf::from("artifacts"),
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            pressure: 0,
+        };
+        assert!(start(cfg(), vec![], &t).is_err());
+        // members disagreeing on (model, task) are rejected up front
+        let (mi, ti, _st) = crate::models::tests_support::mini_state();
+        let a = crate::models::ModelState::init(&mi, "task-a", &ti, 0);
+        let b = crate::models::ModelState::init(&mi, "task-b", &ti, 1);
+        assert!(start(cfg(), vec![("a".into(), a), ("b".into(), b)], &t).is_err());
+    }
+}

@@ -15,6 +15,12 @@
 //!
 //! tokio is unavailable offline; std threads + channels implement the
 //! same event loop (DESIGN.md §4).
+//!
+//! The [`family`] submodule generalizes this single-model loop to a
+//! whole SPDY-produced model family behind one front end, with
+//! per-request SLA routing and per-variant batch queues (DESIGN.md §6).
+
+pub mod family;
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -27,40 +33,58 @@ use crate::eval::mask_literals;
 use crate::models::ModelState;
 use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine};
 
+/// One queued inference request (built by [`ServerHandle::submit`]).
 pub struct Request {
+    /// token ids (padded to the graph's seq_len by the worker)
     pub ids: Vec<i32>,
+    /// submission timestamp (queue-time accounting)
     pub submitted: Instant,
+    /// reply channel
     pub reply: mpsc::Sender<Reply>,
 }
 
+/// Reply for one request.
 #[derive(Clone, Debug)]
 pub struct Reply {
     /// task logits for this example
     pub logits: Vec<f32>,
+    /// time spent queued before the batch launched
     pub queue_time: Duration,
+    /// number of real requests in the executed batch
     pub batch_size: usize,
+    /// end-to-end latency (submit → reply)
     pub latency: Duration,
 }
 
+/// Single-model server configuration.
 pub struct ServerCfg {
+    /// artifact directory (manifest.json + HLO files)
     pub artifacts: PathBuf,
+    /// max requests per executed batch (clamped to the graph batch)
     pub max_batch: usize,
+    /// how long a batch waits for stragglers before launching
     pub max_wait: Duration,
 }
 
+/// Handle to a running single-model server.
 pub struct ServerHandle {
     tx: Option<mpsc::Sender<Request>>,
     worker: Option<JoinHandle<Result<ServerStats>>>,
 }
 
+/// Aggregate serving statistics returned by [`ServerHandle::shutdown`].
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
+    /// total requests served
     pub requests: usize,
+    /// total executed batches
     pub batches: usize,
+    /// cumulative execution time
     pub busy_time: Duration,
 }
 
 impl ServerHandle {
+    /// Enqueue a request; the receiver yields the [`Reply`].
     pub fn submit(&self, ids: Vec<i32>) -> Result<mpsc::Receiver<Reply>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
@@ -77,6 +101,7 @@ impl ServerHandle {
         Ok(rx.recv()?)
     }
 
+    /// Stop accepting requests, drain the queue, and return stats.
     pub fn shutdown(mut self) -> Result<ServerStats> {
         drop(self.tx.take());
         self.worker
@@ -95,6 +120,23 @@ pub fn start(cfg: ServerCfg, state: ModelState) -> ServerHandle {
         .spawn(move || serve_loop(cfg, state, rx))
         .expect("spawn server");
     ServerHandle { tx: Some(tx), worker: Some(worker) }
+}
+
+/// Pad per-request token ids into one flat `[graph_b, seq_len]` id
+/// buffer (XLA shapes are static: short rows pad with id 0, missing
+/// batch rows are all-zero).
+pub(crate) fn pad_ids<'a, I>(ids: I, graph_b: usize, seq_len: usize) -> Vec<i32>
+where
+    I: Iterator<Item = &'a [i32]>,
+{
+    let mut out = Vec::with_capacity(graph_b * seq_len);
+    for row in ids {
+        let mut v = row.to_vec();
+        v.resize(seq_len, 0);
+        out.extend_from_slice(&v);
+    }
+    out.resize(graph_b * seq_len, 0);
+    out
 }
 
 fn serve_loop(cfg: ServerCfg, state: ModelState, rx: mpsc::Receiver<Request>) -> Result<ServerStats> {
@@ -134,13 +176,7 @@ fn serve_loop(cfg: ServerCfg, state: ModelState, rx: mpsc::Receiver<Request>) ->
         }
         // pad to the graph batch (XLA shapes are static)
         let t0 = Instant::now();
-        let mut ids = Vec::with_capacity(graph_b * minfo.seq_len);
-        for r in &batch {
-            let mut v = r.ids.clone();
-            v.resize(minfo.seq_len, 0);
-            ids.extend_from_slice(&v);
-        }
-        ids.resize(graph_b * minfo.seq_len, 0);
+        let ids = pad_ids(batch.iter().map(|r| r.ids.as_slice()), graph_b, minfo.seq_len);
         let out = Engine::run_exe(
             &exe,
             &[params.clone(), lit_i32(&[graph_b, minfo.seq_len], &ids)?, hm.clone(), fm.clone()],
@@ -166,6 +202,14 @@ fn serve_loop(cfg: ServerCfg, state: ModelState, rx: mpsc::Receiver<Request>) ->
 mod tests {
     // The serving loop needs real artifacts; covered by
     // rust/tests/integration_pipeline.rs. Here we only test pure logic.
+
+    #[test]
+    fn pad_ids_static_shape() {
+        let a = vec![1, 2, 3];
+        let b = vec![4];
+        let ids = super::pad_ids([a.as_slice(), b.as_slice()].into_iter(), 3, 4);
+        assert_eq!(ids, vec![1, 2, 3, 0, 4, 0, 0, 0, 0, 0, 0, 0]);
+    }
 
     #[test]
     fn server_cfg_defaults_sane() {

@@ -244,7 +244,7 @@ pub fn load_sized(info: &ModelInfo, task: &str, n_train: usize, n_eval: usize) -
 }
 
 impl Dataset {
-    /// Pack examples[range] into (ids, labels) batch vectors, padding by
+    /// Pack `examples[range]` into (ids, labels) batch vectors, padding by
     /// cycling (datasets here are always ≥ batch).
     pub fn batch(&self, idxs: &[usize]) -> (Vec<i32>, Vec<i32>) {
         let mut ids = Vec::with_capacity(idxs.len() * self.seq_len);

@@ -11,9 +11,11 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use crate::baselines;
+use crate::coordinator::family as famserve;
 use crate::data::{self, Dataset};
 use crate::eval::{self, EvalResult};
 use crate::latency::{self, ArchDims, Device, LatencyTable};
+use crate::models::family::{FamilyManifest, FamilyMember};
 use crate::models::ModelState;
 use crate::pruner::{self, PruneCfg, TargetMode};
 use crate::quant;
@@ -799,6 +801,187 @@ pub fn fig8(ctx: &ExpCtx) -> Result<()> {
     ctx.write_result("fig8", &Json::obj(vec![("rows", Json::Arr(rows))]))
 }
 
+// ===================================================================
+// family: App. F — emit a model family, serve it behind one SLA-aware
+// coordinator, report per-class latency percentiles + SLA-hit rate
+// ===================================================================
+
+/// Write the family manifest + per-member checkpoints for a finished
+/// gradual run (paper App. F: one run, a whole certified family). The
+/// dense teacher becomes the `"dense"` member; each SPDY stage becomes
+/// a `"<target>x"` member carrying its certified profile/speedup.
+pub fn emit_family(
+    ctx: &ExpCtx,
+    dense: &ModelState,
+    stages: &[pruner::StageResult],
+    table: &LatencyTable,
+) -> Result<FamilyManifest> {
+    let (model, task) = (dense.model.clone(), dense.task.clone());
+    let dir = ctx.runs.join(format!("family_{model}_{task}"));
+    std::fs::create_dir_all(&dir)?;
+    let mut fam = FamilyManifest::new(&model, &task, &table.regime);
+    let dense_profile = dense.masks.summary();
+    dense.save(&dir.join("dense.zlm"))?;
+    fam.push(FamilyMember {
+        tag: "dense".into(),
+        ckpt: "dense.zlm".into(),
+        target: 1.0,
+        est_speedup: table.speedup(&dense_profile),
+        profile: dense_profile,
+    });
+    for s in stages {
+        let tag = format!("{:.1}x", s.report.target);
+        let ckpt = format!("{tag}.zlm");
+        s.state.save(&dir.join(&ckpt))?;
+        fam.push(FamilyMember {
+            tag,
+            ckpt,
+            target: s.report.target,
+            est_speedup: s.report.est_speedup,
+            profile: s.report.layer_profile.clone(),
+        });
+    }
+    let path = dir.join("family.json");
+    fam.save(&path)?;
+    println!("[family] wrote {} ({} members)", path.display(), fam.members.len());
+    Ok(fam)
+}
+
+/// Fire a mixed-SLA workload at a running family coordinator: a
+/// round-robin of best-effort (no SLA), `interactive` (latency-bound),
+/// and `cheap` (min-speedup) classes, all submitted up front so the
+/// queues see real pressure. A request counts as an SLA hit only if
+/// its observed latency met the bound AND the member that served it
+/// certified the requested speedup. Returns per-request
+/// `(class, latency, sla_hit)` rows for [`famserve::summarize`].
+pub fn mixed_workload(
+    handle: &famserve::FamilyHandle,
+    ds: &Dataset,
+    n: usize,
+    interactive_bound: std::time::Duration,
+    cheap_speedup: f64,
+) -> Result<Vec<(String, std::time::Duration, bool)>> {
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let ex = &ds.dev[i % ds.dev.len()];
+        let sla = match i % 3 {
+            0 => None,
+            1 => Some(famserve::Sla {
+                class: "interactive".into(),
+                max_latency: Some(interactive_bound),
+                min_speedup: None,
+            }),
+            _ => Some(famserve::Sla {
+                class: "cheap".into(),
+                max_latency: None,
+                min_speedup: Some(cheap_speedup),
+            }),
+        };
+        let class = sla.as_ref().map(|s| s.class.clone()).unwrap_or_else(|| "best-effort".into());
+        let bound = sla.as_ref().and_then(|s| s.max_latency);
+        let min_s = sla.as_ref().and_then(|s| s.min_speedup);
+        pending.push((class, bound, min_s, handle.submit(ex.ids.clone(), sla)?));
+    }
+    let mut rows = Vec::with_capacity(n);
+    for (class, bound, min_s, rx) in pending {
+        let reply = rx.recv()?;
+        let latency_ok = bound.map(|b| reply.latency <= b).unwrap_or(true);
+        let speedup_ok = min_s.map(|m| reply.member_speedup + 1e-9 >= m).unwrap_or(true);
+        rows.push((class, reply.latency, latency_ok && speedup_ok));
+    }
+    Ok(rows)
+}
+
+/// Family-serving experiment: gradual-prune a ≥2-member family, emit
+/// its manifest, serve it behind the SLA-aware coordinator, and write
+/// per-class latency/SLA results.
+pub fn family(ctx: &ExpCtx) -> Result<()> {
+    let (model, task) = ("bert-syn-base", "sst2-syn");
+    let ds = ctx.dataset(model, task);
+    let teacher = ctx.teacher(model, task, &ds)?;
+    let table = ctx.table(model, "throughput")?;
+    let targets: Vec<f64> = if ctx.fast { vec![2.0] } else { vec![1.5, 3.0] };
+    let stages = pruner::gradual(
+        &ctx.engine,
+        teacher.clone(),
+        &ds,
+        &table,
+        &targets,
+        &ctx.prune_cfg(),
+        &ctx.ft_cfg(true),
+        Some(teacher.params.clone()),
+    )?;
+    let fam = emit_family(ctx, &teacher, &stages, &table)?;
+    let base = ctx.runs.join(format!("family_{model}_{task}"));
+    let members: Vec<(String, ModelState)> =
+        fam.load_states(&base)?.into_iter().map(|(m, st)| (m.tag, st)).collect();
+    let minfo = ctx.engine.manifest.model(model).clone();
+    let handle = famserve::start(
+        famserve::FamilyCfg {
+            artifacts: ctx.engine.art_dir().to_path_buf(),
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(2),
+            pressure: 64,
+        },
+        members,
+        &table,
+    )?;
+    let n = if ctx.fast { 48 } else { 120 };
+    // interactive bound: a bit under one dense batched fwd, so latency-
+    // sensitive requests must spill to a pruned member under load
+    let bound = std::time::Duration::from_secs_f64(table.dense_time(minfo.n_layers) * 0.8);
+    let rows = mixed_workload(&handle, &ds, n, bound, targets[0].min(2.0))?;
+    let stats = handle.shutdown()?;
+    let mut out_rows = Vec::new();
+    for r in famserve::summarize(&rows) {
+        println!(
+            "  family [{:<12}] n={:<4} p50={:.1}ms p99={:.1}ms sla-hit={:.0}%",
+            r.class,
+            r.n,
+            r.p50.as_secs_f64() * 1e3,
+            r.p99.as_secs_f64() * 1e3,
+            r.hit_rate * 100.0
+        );
+        out_rows.push(Json::obj(vec![
+            ("class", Json::Str(r.class.clone())),
+            ("n", Json::Num(r.n as f64)),
+            ("p50_ms", Json::Num(r.p50.as_secs_f64() * 1e3)),
+            ("p99_ms", Json::Num(r.p99.as_secs_f64() * 1e3)),
+            ("sla_hit_rate", Json::Num(r.hit_rate)),
+        ]));
+    }
+    println!(
+        "  family served {} reqs / {} batches, {} compile(s), {} cache hit(s), per-member {:?}",
+        stats.requests, stats.batches, stats.cache_builds, stats.cache_hits, stats.per_member
+    );
+    ctx.write_result(
+        "family",
+        &Json::obj(vec![
+            ("classes", Json::Arr(out_rows)),
+            ("requests", Json::Num(stats.requests as f64)),
+            ("batches", Json::Num(stats.batches as f64)),
+            ("cache_builds", Json::Num(stats.cache_builds as f64)),
+            ("cache_hits", Json::Num(stats.cache_hits as f64)),
+            ("pressure_reroutes", Json::Num(stats.pressure_reroutes as f64)),
+            (
+                "per_member",
+                Json::Arr(
+                    stats
+                        .per_member
+                        .iter()
+                        .map(|(t, n)| {
+                            Json::obj(vec![
+                                ("member", Json::Str(t.clone())),
+                                ("requests", Json::Num(*n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )
+}
+
 /// Dispatch by experiment id.
 pub fn run(ctx: &ExpCtx, id: &str) -> Result<()> {
     match id {
@@ -815,10 +998,11 @@ pub fn run(ctx: &ExpCtx, id: &str) -> Result<()> {
         "table5" => table5(ctx),
         "table7" => table7(ctx),
         "table8" => table8(ctx),
+        "family" => family(ctx),
         "all" => {
             for id in [
                 "table7", "table3", "table2", "table4", "fig2", "fig3", "table5", "fig4", "fig5",
-                "fig6", "table1", "table8", "fig8",
+                "fig6", "table1", "table8", "fig8", "family",
             ] {
                 println!("=== experiment {id} ===");
                 run(ctx, id)?;

@@ -22,14 +22,19 @@ use crate::runtime::{lit_f32_shaped, lit_i32, Engine};
 use crate::util::bench::Bench;
 use crate::util::json::Json;
 
+/// Which device a latency table describes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Device {
+    /// the real path: measured through the CPU PJRT runtime
     CpuPjrt,
+    /// analytic V100 model (near-linear in width, paper Tables 3 & 7)
     V100Sim,
+    /// analytic A100 model (saturates around 4.4x, paper Table 3)
     A100Sim,
 }
 
 impl Device {
+    /// Parse a CLI device name (`cpu`, `v100`, `a100`, or `*-sim`/`-pjrt` forms).
     pub fn parse(s: &str) -> Result<Device> {
         match s {
             "cpu" | "cpu-pjrt" => Ok(Device::CpuPjrt),
@@ -39,6 +44,7 @@ impl Device {
         }
     }
 
+    /// Canonical table/device name (inverse of [`Device::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Device::CpuPjrt => "cpu-pjrt",
@@ -51,10 +57,13 @@ impl Device {
 /// Latency table for one (model, device, regime).
 #[derive(Clone, Debug)]
 pub struct LatencyTable {
+    /// model the table was measured/derived for
     pub model: String,
+    /// device name (see [`Device::name`])
     pub device: String,
-    pub regime: String, // "throughput" | "latency"
-    /// attn[h] = seconds with h heads remaining; attn[0] == 0 (dropped)
+    /// `"throughput"` (large batch) or `"latency"` (batch 1)
+    pub regime: String,
+    /// `attn[h]` = seconds with h heads remaining; `attn[0]` == 0 (dropped)
     pub attn: Vec<f64>,
     /// (intermediate width, seconds), decreasing width, plus (0, 0.0)
     pub mlp: Vec<(usize, f64)>,
@@ -64,6 +73,7 @@ pub struct LatencyTable {
 }
 
 impl LatencyTable {
+    /// Attention-block time with `heads` heads remaining.
     pub fn attn_time(&self, heads: usize) -> f64 {
         self.attn[heads.min(self.attn.len() - 1)]
     }
@@ -101,18 +111,21 @@ impl LatencyTable {
                 .sum::<f64>()
     }
 
+    /// End-to-end time of the dense model at `n_layers` layers.
     pub fn dense_time(&self, n_layers: usize) -> f64 {
         let dense_h = self.attn.len() - 1;
         let dense_f = self.mlp[0].0;
         self.model_time(&vec![(dense_h, dense_f); n_layers])
     }
 
+    /// Estimated speedup of a per-layer profile over the dense model.
     pub fn speedup(&self, profile: &[(usize, usize)]) -> f64 {
         self.dense_time(profile.len()) / self.model_time(profile)
     }
 
     // ----------------------------------------------------------- persist
 
+    /// Serialize to the on-disk JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
@@ -132,6 +145,7 @@ impl LatencyTable {
         ])
     }
 
+    /// Parse the on-disk JSON form.
     pub fn from_json(j: &Json) -> Result<LatencyTable> {
         let attn = j
             .get("attn")
@@ -162,6 +176,7 @@ impl LatencyTable {
         })
     }
 
+    /// Write the table as pretty JSON, creating parent directories.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(d) = path.parent() {
             std::fs::create_dir_all(d)?;
@@ -170,6 +185,7 @@ impl LatencyTable {
         Ok(())
     }
 
+    /// Load a table from disk.
     pub fn load(path: &Path) -> Result<LatencyTable> {
         let text = std::fs::read_to_string(path)?;
         LatencyTable::from_json(&Json::parse(&text).map_err(|e| anyhow!(e))?)
@@ -272,17 +288,26 @@ fn time_artifact(engine: &Engine, name: &str, bench: &Bench) -> Result<f64> {
 /// models so Table 3 can be reproduced at the paper's BERT-base scale).
 #[derive(Clone, Copy, Debug)]
 pub struct ArchDims {
+    /// hidden size
     pub d_model: usize,
+    /// attention heads
     pub n_heads: usize,
+    /// per-head dimension
     pub d_head: usize,
+    /// FFN intermediate width
     pub d_ff: usize,
+    /// vocabulary size (drives the un-prunable head overhead)
     pub vocab: usize,
+    /// transformer layers
     pub n_layers: usize,
+    /// batch size of the regime being modeled
     pub batch: usize,
+    /// sequence length of the regime being modeled
     pub seq: usize,
 }
 
 impl ArchDims {
+    /// BERT-base at the paper's measurement scale (Tables 3 & 7).
     pub fn bert_base_paper() -> ArchDims {
         ArchDims { d_model: 768, n_heads: 12, d_head: 64, d_ff: 3072, vocab: 30522, n_layers: 12, batch: 128, seq: 128 }
     }

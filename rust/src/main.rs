@@ -7,7 +7,8 @@
 //!   prune-gradual  --model M --task T --speedups 2,3,4 [--epochs E]
 //!   eval           --ckpt path [--split dev|test]
 //!   serve          --ckpt path [--batch B] [--wait-ms W]
-//!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|all> [--fast]
+//!   serve-family   --family runs/family_M_T/family.json [--requests N] [--pressure P]
+//!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|all> [--fast]
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --fast.
 
@@ -43,7 +44,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "ziplm — inference-aware structured pruning (NeurIPS'23 reproduction)\n\
-         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|experiment> [flags]\n\
+         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|experiment> [flags]\n\
          see README.md for the full flag reference"
     );
 }
@@ -60,6 +61,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "prune-gradual" => prune_gradual(args),
         "eval" => eval_cmd(args),
         "serve" => serve(args),
+        "serve-family" => serve_family(args),
         "experiment" => experiment(args),
         _ => {
             usage();
@@ -155,6 +157,8 @@ fn prune_gradual(args: &Args) -> Result<()> {
         );
         s.state.save(Path::new(&format!("runs/ziplm_{model}_{task}_{:.0}x.zlm", s.report.target)))?;
     }
+    // record the whole certified family for `serve-family` (App. F)
+    exp::emit_family(&ctx, &teacher, &stages, &table)?;
     Ok(())
 }
 
@@ -205,6 +209,66 @@ fn serve(args: &Args) -> Result<()> {
         n as f64 / wall,
         latencies[n / 2] * 1e3,
         latencies[(n as f64 * 0.95) as usize % n] * 1e3,
+    );
+    Ok(())
+}
+
+/// Serve a recorded model family behind the SLA-aware coordinator and
+/// fire a mixed workload at it (paper App. F made operational).
+fn serve_family(args: &Args) -> Result<()> {
+    let man_path = args
+        .get("family")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("runs/family_bert-syn-base_sst2-syn/family.json"));
+    let fam = ziplm::models::family::FamilyManifest::load(&man_path)?;
+    let base = man_path.parent().unwrap_or(Path::new(".")).to_path_buf();
+    let members: Vec<(String, ziplm::models::ModelState)> =
+        fam.load_states(&base)?.into_iter().map(|(m, st)| (m.tag, st)).collect();
+    println!(
+        "family {}/{}: {} members {:?}",
+        fam.model,
+        fam.task,
+        members.len(),
+        fam.members.iter().map(|m| m.tag.as_str()).collect::<Vec<_>>()
+    );
+    let ctx = ctx(args)?;
+    let table = ctx.table(&fam.model, &fam.regime)?;
+    let minfo = ctx.engine.manifest.model(&fam.model).clone();
+    let ds = ctx.dataset(&fam.model, &fam.task);
+    let handle = ziplm::coordinator::family::start(
+        ziplm::coordinator::family::FamilyCfg {
+            artifacts: artifacts_dir(args),
+            max_batch: args.usize_or("batch", 8),
+            max_wait: std::time::Duration::from_millis(args.u64_or("wait-ms", 2)),
+            pressure: args.usize_or("pressure", 64),
+        },
+        members,
+        &table,
+    )?;
+    let n = args.usize_or("requests", 96);
+    let bound =
+        std::time::Duration::from_secs_f64(table.dense_time(minfo.n_layers) * 0.8);
+    let min_speedup = fam
+        .members
+        .iter()
+        .map(|m| m.est_speedup)
+        .fold(1.0f64, f64::max)
+        .min(2.0);
+    let rows = exp::mixed_workload(&handle, &ds, n, bound, min_speedup)?;
+    let stats = handle.shutdown()?;
+    for r in ziplm::coordinator::family::summarize(&rows) {
+        println!(
+            "  [{:<12}] n={:<4} p50={:.1}ms p99={:.1}ms sla-hit={:.0}%",
+            r.class,
+            r.n,
+            r.p50.as_secs_f64() * 1e3,
+            r.p99.as_secs_f64() * 1e3,
+            r.hit_rate * 100.0
+        );
+    }
+    println!(
+        "served {} requests / {} batches; {} compile(s), {} cache hit(s); per-member {:?}",
+        stats.requests, stats.batches, stats.cache_builds, stats.cache_hits, stats.per_member
     );
     Ok(())
 }

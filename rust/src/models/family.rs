@@ -1,0 +1,253 @@
+//! Family manifest: the deliverable of a gradual ZipLM run.
+//!
+//! The paper's headline property (§3.2, App. F) is that one gradual
+//! run emits an *entire family* of compressed models, each guaranteed
+//! to meet its inference target. The manifest is the on-disk record of
+//! that family: which checkpoints exist, what speedup each was pruned
+//! for, what the latency table estimated, and the per-layer anatomy
+//! the SPDY search settled on. It is emitted by the experiment drivers
+//! (`exp/`) and the `prune-gradual` CLI after the SPDY stages finish,
+//! and consumed here on the `models/` side to load the member
+//! checkpoints behind the family coordinator (`coordinator/family`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::ModelState;
+use crate::util::json::Json;
+
+/// One member of a served model family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FamilyMember {
+    /// display/routing tag, e.g. `"dense"` or `"3x"`
+    pub tag: String,
+    /// checkpoint file, relative to the manifest's directory
+    pub ckpt: String,
+    /// requested speedup target (1.0 for the dense member)
+    pub target: f64,
+    /// latency-table speedup estimate the SPDY search certified
+    pub est_speedup: f64,
+    /// per-layer (heads alive, FFN columns alive) profile
+    pub profile: Vec<(usize, usize)>,
+}
+
+/// The full family for one (model, task, latency regime).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FamilyManifest {
+    /// manifest model name (all members share it)
+    pub model: String,
+    /// task name (all members share it)
+    pub task: String,
+    /// latency-table regime the targets were certified against
+    pub regime: String,
+    /// members ordered by ascending `est_speedup` (dense first)
+    pub members: Vec<FamilyMember>,
+}
+
+impl FamilyManifest {
+    /// Empty family for (model, task, regime).
+    pub fn new(model: &str, task: &str, regime: &str) -> FamilyManifest {
+        FamilyManifest {
+            model: model.to_string(),
+            task: task.to_string(),
+            regime: regime.to_string(),
+            members: Vec::new(),
+        }
+    }
+
+    /// Insert a member, keeping `members` sorted by ascending
+    /// `est_speedup` (the router relies on this order).
+    pub fn push(&mut self, member: FamilyMember) {
+        let at = self
+            .members
+            .iter()
+            .position(|m| m.est_speedup > member.est_speedup)
+            .unwrap_or(self.members.len());
+        self.members.insert(at, member);
+    }
+
+    /// The fastest member (queue-pressure fallback target).
+    pub fn fastest(&self) -> Option<&FamilyMember> {
+        self.members.last()
+    }
+
+    /// The most accurate (slowest) member whose certified speedup is at
+    /// least `min_speedup`; `None` when no member qualifies.
+    pub fn best_for_speedup(&self, min_speedup: f64) -> Option<&FamilyMember> {
+        self.members.iter().find(|m| m.est_speedup + 1e-9 >= min_speedup)
+    }
+
+    /// Serialize to the on-disk JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("task", Json::Str(self.task.clone())),
+            ("regime", Json::Str(self.regime.clone())),
+            (
+                "members",
+                Json::Arr(
+                    self.members
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("tag", Json::Str(m.tag.clone())),
+                                ("ckpt", Json::Str(m.ckpt.clone())),
+                                ("target", Json::Num(m.target)),
+                                ("est_speedup", Json::Num(m.est_speedup)),
+                                (
+                                    "profile",
+                                    Json::Arr(
+                                        m.profile
+                                            .iter()
+                                            .map(|&(h, f)| {
+                                                Json::Arr(vec![
+                                                    Json::Num(h as f64),
+                                                    Json::Num(f as f64),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the on-disk JSON form (members are re-sorted defensively).
+    pub fn from_json(j: &Json) -> Result<FamilyManifest> {
+        let mut out = FamilyManifest::new(
+            j.req_str("model"),
+            j.req_str("task"),
+            j.get("regime").and_then(Json::as_str).unwrap_or("throughput"),
+        );
+        for m in j.get("members").and_then(Json::as_arr).unwrap_or(&[]) {
+            let profile = m
+                .get("profile")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|e| {
+                    (
+                        e.idx(0).and_then(Json::as_usize).unwrap_or(0),
+                        e.idx(1).and_then(Json::as_usize).unwrap_or(0),
+                    )
+                })
+                .collect();
+            out.push(FamilyMember {
+                tag: m.req_str("tag").to_string(),
+                ckpt: m.req_str("ckpt").to_string(),
+                target: m.get("target").and_then(Json::as_f64).unwrap_or(1.0),
+                est_speedup: m.get("est_speedup").and_then(Json::as_f64).unwrap_or(1.0),
+                profile,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Write the manifest as pretty JSON, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(d) = path.parent() {
+            std::fs::create_dir_all(d)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a manifest from disk.
+    pub fn load(path: &Path) -> Result<FamilyManifest> {
+        let text = std::fs::read_to_string(path)?;
+        FamilyManifest::from_json(&Json::parse(&text).map_err(|e| anyhow!(e))?)
+    }
+
+    /// Load every member checkpoint (paths resolved relative to
+    /// `base`, normally the manifest's directory) and sanity-check
+    /// that each matches the manifest's (model, task).
+    pub fn load_states(&self, base: &Path) -> Result<Vec<(FamilyMember, ModelState)>> {
+        let mut out = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            let st = ModelState::load(&base.join(&m.ckpt))?;
+            if st.model != self.model || st.task != self.task {
+                return Err(anyhow!(
+                    "family member `{}` is {}/{}, manifest says {}/{}",
+                    m.tag,
+                    st.model,
+                    st.task,
+                    self.model,
+                    self.task
+                ));
+            }
+            out.push((m.clone(), st));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn member(tag: &str, est: f64) -> FamilyMember {
+        FamilyMember {
+            tag: tag.into(),
+            ckpt: format!("{tag}.zlm"),
+            target: est,
+            est_speedup: est,
+            profile: vec![(2, 8), (1, 4)],
+        }
+    }
+
+    #[test]
+    fn push_keeps_speedup_order() {
+        let mut f = FamilyManifest::new("m", "t", "throughput");
+        f.push(member("3x", 3.1));
+        f.push(member("dense", 1.0));
+        f.push(member("2x", 2.2));
+        let tags: Vec<&str> = f.members.iter().map(|m| m.tag.as_str()).collect();
+        assert_eq!(tags, vec!["dense", "2x", "3x"]);
+        assert_eq!(f.fastest().unwrap().tag, "3x");
+    }
+
+    #[test]
+    fn best_for_speedup_picks_most_accurate_qualifier() {
+        let mut f = FamilyManifest::new("m", "t", "throughput");
+        for (tag, est) in [("dense", 1.0), ("2x", 2.2), ("3x", 3.1)] {
+            f.push(member(tag, est));
+        }
+        assert_eq!(f.best_for_speedup(2.0).unwrap().tag, "2x");
+        assert_eq!(f.best_for_speedup(2.2).unwrap().tag, "2x");
+        assert_eq!(f.best_for_speedup(3.0).unwrap().tag, "3x");
+        assert!(f.best_for_speedup(5.0).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut f = FamilyManifest::new("bert-syn-base", "sst2-syn", "latency");
+        f.push(member("dense", 1.0));
+        f.push(member("2x", 2.05));
+        let j = f.to_json();
+        let f2 = FamilyManifest::from_json(&j).unwrap();
+        assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_state_mismatch_detected() {
+        let dir = std::env::temp_dir().join("ziplm_family_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut f = FamilyManifest::new("mini2", "t", "throughput");
+        f.push(member("dense", 1.0));
+        let path = dir.join("family.json");
+        f.save(&path).unwrap();
+        let f2 = FamilyManifest::load(&path).unwrap();
+        assert_eq!(f, f2);
+        // a checkpoint whose (model, task) disagrees must be rejected
+        let (mi, ti, _st) = crate::models::tests_support::mini_state();
+        let st = ModelState::init(&mi, "other-task", &ti, 0);
+        st.save(&dir.join("dense.zlm")).unwrap();
+        assert!(f2.load_states(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

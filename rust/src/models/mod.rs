@@ -3,7 +3,11 @@
 //! weight plumbing the pruner needs.
 //!
 //! Shapes all come from the manifest (runtime/manifest.rs); this module
-//! never hard-codes a layout.
+//! never hard-codes a layout. The [`family`] submodule records whole
+//! SPDY-produced model families (checkpoint + certified speedup per
+//! member) for the family-serving coordinator.
+
+pub mod family;
 
 use std::io::{Read, Write};
 use std::path::Path;

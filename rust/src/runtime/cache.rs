@@ -1,0 +1,231 @@
+//! Shared compiled-artifact cache (DESIGN.md §6).
+//!
+//! Compiling an HLO artifact is the most expensive control-plane
+//! operation in the coordinator (hundreds of ms per graph), so every
+//! executable is built exactly once per process and shared from then
+//! on. The cache is keyed by [`ArtifactKey`] — *(artifact variant,
+//! batch shape)* — rather than by file path:
+//!
+//! * family members that share a graph (the masked `fwd` artifact is
+//!   identical for every pruned variant of one model — masks are
+//!   runtime inputs) collapse to ONE key and therefore one compile,
+//!   no matter how many variants the family coordinator serves;
+//! * shape-specialized exports (one materialized graph per variant,
+//!   table 8 / production serving) get distinct keys per variant and
+//!   batch shape, so they coexist without eviction fights.
+//!
+//! Concurrency follows PR 1's per-artifact compile gate: a per-key
+//! mutex makes check-then-compile atomic, so racing callers (the
+//! parallel database builds, multiple family queues) serialize per
+//! key while distinct keys still compile in parallel. Build and hit
+//! counters are exposed for the coordinator's serving stats and for
+//! the "each artifact compiled at most once across the family"
+//! acceptance test.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+/// Cache key for a compiled executable: which graph, at which shape.
+///
+/// `artifact` identifies the model variant's graph (for masked graphs
+/// that is one shared id per (model, task); for specialized exports it
+/// embeds the variant tag). `batch`/`seq` record the static input
+/// shape the graph was lowered at; use 0 when the dimension is baked
+/// into the artifact id.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// artifact id (manifest name or specialized-export name)
+    pub artifact: String,
+    /// static batch dimension of the lowered graph (0 = unspecified)
+    pub batch: usize,
+    /// static sequence length of the lowered graph (0 = unspecified)
+    pub seq: usize,
+}
+
+impl ArtifactKey {
+    /// Build a key from its parts.
+    pub fn new(artifact: impl Into<String>, batch: usize, seq: usize) -> ArtifactKey {
+        ArtifactKey { artifact: artifact.into(), batch, seq }
+    }
+
+    /// Canonical string form used as the cache map key.
+    pub fn encode(&self) -> String {
+        format!("{}@b{}s{}", self.artifact, self.batch, self.seq)
+    }
+}
+
+/// A build-once map from [`ArtifactKey`] strings to shared values.
+///
+/// `get_or_build` is the only write path: the first caller for a key
+/// runs the builder under that key's gate while other keys proceed
+/// concurrently; every later caller gets the cached `Arc`. Builder
+/// errors are propagated and nothing is cached, so a failed compile
+/// can be retried.
+pub struct CompileCache<V> {
+    entries: Mutex<HashMap<String, Arc<V>>>,
+    /// Per-key compile gates (PR 1): serialize per name so a value is
+    /// built exactly once while different keys build in parallel. The
+    /// map only grows, bounded by the number of distinct keys.
+    inflight: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    builds: AtomicUsize,
+    hits: AtomicUsize,
+}
+
+impl<V> CompileCache<V> {
+    /// Empty cache with zeroed counters.
+    pub fn new() -> CompileCache<V> {
+        CompileCache {
+            entries: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashMap::new()),
+            builds: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Fetch the value for `key`, building it (exactly once per key,
+    /// across threads) if absent.
+    pub fn get_or_build<F>(&self, key: &str, build: F) -> Result<Arc<V>>
+    where
+        F: FnOnce() -> Result<V>,
+    {
+        if let Some(v) = self.entries.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(v));
+        }
+        let gate = {
+            let mut inflight = self.inflight.lock().unwrap();
+            Arc::clone(inflight.entry(key.to_string()).or_default())
+        };
+        let _building = gate.lock().unwrap();
+        // re-check under the gate: a racing caller may have finished
+        if let Some(v) = self.entries.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(v));
+        }
+        let v = Arc::new(build()?);
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        self.entries.lock().unwrap().insert(key.to_string(), Arc::clone(&v));
+        Ok(v)
+    }
+
+    /// Cached value for `key`, if present (counts as a hit).
+    pub fn get(&self, key: &str) -> Option<Arc<V>> {
+        let v = self.entries.lock().unwrap().get(key).map(Arc::clone);
+        if v.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        v
+    }
+
+    /// Drop a cached value (memory control for block sweeps). Returns
+    /// whether an entry was removed. Outstanding `Arc`s stay valid.
+    pub fn evict(&self, key: &str) -> bool {
+        self.entries.lock().unwrap().remove(key).is_some()
+    }
+
+    /// Number of cached values.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether the cache holds no values.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How many times a builder ran to completion.
+    pub fn builds(&self) -> usize {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// How many lookups were served from cache.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+}
+
+impl<V> Default for CompileCache<V> {
+    fn default() -> Self {
+        CompileCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_encoding_distinguishes_shape_and_variant() {
+        let a = ArtifactKey::new("m__t__fwd", 8, 128);
+        let b = ArtifactKey::new("m__t__fwd", 16, 128);
+        let c = ArtifactKey::new("spec_m_t_2x", 8, 128);
+        assert_ne!(a.encode(), b.encode());
+        assert_ne!(a.encode(), c.encode());
+        assert_eq!(a.encode(), ArtifactKey::new("m__t__fwd", 8, 128).encode());
+    }
+
+    #[test]
+    fn builds_once_then_hits() {
+        let cache: CompileCache<usize> = CompileCache::new();
+        let k = ArtifactKey::new("art", 4, 16).encode();
+        let v1 = cache.get_or_build(&k, || Ok(7usize)).unwrap();
+        let v2 = cache.get_or_build(&k, || panic!("must not rebuild")).unwrap();
+        assert_eq!(*v1, 7);
+        assert_eq!(*v2, 7);
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn failed_build_is_retryable_and_uncounted() {
+        let cache: CompileCache<usize> = CompileCache::new();
+        assert!(cache.get_or_build("k", || Err(anyhow::anyhow!("boom"))).is_err());
+        assert_eq!(cache.builds(), 0);
+        let v = cache.get_or_build("k", || Ok(3usize)).unwrap();
+        assert_eq!(*v, 3);
+        assert_eq!(cache.builds(), 1);
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_exactly_once() {
+        let cache: CompileCache<u64> = CompileCache::new();
+        let attempts = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let v = cache
+                        .get_or_build("shared", || {
+                            attempts.fetch_add(1, Ordering::SeqCst);
+                            // widen the race window
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            Ok(42u64)
+                        })
+                        .unwrap();
+                    assert_eq!(*v, 42);
+                });
+            }
+        });
+        assert_eq!(attempts.load(Ordering::SeqCst), 1, "builder raced");
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(cache.hits(), 7);
+    }
+
+    #[test]
+    fn distinct_keys_build_independently_and_evict() {
+        let cache: CompileCache<usize> = CompileCache::new();
+        for (i, k) in ["a", "b", "c"].iter().enumerate() {
+            cache.get_or_build(k, || Ok(i)).unwrap();
+        }
+        assert_eq!(cache.builds(), 3);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.evict("b"));
+        assert!(!cache.evict("b"));
+        assert_eq!(cache.len(), 2);
+        // rebuilt after eviction
+        cache.get_or_build("b", || Ok(9)).unwrap();
+        assert_eq!(cache.builds(), 4);
+    }
+}

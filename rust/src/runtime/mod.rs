@@ -11,14 +11,16 @@
 //!
 //! Executables are compiled once and cached; Python never runs here.
 
+pub mod cache;
 pub mod manifest;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
+pub use cache::{ArtifactKey, CompileCache};
 pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TaskInfo};
 
 /// A host-side tensor paired with its logical shape (row-major f32).
@@ -80,18 +82,19 @@ pub fn lit_to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
     Ok(l.to_vec::<i32>()?)
 }
 
-/// The PJRT engine: one CPU client + a compiled-executable cache.
+/// The PJRT engine: one CPU client + a shared compiled-executable
+/// cache keyed by (artifact variant, batch shape).
 pub struct Engine {
     client: xla::PjRtClient,
     art_dir: PathBuf,
+    /// Typed view of `artifacts/manifest.json` — the single source of
+    /// truth for model configs, layouts, and artifact I/O signatures.
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-    /// Per-artifact compile gates: concurrent callers (the parallel
-    /// database build) serialize per name so an executable is compiled
-    /// exactly once, while different artifacts still compile in
-    /// parallel.
-    inflight: Mutex<HashMap<String, Arc<Mutex<()>>>>,
-    compile_count: Mutex<usize>,
+    /// Build-once executable cache (see [`cache`]): family members
+    /// that share a masked graph dedupe to one compile; per-key gates
+    /// keep concurrent database builds from compiling twice.
+    exe_cache: CompileCache<xla::PjRtLoadedExecutable>,
+    compile_count: AtomicUsize,
 }
 
 impl Engine {
@@ -106,9 +109,8 @@ impl Engine {
             client,
             art_dir: art_dir.to_path_buf(),
             manifest,
-            cache: Mutex::new(HashMap::new()),
-            inflight: Mutex::new(HashMap::new()),
-            compile_count: Mutex::new(0),
+            exe_cache: CompileCache::new(),
+            compile_count: AtomicUsize::new(0),
         })
     }
 
@@ -126,32 +128,39 @@ impl Engine {
         &self.art_dir
     }
 
-    /// Compile-or-fetch an executable by artifact name. Thread-safe:
-    /// a per-name gate makes the check-then-compile atomic, so
-    /// concurrent module builds never compile the same artifact twice.
-    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(Arc::clone(e));
-        }
-        let gate = {
-            let mut inflight = self.inflight.lock().unwrap();
-            Arc::clone(inflight.entry(name.to_string()).or_default())
-        };
-        let _compiling = gate.lock().unwrap();
-        // re-check under the gate: a racing caller may have finished
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(Arc::clone(e));
-        }
-        let info = self
+    /// Cache key for a manifest artifact: the recorded batch/seq of
+    /// the lowered graph (0 when the manifest does not record them —
+    /// the shape is then baked into the artifact id alone).
+    fn manifest_key(&self, name: &str) -> ArtifactKey {
+        let (b, s) = self
             .manifest
             .artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
-        let path = self.art_dir.join(&info.file);
-        let exe = self.compile_file(&path)?;
-        let exe = Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
-        Ok(exe)
+            .map(|a| (a.batch.unwrap_or(0), a.seq.unwrap_or(0)))
+            .unwrap_or((0, 0));
+        ArtifactKey::new(name, b, s)
+    }
+
+    /// Compile-or-fetch an executable by artifact name. Thread-safe:
+    /// the cache's per-key gate makes check-then-compile atomic, so
+    /// concurrent module builds never compile the same artifact twice.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.executable_keyed(&self.manifest_key(name))
+    }
+
+    /// Compile-or-fetch by explicit [`ArtifactKey`] (variant + batch
+    /// shape). Family members whose keys coincide — every masked
+    /// variant of one (model, task) shares the same `fwd` graph —
+    /// resolve to a single compiled executable.
+    pub fn executable_keyed(&self, key: &ArtifactKey) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.exe_cache.get_or_build(&key.encode(), || {
+            let info = self
+                .manifest
+                .artifacts
+                .get(&key.artifact)
+                .ok_or_else(|| anyhow!("unknown artifact `{}`", key.artifact))?;
+            self.compile_file(&self.art_dir.join(&info.file))
+        })
     }
 
     /// Compile an HLO-text file outside the manifest (specialized exports).
@@ -159,7 +168,7 @@ impl Engine {
         let proto = xla::HloModuleProto::from_text_file(path)
             .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        *self.compile_count.lock().unwrap() += 1;
+        self.compile_count.fetch_add(1, Ordering::Relaxed);
         Ok(self.client.compile(&comp)?)
     }
 
@@ -181,11 +190,17 @@ impl Engine {
 
     /// Number of PJRT compilations so far (perf accounting).
     pub fn compiles(&self) -> usize {
-        *self.compile_count.lock().unwrap()
+        self.compile_count.load(Ordering::Relaxed)
+    }
+
+    /// Executable-cache counters `(builds, hits)` — the family
+    /// coordinator reports these in its serving stats.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.exe_cache.builds(), self.exe_cache.hits())
     }
 
     /// Drop a cached executable (memory control for block sweeps).
     pub fn evict(&self, name: &str) {
-        self.cache.lock().unwrap().remove(name);
+        self.exe_cache.evict(&self.manifest_key(name).encode());
     }
 }

@@ -22,31 +22,41 @@ use crate::util::rng::Rng;
 /// One choosable level of a module: time (or params) + error prior.
 #[derive(Clone, Debug)]
 pub struct LevelOpt {
+    /// structures (heads or FFN columns) remaining at this level
     pub remaining: usize,
-    pub cost: f64,  // seconds (speedup mode) or params (sparsity mode)
-    pub prior: f64, // p_s from the database
+    /// seconds (speedup mode) or parameter count (sparsity mode)
+    pub cost: f64,
+    /// p_s error prior from the database (0 = dense, 1 = full drop)
+    pub prior: f64,
 }
 
 /// All levels for one prunable module (a layer's attn or FC).
 #[derive(Clone, Debug)]
 pub struct ModuleLevels {
+    /// transformer layer index
     pub layer: usize,
+    /// true for the attention module, false for the FFN
     pub is_attn: bool,
-    pub options: Vec<LevelOpt>, // options[0] = dense
+    /// choosable levels; `options[0]` is the dense level
+    pub options: Vec<LevelOpt>,
 }
 
+/// A full SPDY instance: all prunable modules plus fixed overhead.
 #[derive(Clone, Debug)]
 pub struct SpdyProblem {
+    /// all 2L prunable modules, in (attn, fc) per-layer order
     pub modules: Vec<ModuleLevels>,
     /// fixed cost outside prunable modules (embeddings/head)
     pub overhead: f64,
 }
 
 impl SpdyProblem {
+    /// Total cost with every module at its dense level.
     pub fn dense_cost(&self) -> f64 {
         self.overhead + self.modules.iter().map(|m| m.options[0].cost).sum::<f64>()
     }
 
+    /// Cheapest achievable total cost (every module at its cheapest level).
     pub fn min_cost(&self) -> f64 {
         self.overhead
             + self
@@ -56,6 +66,7 @@ impl SpdyProblem {
                 .sum::<f64>()
     }
 
+    /// Total cost of a per-module level assignment.
     pub fn profile_cost(&self, profile: &[usize]) -> f64 {
         self.overhead
             + self
@@ -150,10 +161,15 @@ pub fn solve_dp(problem: &SpdyProblem, coeffs: &[f64], budget: f64) -> Option<Ve
     Some(profile)
 }
 
+/// Outer mutation-search configuration (paper §3.2's SPDY variant).
 pub struct SearchCfg {
+    /// search steps (paper: fixed 1000)
     pub iters: usize,
+    /// fraction of coefficients mutated per step (~0.1)
     pub mutate_frac: f64,
+    /// log-normal mutation scale
     pub sigma: f64,
+    /// RNG seed (search is fully deterministic given the seed)
     pub seed: u64,
 }
 

@@ -30,6 +30,7 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::{lit_f32_shaped, lit_scalar_i32, lit_to_f32, lit_to_i32, Engine};
 use crate::tensor::{linalg, Tensor};
+use crate::util::threadpool::parallel_for_slices_mut;
 
 pub const BIG: f32 = 1e30;
 
@@ -73,7 +74,9 @@ pub trait ObsOps {
 ///
 /// * the **fast path** (the trait methods) — closed-form g=1 scoring
 ///   (`score_j = Σ_i w_ij² / Hinv_jj` in one column-sum-of-squares
-///   pass), batched g×g block extraction/inversion for g>1, and
+///   pass), batched g×g block extraction/inversion for g>1 with the
+///   per-structure quadratic forms fanned out across the thread pool
+///   (nesting-aware: inline inside a database-build fan-out), and
 ///   in-place rank-g downdates that never clone the full W/Hinv per
 ///   removal step;
 /// * the **reference path** (`scores_ref` / `update_ref` /
@@ -333,26 +336,36 @@ impl ObsOps for NativeBackend {
         // g > 1: one batched gather+invert of all active blocks, then
         // per-structure quadratic forms. Structure-outer loop order
         // keeps the g×g inverse block L1-resident across all W rows.
+        // Structures are independent given `binvs`, so the sweep fans
+        // out across the pool in disjoint chunks of `out` — but only
+        // when a chunk carries enough arithmetic (~64k flops) to
+        // amortize the scoped spawn/join; tiny sweeps run inline, and
+        // inside a database-build fan-out the thread budget is
+        // already spent so this also degenerates to the inline loop.
         let binvs = self.batch_block_inverses(hinv, active)?;
-        for (j, o) in out.iter_mut().enumerate() {
-            if active[j] <= 0.0 {
-                continue;
-            }
-            let b = &binvs[j * g * g..(j + 1) * g * g];
-            let mut s = 0f64;
-            for i in 0..w.rows() {
-                let wseg = &w.row(i)[j * g..(j + 1) * g];
-                for (r, &wr) in wseg.iter().enumerate() {
-                    let brow = &b[r * g..(r + 1) * g];
-                    let mut t = 0f32;
-                    for (bv, wv) in brow.iter().zip(wseg) {
-                        t += bv * wv;
-                    }
-                    s += (wr as f64) * (t as f64);
+        let min_chunk = 65_536usize.div_ceil((w.rows() * g * g).max(1)).max(1);
+        parallel_for_slices_mut(&mut out, min_chunk, |start, chunk| {
+            for (off, o) in chunk.iter_mut().enumerate() {
+                let j = start + off;
+                if active[j] <= 0.0 {
+                    continue;
                 }
+                let b = &binvs[j * g * g..(j + 1) * g * g];
+                let mut s = 0f64;
+                for i in 0..w.rows() {
+                    let wseg = &w.row(i)[j * g..(j + 1) * g];
+                    for (r, &wr) in wseg.iter().enumerate() {
+                        let brow = &b[r * g..(r + 1) * g];
+                        let mut t = 0f32;
+                        for (bv, wv) in brow.iter().zip(wseg) {
+                            t += bv * wv;
+                        }
+                        s += (wr as f64) * (t as f64);
+                    }
+                }
+                *o = s as f32;
             }
-            *o = s as f32;
-        }
+        });
         Ok(out)
     }
 

@@ -96,6 +96,154 @@ fn prop_spdy_monotone_budget_monotone_error() {
     );
 }
 
+/// Enumerate every level assignment of a (small) SPDY problem.
+fn all_profiles(p: &SpdyProblem) -> Vec<Vec<usize>> {
+    let mut out = vec![vec![]];
+    for m in &p.modules {
+        let mut next = Vec::with_capacity(out.len() * m.options.len());
+        for prefix in &out {
+            for li in 0..m.options.len() {
+                let mut v = prefix.clone();
+                v.push(li);
+                next.push(v);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+fn spdy_objective(p: &SpdyProblem, coeffs: &[f64], profile: &[usize]) -> f64 {
+    profile
+        .iter()
+        .zip(&p.modules)
+        .enumerate()
+        .map(|(mi, (&li, m))| coeffs[mi] * m.options[li].prior * m.options[li].prior)
+        .sum()
+}
+
+#[test]
+fn prop_spdy_dp_matches_bruteforce_on_small_instances() {
+    // Exhaustive cross-check of the knapsack DP (≤4 modules × ≤4
+    // levels): the DP must (a) return a profile whose REAL cost meets
+    // the budget, and (b) be loss-optimal among all profiles that are
+    // feasible under the DP's own ceil-to-bucket weight rounding —
+    // i.e. the DP+backtracking is exact in bucket space. Any profile
+    // with real cost ≤ budget − nm·unit is bucket-feasible, so the DP
+    // is also within one bucket per module of the unrounded optimum.
+    const BUCKETS: f64 = 768.0;
+    Prop::new(50).check_msg(
+        "dp == bucket-space brute force",
+        |r| {
+            let nm = 1 + r.below(4);
+            let mut modules = Vec::new();
+            for l in 0..nm {
+                let n_levels = 2 + r.below(3); // 2..=4
+                let dense_cost = 0.5 + r.f64() * 9.5;
+                let mut options = Vec::new();
+                for k in 0..n_levels {
+                    let frac = 1.0 - k as f64 / (n_levels - 1) as f64;
+                    options.push(LevelOpt {
+                        remaining: (frac * 8.0) as usize,
+                        // not proportional on purpose: random per-level cost
+                        cost: dense_cost * frac * (0.5 + r.f64()),
+                        prior: (1.0 - frac) * (0.5 + r.f64()),
+                    });
+                }
+                options[0].cost = dense_cost;
+                options[0].prior = 0.0;
+                modules.push(ModuleLevels { layer: l, is_attn: l % 2 == 0, options });
+            }
+            let p = SpdyProblem { modules, overhead: r.f64() };
+            let budget = p.overhead + (p.dense_cost() - p.overhead) * (0.1 + 0.9 * r.f64());
+            let coeffs: Vec<f64> = (0..nm).map(|_| 0.1 + 2.0 * r.f64()).collect();
+            (p, coeffs, budget)
+        },
+        |(p, coeffs, budget)| {
+            let unit = (budget - p.overhead) / BUCKETS;
+            // brute force with the DP's own weight rounding
+            let mut best: Option<(f64, Vec<usize>)> = None;
+            for prof in all_profiles(p) {
+                let w: f64 = prof
+                    .iter()
+                    .zip(&p.modules)
+                    .map(|(&li, m)| (m.options[li].cost / unit).ceil())
+                    .sum();
+                if w > BUCKETS {
+                    continue;
+                }
+                let obj = spdy_objective(p, coeffs, &prof);
+                if best.as_ref().is_none_or(|(b, _)| obj < *b) {
+                    best = Some((obj, prof));
+                }
+            }
+            match (spdy::solve_dp(p, coeffs, *budget), best) {
+                (None, None) => Ok(()),
+                (None, Some((_, prof))) => {
+                    Err(format!("dp returned None though {prof:?} is bucket-feasible"))
+                }
+                (Some(prof), None) => Err(format!("dp returned {prof:?} on infeasible instance")),
+                (Some(prof), Some((best_obj, best_prof))) => {
+                    let real = p.profile_cost(&prof);
+                    if real > *budget + 1e-9 {
+                        return Err(format!("dp profile {prof:?} cost {real} > budget {budget}"));
+                    }
+                    let obj = spdy_objective(p, coeffs, &prof);
+                    let tol = 1e-9 * best_obj.abs().max(1.0);
+                    if obj > best_obj + tol {
+                        return Err(format!(
+                            "dp {prof:?} obj {obj} vs brute {best_prof:?} obj {best_obj}"
+                        ));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn spdy_dp_exact_on_handpicked_instance() {
+    // Costs far larger than one bucket, budget strictly between the
+    // interesting combinations: rounding cannot matter, so the DP must
+    // hit the true (unrounded) optimum found by brute force.
+    let mk = |costs: [f64; 3], priors: [f64; 3]| ModuleLevels {
+        layer: 0,
+        is_attn: false,
+        options: (0..3)
+            .map(|i| LevelOpt { remaining: 2 - i, cost: costs[i], prior: priors[i] })
+            .collect(),
+    };
+    let p = SpdyProblem {
+        modules: vec![
+            mk([10.0, 6.0, 0.0], [0.0, 0.2, 1.0]),
+            mk([10.0, 5.0, 0.0], [0.0, 0.6, 1.0]),
+            mk([8.0, 4.0, 0.0], [0.0, 0.3, 1.0]),
+        ],
+        overhead: 2.0,
+    };
+    let coeffs = vec![1.0, 1.0, 1.0];
+    for budget in [30.1, 26.1, 22.1, 18.1, 14.1, 10.1] {
+        let dp = spdy::solve_dp(&p, &coeffs, budget).expect("feasible");
+        assert!(p.profile_cost(&dp) <= budget + 1e-9);
+        let (mut best_obj, mut best_prof) = (f64::INFINITY, vec![]);
+        for prof in all_profiles(&p) {
+            if p.profile_cost(&prof) <= budget {
+                let obj = spdy_objective(&p, &coeffs, &prof);
+                if obj < best_obj {
+                    best_obj = obj;
+                    best_prof = prof;
+                }
+            }
+        }
+        let obj = spdy_objective(&p, &coeffs, &dp);
+        assert!(
+            (obj - best_obj).abs() <= 1e-9,
+            "budget {budget}: dp {dp:?} obj {obj} vs brute {best_prof:?} obj {best_obj}"
+        );
+    }
+}
+
 #[test]
 fn prop_obs_update_exactness_on_redundant_column() {
     // If column j is an exact linear combination of the others in the
@@ -233,6 +381,52 @@ fn prop_fast_scores_match_reference_g1_and_g8() {
             },
         );
     }
+}
+
+#[test]
+fn prop_parallel_g8_score_sweep_matches_reference_wide() {
+    // The g>1 score sweep fans the per-structure quadratic forms out
+    // across the thread pool in disjoint chunks of the output, gated
+    // on per-chunk work (~64k flops). These instances are sized so
+    // the gate opens (d_row·g² ≥ 6k flops/structure, 16..24
+    // structures → chunking engages on multi-core runners); on a
+    // 1-core box the sweep degenerates to the inline loop — both must
+    // match the reference path exactly.
+    let g = 8;
+    Prop::new(10).check_msg(
+        "threaded g>1 scores == reference scores",
+        |r| {
+            let n = 16 + r.below(9); // 16..=24 structures
+            let d_row = 96 + r.below(33); // ≥ 96 rows: above the work gate
+            let d_col = n * g;
+            let w = Tensor::from_vec(&[d_row, d_col], gen::vec_f32(r, d_row * d_col, 1.0));
+            let h = Tensor::from_vec(&[d_col, d_col], gen::spd(r, d_col, 0.4));
+            let hinv = linalg::spd_inverse(&h).unwrap();
+            let mut active = vec![1.0f32; n];
+            for j in 0..n {
+                if r.f64() < 0.25 {
+                    active[j] = 0.0;
+                }
+            }
+            active[r.below(n)] = 1.0;
+            (w, hinv, active)
+        },
+        |(w, hinv, active)| {
+            let mut ops = NativeBackend::new(g);
+            let fast = ops.scores(w, hinv, active).map_err(|e| e.to_string())?;
+            let slow = ops.scores_ref(w, hinv, active).map_err(|e| e.to_string())?;
+            for (j, (&f, &s)) in fast.iter().zip(&slow).enumerate() {
+                if active[j] <= 0.0 {
+                    if f < 1e29 || s < 1e29 {
+                        return Err(format!("j={j}: inactive not BIG ({f} vs {s})"));
+                    }
+                } else if !rel_close(f, s, 1e-4) {
+                    return Err(format!("j={j}: fast {f} vs ref {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
