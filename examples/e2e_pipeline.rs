@@ -15,11 +15,13 @@
 use anyhow::Result;
 use ziplm::coordinator::{self, ServerCfg};
 use ziplm::data;
+use ziplm::env::{CostModel, InferenceEnv};
 use ziplm::eval::evaluate;
 use ziplm::latency;
 use ziplm::models::ModelState;
-use ziplm::pruner::{self, PruneCfg};
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
 use ziplm::runtime::Engine;
+use ziplm::session::{stdout_progress, CompressionSession};
 use ziplm::train::{TrainCfg, Trainer};
 
 fn main() -> Result<()> {
@@ -40,19 +42,25 @@ fn main() -> Result<()> {
     let dense = evaluate(&engine, &teacher, &ds, "dev")?;
     println!("teacher: final_train_loss={loss:.4}  dev EM={:.4}", dense.metric);
 
-    // ---- 2. latency table + gradual ZipLM family
-    println!("== [2/4] measuring latency table ==");
-    let table = latency::measure_cpu(&engine, model, "throughput", 15)?;
+    // ---- 2. inference environment + gradual ZipLM family
+    println!("== [2/4] measuring the inference environment ==");
+    let env = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 15)?)?;
     println!("dense latency {:.2} ms (overhead {:.2} ms)",
-        table.dense_time(minfo.n_layers) * 1e3, table.overhead * 1e3);
+        env.dense_time(minfo.n_layers) * 1e3, env.overhead() * 1e3);
 
     println!("== [3/4] ZipLM gradual pruning 2x/3x/4x with token distillation ==");
     let targets = [2.0, 3.0, 4.0];
-    let pcfg = PruneCfg { calib_samples: 128, spdy: pruner::SpdyCfgLite { iters: 60, seed: 7 }, ..Default::default() };
+    let pcfg = PruneCfg { calib_samples: 128, spdy: SpdyCfgLite { iters: 60, seed: 7 }, ..Default::default() };
     let tcfg = TrainCfg { lr: 5e-4, epochs: 1.0, lambdas: [1.0, 0.5, 0.5], ..Default::default() };
-    let stages = pruner::gradual(
-        &engine, teacher.clone(), &ds, &table, &targets, &pcfg, &tcfg,
-        Some(teacher.params.clone()))?;
+    let stages = CompressionSession::for_model(&engine, model, task)
+        .with_env(env)
+        .with_targets(&targets)
+        .with_prune_cfg(pcfg)
+        .with_train_cfg(tcfg)
+        .with_teacher(teacher.params.clone())
+        .on_progress(stdout_progress())
+        .open()?
+        .run(teacher.clone(), &ds)?;
     println!("\n  speedup |   EM    | per-layer (heads, ffn)");
     println!("  --------+---------+------------------------");
     println!("    1.0x  |  {:.4} | dense", dense.metric);

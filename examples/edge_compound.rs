@@ -6,12 +6,14 @@
 
 use anyhow::Result;
 use ziplm::data;
+use ziplm::env::InferenceEnv;
 use ziplm::eval::evaluate;
 use ziplm::latency;
 use ziplm::models::ModelState;
-use ziplm::pruner::{self, PruneCfg};
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
 use ziplm::quant::{self, CpuEngineModel};
 use ziplm::runtime::Engine;
+use ziplm::session::CompressionSession;
 use ziplm::train::{TrainCfg, Trainer};
 
 fn main() -> Result<()> {
@@ -28,9 +30,13 @@ fn main() -> Result<()> {
     println!("stage 0 dense:            acc={acc0:.4}");
 
     // stage 1: ZipLM structured 2x
-    let table = latency::measure_cpu(&engine, model, "throughput", 10)?;
-    let pcfg = PruneCfg { calib_samples: 64, spdy: pruner::SpdyCfgLite { iters: 30, seed: 7 }, ..Default::default() };
-    pruner::prune_to_target(&engine, &mut st, &ds, &table, table.dense_time(minfo.n_layers), 2.0, &pcfg)?;
+    let env = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?;
+    let pcfg = PruneCfg { calib_samples: 64, spdy: SpdyCfgLite { iters: 30, seed: 7 }, ..Default::default() };
+    CompressionSession::for_model(&engine, model, task)
+        .with_env(env)
+        .with_prune_cfg(pcfg)
+        .open()?
+        .oneshot(&mut st, &ds, 2.0)?;
     let mut tr2 = Trainer::new(&engine, tinfo.n_params, None);
     tr2.train(&mut st, &ds, &TrainCfg { lr: 5e-4, epochs: 1.0, lambdas: [1.0, 0.0, 0.0], ..Default::default() })?;
     let acc1 = evaluate(&engine, &st, &ds, "dev")?.metric;

@@ -17,12 +17,14 @@ use std::time::Duration;
 use anyhow::Result;
 use ziplm::coordinator::family as famserve;
 use ziplm::data;
+use ziplm::env::{CostModel, InferenceEnv};
 use ziplm::eval::evaluate;
 use ziplm::exp;
 use ziplm::latency;
 use ziplm::models::ModelState;
-use ziplm::pruner::{self, PruneCfg};
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
 use ziplm::runtime::Engine;
+use ziplm::session::CompressionSession;
 use ziplm::train::{TrainCfg, Trainer};
 
 fn main() -> Result<()> {
@@ -40,29 +42,28 @@ fn main() -> Result<()> {
     let dense_ev = evaluate(&engine, &teacher, &ds, "dev")?;
     println!("dense teacher: dev acc {:.3}", dense_ev.metric);
 
-    // 2. latency table (the admission estimates the router will use)
-    let table = latency::measure_cpu(&engine, model, "throughput", 10)?;
-    let dense_ms = table.dense_time(minfo.n_layers) * 1e3;
+    // 2. inference environment: ONE value prices the SPDY search AND
+    //    the router's admission estimates — they cannot diverge
+    let env = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?;
+    let dense_ms = env.dense_time(minfo.n_layers) * 1e3;
     println!("dense batched fwd estimate: {dense_ms:.2} ms");
 
     // 3. gradual prune → a 3-member family (dense + 1.5x + 3x)
     let targets = [1.5, 3.0];
     let pcfg = PruneCfg {
         calib_samples: 64,
-        spdy: pruner::SpdyCfgLite { iters: 20, seed: 7 },
+        spdy: SpdyCfgLite { iters: 20, seed: 7 },
         ..Default::default()
     };
     let ft = TrainCfg { lr: 5e-4, epochs: 0.5, lambdas: [1.0, 0.5, 0.5], ..Default::default() };
-    let stages = pruner::gradual(
-        &engine,
-        teacher.clone(),
-        &ds,
-        &table,
-        &targets,
-        &pcfg,
-        &ft,
-        Some(teacher.params.clone()),
-    )?;
+    let sess = CompressionSession::for_model(&engine, model, task)
+        .with_env(env.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(pcfg)
+        .with_train_cfg(ft)
+        .with_teacher(teacher.params.clone())
+        .open()?;
+    let stages = sess.run(teacher.clone(), &ds)?;
     for s in &stages {
         let ev = evaluate(&engine, &s.state, &ds, "dev")?;
         println!(
@@ -72,13 +73,14 @@ fn main() -> Result<()> {
     }
 
     // 4. record the family manifest (what `ziplm serve-family` loads)
-    let ctx = exp::ExpCtx::new(Path::new("artifacts"), true)?;
-    let fam = exp::emit_family(&ctx, &teacher, &stages, &table)?;
+    let fam_dir = Path::new("runs").join(format!("family_{model}_{task}"));
+    let fam = sess.emit_family(&teacher, &stages, &fam_dir)?;
     let members: Vec<(String, ModelState)> = fam
-        .load_states(Path::new("runs").join(format!("family_{model}_{task}")).as_path())?
+        .load_states(&fam_dir)?
         .into_iter()
         .map(|(m, st)| (m.tag, st))
         .collect();
+    drop(sess);
     drop(engine); // the coordinator worker owns its own engine
 
     // 5. serve the family: one front end, per-member queues, SLA routing
@@ -90,12 +92,12 @@ fn main() -> Result<()> {
             pressure: 64,
         },
         members,
-        &table,
+        &env,
     )?;
     // mixed workload, all submitted up front so the queues see pressure:
     // best-effort (no SLA) / interactive (latency bound under one dense
     // fwd, must spill to a pruned member) / cheap (min 1.5x speedup)
-    let bound = Duration::from_secs_f64(table.dense_time(minfo.n_layers) * 0.8);
+    let bound = Duration::from_secs_f64(env.dense_time(minfo.n_layers) * 0.8);
     let rows = exp::mixed_workload(&handle, &ds, 96, bound, 1.5)?;
     let stats = handle.shutdown()?;
 

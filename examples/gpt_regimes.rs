@@ -8,11 +8,13 @@
 
 use anyhow::Result;
 use ziplm::data;
+use ziplm::env::InferenceEnv;
 use ziplm::eval::evaluate;
 use ziplm::latency;
 use ziplm::models::ModelState;
-use ziplm::pruner::{self, PruneCfg};
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
 use ziplm::runtime::Engine;
+use ziplm::session::CompressionSession;
 use ziplm::train::{TrainCfg, Trainer};
 
 fn main() -> Result<()> {
@@ -32,11 +34,15 @@ fn main() -> Result<()> {
 
     let target = 2.0;
     for regime in ["throughput", "latency"] {
-        let table = latency::measure_cpu(&engine, model, regime, 10)?;
+        // one env per regime: the ONLY thing that changes between runs
+        let env = InferenceEnv::measured(latency::measure_cpu(&engine, model, regime, 10)?)?;
         let mut st = teacher.clone();
-        let pcfg = PruneCfg { calib_samples: 64, spdy: pruner::SpdyCfgLite { iters: 40, seed: 7 }, ..Default::default() };
-        pruner::prune_to_target(&engine, &mut st, &ds, &table,
-            table.dense_time(minfo.n_layers), target, &pcfg)?;
+        let pcfg = PruneCfg { calib_samples: 64, spdy: SpdyCfgLite { iters: 40, seed: 7 }, ..Default::default() };
+        CompressionSession::for_model(&engine, model, task)
+            .with_env(env)
+            .with_prune_cfg(pcfg)
+            .open()?
+            .oneshot(&mut st, &ds, target)?;
         // brief recovery (no KD for GPT, paper App. I)
         let mut tr = Trainer::new(&engine, tinfo.n_params, None);
         tr.train(&mut st, &ds, &TrainCfg { lr: 5e-4, epochs: 0.5, lambdas: [1.0, 0.0, 0.0], ..Default::default() })?;

@@ -5,11 +5,13 @@
 
 use anyhow::Result;
 use ziplm::data;
+use ziplm::env::{CostModel, InferenceEnv};
 use ziplm::eval::evaluate;
 use ziplm::latency;
 use ziplm::models::ModelState;
-use ziplm::pruner::{self, PruneCfg};
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
 use ziplm::runtime::Engine;
+use ziplm::session::CompressionSession;
 use ziplm::train::{TrainCfg, Trainer};
 
 fn main() -> Result<()> {
@@ -29,15 +31,20 @@ fn main() -> Result<()> {
     let dense = evaluate(&engine, &state, &ds, "dev")?;
     println!("dense: train_loss={loss:.3} dev_acc={:.3}", dense.metric);
 
-    // 2. measure the latency table on this machine (the paper's App. E)
-    let table = latency::measure_cpu(&engine, model, "throughput", 10)?;
-    println!("dense model latency estimate: {:.2} ms", table.dense_time(minfo.n_layers) * 1e3);
+    // 2. measure the environment on this machine (the paper's App. E):
+    //    a latency table wrapped in the typed InferenceEnv every
+    //    downstream consumer shares
+    let env = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?;
+    println!("dense model latency estimate: {:.2} ms", env.dense_time(minfo.n_layers) * 1e3);
 
-    // 3. one-shot ZipLM prune to 2x
+    // 3. one-shot ZipLM prune to 2x through a CompressionSession
     let mut pruned = state.clone();
-    let pcfg = PruneCfg { calib_samples: 64, spdy: pruner::SpdyCfgLite { iters: 20, seed: 7 }, ..Default::default() };
-    let report = pruner::prune_to_target(
-        &engine, &mut pruned, &ds, &table, table.dense_time(minfo.n_layers), 2.0, &pcfg)?;
+    let pcfg = PruneCfg { calib_samples: 64, spdy: SpdyCfgLite { iters: 20, seed: 7 }, ..Default::default() };
+    let report = CompressionSession::for_model(&engine, model, task)
+        .with_env(env)
+        .with_prune_cfg(pcfg)
+        .open()?
+        .oneshot(&mut pruned, &ds, 2.0)?;
     let ev = evaluate(&engine, &pruned, &ds, "dev")?;
     println!(
         "ziplm 2x one-shot: est_speedup={:.2}x acc {:.3} -> {:.3}, per-layer (heads, ffn) = {:?}",

@@ -16,7 +16,7 @@
 
 use anyhow::Result;
 
-use crate::latency::LatencyTable;
+use crate::env::{CostModel, InferenceEnv};
 use crate::models::ModelState;
 use crate::pruner::Hessians;
 use crate::runtime::{ModelInfo, TaskInfo};
@@ -45,10 +45,10 @@ pub fn magnitude_for_speedup(
     state: &mut ModelState,
     minfo: &ModelInfo,
     tinfo: &TaskInfo,
-    table: &LatencyTable,
+    env: &InferenceEnv,
     target: f64,
 ) -> Result<Vec<(usize, usize)>> {
-    let dense = table.dense_time(minfo.n_layers);
+    let dense = env.dense_time(minfo.n_layers);
     let budget = dense / target;
     // candidate list: (layer, is_attn, index, magnitude)
     let mut mags: Vec<(usize, bool, usize, f64)> = Vec::new();
@@ -66,7 +66,7 @@ pub fn magnitude_for_speedup(
     let mut profile: Vec<(usize, usize)> =
         (0..minfo.n_layers).map(|_| (minfo.n_heads, minfo.d_ff)).collect();
     let mut k = 0;
-    while table.model_time(&profile) > budget && k < mags.len() {
+    while env.model_time(&profile) > budget && k < mags.len() {
         let (l, is_attn, j, _) = mags[k];
         k += 1;
         if is_attn {
@@ -94,17 +94,17 @@ pub fn layer_drop_for_speedup(
     state: &mut ModelState,
     minfo: &ModelInfo,
     tinfo: &TaskInfo,
-    table: &LatencyTable,
+    env: &InferenceEnv,
     target: f64,
 ) -> Result<Vec<(usize, usize)>> {
-    let dense = table.dense_time(minfo.n_layers);
+    let dense = env.dense_time(minfo.n_layers);
     let budget = dense / target;
     let mut order: Vec<usize> = (0..minfo.n_layers).skip(1).step_by(2).collect();
     order.extend((0..minfo.n_layers).step_by(2).rev());
     let mut profile: Vec<(usize, usize)> =
         (0..minfo.n_layers).map(|_| (minfo.n_heads, minfo.d_ff)).collect();
     for &l in &order {
-        if table.model_time(&profile) <= budget {
+        if env.model_time(&profile) <= budget {
             break;
         }
         profile[l] = (0, 0);
@@ -125,11 +125,11 @@ pub fn fisher_oneshot(
     state: &mut ModelState,
     minfo: &ModelInfo,
     tinfo: &TaskInfo,
-    table: &LatencyTable,
+    env: &InferenceEnv,
     hs: &Hessians,
     target: f64,
 ) -> Result<Vec<(usize, usize)>> {
-    let dense = table.dense_time(minfo.n_layers);
+    let dense = env.dense_time(minfo.n_layers);
     let budget = dense / target;
     // Per-module "databases" with diagonal-score priors and NO updates:
     // prior(level) = sqrt(Σ removed diag-scores / Σ all diag-scores).
@@ -168,7 +168,7 @@ pub fn fisher_oneshot(
                 let removed: f64 = order[..n - rem].iter().map(|&j| scores[j]).sum();
                 options.push(LevelOpt {
                     remaining: rem,
-                    cost: if is_attn { table.attn_time(rem) } else { table.mlp_time(rem) },
+                    cost: if is_attn { env.attn_time(rem) } else { env.mlp_time(rem) },
                     prior: (removed / total).sqrt(),
                 });
             }
@@ -176,7 +176,7 @@ pub fn fisher_oneshot(
             removal_orders.push((l, is_attn, order));
         }
     }
-    let problem = SpdyProblem { modules, overhead: table.overhead };
+    let problem = SpdyProblem { modules, overhead: env.overhead() };
     let profile = spdy::solve_dp(&problem, &vec![1.0; problem.modules.len()], budget)
         .ok_or_else(|| anyhow::anyhow!("fisher: target infeasible"))?;
     // apply masks per chosen level, per removal order
@@ -290,23 +290,24 @@ mod tests {
     use crate::latency::LatencyTable;
     use crate::models::tests_support::mini_state;
 
-    fn table(minfo: &ModelInfo) -> LatencyTable {
-        LatencyTable {
+    fn env(minfo: &ModelInfo) -> InferenceEnv {
+        InferenceEnv::measured(LatencyTable {
             model: minfo.name.clone(),
             device: "test".into(),
             regime: "throughput".into(),
             attn: (0..=minfo.n_heads).map(|h| h as f64 * 1e-3).collect(),
             mlp: vec![(minfo.d_ff, 4e-3), (minfo.d_ff / 2, 2e-3), (1, 1e-4), (0, 0.0)],
             overhead: 5e-4,
-        }
+        })
+        .unwrap()
     }
 
     #[test]
     fn magnitude_meets_budget() {
         let (minfo, tinfo, mut st) = mini_state();
-        let t = table(&minfo);
-        let prof = magnitude_for_speedup(&mut st, &minfo, &tinfo, &t, 2.0).unwrap();
-        assert!(t.model_time(&prof) <= t.dense_time(minfo.n_layers) / 2.0 + 1e-9);
+        let e = env(&minfo);
+        let prof = magnitude_for_speedup(&mut st, &minfo, &tinfo, &e, 2.0).unwrap();
+        assert!(e.model_time(&prof) <= e.dense_time(minfo.n_layers) / 2.0 + 1e-9);
         // pruned structures' weights are zero
         let w = st.fc_w_paper(&tinfo, 0).unwrap();
         for c in 0..minfo.d_ff {
@@ -321,8 +322,8 @@ mod tests {
     #[test]
     fn layer_drop_drops_whole_layers() {
         let (minfo, tinfo, mut st) = mini_state();
-        let t = table(&minfo);
-        let prof = layer_drop_for_speedup(&mut st, &minfo, &tinfo, &t, 3.0).unwrap();
+        let e = env(&minfo);
+        let prof = layer_drop_for_speedup(&mut st, &minfo, &tinfo, &e, 3.0).unwrap();
         for (l, &(h, f)) in prof.iter().enumerate() {
             assert!(
                 (h == 0 && f == 0) || (h == minfo.n_heads && f == minfo.d_ff),

@@ -8,8 +8,9 @@
 //!
 //! * clients submit ids plus an optional per-request [`Sla`];
 //! * a router assigns each request to a family member: the most
-//!   accurate member whose certified speedup and latency-table
-//!   admission estimate satisfy the SLA, or the fastest member when
+//!   accurate member whose certified speedup and
+//!   [`InferenceEnv`]-priced admission estimate satisfy the SLA, or
+//!   the fastest member when
 //!   nothing qualifies or total backlog crosses the pressure
 //!   threshold;
 //! * each member has its own dynamic-batch queue, drained by the one
@@ -31,8 +32,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::env::{CostModel, InferenceEnv};
 use crate::eval::mask_literals;
-use crate::latency::LatencyTable;
 use crate::models::ModelState;
 use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine};
 
@@ -90,8 +91,9 @@ pub struct FamilyCfg {
     pub pressure: usize,
 }
 
-/// Routing view of one family member: pure data, so the routing policy
-/// can be exercised without PJRT.
+/// Routing view of one family member: pure data (priced from the
+/// family's [`InferenceEnv`] at startup), so the routing policy can be
+/// exercised without PJRT.
 #[derive(Clone, Debug)]
 pub struct MemberRoute {
     /// member tag (diagnostics)
@@ -223,13 +225,15 @@ struct MemberSpec {
 /// Start the family coordinator over `members` (tag, checkpoint).
 ///
 /// All members must share one (model, task); their per-layer profiles
-/// are read from the checkpoint masks and priced with `table` to form
-/// the routing estimates. Members are served in ascending-speedup
-/// order (index 0 = most accurate).
+/// are read from the checkpoint masks and priced with `env` — the same
+/// [`InferenceEnv`] the pruning session certified the members against,
+/// so admission estimates cannot silently diverge from certification.
+/// Members are served in ascending-speedup order (index 0 = most
+/// accurate).
 pub fn start(
     cfg: FamilyCfg,
     members: Vec<(String, ModelState)>,
-    table: &LatencyTable,
+    env: &InferenceEnv,
 ) -> Result<FamilyHandle> {
     if members.is_empty() {
         return Err(anyhow!("family must have at least one member"));
@@ -247,8 +251,8 @@ pub fn start(
         let profile = state.masks.summary();
         let route = MemberRoute {
             tag: tag.clone(),
-            est_speedup: table.speedup(&profile),
-            est_batch_time: table.model_time(&profile),
+            est_speedup: env.speedup(&profile),
+            est_batch_time: env.model_time(&profile),
         };
         specs.push(MemberSpec { tag, state, route });
     }
@@ -575,25 +579,26 @@ mod tests {
 
     #[test]
     fn start_rejects_empty_and_mixed_families() {
-        let t = LatencyTable {
+        let env = InferenceEnv::measured(crate::latency::LatencyTable {
             model: "m".into(),
             device: "test".into(),
             regime: "throughput".into(),
             attn: vec![0.0, 1e-3, 2e-3],
             mlp: vec![(8, 4e-3), (0, 0.0)],
             overhead: 1e-3,
-        };
+        })
+        .unwrap();
         let cfg = || FamilyCfg {
             artifacts: std::path::PathBuf::from("artifacts"),
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             pressure: 0,
         };
-        assert!(start(cfg(), vec![], &t).is_err());
+        assert!(start(cfg(), vec![], &env).is_err());
         // members disagreeing on (model, task) are rejected up front
         let (mi, ti, _st) = crate::models::tests_support::mini_state();
         let a = crate::models::ModelState::init(&mi, "task-a", &ti, 0);
         let b = crate::models::ModelState::init(&mi, "task-b", &ti, 1);
-        assert!(start(cfg(), vec![("a".into(), a), ("b".into(), b)], &t).is_err());
+        assert!(start(cfg(), vec![("a".into(), a), ("b".into(), b)], &env).is_err());
     }
 }

@@ -1,0 +1,374 @@
+//! Inference environments: the typed deployment target every pipeline
+//! stage prices against (paper §3.2 — "inference-aware" means the SAME
+//! algorithm retargets any (device, regime, batch-shape) environment).
+//!
+//! Before this module, the environment was a loose `(model, regime)`
+//! string pair plus a bare [`LatencyTable`] threaded through ~6 free
+//! functions; the pruner, the experiment drivers, and the family
+//! coordinator could each end up pricing against a *different* table
+//! without anything noticing. [`InferenceEnv`] bundles device, regime,
+//! batch shape, and a cost model into one value that is constructed
+//! once and handed to every consumer — the SPDY search certifies a
+//! speedup against exactly the environment the router later admits
+//! requests with.
+//!
+//! Two cost-model sources exist, mirroring DESIGN.md §3:
+//!
+//! * [`InferenceEnv::measured`] — wraps a table measured through the
+//!   PJRT runtime ([`crate::latency::measure_cpu`]), the paper's real
+//!   methodology;
+//! * [`InferenceEnv::analytic`] — derives a table from a roofline
+//!   [`Device`] model at arbitrary [`ArchDims`] (V100/A100 are
+//!   unavailable hardware; paper Tables 3 & 7).
+//!
+//! The pricing surface itself is the [`CostModel`] trait, implemented
+//! by both [`InferenceEnv`] and the underlying [`LatencyTable`], so
+//! code that only prices profiles never needs to know which source
+//! produced the numbers.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::latency::{self, ArchDims, Device, LatencyTable};
+use crate::util::json::Json;
+
+/// Batch regime of an environment: which static shapes the latency
+/// numbers were taken at (paper §4.2 — the regimes prune differently).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// large-batch serving (throughput-bound)
+    Throughput,
+    /// batch-1 short prompts (latency-bound)
+    Latency,
+}
+
+impl Regime {
+    /// Parse the canonical regime name.
+    pub fn parse(s: &str) -> Result<Regime> {
+        match s {
+            "throughput" => Ok(Regime::Throughput),
+            "latency" => Ok(Regime::Latency),
+            other => Err(anyhow!("unknown regime `{other}` (throughput|latency)")),
+        }
+    }
+
+    /// Canonical name (inverse of [`Regime::parse`]); also the table /
+    /// artifact naming component.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::Throughput => "throughput",
+            Regime::Latency => "latency",
+        }
+    }
+}
+
+/// Where an environment's numbers came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostSource {
+    /// timed through the PJRT runtime on real hardware
+    Measured,
+    /// derived from a roofline device model
+    Analytic,
+}
+
+impl CostSource {
+    fn name(&self) -> &'static str {
+        match self {
+            CostSource::Measured => "measured",
+            CostSource::Analytic => "analytic",
+        }
+    }
+
+    fn parse(s: &str) -> Result<CostSource> {
+        match s {
+            "measured" => Ok(CostSource::Measured),
+            "analytic" => Ok(CostSource::Analytic),
+            other => Err(anyhow!("unknown cost source `{other}`")),
+        }
+    }
+}
+
+/// The pricing surface every inference environment exposes: per-block
+/// times plus the derived whole-model quantities the SPDY search, the
+/// baselines, and the family router all consume.
+pub trait CostModel {
+    /// Attention-block time with `heads` heads remaining.
+    fn attn_time(&self, heads: usize) -> f64;
+    /// FFN-block time at `width` intermediate columns remaining.
+    fn mlp_time(&self, width: usize) -> f64;
+    /// Fixed per-model time outside the prunable blocks.
+    fn overhead(&self) -> f64;
+    /// Dense per-layer anatomy `(heads, ffn width)` the times anchor to.
+    fn dense_profile(&self) -> (usize, usize);
+
+    /// End-to-end model time for a per-layer `(heads, ffn)` profile.
+    fn model_time(&self, profile: &[(usize, usize)]) -> f64 {
+        self.overhead()
+            + profile.iter().map(|&(h, f)| self.attn_time(h) + self.mlp_time(f)).sum::<f64>()
+    }
+
+    /// End-to-end time of the dense model at `n_layers` layers.
+    fn dense_time(&self, n_layers: usize) -> f64 {
+        let (h, f) = self.dense_profile();
+        self.model_time(&vec![(h, f); n_layers])
+    }
+
+    /// Estimated speedup of a per-layer profile over the dense model.
+    fn speedup(&self, profile: &[(usize, usize)]) -> f64 {
+        self.dense_time(profile.len()) / self.model_time(profile)
+    }
+}
+
+impl CostModel for LatencyTable {
+    fn attn_time(&self, heads: usize) -> f64 {
+        LatencyTable::attn_time(self, heads)
+    }
+
+    fn mlp_time(&self, width: usize) -> f64 {
+        LatencyTable::mlp_time(self, width)
+    }
+
+    fn overhead(&self) -> f64 {
+        self.overhead
+    }
+
+    fn dense_profile(&self) -> (usize, usize) {
+        (self.attn.len() - 1, self.mlp[0].0)
+    }
+}
+
+/// A fully-specified inference environment: device + regime + batch
+/// shape + cost model. This is the ONE value that travels from Hessian
+/// capture through SPDY certification to family-serving admission; no
+/// raw latency table crosses a module boundary outside `env/` and
+/// `latency/` themselves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferenceEnv {
+    device: String,
+    regime: Regime,
+    batch: usize,
+    seq: usize,
+    source: CostSource,
+    table: LatencyTable,
+}
+
+impl InferenceEnv {
+    /// Environment from a measured [`LatencyTable`]. Device and regime
+    /// are taken from the table; the batch shape starts unknown `(0,
+    /// 0)` — attach it with [`InferenceEnv::with_batch_shape`] when the
+    /// measuring artifacts' shapes are available.
+    pub fn measured(table: LatencyTable) -> Result<InferenceEnv> {
+        let regime = Regime::parse(&table.regime)?;
+        if table.attn.is_empty() || table.mlp.is_empty() {
+            return Err(anyhow!("latency table for `{}` has empty blocks", table.model));
+        }
+        Ok(InferenceEnv {
+            device: table.device.clone(),
+            regime,
+            batch: 0,
+            seq: 0,
+            source: CostSource::Measured,
+            table,
+        })
+    }
+
+    /// Environment from a roofline [`Device`] model at `dims`,
+    /// pricing the FFN ladder `mlp_widths` (paper Tables 3 & 7).
+    pub fn analytic(
+        dev: Device,
+        dims: &ArchDims,
+        regime: Regime,
+        mlp_widths: &[usize],
+    ) -> InferenceEnv {
+        let table = latency::analytic(dev, dims, regime.name(), mlp_widths);
+        InferenceEnv {
+            device: dev.name().to_string(),
+            regime,
+            batch: dims.batch,
+            seq: dims.seq,
+            source: CostSource::Analytic,
+            table,
+        }
+    }
+
+    /// Record the static `(batch, seq)` shape the numbers were taken at.
+    pub fn with_batch_shape(mut self, batch: usize, seq: usize) -> InferenceEnv {
+        self.batch = batch;
+        self.seq = seq;
+        self
+    }
+
+    /// Device name (canonical for analytic devices; as-measured otherwise).
+    pub fn device_name(&self) -> &str {
+        &self.device
+    }
+
+    /// Batch regime.
+    pub fn regime(&self) -> Regime {
+        self.regime
+    }
+
+    /// Static `(batch, seq)` shape; `(0, 0)` when unrecorded.
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq)
+    }
+
+    /// Whether the numbers were measured or derived.
+    pub fn source(&self) -> CostSource {
+        self.source
+    }
+
+    /// The underlying priced table (rendering, ladder inspection). The
+    /// table never needs to leave the env: consumers price through
+    /// [`CostModel`].
+    pub fn table(&self) -> &LatencyTable {
+        &self.table
+    }
+
+    /// One-line human description for logs and progress hooks.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} on {} ({} regime, {} cost)",
+            self.table.model,
+            self.device,
+            self.regime.name(),
+            self.source.name()
+        )
+    }
+
+    // ----------------------------------------------------------- persist
+
+    /// Serialize to the on-disk JSON form (session checkpoints).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("device", Json::Str(self.device.clone())),
+            ("regime", Json::Str(self.regime.name().to_string())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("source", Json::Str(self.source.name().to_string())),
+            ("table", self.table.to_json()),
+        ])
+    }
+
+    /// Parse the on-disk JSON form.
+    pub fn from_json(j: &Json) -> Result<InferenceEnv> {
+        let table =
+            LatencyTable::from_json(j.get("table").ok_or_else(|| anyhow!("env: no table"))?)?;
+        Ok(InferenceEnv {
+            device: j.req_str("device").to_string(),
+            regime: Regime::parse(j.req_str("regime"))?,
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            seq: j.get("seq").and_then(Json::as_usize).unwrap_or(0),
+            source: CostSource::parse(j.req_str("source"))?,
+            table,
+        })
+    }
+
+    /// Write the env as pretty JSON, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(d) = path.parent() {
+            std::fs::create_dir_all(d)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load an env from disk.
+    pub fn load(path: &Path) -> Result<InferenceEnv> {
+        let text = std::fs::read_to_string(path)?;
+        InferenceEnv::from_json(&Json::parse(&text).map_err(|e| anyhow!(e))?)
+    }
+}
+
+impl CostModel for InferenceEnv {
+    fn attn_time(&self, heads: usize) -> f64 {
+        self.table.attn_time(heads)
+    }
+
+    fn mlp_time(&self, width: usize) -> f64 {
+        self.table.mlp_time(width)
+    }
+
+    fn overhead(&self) -> f64 {
+        self.table.overhead
+    }
+
+    fn dense_profile(&self) -> (usize, usize) {
+        (self.table.attn.len() - 1, self.table.mlp[0].0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> LatencyTable {
+        LatencyTable {
+            model: "m".into(),
+            device: "test".into(),
+            regime: "throughput".into(),
+            attn: vec![0.0, 1.0e-3, 1.8e-3, 2.5e-3, 3.1e-3],
+            mlp: vec![(512, 8e-3), (256, 4.2e-3), (64, 1.5e-3), (0, 0.0)],
+            overhead: 1e-3,
+        }
+    }
+
+    #[test]
+    fn measured_env_prices_like_its_table() {
+        let t = table();
+        let env = InferenceEnv::measured(t.clone()).unwrap();
+        assert_eq!(env.regime(), Regime::Throughput);
+        assert_eq!(env.source(), CostSource::Measured);
+        assert_eq!(env.dense_profile(), (4, 512));
+        for h in 0..=4 {
+            assert_eq!(CostModel::attn_time(&env, h), t.attn_time(h));
+        }
+        for w in [0usize, 33, 256, 384, 512] {
+            assert_eq!(CostModel::mlp_time(&env, w), t.mlp_time(w));
+        }
+        let profile = vec![(2usize, 256usize), (4, 512)];
+        assert_eq!(env.model_time(&profile), t.model_time(&profile));
+        assert_eq!(env.speedup(&profile), t.speedup(&profile));
+        assert_eq!(CostModel::dense_time(&env, 3), t.dense_time(3));
+    }
+
+    #[test]
+    fn measured_rejects_unknown_regime() {
+        let mut t = table();
+        t.regime = "weird".into();
+        assert!(InferenceEnv::measured(t).is_err());
+    }
+
+    #[test]
+    fn analytic_env_records_device_and_shape() {
+        let dims = ArchDims::bert_base_paper();
+        let env =
+            InferenceEnv::analytic(Device::V100Sim, &dims, Regime::Throughput, &[3072, 302, 33]);
+        assert_eq!(env.device_name(), "v100-sim");
+        assert_eq!(env.source(), CostSource::Analytic);
+        assert_eq!(env.batch_shape(), (128, 128));
+        // shrinking the MLP must speed the block up
+        assert!(CostModel::mlp_time(&env, 33) < CostModel::mlp_time(&env, 3072));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let env = InferenceEnv::measured(table()).unwrap().with_batch_shape(8, 128);
+        let j = env.to_json();
+        let back = InferenceEnv::from_json(&j).unwrap();
+        assert_eq!(env, back);
+        // through text as well (checkpoint files go through the parser)
+        let back2 =
+            InferenceEnv::from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(env, back2);
+    }
+
+    #[test]
+    fn regime_parse_name_inverse() {
+        for r in [Regime::Throughput, Regime::Latency] {
+            assert_eq!(Regime::parse(r.name()).unwrap(), r);
+        }
+        assert!(Regime::parse("batchy").is_err());
+    }
+}

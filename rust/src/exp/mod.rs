@@ -13,13 +13,15 @@ use anyhow::{anyhow, Result};
 use crate::baselines;
 use crate::coordinator::family as famserve;
 use crate::data::{self, Dataset};
+use crate::env::{CostModel, InferenceEnv, Regime};
 use crate::eval::{self, EvalResult};
 use crate::latency::{self, ArchDims, Device, LatencyTable};
-use crate::models::family::{FamilyManifest, FamilyMember};
+use crate::models::family::FamilyManifest;
 use crate::models::ModelState;
-use crate::pruner::{self, PruneCfg, TargetMode};
+use crate::pruner::{PruneCfg, SpdyCfgLite, StageResult, TargetMode};
 use crate::quant;
 use crate::runtime::Engine;
+use crate::session::CompressionSession;
 use crate::train::{TrainCfg, Trainer};
 use crate::util::json::Json;
 
@@ -83,23 +85,66 @@ impl ExpCtx {
         Ok(st)
     }
 
-    /// Measured (or cached) CPU latency table.
-    pub fn table(&self, model: &str, regime: &str) -> Result<LatencyTable> {
-        let path = self.runs.join(format!("latency_{model}_{regime}.json"));
-        if let Ok(t) = LatencyTable::load(&path) {
-            return Ok(t);
-        }
-        let t = latency::measure_cpu(&self.engine, model, regime, 30)?;
-        t.save(&path)?;
-        Ok(t)
+    /// Measured (or disk-cached) inference environment for (model,
+    /// regime): the ONE value the pruning session certifies against
+    /// and the family coordinator later admits requests with.
+    pub fn env(&self, model: &str, regime: Regime) -> Result<InferenceEnv> {
+        let path = self.runs.join(format!("latency_{model}_{}.json", regime.name()));
+        let table = match LatencyTable::load(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                let t = latency::measure_cpu(&self.engine, model, regime.name(), 30)?;
+                t.save(&path)?;
+                t
+            }
+        };
+        let (b, sq) = latency::regime_shape(&self.engine, model, regime.name()).unwrap_or((0, 0));
+        Ok(InferenceEnv::measured(table)?.with_batch_shape(b, sq))
     }
 
     fn prune_cfg(&self) -> PruneCfg {
         PruneCfg {
             calib_samples: if self.fast { 64 } else { 256 },
-            spdy: pruner::SpdyCfgLite { iters: if self.fast { 25 } else { 120 }, seed: 7 },
+            spdy: SpdyCfgLite { iters: if self.fast { 25 } else { 120 }, seed: 7 },
             ..Default::default()
         }
+    }
+
+    /// Checkpoint-free gradual session for (model, task) against `env`.
+    #[allow(clippy::too_many_arguments)]
+    fn gradual_session(
+        &self,
+        model: &str,
+        task: &str,
+        env: &InferenceEnv,
+        targets: &[f64],
+        pcfg: PruneCfg,
+        tcfg: TrainCfg,
+        teacher: Option<Vec<f32>>,
+    ) -> Result<CompressionSession<'_>> {
+        let mut b = CompressionSession::for_model(&self.engine, model, task)
+            .with_env(env.clone())
+            .with_targets(targets)
+            .with_prune_cfg(pcfg)
+            .with_train_cfg(tcfg);
+        if let Some(t) = teacher {
+            b = b.with_teacher(t);
+        }
+        b.open()
+    }
+
+    /// One-shot session (no fine-tune stage) for (model, task).
+    fn oneshot_session(
+        &self,
+        model: &str,
+        task: &str,
+        env: &InferenceEnv,
+        pcfg: PruneCfg,
+    ) -> Result<CompressionSession<'_>> {
+        CompressionSession::for_model(&self.engine, model, task)
+            .with_env(env.clone())
+            .with_prune_cfg(pcfg)
+            .open()
     }
 
     fn ft_cfg(&self, kd: bool) -> TrainCfg {
@@ -137,7 +182,7 @@ fn eval_value(kind: &str, ev: &EvalResult) -> f64 {
 pub fn fig_curves(ctx: &ExpCtx, model: &str, task: &str, targets: &[f64]) -> Result<Json> {
     let ds = ctx.dataset(model, task);
     let teacher = ctx.teacher(model, task, &ds)?;
-    let table = ctx.table(model, "throughput")?;
+    let env = ctx.env(model, Regime::Throughput)?;
     let minfo = ctx.engine.manifest.model(model).clone();
     let tinfo = ctx.engine.manifest.task(model, task).clone();
     let kind = ds.kind.clone();
@@ -150,16 +195,17 @@ pub fn fig_curves(ctx: &ExpCtx, model: &str, task: &str, targets: &[f64]) -> Res
     let mut rows: Vec<Json> = Vec::new();
 
     // --- ZipLM gradual (one run → whole family)
-    let stages = pruner::gradual(
-        &ctx.engine,
-        teacher.clone(),
-        &ds,
-        &table,
-        targets,
-        &ctx.prune_cfg(),
-        &ctx.ft_cfg(kind != "lm"),
-        Some(teacher.params.clone()),
-    )?;
+    let stages = ctx
+        .gradual_session(
+            model,
+            task,
+            &env,
+            targets,
+            ctx.prune_cfg(),
+            ctx.ft_cfg(kind != "lm"),
+            Some(teacher.params.clone()),
+        )?
+        .run(teacher.clone(), &ds)?;
     for s in &stages {
         let ev = eval::evaluate(&ctx.engine, &s.state, &ds, "dev")?;
         let anatomy = s.state.masks.summary();
@@ -195,8 +241,8 @@ pub fn fig_curves(ctx: &ExpCtx, model: &str, task: &str, targets: &[f64]) -> Res
         for &t in targets {
             let mut st = teacher.clone();
             let r = match which {
-                0 => baselines::magnitude_for_speedup(&mut st, &minfo, &tinfo, &table, t),
-                _ => baselines::layer_drop_for_speedup(&mut st, &minfo, &tinfo, &table, t),
+                0 => baselines::magnitude_for_speedup(&mut st, &minfo, &tinfo, &env, t),
+                _ => baselines::layer_drop_for_speedup(&mut st, &minfo, &tinfo, &env, t),
             };
             if r.is_err() {
                 continue;
@@ -204,7 +250,7 @@ pub fn fig_curves(ctx: &ExpCtx, model: &str, task: &str, targets: &[f64]) -> Res
             let mut tr = Trainer::new(&ctx.engine, tinfo.n_params, Some(teacher.params.clone()));
             let _ = tr.train(&mut st, &ds, &ctx.ft_cfg(kind != "lm"))?;
             let ev = eval::evaluate(&ctx.engine, &st, &ds, "dev")?;
-            let sp = table.speedup(&r.unwrap());
+            let sp = env.speedup(&r.unwrap());
             println!("  {bname} {t:>4.1}x (real {sp:.1}x)  {}={:.4}", metric_name(&kind), eval_value(&kind, &ev));
             rows.push(Json::obj(vec![
                 ("method", Json::Str(bname.into())),
@@ -257,29 +303,25 @@ pub fn table1(ctx: &ExpCtx) -> Result<()> {
     println!("== table1: dense PPL {dense_ppl:.2} ==");
     let targets: Vec<f64> = if ctx.fast { vec![1.5, 2.0] } else { vec![1.5, 2.0, 2.5, 3.0] };
     let mut rows = Vec::new();
-    for regime in ["throughput", "latency"] {
-        let table = ctx.table(model, regime)?;
-        let stages = pruner::gradual(
-            &ctx.engine,
-            teacher.clone(),
-            &ds,
-            &table,
-            &targets,
-            &ctx.prune_cfg(),
-            &ctx.ft_cfg(false), // no KD for GPT (paper App. I)
-            None,
-        )?;
+    for regime in [Regime::Throughput, Regime::Latency] {
+        let env = ctx.env(model, regime)?;
+        // no KD for GPT (paper App. I)
+        let stages = ctx
+            .gradual_session(model, task, &env, &targets, ctx.prune_cfg(), ctx.ft_cfg(false), None)?
+            .run(teacher.clone(), &ds)?;
         for s in &stages {
             let ppl = eval::evaluate(&ctx.engine, &s.state, &ds, "test")?.perplexity.unwrap();
             let anatomy = s.state.masks.summary();
             let density = s.state.masks.density();
             println!(
-                "  zipgpt [{regime}] {:>3.1}x  PPL={ppl:.2}  density={density:.2}  {:?}",
-                s.report.target, anatomy
+                "  zipgpt [{}] {:>3.1}x  PPL={ppl:.2}  density={density:.2}  {:?}",
+                regime.name(),
+                s.report.target,
+                anatomy
             );
             rows.push(Json::obj(vec![
                 ("method", Json::Str("zipgpt".into())),
-                ("regime", Json::Str(regime.into())),
+                ("regime", Json::Str(regime.name().into())),
                 ("target", Json::Num(s.report.target)),
                 ("ppl", Json::Num(ppl)),
                 ("density", Json::Num(density)),
@@ -297,8 +339,8 @@ pub fn table1(ctx: &ExpCtx) -> Result<()> {
     let mut tr = Trainer::new(&ctx.engine, tinfo.n_params, None);
     tr.train(&mut student, &ds, &ctx.ft_cfg(false))?;
     let ppl = eval::evaluate(&ctx.engine, &student, &ds, "test")?.perplexity.unwrap();
-    let table = ctx.table(model, "throughput")?;
-    let sp = table.speedup(&student.masks.summary());
+    let env = ctx.env(model, Regime::Throughput)?;
+    let sp = env.speedup(&student.masks.summary());
     println!("  distilgpt-style  {sp:.1}x  PPL={ppl:.2}");
     rows.push(Json::obj(vec![
         ("method", Json::Str("distilgpt-style".into())),
@@ -323,21 +365,20 @@ pub fn table2(ctx: &ExpCtx) -> Result<()> {
         let model = "bert-syn-base";
         let ds = ctx.dataset(model, task);
         let teacher = ctx.teacher(model, task, &ds)?;
-        let table = ctx.table(model, "throughput")?;
+        let env = ctx.env(model, Regime::Throughput)?;
         let minfo = ctx.engine.manifest.model(model).clone();
         let tinfo = ctx.engine.manifest.task(model, task).clone();
         let kind = ds.kind.clone();
+        let sess = ctx.oneshot_session(model, task, &env, ctx.prune_cfg())?;
         for &t in &[1.5, 2.0] {
             // ZipLM one-shot
             let mut zs = teacher.clone();
-            let cfg = ctx.prune_cfg();
-            let dense = table.dense_time(minfo.n_layers);
-            pruner::prune_to_target(&ctx.engine, &mut zs, &ds, &table, dense, t, &cfg)?;
+            sess.oneshot(&mut zs, &ds, t)?;
             let zev = eval::evaluate(&ctx.engine, &zs, &ds, "dev")?;
-            // Kwon-style
+            // Kwon-style: same captured Hessians, diagonal saliencies
             let mut ks = teacher.clone();
-            let hs = pruner::capture_hessians(&ctx.engine, &ks, &ds, cfg.calib_samples)?;
-            baselines::fisher_oneshot(&mut ks, &minfo, &tinfo, &table, &hs, t)?;
+            let hs = sess.capture(&ks, &ds)?.hessians;
+            baselines::fisher_oneshot(&mut ks, &minfo, &tinfo, &env, &hs, t)?;
             let kev = eval::evaluate(&ctx.engine, &ks, &ds, "dev")?;
             println!(
                 "  table2 {task} {t}x: ziplm={:.4} kwon-style={:.4}",
@@ -360,8 +401,7 @@ pub fn table4(ctx: &ExpCtx) -> Result<()> {
     let task = "squad-syn";
     let ds = ctx.dataset(model, task);
     let teacher = ctx.teacher(model, task, &ds)?;
-    let table = ctx.table(model, "throughput")?;
-    let minfo = ctx.engine.manifest.model(model).clone();
+    let env = ctx.env(model, Regime::Throughput)?;
     let samples: Vec<usize> = if ctx.fast { vec![4, 32, 128] } else { vec![4, 32, 128, 512, 1024] };
     let mut rows = Vec::new();
     for &n in &samples {
@@ -370,8 +410,7 @@ pub fn table4(ctx: &ExpCtx) -> Result<()> {
             let mut st = teacher.clone();
             let mut cfg = ctx.prune_cfg();
             cfg.calib_samples = n;
-            let dense = table.dense_time(minfo.n_layers);
-            pruner::prune_to_target(&ctx.engine, &mut st, &ds, &table, dense, t, &cfg)?;
+            ctx.oneshot_session(model, task, &env, cfg)?.oneshot(&mut st, &ds, t)?;
             let ev = eval::evaluate(&ctx.engine, &st, &ds, "dev")?;
             println!("  table4 n={n} {t}x EM={:.4}", ev.metric);
             row.push(if t == 1.5 { ("em_1_5x", Json::Num(ev.metric)) } else { ("em_2x", Json::Num(ev.metric)) });
@@ -388,17 +427,18 @@ pub fn table4(ctx: &ExpCtx) -> Result<()> {
 pub fn table3(ctx: &ExpCtx) -> Result<()> {
     let dims = ArchDims::bert_base_paper();
     let widths = [3072usize, 1814, 1322, 302, 130, 76, 33];
-    let v = latency::analytic(Device::V100Sim, &dims, "throughput", &widths);
-    let a = latency::analytic(Device::A100Sim, &dims, "throughput", &widths);
-    let cpu = ctx.table("bert-syn-base", "throughput")?;
+    let v = InferenceEnv::analytic(Device::V100Sim, &dims, Regime::Throughput, &widths);
+    let a = InferenceEnv::analytic(Device::A100Sim, &dims, Regime::Throughput, &widths);
+    let cpu = ctx.env("bert-syn-base", Regime::Throughput)?;
     println!("== table3: MLP size | V100-sim | A100-sim | cpu-pjrt(scaled) ==");
     let mut rows = Vec::new();
     for &w in &widths {
         let sv = v.mlp_time(3072) / v.mlp_time(w);
         let sa = a.mlp_time(3072) / a.mlp_time(w);
         // scale paper widths onto our measured model's ladder
-        let scaled = (w as f64 / 3072.0 * cpu.mlp[0].0 as f64).round() as usize;
-        let sc = cpu.mlp_time(cpu.mlp[0].0) / cpu.mlp_time(scaled.max(1));
+        let dense_w = cpu.table().mlp[0].0;
+        let scaled = (w as f64 / 3072.0 * dense_w as f64).round() as usize;
+        let sc = cpu.mlp_time(dense_w) / cpu.mlp_time(scaled.max(1));
         println!("  {w:>5}  {sv:>6.1}x  {sa:>6.1}x  {sc:>6.1}x");
         rows.push(Json::obj(vec![
             ("mlp", Json::Num(w as f64)),
@@ -421,7 +461,7 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
     for task in ["sst2-syn", "qnli-syn", "mnli-syn", "squad-syn"] {
         let ds = ctx.dataset(model, task);
         let teacher = ctx.teacher(model, task, &ds)?;
-        let table = ctx.table(model, "throughput")?;
+        let env = ctx.env(model, Regime::Throughput)?;
         let kind = ds.kind.clone();
         let mut vals = Vec::new();
         for with_token in [true, false] {
@@ -429,16 +469,17 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
             if !with_token {
                 cfg.lambdas = [1.0, 0.5, 0.0];
             }
-            let stages = pruner::gradual(
-                &ctx.engine,
-                teacher.clone(),
-                &ds,
-                &table,
-                &target,
-                &ctx.prune_cfg(),
-                &cfg,
-                Some(teacher.params.clone()),
-            )?;
+            let stages = ctx
+                .gradual_session(
+                    model,
+                    task,
+                    &env,
+                    &target,
+                    ctx.prune_cfg(),
+                    cfg,
+                    Some(teacher.params.clone()),
+                )?
+                .run(teacher.clone(), &ds)?;
             let ev = eval::evaluate(&ctx.engine, &stages[0].state, &ds, "dev")?;
             vals.push(eval_value(&kind, &ev));
         }
@@ -457,11 +498,14 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
 // ===================================================================
 
 pub fn table7(ctx: &ExpCtx) -> Result<()> {
-    for regime in ["throughput", "latency"] {
-        let t = ctx.table("bert-syn-base", regime)?;
-        println!("{}", t.render());
+    for regime in [Regime::Throughput, Regime::Latency] {
+        let env = ctx.env("bert-syn-base", regime)?;
+        println!("{}", env.table().render());
         std::fs::create_dir_all(&ctx.results)?;
-        std::fs::write(ctx.results.join(format!("table7_{regime}.txt")), t.render())?;
+        std::fs::write(
+            ctx.results.join(format!("table7_{}.txt", regime.name())),
+            env.table().render(),
+        )?;
     }
     Ok(())
 }
@@ -473,16 +517,14 @@ pub fn table8(ctx: &ExpCtx) -> Result<()> {
     let task = "squad-syn";
     let ds = ctx.dataset(model, task);
     let teacher = ctx.teacher(model, task, &ds)?;
-    let table = ctx.table(model, "throughput")?;
-    let minfo = ctx.engine.manifest.model(model).clone();
+    let env = ctx.env(model, Regime::Throughput)?;
     let targets: Vec<f64> = if ctx.fast { vec![2.0, 4.0] } else { vec![2.0, 4.0, 6.0, 8.0] };
     let dense_t = measure_specialized(ctx, &teacher, "dense")?;
+    let sess = ctx.oneshot_session(model, task, &env, ctx.prune_cfg())?;
     let mut rows = Vec::new();
     for &t in &targets {
         let mut st = teacher.clone();
-        let dense_cost = table.dense_time(minfo.n_layers);
-        let rep =
-            pruner::prune_to_target(&ctx.engine, &mut st, &ds, &table, dense_cost, t, &ctx.prune_cfg())?;
+        let rep = sess.oneshot(&mut st, &ds, t)?;
         let pruned_t = measure_specialized(ctx, &st, &format!("t{t:.0}x"))?;
         let achieved = dense_t / pruned_t;
         let dev = (achieved - t) / t * 100.0;
@@ -636,25 +678,26 @@ pub fn fig4(ctx: &ExpCtx) -> Result<()> {
     let task = "sst2-syn";
     let ds = ctx.dataset(model, task);
     let teacher = ctx.teacher(model, task, &ds)?;
-    let table = ctx.table(model, "throughput")?;
+    let env = ctx.env(model, Regime::Throughput)?;
     let targets: Vec<f64> = if ctx.fast { vec![2.0, 6.0] } else { vec![2.0, 4.0, 6.0, 10.0] };
     let mut rows = Vec::new();
     for mode in [TargetMode::Speedup, TargetMode::Sparsity] {
         let mut cfg = ctx.prune_cfg();
         cfg.target_mode = mode;
-        let stages = pruner::gradual(
-            &ctx.engine,
-            teacher.clone(),
-            &ds,
-            &table,
-            &targets,
-            &cfg,
-            &ctx.ft_cfg(true),
-            Some(teacher.params.clone()),
-        )?;
+        let stages = ctx
+            .gradual_session(
+                model,
+                task,
+                &env,
+                &targets,
+                cfg,
+                ctx.ft_cfg(true),
+                Some(teacher.params.clone()),
+            )?
+            .run(teacher.clone(), &ds)?;
         for s in &stages {
             let ev = eval::evaluate(&ctx.engine, &s.state, &ds, "dev")?;
-            let real = table.speedup(&s.report.layer_profile);
+            let real = env.speedup(&s.report.layer_profile);
             println!(
                 "  fig4 {:?} target={:.0}x real={:.2}x acc={:.4}",
                 mode, s.report.target, real, ev.metric
@@ -680,19 +723,20 @@ pub fn fig5(ctx: &ExpCtx) -> Result<()> {
         let task = "squad-syn";
         let ds = ctx.dataset(model, task);
         let teacher = ctx.teacher(model, task, &ds)?;
-        let table = ctx.table(model, "throughput")?;
+        let env = ctx.env(model, Regime::Throughput)?;
         let targets: Vec<f64> =
             if ctx.fast { vec![2.0, 6.0, 12.0] } else { vec![2.0, 4.0, 8.0, 12.0, 16.0, 24.0] };
-        let stages = pruner::gradual(
-            &ctx.engine,
-            teacher.clone(),
-            &ds,
-            &table,
-            &targets,
-            &ctx.prune_cfg(),
-            &ctx.ft_cfg(true),
-            Some(teacher.params.clone()),
-        )?;
+        let stages = ctx
+            .gradual_session(
+                model,
+                task,
+                &env,
+                &targets,
+                ctx.prune_cfg(),
+                ctx.ft_cfg(true),
+                Some(teacher.params.clone()),
+            )?
+            .run(teacher.clone(), &ds)?;
         let mut pts = Vec::new();
         for s in &stages {
             let ev = eval::evaluate(&ctx.engine, &s.state, &ds, "dev")?;
@@ -729,7 +773,7 @@ pub fn fig6(ctx: &ExpCtx) -> Result<()> {
     let task = "squad-syn";
     let ds = ctx.dataset(model, task);
     let teacher = ctx.teacher(model, task, &ds)?;
-    let table = ctx.table(model, "throughput")?;
+    let env = ctx.env(model, Regime::Throughput)?;
     let minfo = ctx.engine.manifest.model(model).clone();
     let tinfo = ctx.engine.manifest.task(model, task).clone();
     let engine_model = quant::CpuEngineModel::default();
@@ -741,10 +785,10 @@ pub fn fig6(ctx: &ExpCtx) -> Result<()> {
         for &t in &targets {
             let mut st = teacher.clone();
             if use_ziplm {
-                let dense_cost = table.dense_time(minfo.n_layers);
-                pruner::prune_to_target(&ctx.engine, &mut st, &ds, &table, dense_cost, t, &ctx.prune_cfg())?;
+                ctx.oneshot_session(model, task, &env, ctx.prune_cfg())?
+                    .oneshot(&mut st, &ds, t)?;
             } else {
-                baselines::layer_drop_for_speedup(&mut st, &minfo, &tinfo, &table, t)?;
+                baselines::layer_drop_for_speedup(&mut st, &minfo, &tinfo, &env, t)?;
             }
             let mut tr = Trainer::new(&ctx.engine, tinfo.n_params, Some(teacher.params.clone()));
             tr.train(&mut st, &ds, &ctx.ft_cfg(true))?;
@@ -807,44 +851,18 @@ pub fn fig8(ctx: &ExpCtx) -> Result<()> {
 // ===================================================================
 
 /// Write the family manifest + per-member checkpoints for a finished
-/// gradual run (paper App. F: one run, a whole certified family). The
-/// dense teacher becomes the `"dense"` member; each SPDY stage becomes
-/// a `"<target>x"` member carrying its certified profile/speedup.
+/// gradual run (paper App. F). Legacy wrapper retained for one PR;
+/// the implementation is [`crate::session::pipeline::emit_family`],
+/// reached through [`CompressionSession::emit_family`].
+#[deprecated(note = "use session::CompressionSession::emit_family")]
 pub fn emit_family(
     ctx: &ExpCtx,
     dense: &ModelState,
-    stages: &[pruner::StageResult],
-    table: &LatencyTable,
+    stages: &[StageResult],
+    env: &InferenceEnv,
 ) -> Result<FamilyManifest> {
-    let (model, task) = (dense.model.clone(), dense.task.clone());
-    let dir = ctx.runs.join(format!("family_{model}_{task}"));
-    std::fs::create_dir_all(&dir)?;
-    let mut fam = FamilyManifest::new(&model, &task, &table.regime);
-    let dense_profile = dense.masks.summary();
-    dense.save(&dir.join("dense.zlm"))?;
-    fam.push(FamilyMember {
-        tag: "dense".into(),
-        ckpt: "dense.zlm".into(),
-        target: 1.0,
-        est_speedup: table.speedup(&dense_profile),
-        profile: dense_profile,
-    });
-    for s in stages {
-        let tag = format!("{:.1}x", s.report.target);
-        let ckpt = format!("{tag}.zlm");
-        s.state.save(&dir.join(&ckpt))?;
-        fam.push(FamilyMember {
-            tag,
-            ckpt,
-            target: s.report.target,
-            est_speedup: s.report.est_speedup,
-            profile: s.report.layer_profile.clone(),
-        });
-    }
-    let path = dir.join("family.json");
-    fam.save(&path)?;
-    println!("[family] wrote {} ({} members)", path.display(), fam.members.len());
-    Ok(fam)
+    let dir = ctx.runs.join(format!("family_{}_{}", dense.model, dense.task));
+    crate::session::pipeline::emit_family(env, dense, stages, &dir)
 }
 
 /// Fire a mixed-SLA workload at a running family coordinator: a
@@ -899,20 +917,20 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
     let (model, task) = ("bert-syn-base", "sst2-syn");
     let ds = ctx.dataset(model, task);
     let teacher = ctx.teacher(model, task, &ds)?;
-    let table = ctx.table(model, "throughput")?;
+    let env = ctx.env(model, Regime::Throughput)?;
     let targets: Vec<f64> = if ctx.fast { vec![2.0] } else { vec![1.5, 3.0] };
-    let stages = pruner::gradual(
-        &ctx.engine,
-        teacher.clone(),
-        &ds,
-        &table,
+    let sess = ctx.gradual_session(
+        model,
+        task,
+        &env,
         &targets,
-        &ctx.prune_cfg(),
-        &ctx.ft_cfg(true),
+        ctx.prune_cfg(),
+        ctx.ft_cfg(true),
         Some(teacher.params.clone()),
     )?;
-    let fam = emit_family(ctx, &teacher, &stages, &table)?;
+    let stages = sess.run(teacher.clone(), &ds)?;
     let base = ctx.runs.join(format!("family_{model}_{task}"));
+    let fam = sess.emit_family(&teacher, &stages, &base)?;
     let members: Vec<(String, ModelState)> =
         fam.load_states(&base)?.into_iter().map(|(m, st)| (m.tag, st)).collect();
     let minfo = ctx.engine.manifest.model(model).clone();
@@ -924,12 +942,12 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
             pressure: 64,
         },
         members,
-        &table,
+        &env,
     )?;
     let n = if ctx.fast { 48 } else { 120 };
     // interactive bound: a bit under one dense batched fwd, so latency-
     // sensitive requests must spill to a pruned member under load
-    let bound = std::time::Duration::from_secs_f64(table.dense_time(minfo.n_layers) * 0.8);
+    let bound = std::time::Duration::from_secs_f64(env.dense_time(minfo.n_layers) * 0.8);
     let rows = mixed_workload(&handle, &ds, n, bound, targets[0].min(2.0))?;
     let stats = handle.shutdown()?;
     let mut out_rows = Vec::new();
@@ -982,33 +1000,92 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
     )
 }
 
-/// Dispatch by experiment id.
+/// One experiment driver.
+pub type Driver = fn(&ExpCtx) -> Result<()>;
+
+/// The single experiment registry: drives [`run`]'s dispatch, the
+/// valid-id list in [`UnknownExperiment`], AND the `all` meta-id
+/// (which executes the table in THIS order — cheap table dumps before
+/// the long gradual runs). Adding an experiment means adding exactly
+/// one row here.
+pub const EXPERIMENTS: &[(&str, Driver)] = &[
+    ("table7", table7),
+    ("table3", table3),
+    ("table2", table2),
+    ("table4", table4),
+    ("fig2", fig2),
+    ("fig3", fig3),
+    ("table5", table5),
+    ("fig4", fig4),
+    ("fig5", fig5),
+    ("fig6", fig6),
+    ("table1", table1),
+    ("table8", table8),
+    ("fig8", fig8),
+    ("family", family),
+];
+
+/// Every experiment id [`run`] accepts, besides the `all` meta-id.
+pub fn experiment_ids() -> Vec<&'static str> {
+    EXPERIMENTS.iter().map(|&(id, _)| id).collect()
+}
+
+/// Structured "no such experiment" error: carries the offending id and
+/// the full valid set, so callers (CLI, scripts) can render an
+/// actionable message or match on it as the id set grows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownExperiment {
+    /// the id that failed to resolve
+    pub id: String,
+    /// every accepted id (see [`EXPERIMENTS`])
+    pub valid: Vec<&'static str>,
+}
+
+impl std::fmt::Display for UnknownExperiment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown experiment `{}`; valid ids: {}, or `all`",
+            self.id,
+            self.valid.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownExperiment {}
+
+/// Dispatch by experiment id (`all` runs the whole registry in order).
 pub fn run(ctx: &ExpCtx, id: &str) -> Result<()> {
-    match id {
-        "fig2" => fig2(ctx),
-        "fig3" => fig3(ctx),
-        "fig4" => fig4(ctx),
-        "fig5" => fig5(ctx),
-        "fig6" => fig6(ctx),
-        "fig8" => fig8(ctx),
-        "table1" => table1(ctx),
-        "table2" => table2(ctx),
-        "table3" => table3(ctx),
-        "table4" => table4(ctx),
-        "table5" => table5(ctx),
-        "table7" => table7(ctx),
-        "table8" => table8(ctx),
-        "family" => family(ctx),
-        "all" => {
-            for id in [
-                "table7", "table3", "table2", "table4", "fig2", "fig3", "table5", "fig4", "fig5",
-                "fig6", "table1", "table8", "fig8", "family",
-            ] {
-                println!("=== experiment {id} ===");
-                run(ctx, id)?;
-            }
-            Ok(())
+    if id == "all" {
+        for (eid, f) in EXPERIMENTS {
+            println!("=== experiment {eid} ===");
+            f(ctx)?;
         }
-        other => Err(anyhow!("unknown experiment `{other}`")),
+        return Ok(());
+    }
+    match EXPERIMENTS.iter().find(|&&(eid, _)| eid == id) {
+        Some((_, f)) => f(ctx),
+        None => Err(UnknownExperiment { id: id.to_string(), valid: experiment_ids() }.into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::UnknownExperiment;
+
+    #[test]
+    fn unknown_experiment_error_lists_valid_ids() {
+        let e = UnknownExperiment { id: "fig99".into(), valid: super::experiment_ids() };
+        let msg = e.to_string();
+        assert!(msg.contains("`fig99`"), "{msg}");
+        for (id, _) in super::EXPERIMENTS {
+            assert!(msg.contains(id), "missing {id} in {msg}");
+        }
+        assert!(msg.contains("`all`"), "{msg}");
+        // converts into the crate error type via std::error::Error,
+        // preserving the rendered id list (the vendored anyhow is
+        // string-backed, so Display is the contract here)
+        let any: anyhow::Error = e.clone().into();
+        assert_eq!(any.to_string(), e.to_string());
     }
 }

@@ -55,7 +55,7 @@ impl Device {
 }
 
 /// Latency table for one (model, device, regime).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LatencyTable {
     /// model the table was measured/derived for
     pub model: String,
@@ -233,7 +233,7 @@ pub fn measure_cpu(engine: &Engine, model: &str, regime: &str, reps: usize) -> R
     // Fixed overhead: embeddings + task head, estimated from flops
     // relative to one dense layer (measured), since the fwd artifact's
     // batch differs per regime.
-    let (b, s) = block_regime(engine, model, regime)?;
+    let (b, s) = regime_shape(engine, model, regime)?;
     let dense_layer = attn[info.n_heads] + mlp[0].1;
     let layer_flops = flops_attn(&info, info.n_heads, b, s) + flops_mlp(&info, info.d_ff, b, s);
     let head_flops = flops_overhead(&info, b, s);
@@ -248,7 +248,10 @@ pub fn measure_cpu(engine: &Engine, model: &str, regime: &str, reps: usize) -> R
     })
 }
 
-fn block_regime(engine: &Engine, model: &str, regime: &str) -> Result<(usize, usize)> {
+/// Static `(batch, seq)` shape of the measured block artifacts for
+/// `(model, regime)` — the batch shape an [`crate::env::InferenceEnv`]
+/// records alongside a measured table.
+pub fn regime_shape(engine: &Engine, model: &str, regime: &str) -> Result<(usize, usize)> {
     let info = engine.manifest.model(model);
     let name = format!("{model}__block_attn_h{}__{regime}", info.n_heads);
     let a = engine

@@ -21,6 +21,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
+pub mod env;
 pub mod eval;
 pub mod exp;
 pub mod latency;
@@ -28,6 +29,7 @@ pub mod models;
 pub mod pruner;
 pub mod quant;
 pub mod runtime;
+pub mod session;
 pub mod spdy;
 pub mod tensor;
 pub mod train;

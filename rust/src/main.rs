@@ -4,13 +4,18 @@
 //!   train-teacher  --model M --task T [--epochs E]
 //!   latency-table  --model M [--regime throughput|latency]
 //!   prune-oneshot  --model M --task T --speedup S [--calib N]
-//!   prune-gradual  --model M --task T --speedups 2,3,4 [--epochs E]
+//!   prune-gradual  --model M --task T --speedups 2,3,4 [--epochs E] [--session-dir D]
 //!   eval           --ckpt path [--split dev|test]
 //!   serve          --ckpt path [--batch B] [--wait-ms W]
 //!   serve-family   --family runs/family_M_T/family.json [--requests N] [--pressure P]
 //!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|all> [--fast]
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --fast.
+//!
+//! The pruning subcommands drive [`ziplm::session::CompressionSession`];
+//! `prune-gradual` checkpoints every stage under `--session-dir`
+//! (default `runs/session_M_T`), so re-running the same command after a
+//! crash resumes from the completed stages instead of recomputing.
 
 use std::path::{Path, PathBuf};
 
@@ -18,12 +23,14 @@ use anyhow::{anyhow, Result};
 
 use ziplm::coordinator::{self, ServerCfg};
 use ziplm::data;
+use ziplm::env::{CostModel, Regime};
 use ziplm::eval::evaluate;
 use ziplm::exp::{self, ExpCtx};
 use ziplm::latency;
 use ziplm::models::ModelState;
-use ziplm::pruner::{self, PruneCfg};
+use ziplm::pruner::PruneCfg;
 use ziplm::runtime::Engine;
+use ziplm::session::{stdout_progress, CompressionSession};
 use ziplm::train::TrainCfg;
 use ziplm::util::cli::Args;
 
@@ -105,12 +112,15 @@ fn prune_oneshot(args: &Args) -> Result<()> {
     let speedup = args.f64_or("speedup", 2.0);
     let ds = ctx.dataset(&model, &task);
     let mut st = ctx.teacher(&model, &task, &ds)?;
-    let table = ctx.table(&model, &args.str_or("regime", "throughput"))?;
-    let minfo = ctx.engine.manifest.model(&model).clone();
+    let env = ctx.env(&model, Regime::parse(&args.str_or("regime", "throughput"))?)?;
     let mut cfg = PruneCfg { calib_samples: args.usize_or("calib", 256), ..Default::default() };
     cfg.spdy.iters = args.usize_or("spdy-iters", 120);
-    let dense = table.dense_time(minfo.n_layers);
-    let report = pruner::prune_to_target(&ctx.engine, &mut st, &ds, &table, dense, speedup, &cfg)?;
+    let sess = CompressionSession::for_model(&ctx.engine, &model, &task)
+        .with_env(env)
+        .with_prune_cfg(cfg)
+        .on_progress(stdout_progress())
+        .open()?;
+    let report = sess.oneshot(&mut st, &ds, speedup)?;
     let ev = evaluate(&ctx.engine, &st, &ds, "dev")?;
     println!(
         "one-shot {speedup}x: est={:.2}x dev-metric={:.4} profile={:?}",
@@ -130,7 +140,7 @@ fn prune_gradual(args: &Args) -> Result<()> {
     let targets = args.f64_list("speedups", &[2.0, 3.0, 4.0]);
     let ds = ctx.dataset(&model, &task);
     let teacher = ctx.teacher(&model, &task, &ds)?;
-    let table = ctx.table(&model, &args.str_or("regime", "throughput"))?;
+    let env = ctx.env(&model, Regime::parse(&args.str_or("regime", "throughput"))?)?;
     let cfg = PruneCfg { calib_samples: args.usize_or("calib", 256), ..Default::default() };
     let kd = !ctx.engine.manifest.model(&model).causal;
     let tcfg = TrainCfg {
@@ -139,16 +149,24 @@ fn prune_gradual(args: &Args) -> Result<()> {
         lambdas: if kd { [1.0, 0.5, 0.5] } else { [1.0, 0.0, 0.0] },
         ..Default::default()
     };
-    let stages = pruner::gradual(
-        &ctx.engine,
-        teacher.clone(),
-        &ds,
-        &table,
-        &targets,
-        &cfg,
-        &tcfg,
-        if kd { Some(teacher.params.clone()) } else { None },
-    )?;
+    // every stage checkpoints under the session dir: re-running this
+    // command after a crash resumes instead of recomputing
+    let session_dir =
+        args.str_or("session-dir", &format!("runs/session_{model}_{task}"));
+    let mut b = CompressionSession::for_model(&ctx.engine, &model, &task)
+        .with_env(env)
+        .with_targets(&targets)
+        .with_prune_cfg(cfg)
+        .with_train_cfg(tcfg)
+        .checkpoint_to(&session_dir)
+        .on_progress(stdout_progress());
+    if kd {
+        b = b.with_teacher(teacher.params.clone());
+    }
+    let sess = b.open()?;
+    let stages = sess.run(teacher.clone(), &ds)?;
+    let (computed, loaded) = sess.counters();
+    println!("[session] {computed} artifact(s) computed, {loaded} resumed from {session_dir}");
     for s in &stages {
         let ev = evaluate(&ctx.engine, &s.state, &ds, "dev")?;
         println!(
@@ -158,7 +176,7 @@ fn prune_gradual(args: &Args) -> Result<()> {
         s.state.save(Path::new(&format!("runs/ziplm_{model}_{task}_{:.0}x.zlm", s.report.target)))?;
     }
     // record the whole certified family for `serve-family` (App. F)
-    exp::emit_family(&ctx, &teacher, &stages, &table)?;
+    sess.emit_family(&teacher, &stages, &PathBuf::from(format!("runs/family_{model}_{task}")))?;
     Ok(())
 }
 
@@ -232,7 +250,9 @@ fn serve_family(args: &Args) -> Result<()> {
         fam.members.iter().map(|m| m.tag.as_str()).collect::<Vec<_>>()
     );
     let ctx = ctx(args)?;
-    let table = ctx.table(&fam.model, &fam.regime)?;
+    // admission estimates come from the SAME env the family was
+    // certified against (manifest records its regime)
+    let env = ctx.env(&fam.model, Regime::parse(&fam.regime)?)?;
     let minfo = ctx.engine.manifest.model(&fam.model).clone();
     let ds = ctx.dataset(&fam.model, &fam.task);
     let handle = ziplm::coordinator::family::start(
@@ -243,11 +263,11 @@ fn serve_family(args: &Args) -> Result<()> {
             pressure: args.usize_or("pressure", 64),
         },
         members,
-        &table,
+        &env,
     )?;
     let n = args.usize_or("requests", 96);
     let bound =
-        std::time::Duration::from_secs_f64(table.dense_time(minfo.n_layers) * 0.8);
+        std::time::Duration::from_secs_f64(env.dense_time(minfo.n_layers) * 0.8);
     let min_speedup = fam
         .members
         .iter()

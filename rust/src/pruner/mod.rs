@@ -1,31 +1,26 @@
-//! Pruning drivers: the ZipLM pipeline (paper Fig. 1).
+//! Pruning configuration/report types, plus the legacy free-function
+//! pipeline as deprecated shims.
 //!
-//!   1. capture calibration Hessians through the masked model,
-//!   2. build per-module databases (ziplm/) via the OBS kernels — all
-//!      2L modules fan out in parallel across the machine,
-//!   3. structured SPDY search (spdy/) against the latency table for
-//!      the next speedup target,
-//!   4. apply the chosen profile (masks + OBS-updated weights),
-//!   5. gradual mode: fine-tune with token distillation and continue to
-//!      the next target — one run emits the whole model family.
-//!
-//! One-shot (post-training) mode is steps 1–4 only (paper §4.3).
+//! The ZipLM pipeline (paper Fig. 1 — capture → databases → SPDY →
+//! apply → family) now lives behind the typed
+//! [`crate::session::CompressionSession`] API; the algorithmic bodies
+//! are in [`crate::session::pipeline`]. The free functions here are
+//! one-PR compatibility shims so downstream diffs stay reviewable —
+//! they delegate directly and will be removed next PR. The *types*
+//! ([`PruneCfg`], [`PruneReport`], [`Hessians`], [`StageResult`], …)
+//! are not deprecated; the session API shares them.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::eval::{calib_loss, mask_literals};
-use crate::latency::LatencyTable;
+use crate::env::InferenceEnv;
 use crate::models::ModelState;
-use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine, ModelInfo, TaskInfo};
-use crate::spdy::{self, LevelOpt, ModuleLevels, SearchCfg, SpdyProblem};
+use crate::runtime::{Engine, ModelInfo, TaskInfo};
+use crate::session::pipeline;
+use crate::spdy::SpdyProblem;
 use crate::tensor::Tensor;
-use crate::train::{TrainCfg, Trainer};
-use crate::util::threadpool::parallel_tasks;
-use crate::ziplm::{
-    assemble_hessian, build_module_db, build_module_db_masked, HloBackend, ModuleDb,
-    NativeBackend, ObsOps,
-};
+use crate::train::TrainCfg;
+use crate::ziplm::ModuleDb;
 
 #[derive(Clone, Debug)]
 pub struct PruneCfg {
@@ -79,180 +74,57 @@ pub struct Hessians {
     pub ffn: Vec<Tensor>,  // per layer [d_ff, d_ff]
 }
 
+/// One gradual pruning stage: the certified report, the fine-tuned
+/// state, and its final training loss.
+pub struct StageResult {
+    pub report: PruneReport,
+    pub state: ModelState,
+    pub final_train_loss: f64,
+}
+
+// ------------------------------------------------------------- shims
+//
+// Legacy free-function pipeline. Each shim delegates to
+// `session::pipeline`; migrate to `CompressionSession` (the shims are
+// exercised only by the legacy-vs-session equivalence tests).
+
 /// Run the calib artifact over `n_samples` and accumulate XX^T.
+#[deprecated(
+    note = "use session::CompressionSession::capture (or session::pipeline::capture_hessians)"
+)]
 pub fn capture_hessians(
     engine: &Engine,
     state: &ModelState,
     data: &Dataset,
     n_samples: usize,
 ) -> Result<Hessians> {
-    let minfo = engine.manifest.model(&state.model).clone();
-    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
-    let b = engine.manifest.batch_calib;
-    let art = format!("{}__{}__calib", state.model, state.task);
-    let (hm, fm) = mask_literals(state)?;
-    let params = lit_f32_shaped(&[tinfo.n_params], &state.params)?;
-    let da = minfo.d_attn();
-    let f = minfo.d_ff;
-    let l = minfo.n_layers;
-    let mut attn = vec![Tensor::zeros(&[da, da]); l];
-    let mut ffn = vec![Tensor::zeros(&[f, f]); l];
-    let mut i = 0;
-    while i < n_samples.max(b) {
-        let idxs: Vec<usize> = (i..i + b).collect();
-        let (ids, _) = data.batch(&idxs);
-        let out = engine.run(
-            &art,
-            &[params.clone(), lit_i32(&[b, data.seq_len], &ids)?, hm.clone(), fm.clone()],
-        )?;
-        let ha = lit_to_f32(&out[0])?; // [L, da, da]
-        let hf = lit_to_f32(&out[1])?; // [L, f, f]
-        for li in 0..l {
-            let sa = &ha[li * da * da..(li + 1) * da * da];
-            for (dst, src) in attn[li].data.iter_mut().zip(sa) {
-                *dst += src;
-            }
-            let sf = &hf[li * f * f..(li + 1) * f * f];
-            for (dst, src) in ffn[li].data.iter_mut().zip(sf) {
-                *dst += src;
-            }
-        }
-        i += b;
-    }
-    Ok(Hessians { attn, ffn })
+    pipeline::capture_hessians(engine, state, data, n_samples)
 }
 
-/// Build all 2L module databases. Module order: (attn, fc) per layer.
-///
-/// Modules are independent once the per-module Hessian is accumulated,
-/// so every (layer, attn|fc) build — including its O(d³) Hessian
-/// inversion — runs as one [`parallel_tasks`] job, capped at the
-/// hardware parallelism: a full per-layer database build saturates
-/// the machine instead of running layer-by-layer.
+/// Build all 2L module databases (parallel fan-out).
+#[deprecated(note = "use session::Captured::build_dbs (or session::pipeline::build_databases)")]
 pub fn build_databases(
     engine: &Engine,
     state: &ModelState,
     hs: &Hessians,
     cfg: &PruneCfg,
 ) -> Result<Vec<ModuleDb>> {
-    let minfo = engine.manifest.model(&state.model).clone();
-    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
-    let n_modules = 2 * minfo.n_layers;
-    let dbs = parallel_tasks(n_modules, |m| -> Result<ModuleDb> {
-        let (l, is_attn) = (m / 2, m % 2 == 0);
-        if is_attn {
-            let w0 = state.attn_w_paper(&tinfo, l)?;
-            let (h, hinv) = assemble_hessian(&hs.attn[l], cfg.damp_frac)?;
-            let cur_heads = state.masks.heads_alive(l);
-            let levels: Vec<usize> = (0..=cur_heads).rev().collect();
-            if cfg.use_hlo {
-                let mut ops = HloBackend::attn(engine, &state.model)?;
-                build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))
-            } else {
-                let mut ops = NativeBackend::new(minfo.d_head);
-                build_db_with_mask(&mut ops, l, true, &w0, &hinv, &h, &levels, state.masks.head_row(l))
-            }
-        } else {
-            let w0 = state.fc_w_paper(&tinfo, l)?;
-            let (h, hinv) = assemble_hessian(&hs.ffn[l], cfg.damp_frac)?;
-            let cur = state.masks.ffn_alive(l);
-            let mut levels: Vec<usize> = vec![cur];
-            levels.extend(minfo.ffn_ladder.iter().copied().filter(|&x| x < cur));
-            if cfg.use_hlo {
-                let mut ops = HloBackend::fc(engine, &state.model)?;
-                build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))
-            } else {
-                let mut ops = NativeBackend::new(1);
-                build_db_with_mask(&mut ops, l, false, &w0, &hinv, &h, &levels, state.masks.ffn_row(l))
-            }
-        }
-    });
-    dbs.into_iter().collect()
+    pipeline::build_databases(engine, state, hs, cfg)
 }
 
-/// build_module_db wrapper that respects an existing structural mask
-/// (gradual pruning continues from the current model).
-#[allow(clippy::too_many_arguments)]
-fn build_db_with_mask(
-    ops: &mut dyn ObsOps,
-    layer: usize,
-    is_attn: bool,
-    w0: &Tensor,
-    hinv: &Tensor,
-    h: &Tensor,
-    levels: &[usize],
-    mask_row: &[f32],
-) -> Result<ModuleDb> {
-    let g = ops.group();
-    let n_structs = w0.cols() / g;
-    let already_dead: Vec<usize> =
-        (0..n_structs).filter(|&j| mask_row.get(j).copied().unwrap_or(1.0) == 0.0).collect();
-    if already_dead.is_empty() {
-        return build_module_db(ops, layer, is_attn, w0, hinv, h, levels);
-    }
-    // Re-anchor: treat currently-alive structures as the dense level.
-    let mut db = build_module_db_masked(ops, layer, is_attn, w0, hinv, h, levels, &already_dead)?;
-    for lvl in &mut db.levels {
-        // make dead lists absolute (include pre-existing dead)
-        let mut dead = already_dead.clone();
-        dead.extend(lvl.dead.iter().copied());
-        lvl.dead = dead;
-    }
-    Ok(db)
-}
-
-/// Module parameter counts for sparsity-target mode (Fig. 4).
-fn module_params(minfo: &ModelInfo, is_attn: bool, remaining: usize) -> f64 {
-    if is_attn {
-        // q,k,v,o weights+biases per head
-        (remaining * minfo.d_head * minfo.d_model * 4 + remaining * minfo.d_head * 3) as f64
-    } else {
-        (remaining * minfo.d_model * 2 + remaining) as f64
-    }
-}
-
-/// Assemble the SPDY problem from databases + latency table.
+/// Assemble the SPDY problem from databases + an inference environment.
+#[deprecated(note = "use session::Databases::solve (or session::pipeline::spdy_problem)")]
 pub fn spdy_problem(
     dbs: &[ModuleDb],
-    table: &LatencyTable,
+    env: &InferenceEnv,
     minfo: &ModelInfo,
     mode: TargetMode,
 ) -> SpdyProblem {
-    let modules = dbs
-        .iter()
-        .map(|db| ModuleLevels {
-            layer: db.layer,
-            is_attn: db.is_attn,
-            options: db
-                .levels
-                .iter()
-                .map(|lvl| LevelOpt {
-                    remaining: lvl.remaining,
-                    cost: match mode {
-                        TargetMode::Speedup => {
-                            if db.is_attn {
-                                table.attn_time(lvl.remaining)
-                            } else {
-                                table.mlp_time(lvl.remaining)
-                            }
-                        }
-                        TargetMode::Sparsity => module_params(minfo, db.is_attn, lvl.remaining),
-                    },
-                    prior: lvl.prior,
-                })
-                .collect(),
-        })
-        .collect();
-    SpdyProblem {
-        modules,
-        overhead: match mode {
-            TargetMode::Speedup => table.overhead,
-            TargetMode::Sparsity => 0.0,
-        },
-    }
+    pipeline::spdy_problem(dbs, env, minfo, mode)
 }
 
 /// Apply a chosen profile: write snapshot weights + kill masks.
+#[deprecated(note = "use session::Solved::apply (or session::pipeline::apply_profile)")]
 pub fn apply_profile(
     state: &mut ModelState,
     dbs: &[ModuleDb],
@@ -260,116 +132,35 @@ pub fn apply_profile(
     minfo: &ModelInfo,
     tinfo: &TaskInfo,
 ) -> Result<()> {
-    for (db, &li) in dbs.iter().zip(profile) {
-        let lvl = &db.levels[li];
-        if db.is_attn {
-            state.set_attn_w_paper(tinfo, db.layer, &lvl.w, &lvl.dead, minfo.d_head)?;
-            for &h in &lvl.dead {
-                state.masks.kill_head(db.layer, h);
-            }
-        } else {
-            state.set_fc_w_paper(tinfo, db.layer, &lvl.w, &lvl.dead)?;
-            for &c in &lvl.dead {
-                state.masks.kill_ffn_col(db.layer, c);
-            }
-        }
-    }
-    Ok(())
+    pipeline::apply_profile(state, dbs, profile, minfo, tinfo)
 }
 
 /// One pruning stage: Hessians → databases → SPDY → apply.
-/// `dense_time` is the original dense model's latency (speedup anchor).
+#[deprecated(note = "use session::CompressionSession::oneshot")]
 pub fn prune_to_target(
     engine: &Engine,
     state: &mut ModelState,
     data: &Dataset,
-    table: &LatencyTable,
+    env: &InferenceEnv,
     dense_cost: f64,
     target: f64,
     cfg: &PruneCfg,
 ) -> Result<PruneReport> {
-    let minfo = engine.manifest.model(&state.model).clone();
-    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
-    let hs = capture_hessians(engine, state, data, cfg.calib_samples)?;
-    let dbs = build_databases(engine, state, &hs, cfg)?;
-    let problem = spdy_problem(&dbs, table, &minfo, cfg.target_mode);
-    let budget = dense_cost / target;
-    if problem.min_cost() > budget {
-        return Err(anyhow!(
-            "target {target}x infeasible: min cost {:.3e} > budget {:.3e}",
-            problem.min_cost(),
-            budget
-        ));
-    }
-    let base = state.clone();
-    let mut evals = 0usize;
-    let search_cfg = SearchCfg { iters: cfg.spdy.iters, seed: cfg.spdy.seed, ..Default::default() };
-    let (profile, best_loss) = spdy::search(&problem, budget, &search_cfg, |prof| {
-        evals += 1;
-        let mut cand = base.clone();
-        if apply_profile(&mut cand, &dbs, prof, &minfo, &tinfo).is_err() {
-            return f64::INFINITY;
-        }
-        calib_loss(engine, &cand, data, cfg.calib_samples.min(128)).unwrap_or(f64::INFINITY)
-    })
-    .ok_or_else(|| anyhow!("SPDY found no feasible profile for {target}x"))?;
-    apply_profile(state, &dbs, &profile, &minfo, &tinfo)?;
-    let layer_profile = problem.as_layer_profile(&profile);
-    let est = match cfg.target_mode {
-        TargetMode::Speedup => dense_cost / problem.profile_cost(&profile),
-        TargetMode::Sparsity => {
-            // report the latency-table speedup this sparsity happens to give
-            table.dense_time(minfo.n_layers) / table.model_time(&layer_profile)
-        }
-    };
-    crate::zlog!(
-        "info",
-        "pruned to {target}x: est_speedup={est:.2} profile={layer_profile:?} candidates={evals}"
-    );
-    Ok(PruneReport {
-        target,
-        est_speedup: est,
-        layer_profile,
-        calib_loss: best_loss,
-        obs_dispatches: 0,
-    })
+    pipeline::prune_to_target(engine, state, data, env, dense_cost, target, cfg)
 }
 
 /// Gradual pruning: the full family pipeline (paper Fig. 1).
-pub struct StageResult {
-    pub report: PruneReport,
-    pub state: ModelState,
-    pub final_train_loss: f64,
-}
-
+#[deprecated(note = "use session::CompressionSession::run")]
 #[allow(clippy::too_many_arguments)]
 pub fn gradual(
     engine: &Engine,
-    mut state: ModelState,
+    state: ModelState,
     data: &Dataset,
-    table: &LatencyTable,
+    env: &InferenceEnv,
     targets: &[f64],
     prune_cfg: &PruneCfg,
     train_cfg: &TrainCfg,
     teacher: Option<Vec<f32>>,
 ) -> Result<Vec<StageResult>> {
-    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
-    let minfo = engine.manifest.model(&state.model).clone();
-    let dense_cost = match prune_cfg.target_mode {
-        TargetMode::Speedup => table.dense_time(minfo.n_layers),
-        TargetMode::Sparsity => {
-            (0..minfo.n_layers)
-                .map(|_| module_params(&minfo, true, minfo.n_heads) + module_params(&minfo, false, minfo.d_ff))
-                .sum()
-        }
-    };
-    let mut trainer = Trainer::new(engine, tinfo.n_params, teacher);
-    let mut out = Vec::new();
-    for &target in targets {
-        let report = prune_to_target(engine, &mut state, data, table, dense_cost, target, prune_cfg)?;
-        trainer.reset_moments();
-        let final_loss = trainer.train(&mut state, data, train_cfg)?;
-        out.push(StageResult { report, state: state.clone(), final_train_loss: final_loss });
-    }
-    Ok(out)
+    pipeline::gradual(engine, state, data, env, targets, prune_cfg, train_cfg, teacher)
 }

@@ -1,0 +1,651 @@
+//! CompressionSession: the typed end-to-end pipeline API.
+//!
+//! One session owns one compression run of one `(model, task)` against
+//! one [`InferenceEnv`] (DESIGN.md §7). The flow the paper's Fig. 1
+//! describes becomes a chain of stage values, each owning its
+//! artifacts:
+//!
+//! ```text
+//! CompressionSession::for_model(&engine, model, task)
+//!     .with_env(env).with_targets(&[2.0, 4.0]) ... .open()?
+//!   .capture(&state, &data)?        -> Captured   (Hessians)
+//!   .build_dbs()?                   -> Databases  (per-module OBS ladders)
+//!   .solve(&data, target)?          -> Solved     (SPDY profile)
+//!   .apply()?                       -> Variant    (pruned ModelState + report)
+//! session.run(teacher, &data)?      — gradual: the chain per target + fine-tune
+//! session.emit_family(..)?          — manifest + member checkpoints
+//! ```
+//!
+//! With a checkpoint directory attached ([`SessionBuilder::checkpoint_to`])
+//! every stage persists its artifact; re-opening a session over the
+//! same directory resumes after a crash by loading completed stages
+//! instead of recomputing them (each checkpoint is fingerprint-gated
+//! to the model state it was derived from, so a divergent resume
+//! recomputes rather than silently reusing stale artifacts). The
+//! [`CompressionSession::counters`] pair `(computed, loaded)` and the
+//! [`SessionBuilder::on_progress`] hook make both paths observable —
+//! the CLI and experiment drivers render them.
+
+pub mod pipeline;
+pub mod store;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Dataset;
+use crate::env::{CostModel, InferenceEnv};
+use crate::models::family::FamilyManifest;
+use crate::models::ModelState;
+use crate::pruner::{Hessians, PruneCfg, PruneReport, StageResult, TargetMode};
+use crate::runtime::{Engine, ModelInfo, TaskInfo};
+use crate::spdy::SpdyProblem;
+use crate::train::{TrainCfg, Trainer};
+use crate::util::json::Json;
+use crate::ziplm::ModuleDb;
+
+use store::StageStore;
+
+/// Pipeline stage identifiers for progress reporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// calibration Hessian capture
+    Capture,
+    /// per-module OBS database builds
+    BuildDbs,
+    /// SPDY profile search
+    Solve,
+    /// profile application (masks + OBS-updated weights)
+    Apply,
+    /// distillation fine-tune (end of one gradual stage)
+    Finetune,
+    /// family manifest emission
+    EmitFamily,
+}
+
+impl Stage {
+    /// Human-readable stage name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Capture => "capture",
+            Stage::BuildDbs => "build-dbs",
+            Stage::Solve => "solve",
+            Stage::Apply => "apply",
+            Stage::Finetune => "finetune",
+            Stage::EmitFamily => "emit-family",
+        }
+    }
+}
+
+/// One progress event, delivered to the session's hook.
+#[derive(Clone, Debug)]
+pub struct Progress {
+    /// which stage finished
+    pub stage: Stage,
+    /// gradual stage index (0 for one-shot chains)
+    pub stage_idx: usize,
+    /// speedup target, where the stage has one
+    pub target: Option<f64>,
+    /// true when the artifact was restored from a checkpoint
+    pub loaded: bool,
+}
+
+type Hook = Box<dyn Fn(&Progress) + Send + Sync>;
+
+/// Ready-made progress hook: one stdout line per completed stage (what
+/// the CLI and experiment drivers attach).
+pub fn stdout_progress() -> impl Fn(&Progress) + Send + Sync {
+    |p: &Progress| {
+        let how = if p.loaded { "loaded from checkpoint" } else { "computed" };
+        match p.target {
+            Some(t) => {
+                println!("[session] stage {} ({t:.1}x) {}: {how}", p.stage_idx, p.stage.name())
+            }
+            None => println!("[session] stage {} {}: {how}", p.stage_idx, p.stage.name()),
+        }
+    }
+}
+
+/// Builder for a [`CompressionSession`]. An [`InferenceEnv`] is the one
+/// mandatory ingredient — the session refuses to open without knowing
+/// what it is compressing *for*.
+pub struct SessionBuilder<'e> {
+    engine: &'e Engine,
+    model: String,
+    task: String,
+    env: Option<InferenceEnv>,
+    targets: Vec<f64>,
+    prune: PruneCfg,
+    train: Option<TrainCfg>,
+    teacher: Option<Vec<f32>>,
+    dir: Option<PathBuf>,
+    hook: Option<Hook>,
+}
+
+impl<'e> SessionBuilder<'e> {
+    /// Target inference environment (required).
+    pub fn with_env(mut self, env: InferenceEnv) -> Self {
+        self.env = Some(env);
+        self
+    }
+
+    /// Speedup (or sparsity-factor) targets for [`CompressionSession::run`].
+    pub fn with_targets(mut self, targets: &[f64]) -> Self {
+        self.targets = targets.to_vec();
+        self
+    }
+
+    /// Pruning configuration (calibration size, SPDY iterations, mode).
+    pub fn with_prune_cfg(mut self, cfg: PruneCfg) -> Self {
+        self.prune = cfg;
+        self
+    }
+
+    /// Fine-tune configuration for the gradual stages; without one,
+    /// [`CompressionSession::run`] prunes one-shot per target.
+    pub fn with_train_cfg(mut self, cfg: TrainCfg) -> Self {
+        self.train = Some(cfg);
+        self
+    }
+
+    /// Dense-teacher parameters for token/logit distillation.
+    pub fn with_teacher(mut self, params: Vec<f32>) -> Self {
+        self.teacher = Some(params);
+        self
+    }
+
+    /// Attach a checkpoint directory: completed stages persist there
+    /// and a re-opened session resumes from them.
+    pub fn checkpoint_to(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.dir = Some(dir.into());
+        self
+    }
+
+    /// Progress hook, called once per completed (or loaded) stage.
+    pub fn on_progress(mut self, hook: impl Fn(&Progress) + Send + Sync + 'static) -> Self {
+        self.hook = Some(Box::new(hook));
+        self
+    }
+
+    /// Validate and open the session. With a checkpoint directory this
+    /// also pins the environment: resuming a directory created for a
+    /// different env is an error, not a silent re-certification.
+    pub fn open(self) -> Result<CompressionSession<'e>> {
+        let env = self.env.ok_or_else(|| {
+            anyhow!("session for {}/{} needs an InferenceEnv (use with_env)", self.model, self.task)
+        })?;
+        let minfo = self.engine.manifest.model(&self.model).clone();
+        let tinfo = self.engine.manifest.task(&self.model, &self.task).clone();
+        if let Some(dir) = &self.dir {
+            let env_path = dir.join("env.json");
+            if env_path.exists() {
+                let prev = InferenceEnv::load(&env_path)?;
+                if prev != env {
+                    return Err(anyhow!(
+                        "session dir {dir:?} was created for {}; refusing to resume against {}",
+                        prev.describe(),
+                        env.describe()
+                    ));
+                }
+            } else {
+                env.save(&env_path)?;
+            }
+        }
+        Ok(CompressionSession {
+            engine: self.engine,
+            model: self.model,
+            task: self.task,
+            env,
+            targets: self.targets,
+            prune: self.prune,
+            train: self.train,
+            teacher: self.teacher,
+            store: StageStore::new(self.dir),
+            hook: self.hook,
+            minfo,
+            tinfo,
+        })
+    }
+}
+
+/// A typed compression run: one `(model, task)` against one
+/// [`InferenceEnv`]. See the module docs for the stage flow.
+pub struct CompressionSession<'e> {
+    engine: &'e Engine,
+    model: String,
+    task: String,
+    env: InferenceEnv,
+    targets: Vec<f64>,
+    prune: PruneCfg,
+    train: Option<TrainCfg>,
+    teacher: Option<Vec<f32>>,
+    store: StageStore,
+    hook: Option<Hook>,
+    minfo: ModelInfo,
+    tinfo: TaskInfo,
+}
+
+impl<'e> CompressionSession<'e> {
+    /// Start building a session for `(model, task)`.
+    pub fn for_model(engine: &'e Engine, model: &str, task: &str) -> SessionBuilder<'e> {
+        SessionBuilder {
+            engine,
+            model: model.to_string(),
+            task: task.to_string(),
+            env: None,
+            targets: Vec::new(),
+            prune: PruneCfg::default(),
+            train: None,
+            teacher: None,
+            dir: None,
+            hook: None,
+        }
+    }
+
+    /// The environment this session compresses for.
+    pub fn env(&self) -> &InferenceEnv {
+        &self.env
+    }
+
+    /// The configured gradual targets.
+    pub fn targets(&self) -> &[f64] {
+        &self.targets
+    }
+
+    /// `(computed, loaded)` checkpointable-artifact counts. One
+    /// gradual stage produces several artifacts (hessians, databases,
+    /// profile, stage result), so a fresh run counts more `computed`
+    /// than it has targets, while a full resume loads only the
+    /// whole-stage results; the invariant to assert on is
+    /// `computed == 0` for a fully-resumed run.
+    pub fn counters(&self) -> (usize, usize) {
+        self.store.counters()
+    }
+
+    /// Dense-model cost under this session's env and target mode.
+    pub fn dense_cost(&self) -> f64 {
+        pipeline::dense_cost(&self.env, &self.minfo, self.prune.target_mode)
+    }
+
+    fn emit(&self, stage: Stage, idx: usize, target: Option<f64>, loaded: bool) {
+        if let Some(h) = &self.hook {
+            h(&Progress { stage, stage_idx: idx, target, loaded });
+        }
+    }
+
+    /// Checkpoint fingerprint for `state` under THIS session's knobs:
+    /// the model state plus an encoding of the prune/train configs and
+    /// the distillation teacher. Re-running with different flags over
+    /// the same session dir therefore recomputes instead of silently
+    /// reusing artifacts produced under the old configuration.
+    fn stage_fp(&self, state: &ModelState) -> String {
+        let mut ctxt = format!("{:?}|{:?}", self.prune, self.train).into_bytes();
+        if let Some(t) = &self.teacher {
+            ctxt.extend(t.iter().flat_map(|x| x.to_le_bytes()));
+        }
+        store::fingerprint_with(state, &ctxt)
+    }
+
+    /// Stage 1: accumulate calibration Hessians through `state`.
+    pub fn capture<'s>(&'s self, state: &ModelState, data: &Dataset) -> Result<Captured<'s, 'e>> {
+        self.capture_stage(state, data, 0)
+    }
+
+    fn capture_stage<'s>(
+        &'s self,
+        state: &ModelState,
+        data: &Dataset,
+        idx: usize,
+    ) -> Result<Captured<'s, 'e>> {
+        let fp = self.stage_fp(state);
+        let (hessians, loaded) = self.store.load_or_compute(
+            &format!("s{idx}_hessians.bin"),
+            |p| store::load_hessians(p, &fp),
+            |p, hs| store::save_hessians(p, &fp, hs),
+            || pipeline::capture_hessians(self.engine, state, data, self.prune.calib_samples),
+        )?;
+        self.emit(Stage::Capture, idx, None, loaded);
+        Ok(Captured { sess: self, idx, fp, state: state.clone(), hessians })
+    }
+
+    /// One-shot pruning to `target`: capture → build → solve → apply,
+    /// mutating `state` in place (paper §4.3 post-training mode).
+    pub fn oneshot(
+        &self,
+        state: &mut ModelState,
+        data: &Dataset,
+        target: f64,
+    ) -> Result<PruneReport> {
+        let dense = self.dense_cost();
+        let variant = self
+            .capture(state, data)?
+            .build_dbs()?
+            .solve_with_dense_cost(data, target, dense)?
+            .apply()?;
+        *state = variant.state;
+        Ok(variant.report)
+    }
+
+    /// Gradual pruning across all configured targets (paper Fig. 1):
+    /// per target, the full stage chain plus distillation fine-tuning,
+    /// checkpointed as a unit so a resumed session fast-forwards
+    /// through finished stages.
+    pub fn run(&self, teacher: ModelState, data: &Dataset) -> Result<Vec<StageResult>> {
+        if self.targets.is_empty() {
+            return Err(anyhow!("session has no targets (use with_targets)"));
+        }
+        let dense = self.dense_cost();
+        let mut trainer = Trainer::new(self.engine, self.tinfo.n_params, self.teacher.clone());
+        let mut state = teacher;
+        let mut out = Vec::new();
+        for (i, &target) in self.targets.iter().enumerate() {
+            let fp = self.stage_fp(&state);
+            let state_key = format!("s{i}_state.zlm");
+            let trainer_ref = &mut trainer;
+            let state_ref = &state;
+            let ((st, report, loss), loaded) = self.store.load_or_compute(
+                &format!("s{i}_report.json"),
+                |p| load_stage_result(p, &state_key, &fp, target),
+                |p, v: &(ModelState, PruneReport, f64)| save_stage_result(p, &state_key, &fp, v),
+                || {
+                    let variant = self
+                        .capture_stage(state_ref, data, i)?
+                        .build_dbs()?
+                        .solve_with_dense_cost(data, target, dense)?
+                        .apply()?;
+                    let mut st = variant.state;
+                    let report = variant.report;
+                    let loss = match &self.train {
+                        Some(tc) => {
+                            trainer_ref.reset_moments();
+                            trainer_ref.train(&mut st, data, tc)?
+                        }
+                        None => f64::NAN,
+                    };
+                    Ok((st, report, loss))
+                },
+            )?;
+            self.emit(Stage::Finetune, i, Some(target), loaded);
+            out.push(StageResult { report, state: st.clone(), final_train_loss: loss });
+            state = st;
+        }
+        Ok(out)
+    }
+
+    /// Final stage: record the certified family under `dir` (manifest +
+    /// per-member checkpoints) for `serve-family` and the coordinator.
+    pub fn emit_family(
+        &self,
+        dense: &ModelState,
+        stages: &[StageResult],
+        dir: &Path,
+    ) -> Result<FamilyManifest> {
+        let fam = pipeline::emit_family(&self.env, dense, stages, dir)?;
+        self.emit(Stage::EmitFamily, self.targets.len(), None, false);
+        Ok(fam)
+    }
+}
+
+/// Stage artifact: calibration Hessians captured through one state.
+pub struct Captured<'s, 'e> {
+    sess: &'s CompressionSession<'e>,
+    idx: usize,
+    fp: String,
+    /// the state the Hessians were captured through
+    pub state: ModelState,
+    /// accumulated per-module XX^T
+    pub hessians: Hessians,
+}
+
+impl<'s, 'e> Captured<'s, 'e> {
+    /// Stage 2: build all per-module OBS databases (parallel fan-out).
+    pub fn build_dbs(self) -> Result<Databases<'s, 'e>> {
+        let sess = self.sess;
+        let (dbs, loaded) = sess.store.load_or_compute(
+            &format!("s{}_dbs.bin", self.idx),
+            |p| store::load_dbs(p, &self.fp),
+            |p, dbs| store::save_dbs(p, &self.fp, dbs),
+            || pipeline::build_databases(sess.engine, &self.state, &self.hessians, &sess.prune),
+        )?;
+        sess.emit(Stage::BuildDbs, self.idx, None, loaded);
+        Ok(Databases { sess, idx: self.idx, fp: self.fp, state: self.state, dbs })
+    }
+}
+
+/// Stage artifact: the per-module level databases.
+pub struct Databases<'s, 'e> {
+    sess: &'s CompressionSession<'e>,
+    idx: usize,
+    fp: String,
+    /// the state the databases were built from
+    pub state: ModelState,
+    /// all 2L module databases, (attn, fc) per layer
+    pub dbs: Vec<ModuleDb>,
+}
+
+impl<'s, 'e> Databases<'s, 'e> {
+    /// Stage 3: SPDY-search a profile meeting `target` under the
+    /// session's dense cost.
+    pub fn solve(self, data: &Dataset, target: f64) -> Result<Solved<'s, 'e>> {
+        let dense = self.sess.dense_cost();
+        self.solve_with_dense_cost(data, target, dense)
+    }
+
+    /// [`Databases::solve`] with an explicit dense-cost anchor (the
+    /// sparsity ablation passes a parameter budget).
+    pub fn solve_with_dense_cost(
+        self,
+        data: &Dataset,
+        target: f64,
+        dense_cost: f64,
+    ) -> Result<Solved<'s, 'e>> {
+        let sess = self.sess;
+        let problem =
+            pipeline::spdy_problem(&self.dbs, &sess.env, &sess.minfo, sess.prune.target_mode);
+        let budget = dense_cost / target;
+        if problem.min_cost() > budget {
+            return Err(anyhow!(
+                "target {target}x infeasible: min cost {:.3e} > budget {:.3e}",
+                problem.min_cost(),
+                budget
+            ));
+        }
+        let (sol, loaded) = sess.store.load_or_compute(
+            &format!("s{}_profile.json", self.idx),
+            |p| store::load_profile(p, &self.fp, target),
+            |p, v: &(Vec<usize>, f64)| store::save_profile(p, &self.fp, target, &v.0, v.1),
+            || {
+                let out = pipeline::solve_profile(
+                    sess.engine,
+                    &self.state,
+                    data,
+                    &self.dbs,
+                    &problem,
+                    budget,
+                    &sess.prune,
+                    &sess.minfo,
+                    &sess.tinfo,
+                )?;
+                Ok((out.profile, out.best_loss))
+            },
+        )?;
+        sess.emit(Stage::Solve, self.idx, Some(target), loaded);
+        Ok(Solved {
+            sess,
+            idx: self.idx,
+            state: self.state,
+            dbs: self.dbs,
+            target,
+            dense_cost,
+            profile: sol.0,
+            best_loss: sol.1,
+            problem,
+        })
+    }
+}
+
+/// Stage artifact: a chosen SPDY profile, not yet applied.
+pub struct Solved<'s, 'e> {
+    sess: &'s CompressionSession<'e>,
+    idx: usize,
+    state: ModelState,
+    dbs: Vec<ModuleDb>,
+    target: f64,
+    dense_cost: f64,
+    /// chosen level index per module
+    pub profile: Vec<usize>,
+    /// calibration loss of the chosen profile
+    pub best_loss: f64,
+    problem: SpdyProblem,
+}
+
+impl Solved<'_, '_> {
+    /// Stage 4: apply the profile (snapshot weights + kill masks) and
+    /// certify the resulting variant.
+    pub fn apply(self) -> Result<Variant> {
+        let sess = self.sess;
+        let mut state = self.state;
+        pipeline::apply_profile(&mut state, &self.dbs, &self.profile, &sess.minfo, &sess.tinfo)?;
+        let layer_profile = self.problem.as_layer_profile(&self.profile);
+        let est = match sess.prune.target_mode {
+            TargetMode::Speedup => self.dense_cost / self.problem.profile_cost(&self.profile),
+            TargetMode::Sparsity => {
+                sess.env.dense_time(sess.minfo.n_layers) / sess.env.model_time(&layer_profile)
+            }
+        };
+        let report = PruneReport {
+            target: self.target,
+            est_speedup: est,
+            layer_profile,
+            calib_loss: self.best_loss,
+            obs_dispatches: 0,
+        };
+        sess.emit(Stage::Apply, self.idx, Some(self.target), false);
+        Ok(Variant { state, report })
+    }
+}
+
+/// Stage artifact: one certified compressed variant.
+pub struct Variant {
+    /// the pruned model state
+    pub state: ModelState,
+    /// the certification record (target, est. speedup, anatomy)
+    pub report: PruneReport,
+}
+
+// --------------------------------------------- whole-stage checkpoints
+
+fn load_stage_result(
+    report_path: &Path,
+    state_key: &str,
+    fp: &str,
+    target: f64,
+) -> Option<(ModelState, PruneReport, f64)> {
+    let j = Json::parse(&std::fs::read_to_string(report_path).ok()?).ok()?;
+    if j.get("kind")?.as_str()? != "stage"
+        || j.get("fingerprint")?.as_str()? != fp
+        || j.get("target")?.as_f64()? != target
+    {
+        return None;
+    }
+    let state = ModelState::load(&report_path.with_file_name(state_key)).ok()?;
+    let layer_profile: Vec<(usize, usize)> = j
+        .get("profile")?
+        .as_arr()?
+        .iter()
+        .map(|e| Some((e.idx(0)?.as_usize()?, e.idx(1)?.as_usize()?)))
+        .collect::<Option<Vec<_>>>()?;
+    let report = PruneReport {
+        target,
+        est_speedup: j.get("est_speedup")?.as_f64()?,
+        layer_profile,
+        calib_loss: j.get("calib_loss").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
+        obs_dispatches: 0,
+    };
+    let loss = j.get("train_loss").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    Some((state, report, loss))
+}
+
+fn save_stage_result(
+    report_path: &Path,
+    state_key: &str,
+    fp: &str,
+    v: &(ModelState, PruneReport, f64),
+) -> Result<()> {
+    let (state, report, loss) = v;
+    state.save(&report_path.with_file_name(state_key))?;
+    let finite = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    let j = Json::obj(vec![
+        ("kind", Json::Str("stage".into())),
+        ("fingerprint", Json::Str(fp.to_string())),
+        ("target", Json::Num(report.target)),
+        ("est_speedup", Json::Num(report.est_speedup)),
+        ("calib_loss", finite(report.calib_loss)),
+        (
+            "profile",
+            Json::Arr(
+                report
+                    .layer_profile
+                    .iter()
+                    .map(|&(h, f)| Json::Arr(vec![Json::Num(h as f64), Json::Num(f as f64)]))
+                    .collect(),
+            ),
+        ),
+        ("train_loss", finite(*loss)),
+    ]);
+    std::fs::write(report_path, j.to_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_result_roundtrip_gates_on_fingerprint_and_target() {
+        let dir = std::env::temp_dir().join("ziplm_session_stage");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (_mi, _ti, st) = crate::models::tests_support::mini_state();
+        let report = PruneReport {
+            target: 2.0,
+            est_speedup: 2.13,
+            layer_profile: vec![(2, 6), (1, 4)],
+            calib_loss: 0.5,
+            obs_dispatches: 0,
+        };
+        let rp = dir.join("s0_report.json");
+        save_stage_result(&rp, "s0_state.zlm", "fp0", &(st.clone(), report.clone(), 0.25))
+            .unwrap();
+        let (st2, rep2, loss) = load_stage_result(&rp, "s0_state.zlm", "fp0", 2.0).expect("load");
+        assert_eq!(st2.params, st.params);
+        assert_eq!(rep2.layer_profile, report.layer_profile);
+        assert_eq!(rep2.est_speedup, report.est_speedup);
+        assert_eq!(loss, 0.25);
+        // wrong fingerprint or target → miss, never a stale load
+        assert!(load_stage_result(&rp, "s0_state.zlm", "other", 2.0).is_none());
+        assert!(load_stage_result(&rp, "s0_state.zlm", "fp0", 3.0).is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn stage_result_nan_train_loss_roundtrips_as_nan() {
+        let dir = std::env::temp_dir().join("ziplm_session_nan");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (_mi, _ti, st) = crate::models::tests_support::mini_state();
+        let report = PruneReport {
+            target: 1.5,
+            est_speedup: 1.5,
+            layer_profile: vec![(2, 8)],
+            calib_loss: f64::INFINITY,
+            obs_dispatches: 0,
+        };
+        let rp = dir.join("s0_report.json");
+        save_stage_result(&rp, "s0_state.zlm", "fp", &(st, report, f64::NAN)).unwrap();
+        let (_, rep2, loss) = load_stage_result(&rp, "s0_state.zlm", "fp", 1.5).expect("load");
+        assert!(loss.is_nan());
+        assert!(rep2.calib_loss.is_infinite());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

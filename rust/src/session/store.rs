@@ -1,0 +1,495 @@
+//! Stage checkpoint store: the resume-after-crash substrate of a
+//! [`super::CompressionSession`].
+//!
+//! Every pipeline stage funnels through [`StageStore::load_or_compute`]:
+//! with a checkpoint directory attached, a completed stage's artifact is
+//! written to `<dir>/<key>` and a re-opened session loads it instead of
+//! recomputing; without a directory the store degenerates to "always
+//! compute". The `computed`/`loaded` counters make resume behavior
+//! directly assertable (no timing involved).
+//!
+//! Checkpoints are only as trustworthy as their inputs, so every blob
+//! header records a [`fingerprint`] of the model state it was derived
+//! from (the session folds its config into it via
+//! [`fingerprint_with`]); a loader that finds a mismatching
+//! fingerprint reports a miss and the stage recomputes. Binary blobs use the same shape as the
+//! `.zlm` checkpoints (magic, JSON header, raw f32 LE payload).
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::models::ModelState;
+use crate::pruner::Hessians;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::ziplm::{LevelSnapshot, ModuleDb};
+
+/// FNV-1a over a byte stream; cheap, stable across runs, good enough
+/// to catch "resumed with a different model state" mistakes.
+fn fnv1a(bytes: impl Iterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of a model state (params + masks), hex-encoded for JSON
+/// headers (f64 cannot hold a u64 exactly).
+pub fn fingerprint(state: &ModelState) -> String {
+    fingerprint_with(state, &[])
+}
+
+/// [`fingerprint`] with extra context bytes folded in — the session
+/// passes an encoding of its prune/train configuration and teacher so
+/// checkpoints produced under different knobs never collide.
+pub fn fingerprint_with(state: &ModelState, context: &[u8]) -> String {
+    let params = state.params.iter().flat_map(|x| x.to_le_bytes());
+    let head = state.masks.head.iter().flat_map(|x| x.to_le_bytes());
+    let ffn = state.masks.ffn.iter().flat_map(|x| x.to_le_bytes());
+    let ctxt = context.iter().copied();
+    format!("{:016x}", fnv1a(params.chain(head).chain(ffn).chain(ctxt)))
+}
+
+/// Load-or-compute gate over one checkpoint directory.
+pub struct StageStore {
+    dir: Option<PathBuf>,
+    computed: AtomicUsize,
+    loaded: AtomicUsize,
+}
+
+impl StageStore {
+    /// A store writing under `dir`, or an always-compute store when
+    /// `dir` is `None`.
+    pub fn new(dir: Option<PathBuf>) -> StageStore {
+        StageStore { dir, computed: AtomicUsize::new(0), loaded: AtomicUsize::new(0) }
+    }
+
+    /// Checkpoint directory, if any.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// `(computed, loaded)` artifact counts so far (one per
+    /// [`StageStore::load_or_compute`] call). A resumed session that
+    /// found every checkpoint reports `computed == 0`.
+    pub fn counters(&self) -> (usize, usize) {
+        (self.computed.load(Ordering::Relaxed), self.loaded.load(Ordering::Relaxed))
+    }
+
+    /// Fetch the artifact for `key`: load it from the checkpoint file
+    /// when present and valid (a `load` returning `None` — missing,
+    /// corrupt, or fingerprint-mismatched — falls through), otherwise
+    /// compute and persist it. Returns the artifact plus whether it
+    /// was loaded from disk.
+    pub fn load_or_compute<T>(
+        &self,
+        key: &str,
+        load: impl FnOnce(&Path) -> Option<T>,
+        save: impl FnOnce(&Path, &T) -> Result<()>,
+        compute: impl FnOnce() -> Result<T>,
+    ) -> Result<(T, bool)> {
+        if let Some(dir) = &self.dir {
+            let path = dir.join(key);
+            if path.exists() {
+                if let Some(v) = load(&path) {
+                    self.loaded.fetch_add(1, Ordering::Relaxed);
+                    return Ok((v, true));
+                }
+            }
+            let v = compute()?;
+            std::fs::create_dir_all(dir)?;
+            save(&path, &v).with_context(|| format!("checkpointing stage `{key}`"))?;
+            self.computed.fetch_add(1, Ordering::Relaxed);
+            Ok((v, false))
+        } else {
+            let v = compute()?;
+            self.computed.fetch_add(1, Ordering::Relaxed);
+            Ok((v, false))
+        }
+    }
+}
+
+// ----------------------------------------------------------- blob I/O
+
+const MAGIC: &[u8; 4] = b"ZLS1";
+
+/// Write a stage blob: magic, JSON header, raw f32 LE payload.
+pub fn write_blob(path: &Path, header: &Json, payload: &[f32]) -> Result<()> {
+    let text = header.to_string();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(text.len() as u64).to_le_bytes())?;
+    f.write_all(text.as_bytes())?;
+    let mut buf = Vec::with_capacity(payload.len() * 4);
+    for &x in payload {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a stage blob written by [`write_blob`].
+pub fn read_blob(path: &Path) -> Result<(Json, Vec<f32>)> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(anyhow!("bad stage-blob magic"));
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?).map_err(|e| anyhow!(e))?;
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() % 4 != 0 {
+        return Err(anyhow!("stage blob truncated"));
+    }
+    let payload =
+        raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    Ok((header, payload))
+}
+
+// ----------------------------------------------- per-artifact codecs
+
+/// Persist captured Hessians, stamped with the source-state fingerprint.
+pub fn save_hessians(path: &Path, fp: &str, hs: &Hessians) -> Result<()> {
+    let dims = |ts: &[Tensor]| Json::arr_usize(&ts.iter().map(|t| t.rows()).collect::<Vec<_>>());
+    let header = Json::obj(vec![
+        ("kind", Json::Str("hessians".into())),
+        ("fingerprint", Json::Str(fp.to_string())),
+        ("attn", dims(&hs.attn)),
+        ("ffn", dims(&hs.ffn)),
+    ]);
+    let mut payload = Vec::new();
+    for t in hs.attn.iter().chain(&hs.ffn) {
+        payload.extend_from_slice(&t.data);
+    }
+    write_blob(path, &header, &payload)
+}
+
+/// Load Hessians if the blob is intact and matches `fp`.
+pub fn load_hessians(path: &Path, fp: &str) -> Option<Hessians> {
+    let (header, payload) = read_blob(path).ok()?;
+    if header.get("kind")?.as_str()? != "hessians" || header.get("fingerprint")?.as_str()? != fp {
+        return None;
+    }
+    let attn_dims = header.get("attn")?.usize_array();
+    let ffn_dims = header.get("ffn")?.usize_array();
+    let total: usize = attn_dims.iter().map(|&d| d * d).sum::<usize>()
+        + ffn_dims.iter().map(|&d| d * d).sum::<usize>();
+    if payload.len() != total {
+        return None;
+    }
+    let mut off = 0usize;
+    let mut take = |d: usize| {
+        let t = Tensor::from_vec(&[d, d], payload[off..off + d * d].to_vec());
+        off += d * d;
+        t
+    };
+    let attn: Vec<Tensor> = attn_dims.iter().map(|&d| take(d)).collect();
+    let ffn: Vec<Tensor> = ffn_dims.iter().map(|&d| take(d)).collect();
+    Some(Hessians { attn, ffn })
+}
+
+/// Persist the per-module databases (level snapshots + priors).
+pub fn save_dbs(path: &Path, fp: &str, dbs: &[ModuleDb]) -> Result<()> {
+    let mut payload = Vec::new();
+    let modules: Vec<Json> = dbs
+        .iter()
+        .map(|db| {
+            let levels: Vec<Json> = db
+                .levels
+                .iter()
+                .map(|lvl| {
+                    payload.extend_from_slice(&lvl.w.data);
+                    Json::obj(vec![
+                        ("remaining", Json::Num(lvl.remaining as f64)),
+                        ("dead", Json::arr_usize(&lvl.dead)),
+                        ("prior", Json::Num(lvl.prior)),
+                        ("rows", Json::Num(lvl.w.rows() as f64)),
+                        ("cols", Json::Num(lvl.w.cols() as f64)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("layer", Json::Num(db.layer as f64)),
+                ("is_attn", Json::Bool(db.is_attn)),
+                ("levels", Json::Arr(levels)),
+            ])
+        })
+        .collect();
+    let header = Json::obj(vec![
+        ("kind", Json::Str("dbs".into())),
+        ("fingerprint", Json::Str(fp.to_string())),
+        ("modules", Json::Arr(modules)),
+    ]);
+    write_blob(path, &header, &payload)
+}
+
+/// Load databases if the blob is intact and matches `fp`.
+pub fn load_dbs(path: &Path, fp: &str) -> Option<Vec<ModuleDb>> {
+    let (header, payload) = read_blob(path).ok()?;
+    if header.get("kind")?.as_str()? != "dbs" || header.get("fingerprint")?.as_str()? != fp {
+        return None;
+    }
+    let mut off = 0usize;
+    let mut out = Vec::new();
+    for m in header.get("modules")?.as_arr()? {
+        let mut levels = Vec::new();
+        for lvl in m.get("levels")?.as_arr()? {
+            let rows = lvl.get("rows")?.as_usize()?;
+            let cols = lvl.get("cols")?.as_usize()?;
+            if off + rows * cols > payload.len() {
+                return None;
+            }
+            let w = Tensor::from_vec(&[rows, cols], payload[off..off + rows * cols].to_vec());
+            off += rows * cols;
+            levels.push(LevelSnapshot {
+                remaining: lvl.get("remaining")?.as_usize()?,
+                dead: lvl.get("dead")?.usize_array(),
+                w,
+                prior: lvl.get("prior")?.as_f64()?,
+            });
+        }
+        out.push(ModuleDb {
+            layer: m.get("layer")?.as_usize()?,
+            is_attn: m.get("is_attn")?.as_bool()?,
+            levels,
+        });
+    }
+    if off != payload.len() {
+        return None;
+    }
+    Some(out)
+}
+
+/// Persist a solved profile (level indices + search loss) for a target.
+pub fn save_profile(
+    path: &Path,
+    fp: &str,
+    target: f64,
+    profile: &[usize],
+    best_loss: f64,
+) -> Result<()> {
+    let j = Json::obj(vec![
+        ("kind", Json::Str("profile".into())),
+        ("fingerprint", Json::Str(fp.to_string())),
+        ("target", Json::Num(target)),
+        ("profile", Json::arr_usize(profile)),
+        // non-finite losses have no JSON literal; Null round-trips them
+        ("best_loss", if best_loss.is_finite() { Json::Num(best_loss) } else { Json::Null }),
+    ]);
+    if let Some(d) = path.parent() {
+        std::fs::create_dir_all(d)?;
+    }
+    std::fs::write(path, j.to_pretty())?;
+    Ok(())
+}
+
+/// Load a solved profile if it matches `fp` and `target`.
+pub fn load_profile(path: &Path, fp: &str, target: f64) -> Option<(Vec<usize>, f64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("kind")?.as_str()? != "profile"
+        || j.get("fingerprint")?.as_str()? != fp
+        || j.get("target")?.as_f64()? != target
+    {
+        return None;
+    }
+    let best_loss = j.get("best_loss").and_then(Json::as_f64).unwrap_or(f64::INFINITY);
+    Some((j.get("profile")?.usize_array(), best_loss))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ziplm_store_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Trivial JSON codec for a Vec<f64> test payload. (`&Vec` rather
+    /// than `&[_]` because the signature must match the store's
+    /// `FnOnce(&Path, &T)` with `T = Vec<f64>`.)
+    #[allow(clippy::ptr_arg)]
+    fn save_vec(path: &Path, v: &Vec<f64>) -> Result<()> {
+        std::fs::write(path, Json::arr_f64(v).to_string())?;
+        Ok(())
+    }
+
+    fn load_vec(path: &Path) -> Option<Vec<f64>> {
+        let j = Json::parse(&std::fs::read_to_string(path).ok()?).ok()?;
+        Some(j.as_arr()?.iter().filter_map(Json::as_f64).collect())
+    }
+
+    /// Satellite acceptance: a re-opened store over the same directory
+    /// loads every checkpointed stage instead of recomputing — asserted
+    /// purely through counters, no timing.
+    #[test]
+    fn reopened_store_loads_instead_of_recomputing() {
+        let dir = temp_dir("resume");
+        let runs = AtomicUsize::new(0);
+        let stage_keys = ["s0_a.json", "s0_b.json", "s1_a.json"];
+
+        let first = StageStore::new(Some(dir.clone()));
+        for (i, key) in stage_keys.iter().enumerate() {
+            let (v, loaded) = first
+                .load_or_compute(
+                    key,
+                    load_vec,
+                    save_vec,
+                    || {
+                        runs.fetch_add(1, Ordering::SeqCst);
+                        Ok(vec![i as f64, 2.0 * i as f64])
+                    },
+                )
+                .unwrap();
+            assert!(!loaded);
+            assert_eq!(v, vec![i as f64, 2.0 * i as f64]);
+        }
+        assert_eq!(first.counters(), (3, 0));
+        assert_eq!(runs.load(Ordering::SeqCst), 3);
+
+        // resume: same dir, new store — every stage must load
+        let second = StageStore::new(Some(dir.clone()));
+        for (i, key) in stage_keys.iter().enumerate() {
+            let (v, loaded) = second
+                .load_or_compute(key, load_vec, save_vec, || {
+                    panic!("stage `{key}` recomputed on resume")
+                })
+                .unwrap();
+            assert!(loaded);
+            assert_eq!(v, vec![i as f64, 2.0 * i as f64]);
+        }
+        assert_eq!(second.counters(), (0, 3));
+        assert_eq!(runs.load(Ordering::SeqCst), 3, "compute ran again on resume");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn no_dir_store_always_computes_and_persists_nothing() {
+        let store = StageStore::new(None);
+        for _ in 0..2 {
+            let (v, loaded) =
+                store.load_or_compute("k.json", load_vec, save_vec, || Ok(vec![1.0])).unwrap();
+            assert!(!loaded);
+            assert_eq!(v, vec![1.0]);
+        }
+        assert_eq!(store.counters(), (2, 0));
+    }
+
+    #[test]
+    fn corrupt_checkpoint_falls_back_to_compute() {
+        let dir = temp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad.json"), b"{ not json").unwrap();
+        let store = StageStore::new(Some(dir.clone()));
+        let (v, loaded) =
+            store.load_or_compute("bad.json", load_vec, save_vec, || Ok(vec![7.0])).unwrap();
+        assert!(!loaded);
+        assert_eq!(v, vec![7.0]);
+        assert_eq!(store.counters(), (1, 0));
+        // the recompute overwrote the corrupt file: next open loads
+        let again = StageStore::new(Some(dir.clone()));
+        let (_, loaded) = again
+            .load_or_compute("bad.json", load_vec, save_vec, || panic!("recomputed"))
+            .unwrap();
+        assert!(loaded);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn hessian_blob_roundtrip_and_fingerprint_gate() {
+        let dir = temp_dir("hess");
+        std::fs::create_dir_all(&dir).unwrap();
+        let hs = Hessians {
+            attn: vec![Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0])],
+            ffn: vec![Tensor::from_vec(&[3, 3], (0..9).map(|x| x as f32).collect())],
+        };
+        let path = dir.join("h.bin");
+        save_hessians(&path, "aabb", &hs).unwrap();
+        let back = load_hessians(&path, "aabb").expect("roundtrip");
+        assert_eq!(back.attn[0].data, hs.attn[0].data);
+        assert_eq!(back.ffn[0].data, hs.ffn[0].data);
+        // a different source state must not reuse the blob
+        assert!(load_hessians(&path, "ccdd").is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn dbs_blob_roundtrip() {
+        let dir = temp_dir("dbs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dbs = vec![ModuleDb {
+            layer: 1,
+            is_attn: true,
+            levels: vec![
+                LevelSnapshot {
+                    remaining: 2,
+                    dead: vec![],
+                    w: Tensor::from_vec(&[2, 4], (0..8).map(|x| x as f32).collect()),
+                    prior: 0.0,
+                },
+                LevelSnapshot {
+                    remaining: 1,
+                    dead: vec![3],
+                    w: Tensor::from_vec(&[2, 4], vec![0.5; 8]),
+                    prior: 0.25,
+                },
+            ],
+        }];
+        let path = dir.join("d.bin");
+        save_dbs(&path, "ff00", &dbs).unwrap();
+        let back = load_dbs(&path, "ff00").expect("roundtrip");
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].layer, 1);
+        assert!(back[0].is_attn);
+        assert_eq!(back[0].levels[1].dead, vec![3]);
+        assert_eq!(back[0].levels[1].prior, 0.25);
+        assert_eq!(back[0].levels[0].w.data, dbs[0].levels[0].w.data);
+        assert!(load_dbs(&path, "0001").is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn profile_json_roundtrip_checks_target_and_fp() {
+        let dir = temp_dir("prof");
+        let path = dir.join("p.json");
+        save_profile(&path, "ab", 2.0, &[0, 3, 1], 0.125).unwrap();
+        assert_eq!(load_profile(&path, "ab", 2.0), Some((vec![0, 3, 1], 0.125)));
+        assert!(load_profile(&path, "ab", 3.0).is_none());
+        assert!(load_profile(&path, "xy", 2.0).is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fingerprint_tracks_params_and_masks() {
+        use crate::models::Masks;
+        let st = |p: f32, m: f32| ModelState {
+            model: "m".into(),
+            task: "t".into(),
+            params: vec![p; 4],
+            masks: Masks { n_layers: 1, n_heads: 2, d_ff: 2, head: vec![m, 1.0], ffn: vec![1.0, 1.0] },
+        };
+        let a = fingerprint(&st(1.0, 1.0));
+        assert_eq!(a, fingerprint(&st(1.0, 1.0)));
+        assert_ne!(a, fingerprint(&st(2.0, 1.0)));
+        assert_ne!(a, fingerprint(&st(1.0, 0.0)));
+        // context bytes (session config) also discriminate
+        let s = st(1.0, 1.0);
+        assert_eq!(fingerprint_with(&s, b"cfgA"), fingerprint_with(&s, b"cfgA"));
+        assert_ne!(fingerprint_with(&s, b"cfgA"), fingerprint_with(&s, b"cfgB"));
+        assert_eq!(fingerprint(&s), fingerprint_with(&s, &[]));
+    }
+}

@@ -19,6 +19,7 @@
 //!   property tests and before/after benchmarks.
 
 use super::Tensor;
+use crate::util::threadpool::parallel_for_slices_mut;
 
 /// Cholesky factor L (lower) of SPD `a`, in place semantics: returns L.
 /// Inner dots run over contiguous row slices of L.
@@ -83,45 +84,78 @@ pub fn solve_upper_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
     x
 }
 
+/// Flop target per worker chunk of the threaded column sweep: below
+/// this the spawn overhead beats the win, so `parallel_for_slices_mut`
+/// degenerates to the inline loop (small matrices, or any nested
+/// parallel region where the thread budget is already spent).
+const SPD_PAR_CHUNK_FLOPS: f64 = 250_000.0;
+
 /// SPD inverse via Cholesky. Fast path: per unit-vector column the
 /// forward solve skips the structural zeros above row j, the backward
 /// solve stops once rows < j are no longer needed, and the upper
 /// triangle is mirrored from the lower (the inverse is symmetric) —
 /// ~3× fewer flops than [`spd_inverse_ref`].
+///
+/// The per-column solves are independent given L / L^T, so they fan
+/// out across the pool via [`parallel_for_slices_mut`] in chunks of
+/// whole columns (each slice element IS one column buffer, so chunk
+/// boundaries can never split a column). Column j costs ~(n−j)² flops
+/// — triangular — while the primitive cuts uniform-count chunks, so
+/// elements are laid out in the interleaved order 0, n−1, 1, n−2, …:
+/// every contiguous chunk then alternates expensive and cheap columns
+/// and carries near-equal work. The fan-out is nesting-aware exactly
+/// like the OBS score sweep: inside a `parallel_tasks` worker the
+/// thread budget is 1 and the sweep runs inline, bit-identical to the
+/// serial path. The O(n²) mirror stays serial — noise next to the
+/// O(n³) solves.
 pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
     let n = a.rows();
     let l = cholesky(a)?;
     let lt = l.transpose2(); // row-contiguous access for the backward solve
     let ld = &l.data;
     let ltd = &lt.data;
+    // element k ↔ column: front half on even k, back half on odd k
+    let col_of = |k: usize| if k % 2 == 0 { k / 2 } else { n - 1 - k / 2 };
+    // per-column work ≈ (n-j)² MACs, averaging n²/3 over the sweep
+    let per_col = (n as f64) * (n as f64) / 3.0;
+    let min_cols = ((SPD_PAR_CHUNK_FLOPS / per_col.max(1.0)).ceil() as usize).max(1);
+    let mut cols: Vec<Vec<f32>> = vec![Vec::new(); n];
+    parallel_for_slices_mut(&mut cols, min_cols, |start, chunk| {
+        let mut y = vec![0f32; n];
+        let mut x = vec![0f32; n];
+        for (ci, col) in chunk.iter_mut().enumerate() {
+            let j = col_of(start + ci);
+            // forward: L y = e_j; y[i < j] = 0 structurally, so start at j.
+            y[j] = 1.0 / ld[j * n + j];
+            for i in (j + 1)..n {
+                let li = &ld[i * n + j..i * n + i]; // L[i, j..i]
+                let mut s = 0f32;
+                for (v, yk) in li.iter().zip(&y[j..i]) {
+                    s += v * yk;
+                }
+                y[i] = -s / ld[i * n + i];
+            }
+            // backward: L^T x = y; only x[i ≥ j] is needed for this
+            // column, and x[i] depends only on x[k > i], so stop at i = j.
+            for i in (j..n).rev() {
+                let row = &ltd[i * n + i + 1..i * n + n]; // L^T[i, i+1..] = L[i+1.., i]
+                let mut s = y[i];
+                for (v, xk) in row.iter().zip(&x[i + 1..n]) {
+                    s -= v * xk;
+                }
+                x[i] = s / ld[i * n + i];
+            }
+            *col = x[j..n].to_vec();
+        }
+    });
+    // column col_of(k) of the inverse, mirrored across the diagonal.
     let mut inv = Tensor::zeros(&[n, n]);
-    let mut y = vec![0f32; n];
-    let mut x = vec![0f32; n];
-    for j in 0..n {
-        // forward: L y = e_j; y[i < j] = 0 structurally, so start at j.
-        y[j] = 1.0 / ld[j * n + j];
-        for i in (j + 1)..n {
-            let li = &ld[i * n + j..i * n + i]; // L[i, j..i]
-            let mut s = 0f32;
-            for (v, yk) in li.iter().zip(&y[j..i]) {
-                s += v * yk;
-            }
-            y[i] = -s / ld[i * n + i];
-        }
-        // backward: L^T x = y; only x[i ≥ j] is needed for this column,
-        // and x[i] depends only on x[k > i], so stop at i = j.
-        for i in (j..n).rev() {
-            let row = &ltd[i * n + i + 1..i * n + n]; // L^T[i, i+1..] = L[i+1.., i]
-            let mut s = y[i];
-            for (v, xk) in row.iter().zip(&x[i + 1..n]) {
-                s -= v * xk;
-            }
-            x[i] = s / ld[i * n + i];
-        }
-        // column j of the inverse, mirrored across the diagonal.
-        for i in j..n {
-            inv.data[i * n + j] = x[i];
-            inv.data[j * n + i] = x[i];
+    for (k, col) in cols.iter().enumerate() {
+        let j = col_of(k);
+        for (o, &v) in col.iter().enumerate() {
+            let i = j + o;
+            inv.data[i * n + j] = v;
+            inv.data[j * n + i] = v;
         }
     }
     Ok(inv)
@@ -269,18 +303,23 @@ mod tests {
 
     #[test]
     fn fast_spd_inverse_matches_ref_and_is_symmetric() {
+        // mostly small instances (inline path) plus an occasional
+        // 120..168 one, where the column sweep's chunking gate opens on
+        // multi-core runners — both paths must agree with the reference
         Prop::new(15).check_msg(
             "spd_inverse == spd_inverse_ref, exactly symmetric",
             |r| {
-                let n = 2 + r.below(24);
+                let n = if r.f64() < 0.2 { 120 + r.below(48) } else { 2 + r.below(24) };
                 spd_t(r, n)
             },
             |a| {
                 let f = spd_inverse(a)?;
                 let g = spd_inverse_ref(a)?;
                 let d = f.max_abs_diff(&g);
-                if d > 1e-3 {
-                    return Err(format!("fast vs ref diff {d}"));
+                // f32 rounding grows with n; scale the bound accordingly
+                let tol = 1e-3 * (1.0 + a.rows() as f32 / 32.0);
+                if d > tol {
+                    return Err(format!("fast vs ref diff {d} (tol {tol})"));
                 }
                 let n = a.rows();
                 for i in 0..n {
@@ -293,6 +332,44 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn threaded_spd_inverse_matches_ref_at_chunking_sizes() {
+        // Deterministic sizes bracketing the parallel gate: 144 gives
+        // ~3 column chunks on a multi-core box (and runs inline on a
+        // 1-core box or inside a parallel region — same arithmetic
+        // either way, so the comparison is toolchain-independent).
+        let mut rng = Rng::new(11);
+        for n in [96usize, 144] {
+            let a = spd_t(&mut rng, n);
+            let f = spd_inverse(&a).unwrap();
+            let g = spd_inverse_ref(&a).unwrap();
+            assert!(f.max_abs_diff(&g) < 1e-2, "n={n} diff {}", f.max_abs_diff(&g));
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(f.at2(i, j), f.at2(j, i), "asymmetric at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_spd_inverse_inside_parallel_region_runs_inline_and_matches() {
+        // nesting-awareness: inside a parallel_tasks worker the budget
+        // is 1, the sweep must degrade to the inline loop and still be
+        // correct (this is the score-sweep contract the satellite asks
+        // spd_inverse to share)
+        use crate::util::threadpool::parallel_tasks;
+        let serial: Vec<Tensor> = {
+            let mut rng = Rng::new(23);
+            (0..2).map(|_| spd_t(&mut rng, 100)).collect()
+        };
+        let expect: Vec<Tensor> = serial.iter().map(|a| spd_inverse_ref(a).unwrap()).collect();
+        let got = parallel_tasks(serial.len(), |i| spd_inverse(&serial[i]).unwrap());
+        for (f, g) in got.iter().zip(&expect) {
+            assert!(f.max_abs_diff(g) < 1e-2, "diff {}", f.max_abs_diff(g));
+        }
     }
 
     #[test]

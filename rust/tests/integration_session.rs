@@ -1,0 +1,162 @@
+//! CompressionSession integration: legacy-shim vs session equivalence
+//! (the api_redesign acceptance test) and crash-resume behavior.
+//! Skipped when artifacts/ is absent, like the other integration
+//! suites; the engine-free resume mechanics are covered by the
+//! `session::store` unit tests.
+
+mod support;
+
+use std::path::PathBuf;
+
+use support::{engine, toy_env};
+use ziplm::data;
+use ziplm::env::InferenceEnv;
+use ziplm::models::ModelState;
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
+use ziplm::session::CompressionSession;
+use ziplm::train::TrainCfg;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ziplm_itest_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn cfg() -> PruneCfg {
+    PruneCfg { calib_samples: 16, spdy: SpdyCfgLite { iters: 4, seed: 5 }, ..Default::default() }
+}
+
+fn tcfg() -> TrainCfg {
+    TrainCfg {
+        lr: 5e-4,
+        epochs: 0.25,
+        lambdas: [1.0, 0.0, 0.0],
+        weight_decay: 0.0,
+        seed: 0,
+        log_every: 0,
+    }
+}
+
+/// Acceptance: a small seeded model driven through BOTH the legacy
+/// free-function path (via the deprecated shims) and the
+/// CompressionSession stage API must produce identical chosen
+/// profiles, certified speedups, and emitted family manifests.
+#[test]
+#[allow(deprecated)]
+fn legacy_shim_path_and_session_agree_exactly() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 64, 32);
+    let teacher = ModelState::init(&minfo, task, &tinfo, 12);
+    let env = toy_env(&engine, model);
+    let targets = [1.5, 2.5];
+
+    // legacy: deprecated free-function shims
+    let legacy = ziplm::pruner::gradual(
+        &engine,
+        teacher.clone(),
+        &ds,
+        &env,
+        &targets,
+        &cfg(),
+        &tcfg(),
+        None,
+    )
+    .unwrap();
+    let legacy_dir = temp_dir("legacy_family");
+    let legacy_fam =
+        ziplm::session::pipeline::emit_family(&env, &teacher, &legacy, &legacy_dir).unwrap();
+
+    // session: typed stage API (checkpointing off → pure compute path)
+    let sess = CompressionSession::for_model(&engine, model, task)
+        .with_env(env.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(cfg())
+        .with_train_cfg(tcfg())
+        .open()
+        .unwrap();
+    let staged = sess.run(teacher.clone(), &ds).unwrap();
+    let session_dir = temp_dir("session_family");
+    let session_fam = sess.emit_family(&teacher, &staged, &session_dir).unwrap();
+
+    assert_eq!(legacy.len(), staged.len());
+    for (l, s) in legacy.iter().zip(&staged) {
+        assert_eq!(l.report.layer_profile, s.report.layer_profile, "chosen profiles differ");
+        assert_eq!(l.report.est_speedup, s.report.est_speedup, "certified speedups differ");
+        assert_eq!(l.state.masks, s.state.masks, "masks differ");
+        assert_eq!(l.state.params, s.state.params, "weights differ");
+    }
+    // identical manifests, byte for byte (ckpt names are relative)
+    assert_eq!(
+        legacy_fam.to_json().to_pretty(),
+        session_fam.to_json().to_pretty(),
+        "family manifests differ"
+    );
+    let _ = std::fs::remove_dir_all(legacy_dir);
+    let _ = std::fs::remove_dir_all(session_dir);
+}
+
+/// A re-opened session over the same checkpoint directory must load
+/// every completed stage instead of recomputing — asserted through the
+/// session's (computed, loaded) counters and by output equality.
+#[test]
+fn session_resume_loads_checkpointed_stages() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 64, 32);
+    let teacher = ModelState::init(&minfo, task, &tinfo, 13);
+    let env = toy_env(&engine, model);
+    let dir = temp_dir("session_resume");
+
+    let open = || {
+        CompressionSession::for_model(&engine, model, task)
+            .with_env(env.clone())
+            .with_targets(&[1.5, 2.5])
+            .with_prune_cfg(cfg())
+            .with_train_cfg(tcfg())
+            .checkpoint_to(&dir)
+            .open()
+            .unwrap()
+    };
+
+    let first = open();
+    let stages1 = first.run(teacher.clone(), &ds).unwrap();
+    let (computed1, loaded1) = first.counters();
+    assert!(computed1 > 0, "first run computed nothing");
+    assert_eq!(loaded1, 0, "first run on an empty dir loaded something");
+
+    // "crash" and re-open: everything must come back from checkpoints
+    drop(first);
+    let second = open();
+    let stages2 = second.run(teacher.clone(), &ds).unwrap();
+    let (computed2, loaded2) = second.counters();
+    assert_eq!(computed2, 0, "resume recomputed {computed2} stage(s)");
+    assert!(loaded2 > 0, "resume loaded nothing");
+    assert_eq!(stages1.len(), stages2.len());
+    for (a, b) in stages1.iter().zip(&stages2) {
+        assert_eq!(a.report.layer_profile, b.report.layer_profile);
+        assert_eq!(a.report.est_speedup, b.report.est_speedup);
+        assert_eq!(a.state.params, b.state.params);
+        assert_eq!(a.state.masks, b.state.masks);
+    }
+
+    // a session dir is pinned to its env: resuming with a different
+    // environment must be refused, not silently re-certified
+    let mut t2 = env.table().clone();
+    t2.overhead *= 2.0;
+    let other = InferenceEnv::measured(t2).unwrap();
+    let refused = CompressionSession::for_model(&engine, model, task)
+        .with_env(other)
+        .with_targets(&[1.5, 2.5])
+        .with_prune_cfg(cfg())
+        .checkpoint_to(&dir)
+        .open();
+    assert!(refused.is_err(), "resume against a different env was not refused");
+    let _ = std::fs::remove_dir_all(dir);
+}

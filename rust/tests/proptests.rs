@@ -2,7 +2,9 @@
 //! proptest is unavailable offline; see util::prop).
 
 use ziplm::latency::LatencyTable;
+use ziplm::models::family::{FamilyManifest, FamilyMember};
 use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
+use ziplm::util::json::Json;
 use ziplm::tensor::{linalg, Tensor};
 use ziplm::util::prop::{gen, Prop};
 use ziplm::util::rng::Rng;
@@ -504,18 +506,144 @@ fn prop_inplace_multi_update_matches_reference() {
 
 #[test]
 fn prop_fast_spd_inverse_matches_reference() {
+    // small instances run the inline path; the occasional 120..168 one
+    // crosses the threaded column sweep's chunking gate on multi-core
+    // runners (PR-1 follow-up) — both must match the reference loop
     Prop::new(25).check_msg(
         "spd_inverse fast == ref",
         |r| {
-            let n = 2 + r.below(30);
+            let n = if r.f64() < 0.15 { 120 + r.below(48) } else { 2 + r.below(30) };
             Tensor::from_vec(&[n, n], gen::spd(r, n, 0.5))
         },
         |a| {
             let f = linalg::spd_inverse(a)?;
             let g = linalg::spd_inverse_ref(a)?;
             let d = f.max_abs_diff(&g);
-            if d > 1e-3 {
-                return Err(format!("diff {d}"));
+            let tol = 1e-3 * (1.0 + a.rows() as f32 / 32.0);
+            if d > tol {
+                return Err(format!("diff {d} (tol {tol})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------- JSON round-trips
+
+/// Strings with every escape class the writer handles.
+fn tricky_string(r: &mut Rng) -> String {
+    let pool = [
+        "bert-syn-base",
+        "m/with\\slash",
+        "quote\"inside",
+        "tab\ttab",
+        "newline\nend",
+        "unicode-\u{e9}\u{4e2d}",
+        "",
+    ];
+    pool[r.below(pool.len())].to_string()
+}
+
+fn random_latency_table(r: &mut Rng) -> LatencyTable {
+    let heads = 1 + r.below(12);
+    let per_head = 1e-5 + r.f64() * 1e-3;
+    let attn: Vec<f64> = (0..=heads).map(|h| h as f64 * per_head).collect();
+    let n_widths = 1 + r.below(6);
+    let mut widths: Vec<usize> = (0..n_widths).map(|_| 1 + r.below(4096)).collect();
+    widths.sort_unstable();
+    widths.dedup();
+    widths.reverse();
+    let mut mlp: Vec<(usize, f64)> =
+        widths.into_iter().map(|w| (w, w as f64 * (1e-8 + r.f64() * 1e-5))).collect();
+    mlp.push((0, 0.0));
+    LatencyTable {
+        model: tricky_string(r),
+        device: tricky_string(r),
+        regime: if r.f64() < 0.5 { "throughput".into() } else { "latency".into() },
+        attn,
+        mlp,
+        overhead: r.f64() * 1e-3,
+    }
+}
+
+#[test]
+fn prop_latency_table_json_roundtrip_identity() {
+    // to_json/from_json identity on randomized instances, both via the
+    // in-memory Json value and through the text writer+parser (the
+    // on-disk path). f64 Display is shortest-roundtrip, so exact
+    // equality must hold.
+    Prop::new(60).check_msg(
+        "LatencyTable to_json/from_json identity",
+        |r| random_latency_table(r),
+        |t| {
+            let j = t.to_json();
+            for (tag, t2) in [
+                ("value", LatencyTable::from_json(&j).map_err(|e| e.to_string())?),
+                (
+                    "text",
+                    LatencyTable::from_json(
+                        &Json::parse(&j.to_pretty()).map_err(|e| format!("parse: {e}"))?,
+                    )
+                    .map_err(|e| e.to_string())?,
+                ),
+            ] {
+                if t2.model != t.model
+                    || t2.device != t.device
+                    || t2.regime != t.regime
+                    || t2.attn != t.attn
+                    || t2.mlp != t.mlp
+                    || t2.overhead != t.overhead
+                {
+                    return Err(format!("{tag} roundtrip mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_manifest(r: &mut Rng) -> FamilyManifest {
+    let mut fam = FamilyManifest::new(
+        &tricky_string(r),
+        &tricky_string(r),
+        if r.f64() < 0.5 { "throughput" } else { "latency" },
+    );
+    for i in 0..r.below(6) {
+        let n_layers = 1 + r.below(4);
+        let profile: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (r.below(16), r.below(3072))).collect();
+        let est = 1.0 + r.f64() * 9.0;
+        fam.push(FamilyMember {
+            tag: format!("member-{i}-{}", tricky_string(r)),
+            ckpt: format!("{i}.zlm"),
+            target: 1.0 + r.f64() * 9.0,
+            est_speedup: est,
+            profile,
+        });
+    }
+    fam
+}
+
+#[test]
+fn prop_family_manifest_json_roundtrip_identity() {
+    // `push` keeps members est_speedup-sorted and `from_json` re-sorts
+    // defensively, so a manifest built through the public API must
+    // round-trip to an equal value (PartialEq covers member order).
+    Prop::new(60).check_msg(
+        "FamilyManifest to_json/from_json identity",
+        |r| random_manifest(r),
+        |f| {
+            let j = f.to_json();
+            let back = FamilyManifest::from_json(&j).map_err(|e| e.to_string())?;
+            if &back != f {
+                return Err("value roundtrip mismatch".into());
+            }
+            let text = FamilyManifest::from_json(
+                &Json::parse(&j.to_pretty()).map_err(|e| format!("parse: {e}"))?,
+            )
+            .map_err(|e| e.to_string())?;
+            if &text != f {
+                return Err("text roundtrip mismatch".into());
             }
             Ok(())
         },

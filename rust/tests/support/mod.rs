@@ -1,0 +1,45 @@
+//! Shared integration-test support (cargo compiles `tests/*.rs` as
+//! separate crates; both the pipeline and session suites include this
+//! via `mod support;` so the synthetic environment they drive is ONE
+//! definition, not a drifting copy).
+#![allow(dead_code)] // each test crate uses a subset
+
+use std::path::Path;
+
+use ziplm::env::InferenceEnv;
+use ziplm::latency::LatencyTable;
+use ziplm::runtime::Engine;
+
+/// Open the artifact-backed engine, or `None` (skip the test) when
+/// `artifacts/` has not been built in this checkout.
+pub fn engine() -> Option<Engine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::open(&dir).expect("engine"))
+}
+
+/// Synthetic environment so tests do not depend on measurement noise:
+/// linear attention ladder, affine FFN pricing over the model's
+/// manifest ladder, fixed overhead.
+pub fn toy_env(engine: &Engine, model: &str) -> InferenceEnv {
+    let info = engine.manifest.model(model);
+    let attn: Vec<f64> = (0..=info.n_heads).map(|h| h as f64 * 1.0e-3).collect();
+    let mut mlp: Vec<(usize, f64)> = info
+        .ffn_ladder
+        .iter()
+        .map(|&w| (w, w as f64 * 1.6e-5 + if w > 0 { 5e-4 } else { 0.0 }))
+        .collect();
+    mlp.sort_by(|a, b| b.0.cmp(&a.0));
+    InferenceEnv::measured(LatencyTable {
+        model: model.into(),
+        device: "toy".into(),
+        regime: "throughput".into(),
+        attn,
+        mlp,
+        overhead: 1e-3,
+    })
+    .unwrap()
+}
