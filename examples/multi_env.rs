@@ -1,0 +1,136 @@
+//! Multi-env sessions: ONE Hessian capture → N inference environments
+//! → N certified families (paper §3.2: matching desired speedups "in
+//! any given inference environment"; DESIGN.md §8).
+//!
+//!   make artifacts && cargo run --release --example multi_env
+//!
+//! The run: (1) quick-train a dense teacher, (2) describe TWO
+//! environments — this machine's measured CPU table and an analytic
+//! V100 roofline at the same architecture dims, (3) open ONE
+//! checkpointed `CompressionSession` and call `emit_families`: capture
+//! and database build happen once, each env's SPDY solve fans out on
+//! the global pool, and each env gets its own `family.json` embedding
+//! the env it was certified against, (4) prove the headline property
+//! with store counters — a fresh session pinned to the GPU env resumes
+//! capture, databases AND solve from the shared directory with ZERO
+//! recomputation, (5) serve the CPU family with the env *loaded from
+//! its manifest* (no re-measuring) behind the SLA-aware coordinator.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::Result;
+use ziplm::coordinator::family as famserve;
+use ziplm::data;
+use ziplm::env::{CostModel, InferenceEnv, Regime};
+use ziplm::latency;
+use ziplm::models::family::FamilyManifest;
+use ziplm::models::ModelState;
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
+use ziplm::runtime::Engine;
+use ziplm::session::{env_slug, CompressionSession};
+use ziplm::train::{TrainCfg, Trainer};
+
+fn main() -> Result<()> {
+    let engine = Engine::open(Path::new("artifacts"))?;
+    let (model, task) = ("bert-syn-base", "sst2-syn");
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+
+    // 1. data + a briefly-trained dense teacher
+    let ds = data::load_sized(&minfo, task, 256, 128);
+    let mut teacher = ModelState::init(&minfo, task, &tinfo, 0);
+    let mut trainer = Trainer::new(&engine, tinfo.n_params, None);
+    let tcfg = TrainCfg { lr: 1e-3, epochs: 2.0, lambdas: [1.0, 0.0, 0.0], ..Default::default() };
+    trainer.train(&mut teacher, &ds, &tcfg)?;
+
+    // 2. two inference environments, one real and one analytic (the
+    //    same constructor the `multienv` experiment driver uses)
+    let env_cpu = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?;
+    let env_gpu = ziplm::exp::analytic_gpu_env(&minfo, Regime::Throughput);
+    println!("env A: {}", env_cpu.describe());
+    println!("env B: {}", env_gpu.describe());
+
+    // 3. ONE session, ONE capture, N families
+    let targets = [1.5, 3.0];
+    let pcfg = PruneCfg {
+        calib_samples: 64,
+        spdy: SpdyCfgLite { iters: 20, seed: 7 },
+        ..Default::default()
+    };
+    let sdir = Path::new("runs").join(format!("session_multienv_{model}_{task}"));
+    let _ = std::fs::remove_dir_all(&sdir); // fresh demo run
+    let base = Path::new("runs").join(format!("families_{model}_{task}"));
+    let sess = CompressionSession::for_model(&engine, model, task)
+        .with_env(env_cpu.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(pcfg.clone())
+        .checkpoint_to(&sdir)
+        .open()?;
+    let envs = [env_cpu.clone(), env_gpu.clone()];
+    let fams = sess.emit_families(&teacher, &ds, &envs, &base)?;
+    assert!(fams.len() >= 2, "expected one family per env");
+    let (computed, loaded) = sess.counters();
+    println!("\none capture, {} families ({computed} computed, {loaded} loaded):", fams.len());
+    for (env, fam) in envs.iter().zip(&fams) {
+        assert!(fam.env.is_some(), "manifest must embed its certification env");
+        println!("  {} →", env.describe());
+        for m in &fam.members {
+            let (tag, t, est) = (&m.tag, m.target, m.est_speedup);
+            println!("    {tag:>6}: target {t:>4.1}x, certified {est:>5.2}x");
+        }
+    }
+
+    // 4. the proof: a fresh session pinned to the SECOND env resumes
+    //    capture + databases + its solve with zero recomputation
+    let sess2 = CompressionSession::for_model(&engine, model, task)
+        .with_env(env_gpu.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(pcfg)
+        .checkpoint_to(&sdir)
+        .open()?;
+    let solved = sess2.capture(&teacher, &ds)?.build_dbs()?.solve(&ds, targets[0])?;
+    let (c2, l2) = sess2.counters();
+    println!("\ngpu-env resume: {c2} computed / {l2} loaded (profile {:?})", solved.profile);
+    assert_eq!(c2, 0, "second env must recompute NOTHING — no Hessians, no databases");
+    drop(solved);
+    drop(sess2);
+    drop(sess);
+
+    // 5. serve the CPU family with the env loaded from its manifest —
+    //    admission is priced by the certification env, not a fresh
+    //    measurement
+    let cpu_dir = base.join(env_slug(&env_cpu));
+    let fam = FamilyManifest::load(&cpu_dir.join("family.json"))?;
+    let served_env = fam.env.clone().expect("embedded env");
+    assert_eq!(served_env, env_cpu, "loaded env must equal the certification env");
+    let members: Vec<(String, ModelState)> =
+        fam.load_states(&cpu_dir)?.into_iter().map(|(m, st)| (m.tag, st)).collect();
+    drop(engine); // the coordinator worker owns its own engine
+    let handle = famserve::start(
+        famserve::FamilyCfg {
+            artifacts: "artifacts".into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            pressure: 64,
+        },
+        members,
+        &served_env,
+    )?;
+    let bound = Duration::from_secs_f64(served_env.dense_time(minfo.n_layers) * 0.8);
+    let rows = ziplm::exp::mixed_workload(&handle, &ds, 48, bound, 1.5)?;
+    let stats = handle.shutdown()?;
+    let (reqs, batches) = (stats.requests, stats.batches);
+    println!("\nserved {reqs} requests / {batches} batches against the manifest env:");
+    for r in famserve::summarize(&rows) {
+        println!(
+            "  [{:<12}] n={:<3} p50={:>6.1}ms p99={:>6.1}ms sla-hit={:>4.0}%",
+            r.class,
+            r.n,
+            r.p50.as_secs_f64() * 1e3,
+            r.p99.as_secs_f64() * 1e3,
+            r.hit_rate * 100.0
+        );
+    }
+    Ok(())
+}

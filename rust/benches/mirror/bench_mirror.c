@@ -377,7 +377,8 @@ static void update_fast_g1(const float *w0, const float *h0, int idx, int d_row,
     free(w); free(h); free(p); free(cbuf);
 }
 
-/* fast multi_update: one clone, in-place downdates, alive list */
+/* PR-1 fast multi_update: one clone, in-place downdates, alive list,
+ * fresh colsq recompute per step (kept as the PR-4 "before" entry) */
 static void multi_update_fast(const float *w0, const float *h0, const float *act0,
                               int d_row, int d, int nrm) {
     float *w = malloc(sizeof(float) * d_row * d);
@@ -432,12 +433,79 @@ static void multi_update_fast(const float *w0, const float *h0, const float *act
     free(w); free(h); free(act); free(alive); free(colsq); free(p); free(cbuf);
 }
 
+/* PR-4 fast multi_update: colsq computed ONCE and maintained
+ * incrementally inside the W axpy pass (mirrors the current Rust
+ * NativeBackend::multi_update loop structure 1:1) */
+static void multi_update_fast_incr(const float *w0, const float *h0, const float *act0,
+                                   int d_row, int d, int nrm) {
+    float *w = malloc(sizeof(float) * d_row * d);
+    float *h = malloc(sizeof(float) * d * d);
+    float *act = malloc(sizeof(float) * d);
+    memcpy(w, w0, sizeof(float) * d_row * d);
+    memcpy(h, h0, sizeof(float) * d * d);
+    memcpy(act, act0, sizeof(float) * d);
+    int *alive = malloc(sizeof(int) * d);
+    int n_alive = 0;
+    for (int j = 0; j < d; j++) if (act[j] > 0.0f) alive[n_alive++] = j;
+    double *colsq = malloc(sizeof(double) * d);
+    float *p = malloc(sizeof(float) * d);
+    float *cbuf = malloc(sizeof(float) * d);
+    for (int j = 0; j < d; j++) colsq[j] = 0.0;
+    for (int i = 0; i < d_row; i++) {
+        const float *row = &w[i * d];
+        for (int j = 0; j < d; j++) colsq[j] += (double)row[j] * (double)row[j];
+    }
+    for (int s = 0; s < nrm; s++) {
+        int best = alive[0];
+        float best_s = INFINITY;
+        for (int t = 0; t < n_alive; t++) {
+            int j = alive[t];
+            double cs = colsq[j] > 0.0 ? colsq[j] : 0.0;
+            float sc = (float)(cs / (double)h[j * d + j]);
+            if (sc < best_s) { best_s = sc; best = j; }
+        }
+        int j = best;
+        float hjj_inv = 1.0f / h[j * d + j];
+        for (int k = 0; k < d; k++) p[k] = h[j * d + k] * hjj_inv;
+        for (int i = 0; i < d_row; i++) {
+            float *row = &w[i * d];
+            float wij = row[j];
+            if (wij != 0.0f) {
+                for (int k = 0; k < d; k++) {
+                    double old = (double)row[k];
+                    row[k] -= wij * p[k];
+                    colsq[k] += (double)row[k] * (double)row[k] - old * old;
+                }
+            }
+            row[j] = 0.0f;
+        }
+        colsq[j] = 0.0;
+        for (int r = 0; r < d; r++) cbuf[r] = h[r * d + j];
+        for (int r = 0; r < d; r++) {
+            float c = cbuf[r];
+            if (c == 0.0f) continue;
+            float *hrow = &h[r * d];
+            for (int k = 0; k < d; k++) hrow[k] -= c * p[k];
+        }
+        for (int k = 0; k < d; k++) { h[j * d + k] = 0.0f; h[k * d + j] = 0.0f; }
+        h[j * d + j] = 1.0f;
+        act[j] = 0.0f;
+        for (int t = 0; t < n_alive; t++)
+            if (alive[t] == j) { memmove(&alive[t], &alive[t + 1], sizeof(int) * (n_alive - t - 1)); n_alive--; break; }
+    }
+    SINK = w[0] + h[0];
+    free(w); free(h); free(act); free(alive); free(colsq); free(p); free(cbuf);
+}
+
 /* ----------------------------------------------------------- harness */
 static int cmp_d(const void *a, const void *b) {
     double x = *(const double *)a, y = *(const double *)b;
     return (x > y) - (x < y);
 }
 
+/* Machine-readable output: `BENCH <json key> | min <ns> | median <ns>
+ * | n <N>`. The key must match BENCH_hotpath.json exactly —
+ * check_regression.py parses these lines to regenerate the file. */
 #define TIME(name, iters, stmt) do { \
     double samples[64]; \
     int nn = (iters) < 64 ? (iters) : 64; \
@@ -448,7 +516,7 @@ static int cmp_d(const void *a, const void *b) {
         samples[it] = now_ns() - t0; \
     } \
     qsort(samples, nn, sizeof(double), cmp_d); \
-    printf("%-48s min %14.0f  median %14.0f ns/iter (n=%d)\n", name, samples[0], samples[nn / 2], nn); \
+    printf("BENCH %s | min %.0f | median %.0f | n %d\n", name, samples[0], samples[nn / 2], nn); \
 } while (0)
 
 int main(void) {
@@ -468,13 +536,13 @@ int main(void) {
     int M = 256;
     float *ma = malloc(sizeof(float) * M * M), *mb = malloc(sizeof(float) * M * M), *mc = malloc(sizeof(float) * M * M);
     for (int i = 0; i < M * M; i++) { ma[i] = frand(); mb[i] = frand(); }
-    TIME("tensor::matmul 256 (old i-k-j)", 30, { matmul_old(ma, mb, mc, M, M, M); SINK = mc[7]; });
-    TIME("tensor::matmul 256 (new tiled quad)", 30, { matmul_new(ma, mb, mc, M, M, M); SINK = mc[7]; });
+    TIME("tensor::matmul 256x256x256 seed_ref", 30, { matmul_old(ma, mb, mc, M, M, M); SINK = mc[7]; });
+    TIME("tensor::matmul 256x256x256", 30, { matmul_new(ma, mb, mc, M, M, M); SINK = mc[7]; });
 
     /* spd_inverse 512 */
     float *inv = malloc(sizeof(float) * D * D);
-    TIME("linalg::spd_inverse_ref 512", 5, { spd_inverse_ref(h512, inv, D); SINK = inv[3]; });
-    TIME("linalg::spd_inverse 512 (fast)", 5, { spd_inverse_fast(h512, inv, D); SINK = inv[3]; });
+    TIME("linalg::spd_inverse_ref 512", 12, { spd_inverse_ref(h512, inv, D); SINK = inv[3]; });
+    TIME("linalg::spd_inverse 512", 12, { spd_inverse_fast(h512, inv, D); SINK = inv[3]; });
 
     /* scores fc 128x512 g=1 */
     TIME("obs::scores native_ref fc(128x512)", 30, { scores_ref(w, hinv, act, DR, D, 1, out); SINK = out[5]; });
@@ -483,17 +551,19 @@ int main(void) {
     /* scores attn g=64, 8 heads */
     float act8[8]; for (int i = 0; i < 8; i++) act8[i] = 1.0f;
     float out8[8];
-    TIME("obs::scores native_ref attn(g=64)", 30, { scores_ref(w, hinv, act8, DR, D, 64, out8); SINK = out8[3]; });
-    TIME("obs::scores native attn(g=64)", 30, { scores_fast_grouped(w, hinv, act8, DR, D, 64, out8); SINK = out8[3]; });
+    TIME("obs::scores native_ref attn(g=64, 8 heads)", 30, { scores_ref(w, hinv, act8, DR, D, 64, out8); SINK = out8[3]; });
+    TIME("obs::scores native attn(g=64, 8 heads)", 30, { scores_fast_grouped(w, hinv, act8, DR, D, 64, out8); SINK = out8[3]; });
 
     /* single update g=1 */
     { float *w2, *h2;
       TIME("obs::update native_ref fc(128x512)", 40, { update_ref_g1(w, hinv, 3, DR, D, &w2, &h2); SINK = w2[9] + h2[9]; free(w2); free(h2); }); }
     TIME("obs::update native fc(128x512)", 40, { update_fast_g1(w, hinv, 3, DR, D); });
 
-    /* multi_update n=45 */
-    TIME("obs::multi_update native_ref n=45", 5, { multi_update_ref(w, hinv, act, DR, D, 45); });
-    TIME("obs::multi_update native n=45", 20, { multi_update_fast(w, hinv, act, DR, D, 45); });
+    /* multi_update n=45: ref (clone per step) vs PR-1 fast (fresh
+     * colsq per step) vs PR-4 fast (incremental colsq) */
+    TIME("obs::multi_update native_ref fc(128x512) n=45", 12, { multi_update_ref(w, hinv, act, DR, D, 45); });
+    TIME("obs::multi_update native_prev fc(128x512) n=45", 20, { multi_update_fast(w, hinv, act, DR, D, 45); });
+    TIME("obs::multi_update native fc(128x512) n=45", 20, { multi_update_fast_incr(w, hinv, act, DR, D, 45); });
 
     return 0;
 }

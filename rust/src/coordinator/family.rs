@@ -12,7 +12,11 @@
 //!   [`InferenceEnv`]-priced admission estimate satisfy the SLA, or
 //!   the fastest member when
 //!   nothing qualifies or total backlog crosses the pressure
-//!   threshold;
+//!   threshold. The env is the one the pruning session certified the
+//!   family against — since manifests embed it
+//!   ([`crate::models::family::FamilyManifest::env`]), `serve-family`
+//!   passes the *loaded* value here rather than re-measuring, so
+//!   certification and admission cannot diverge even across machines;
 //! * each member has its own dynamic-batch queue, drained by the one
 //!   worker thread that owns the PJRT engine (handles are not `Send`,
 //!   exactly as in the single-model loop, DESIGN.md §4);

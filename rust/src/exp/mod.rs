@@ -16,9 +16,8 @@ use crate::data::{self, Dataset};
 use crate::env::{CostModel, InferenceEnv, Regime};
 use crate::eval::{self, EvalResult};
 use crate::latency::{self, ArchDims, Device, LatencyTable};
-use crate::models::family::FamilyManifest;
 use crate::models::ModelState;
-use crate::pruner::{PruneCfg, SpdyCfgLite, StageResult, TargetMode};
+use crate::pruner::{PruneCfg, SpdyCfgLite, TargetMode};
 use crate::quant;
 use crate::runtime::Engine;
 use crate::session::CompressionSession;
@@ -850,21 +849,6 @@ pub fn fig8(ctx: &ExpCtx) -> Result<()> {
 // coordinator, report per-class latency percentiles + SLA-hit rate
 // ===================================================================
 
-/// Write the family manifest + per-member checkpoints for a finished
-/// gradual run (paper App. F). Legacy wrapper retained for one PR;
-/// the implementation is [`crate::session::pipeline::emit_family`],
-/// reached through [`CompressionSession::emit_family`].
-#[deprecated(note = "use session::CompressionSession::emit_family")]
-pub fn emit_family(
-    ctx: &ExpCtx,
-    dense: &ModelState,
-    stages: &[StageResult],
-    env: &InferenceEnv,
-) -> Result<FamilyManifest> {
-    let dir = ctx.runs.join(format!("family_{}_{}", dense.model, dense.task));
-    crate::session::pipeline::emit_family(env, dense, stages, &dir)
-}
-
 /// Fire a mixed-SLA workload at a running family coordinator: a
 /// round-robin of best-effort (no SLA), `interactive` (latency-bound),
 /// and `cheap` (min-speedup) classes, all submitted up front so the
@@ -1000,6 +984,113 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
     )
 }
 
+// ===================================================================
+// multienv: one capture, N inference environments → N certified
+// families (paper §3.2 "any given inference environment"; DESIGN §8)
+// ===================================================================
+
+/// Analytic GPU environment at THIS model's architecture dims (the
+/// paper's V100 roofline), priced over the model's own FFN ladder —
+/// the "unavailable hardware" half of a multi-env run. Ctx-free so
+/// `examples/multi_env.rs` builds the exact same env the `multienv`
+/// driver certifies against.
+pub fn analytic_gpu_env(m: &crate::runtime::ModelInfo, regime: Regime) -> InferenceEnv {
+    let dims = ArchDims {
+        d_model: m.d_model,
+        n_heads: m.n_heads,
+        d_head: m.d_head,
+        d_ff: m.d_ff,
+        vocab: m.vocab,
+        n_layers: m.n_layers,
+        batch: 128,
+        seq: m.seq_len,
+    };
+    // price the model's own ladder, anchored at its dense width
+    let mut widths: Vec<usize> = vec![m.d_ff];
+    widths.extend(m.ffn_ladder.iter().copied().filter(|&w| w < m.d_ff));
+    InferenceEnv::analytic(Device::V100Sim, &dims, regime, &widths)
+}
+
+/// Multi-env experiment: ONE Hessian capture + database build, then
+/// certified families for a CPU-measured env AND an analytic-GPU env,
+/// solved in parallel. A second session pinned to the GPU env then
+/// resumes from the same directory and must compute NOTHING — the
+/// store counters are the proof that retargeting is free of Hessian
+/// recomputation.
+pub fn multienv(ctx: &ExpCtx) -> Result<()> {
+    let (model, task) = ("bert-syn-base", "sst2-syn");
+    let ds = ctx.dataset(model, task);
+    let teacher = ctx.teacher(model, task, &ds)?;
+    let env_cpu = ctx.env(model, Regime::Throughput)?;
+    let env_gpu = analytic_gpu_env(ctx.engine.manifest.model(model), Regime::Throughput);
+    let targets: Vec<f64> = if ctx.fast { vec![1.5, 2.5] } else { vec![1.5, 2.0, 3.0] };
+    let sdir = ctx.runs.join(format!("session_multienv_{model}_{task}"));
+    let base = ctx.runs.join(format!("families_{model}_{task}"));
+    let sess = CompressionSession::for_model(&ctx.engine, model, task)
+        .with_env(env_cpu.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(ctx.prune_cfg())
+        .checkpoint_to(&sdir)
+        .on_progress(crate::session::stdout_progress())
+        .open()?;
+    let envs = [env_cpu.clone(), env_gpu.clone()];
+    let fams = sess.emit_families(&teacher, &ds, &envs, &base)?;
+    let (computed, loaded) = sess.counters();
+    println!("[multienv] emit_families: {computed} artifact(s) computed, {loaded} loaded");
+    let mut rows = Vec::new();
+    for (env, fam) in envs.iter().zip(&fams) {
+        println!("  family on {}:", env.describe());
+        for m in &fam.members {
+            let (tag, t, est) = (&m.tag, m.target, m.est_speedup);
+            println!("    {tag:>6}  target {t:>4.1}x  certified {est:>5.2}x");
+        }
+        rows.push(Json::obj(vec![
+            ("env", Json::Str(env.describe())),
+            ("dir", Json::Str(crate::session::env_slug(env))),
+            ("env_embedded", Json::Bool(fam.env.is_some())),
+            (
+                "members",
+                Json::Arr(
+                    fam.members
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("tag", Json::Str(m.tag.clone())),
+                                ("target", Json::Num(m.target)),
+                                ("est_speedup", Json::Num(m.est_speedup)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    // proof of zero recomputation: a fresh session pinned to the GPU
+    // env resumes every stage — capture, databases, AND its solve —
+    // straight from the shared directory
+    let sess2 = CompressionSession::for_model(&ctx.engine, model, task)
+        .with_env(env_gpu.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(ctx.prune_cfg())
+        .checkpoint_to(&sdir)
+        .open()?;
+    let _ = sess2.capture(&teacher, &ds)?.build_dbs()?.solve(&ds, targets[0])?;
+    let (c2, l2) = sess2.counters();
+    println!("[multienv] gpu-env resume: {c2} computed, {l2} loaded (0 computed = no recapture)");
+    if c2 != 0 {
+        return Err(anyhow!("gpu-env resume recomputed {c2} artifact(s); expected 0"));
+    }
+    ctx.write_result(
+        "multienv",
+        &Json::obj(vec![
+            ("families", Json::Arr(rows)),
+            ("first_run_computed", Json::Num(computed as f64)),
+            ("gpu_resume_computed", Json::Num(c2 as f64)),
+            ("gpu_resume_loaded", Json::Num(l2 as f64)),
+        ]),
+    )
+}
+
 /// One experiment driver.
 pub type Driver = fn(&ExpCtx) -> Result<()>;
 
@@ -1023,6 +1114,7 @@ pub const EXPERIMENTS: &[(&str, Driver)] = &[
     ("table8", table8),
     ("fig8", fig8),
     ("family", family),
+    ("multienv", multienv),
 ];
 
 /// Every experiment id [`run`] accepts, besides the `all` meta-id.

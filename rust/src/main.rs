@@ -8,7 +8,7 @@
 //!   eval           --ckpt path [--split dev|test]
 //!   serve          --ckpt path [--batch B] [--wait-ms W]
 //!   serve-family   --family runs/family_M_T/family.json [--requests N] [--pressure P]
-//!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|all> [--fast]
+//!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|multienv|all> [--fast]
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --fast.
 //!
@@ -251,8 +251,19 @@ fn serve_family(args: &Args) -> Result<()> {
     );
     let ctx = ctx(args)?;
     // admission estimates come from the SAME env the family was
-    // certified against (manifest records its regime)
-    let env = ctx.env(&fam.model, Regime::parse(&fam.regime)?)?;
+    // certified against: embedded in the manifest since the multi-env
+    // sessions PR, so no re-measuring happens here. Pre-embedding
+    // manifests fall back to a (cached) measurement for their regime.
+    let env = match &fam.env {
+        Some(e) => {
+            println!("admission env loaded from manifest: {}", e.describe());
+            e.clone()
+        }
+        None => {
+            println!("manifest has no embedded env (pre-embedding file); measuring");
+            ctx.env(&fam.model, Regime::parse(&fam.regime)?)?
+        }
+    };
     let minfo = ctx.engine.manifest.model(&fam.model).clone();
     let ds = ctx.dataset(&fam.model, &fam.task);
     let handle = ziplm::coordinator::family::start(

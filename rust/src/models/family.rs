@@ -15,6 +15,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use super::ModelState;
+use crate::env::InferenceEnv;
 use crate::util::json::Json;
 
 /// One member of a served model family.
@@ -41,6 +42,12 @@ pub struct FamilyManifest {
     pub task: String,
     /// latency-table regime the targets were certified against
     pub regime: String,
+    /// the full inference environment the members were certified
+    /// against. Serving tools (`serve-family`, the family
+    /// coordinator) price admission with THIS value instead of
+    /// re-measuring, closing the certify-vs-admit gap. `None` only
+    /// for manifests written before env embedding existed.
+    pub env: Option<InferenceEnv>,
     /// members ordered by ascending `est_speedup` (dense first)
     pub members: Vec<FamilyMember>,
 }
@@ -52,6 +59,7 @@ impl FamilyManifest {
             model: model.to_string(),
             task: task.to_string(),
             regime: regime.to_string(),
+            env: None,
             members: Vec::new(),
         }
     }
@@ -78,13 +86,18 @@ impl FamilyManifest {
         self.members.iter().find(|m| m.est_speedup + 1e-9 >= min_speedup)
     }
 
-    /// Serialize to the on-disk JSON form.
+    /// Serialize to the on-disk JSON form (the `env` key is present
+    /// only when the certification env is embedded).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("model", Json::Str(self.model.clone())),
             ("task", Json::Str(self.task.clone())),
             ("regime", Json::Str(self.regime.clone())),
-            (
+        ];
+        if let Some(env) = &self.env {
+            pairs.push(("env", env.to_json()));
+        }
+        pairs.push((
                 "members",
                 Json::Arr(
                     self.members
@@ -113,17 +126,19 @@ impl FamilyManifest {
                         })
                         .collect(),
                 ),
-            ),
-        ])
+        ));
+        Json::obj(pairs)
     }
 
-    /// Parse the on-disk JSON form (members are re-sorted defensively).
+    /// Parse the on-disk JSON form (members are re-sorted defensively;
+    /// an absent `env` key parses as `None` for pre-embedding files).
     pub fn from_json(j: &Json) -> Result<FamilyManifest> {
         let mut out = FamilyManifest::new(
             j.req_str("model"),
             j.req_str("task"),
             j.get("regime").and_then(Json::as_str).unwrap_or("throughput"),
         );
+        out.env = j.get("env").map(InferenceEnv::from_json).transpose()?;
         for m in j.get("members").and_then(Json::as_arr).unwrap_or(&[]) {
             let profile = m
                 .get("profile")
@@ -231,6 +246,35 @@ mod tests {
         let j = f.to_json();
         let f2 = FamilyManifest::from_json(&j).unwrap();
         assert_eq!(f, f2);
+        // no env embedded → no env key in the JSON (older readers)
+        assert!(j.get("env").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_with_embedded_env() {
+        let env = InferenceEnv::measured(crate::latency::LatencyTable {
+            model: "bert-syn-base".into(),
+            device: "cpu-pjrt".into(),
+            regime: "latency".into(),
+            attn: vec![0.0, 1.1e-3, 2.0e-3],
+            mlp: vec![(64, 4e-3), (16, 1e-3), (0, 0.0)],
+            overhead: 7e-4,
+        })
+        .unwrap()
+        .with_batch_shape(1, 64);
+        let mut f = FamilyManifest::new("bert-syn-base", "sst2-syn", "latency");
+        f.env = Some(env.clone());
+        f.push(member("dense", 1.0));
+        f.push(member("3x", 3.0));
+        // value and text round-trips both preserve the embedded env
+        let f2 = FamilyManifest::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, f2);
+        assert_eq!(f2.env.as_ref(), Some(&env));
+        let f3 = FamilyManifest::from_json(
+            &crate::util::json::Json::parse(&f.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f, f3);
     }
 
     #[test]

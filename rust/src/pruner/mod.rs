@@ -1,26 +1,17 @@
-//! Pruning configuration/report types, plus the legacy free-function
-//! pipeline as deprecated shims.
+//! Pruning configuration and report types, shared by the session API
+//! and everything downstream of it.
 //!
 //! The ZipLM pipeline (paper Fig. 1 — capture → databases → SPDY →
-//! apply → family) now lives behind the typed
+//! apply → family) lives behind the typed
 //! [`crate::session::CompressionSession`] API; the algorithmic bodies
-//! are in [`crate::session::pipeline`]. The free functions here are
-//! one-PR compatibility shims so downstream diffs stay reviewable —
-//! they delegate directly and will be removed next PR. The *types*
-//! ([`PruneCfg`], [`PruneReport`], [`Hessians`], [`StageResult`], …)
-//! are not deprecated; the session API shares them.
+//! are the free functions in [`crate::session::pipeline`]. The
+//! `#[deprecated]` free-function shims that used to live here (PR 3's
+//! one-PR compatibility layer) are gone — this module now carries only
+//! the *types* both layers speak: [`PruneCfg`], [`PruneReport`],
+//! [`Hessians`], [`StageResult`].
 
-use anyhow::Result;
-
-use crate::data::Dataset;
-use crate::env::InferenceEnv;
 use crate::models::ModelState;
-use crate::runtime::{Engine, ModelInfo, TaskInfo};
-use crate::session::pipeline;
-use crate::spdy::SpdyProblem;
 use crate::tensor::Tensor;
-use crate::train::TrainCfg;
-use crate::ziplm::ModuleDb;
 
 #[derive(Clone, Debug)]
 pub struct PruneCfg {
@@ -80,87 +71,4 @@ pub struct StageResult {
     pub report: PruneReport,
     pub state: ModelState,
     pub final_train_loss: f64,
-}
-
-// ------------------------------------------------------------- shims
-//
-// Legacy free-function pipeline. Each shim delegates to
-// `session::pipeline`; migrate to `CompressionSession` (the shims are
-// exercised only by the legacy-vs-session equivalence tests).
-
-/// Run the calib artifact over `n_samples` and accumulate XX^T.
-#[deprecated(
-    note = "use session::CompressionSession::capture (or session::pipeline::capture_hessians)"
-)]
-pub fn capture_hessians(
-    engine: &Engine,
-    state: &ModelState,
-    data: &Dataset,
-    n_samples: usize,
-) -> Result<Hessians> {
-    pipeline::capture_hessians(engine, state, data, n_samples)
-}
-
-/// Build all 2L module databases (parallel fan-out).
-#[deprecated(note = "use session::Captured::build_dbs (or session::pipeline::build_databases)")]
-pub fn build_databases(
-    engine: &Engine,
-    state: &ModelState,
-    hs: &Hessians,
-    cfg: &PruneCfg,
-) -> Result<Vec<ModuleDb>> {
-    pipeline::build_databases(engine, state, hs, cfg)
-}
-
-/// Assemble the SPDY problem from databases + an inference environment.
-#[deprecated(note = "use session::Databases::solve (or session::pipeline::spdy_problem)")]
-pub fn spdy_problem(
-    dbs: &[ModuleDb],
-    env: &InferenceEnv,
-    minfo: &ModelInfo,
-    mode: TargetMode,
-) -> SpdyProblem {
-    pipeline::spdy_problem(dbs, env, minfo, mode)
-}
-
-/// Apply a chosen profile: write snapshot weights + kill masks.
-#[deprecated(note = "use session::Solved::apply (or session::pipeline::apply_profile)")]
-pub fn apply_profile(
-    state: &mut ModelState,
-    dbs: &[ModuleDb],
-    profile: &[usize],
-    minfo: &ModelInfo,
-    tinfo: &TaskInfo,
-) -> Result<()> {
-    pipeline::apply_profile(state, dbs, profile, minfo, tinfo)
-}
-
-/// One pruning stage: Hessians → databases → SPDY → apply.
-#[deprecated(note = "use session::CompressionSession::oneshot")]
-pub fn prune_to_target(
-    engine: &Engine,
-    state: &mut ModelState,
-    data: &Dataset,
-    env: &InferenceEnv,
-    dense_cost: f64,
-    target: f64,
-    cfg: &PruneCfg,
-) -> Result<PruneReport> {
-    pipeline::prune_to_target(engine, state, data, env, dense_cost, target, cfg)
-}
-
-/// Gradual pruning: the full family pipeline (paper Fig. 1).
-#[deprecated(note = "use session::CompressionSession::run")]
-#[allow(clippy::too_many_arguments)]
-pub fn gradual(
-    engine: &Engine,
-    state: ModelState,
-    data: &Dataset,
-    env: &InferenceEnv,
-    targets: &[f64],
-    prune_cfg: &PruneCfg,
-    train_cfg: &TrainCfg,
-    teacher: Option<Vec<f32>>,
-) -> Result<Vec<StageResult>> {
-    pipeline::gradual(engine, state, data, env, targets, prune_cfg, train_cfg, teacher)
 }

@@ -1,9 +1,8 @@
 //! CompressionSession: the typed end-to-end pipeline API.
 //!
-//! One session owns one compression run of one `(model, task)` against
-//! one [`InferenceEnv`] (DESIGN.md §7). The flow the paper's Fig. 1
-//! describes becomes a chain of stage values, each owning its
-//! artifacts:
+//! One session owns one compression run of one `(model, task)`
+//! (DESIGN.md §7–§8). The flow the paper's Fig. 1 describes becomes a
+//! chain of stage values, each owning its artifacts:
 //!
 //! ```text
 //! CompressionSession::for_model(&engine, model, task)
@@ -16,12 +15,30 @@
 //! session.emit_family(..)?          — manifest + member checkpoints
 //! ```
 //!
+//! Environments are a first-class *axis* of a session, not part of its
+//! identity (DESIGN.md §8): the Hessians and databases a capture
+//! produces are env-independent artifacts, and only the SPDY solve
+//! prices against an [`InferenceEnv`]. Two entry points exploit that:
+//!
+//! * [`CompressionSession::retarget`] swaps the session's env mid-run
+//!   — the next solve re-prices the *same* checkpointed databases
+//!   against the new cost model, with zero Hessian recomputation;
+//! * [`CompressionSession::emit_families`] runs one capture + database
+//!   build and then solves against N environments in parallel on the
+//!   global pool, emitting one certified [`FamilyManifest`] per env
+//!   (each embedding the env it was certified against — the exact
+//!   value `serve-family` later admits requests with).
+//!
 //! With a checkpoint directory attached ([`SessionBuilder::checkpoint_to`])
 //! every stage persists its artifact; re-opening a session over the
 //! same directory resumes after a crash by loading completed stages
 //! instead of recomputing them (each checkpoint is fingerprint-gated
 //! to the model state it was derived from, so a divergent resume
-//! recomputes rather than silently reusing stale artifacts). The
+//! recomputes rather than silently reusing stale artifacts). Capture
+//! artifacts are keyed env-free; solve artifacts fold
+//! [`store::env_fingerprint`] into both key and fingerprint
+//! ([`solve_key`]/[`solve_fingerprint`]), so N envs' certifications
+//! coexist in one directory without cross-loading. The
 //! [`CompressionSession::counters`] pair `(computed, loaded)` and the
 //! [`SessionBuilder::on_progress`] hook make both paths observable —
 //! the CLI and experiment drivers render them.
@@ -34,17 +51,50 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
-use crate::env::{CostModel, InferenceEnv};
+use crate::env::InferenceEnv;
 use crate::models::family::FamilyManifest;
 use crate::models::ModelState;
-use crate::pruner::{Hessians, PruneCfg, PruneReport, StageResult, TargetMode};
+use crate::pruner::{Hessians, PruneCfg, PruneReport, StageResult};
 use crate::runtime::{Engine, ModelInfo, TaskInfo};
 use crate::spdy::SpdyProblem;
 use crate::train::{TrainCfg, Trainer};
 use crate::util::json::Json;
+use crate::util::threadpool::parallel_tasks;
 use crate::ziplm::ModuleDb;
 
 use store::StageStore;
+
+/// Checkpoint key of the solved profile for gradual stage `idx` at
+/// `target`, certified against the env with fingerprint `env_fp`. The
+/// env fingerprint in the *name* is what lets a retargeted or
+/// multi-env session keep every environment's certification side by
+/// side; the target keeps distinct speedups from overwriting each
+/// other inside one stage.
+pub fn solve_key(idx: usize, env_fp: &str, target: f64) -> String {
+    format!("s{idx}_profile_{env_fp}_t{target}.json")
+}
+
+/// Fingerprint stored inside solve-side artifacts: the capture-side
+/// state/config fingerprint with the env fingerprint folded in. A
+/// loader that finds a different env's fingerprint reports a miss and
+/// the solve recomputes — the second gate behind [`solve_key`].
+pub fn solve_fingerprint(stage_fp: &str, env_fp: &str) -> String {
+    format!("{stage_fp}|env:{env_fp}")
+}
+
+/// Directory slug for one environment's family under
+/// [`CompressionSession::emit_families`]: device + regime + a short
+/// fingerprint disambiguator (two measured tables on one device are
+/// different environments).
+pub fn env_slug(env: &InferenceEnv) -> String {
+    let fp = store::env_fingerprint(env);
+    let clean: String = env
+        .device_name()
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    format!("{clean}_{}_{}", env.regime().name(), &fp[..8])
+}
 
 /// Pipeline stage identifiers for progress reporting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -168,27 +218,36 @@ impl<'e> SessionBuilder<'e> {
     }
 
     /// Validate and open the session. With a checkpoint directory this
-    /// also pins the environment: resuming a directory created for a
-    /// different env is an error, not a silent re-certification.
+    /// also pins the environment: the directory records every env it
+    /// has certified against (`env.json` for the first, plus one
+    /// `env_<fp>.json` per env), and resuming with an env the
+    /// directory has never seen is an error, not a silent
+    /// re-certification — open with a recorded env and call
+    /// [`CompressionSession::retarget`] to add a new one.
     pub fn open(self) -> Result<CompressionSession<'e>> {
         let env = self.env.ok_or_else(|| {
             anyhow!("session for {}/{} needs an InferenceEnv (use with_env)", self.model, self.task)
         })?;
         let minfo = self.engine.manifest.model(&self.model).clone();
         let tinfo = self.engine.manifest.task(&self.model, &self.task).clone();
+        let env_fp = store::env_fingerprint(&env);
         if let Some(dir) = &self.dir {
-            let env_path = dir.join("env.json");
-            if env_path.exists() {
-                let prev = InferenceEnv::load(&env_path)?;
+            let primary = dir.join("env.json");
+            let pinned = dir.join(format!("env_{env_fp}.json"));
+            if !primary.exists() {
+                env.save(&primary)?;
+                env.save(&pinned)?;
+            } else if !pinned.exists() {
+                let prev = InferenceEnv::load(&primary)?;
                 if prev != env {
                     return Err(anyhow!(
-                        "session dir {dir:?} was created for {}; refusing to resume against {}",
+                        "session dir {dir:?} was created for {} and has no record of {}; \
+                         open with a recorded env and retarget(), or use a fresh directory",
                         prev.describe(),
                         env.describe()
                     ));
                 }
-            } else {
-                env.save(&env_path)?;
+                env.save(&pinned)?;
             }
         }
         Ok(CompressionSession {
@@ -196,6 +255,7 @@ impl<'e> SessionBuilder<'e> {
             model: self.model,
             task: self.task,
             env,
+            env_fp,
             targets: self.targets,
             prune: self.prune,
             train: self.train,
@@ -208,13 +268,16 @@ impl<'e> SessionBuilder<'e> {
     }
 }
 
-/// A typed compression run: one `(model, task)` against one
-/// [`InferenceEnv`]. See the module docs for the stage flow.
+/// A typed compression run of one `(model, task)`, currently priced
+/// against one [`InferenceEnv`] — retargetable mid-run, and able to
+/// certify against many envs at once. See the module docs for the
+/// stage flow.
 pub struct CompressionSession<'e> {
     engine: &'e Engine,
     model: String,
     task: String,
     env: InferenceEnv,
+    env_fp: String,
     targets: Vec<f64>,
     prune: PruneCfg,
     train: Option<TrainCfg>,
@@ -242,9 +305,40 @@ impl<'e> CompressionSession<'e> {
         }
     }
 
-    /// The environment this session compresses for.
+    /// The environment this session currently compresses for.
     pub fn env(&self) -> &InferenceEnv {
         &self.env
+    }
+
+    /// Re-point the session at a new inference environment WITHOUT
+    /// recapturing (ROADMAP: mid-run retargeting). Capture-side
+    /// checkpoints (Hessians, databases) are env-free and keep
+    /// loading; solve-side artifacts are keyed per env, so the next
+    /// [`Databases::solve`]/[`CompressionSession::run`] re-runs SPDY
+    /// against the new cost model while every previous env's
+    /// certification stays intact on disk. The new env is recorded in
+    /// the session directory so a later `open` with it resumes.
+    pub fn retarget(&mut self, env: InferenceEnv) -> Result<()> {
+        self.record_env(&env)?;
+        self.env_fp = store::env_fingerprint(&env);
+        self.env = env;
+        Ok(())
+    }
+
+    /// Pin `env` in the checkpoint directory (`env_<fp>.json`; also
+    /// `env.json` when it is the first env the directory sees).
+    fn record_env(&self, env: &InferenceEnv) -> Result<()> {
+        if let Some(dir) = self.store.dir() {
+            let primary = dir.join("env.json");
+            if !primary.exists() {
+                env.save(&primary)?;
+            }
+            let pinned = dir.join(format!("env_{}.json", store::env_fingerprint(env)));
+            if !pinned.exists() {
+                env.save(&pinned)?;
+            }
+        }
+        Ok(())
     }
 
     /// The configured gradual targets.
@@ -339,12 +433,14 @@ impl<'e> CompressionSession<'e> {
         let mut state = teacher;
         let mut out = Vec::new();
         for (i, &target) in self.targets.iter().enumerate() {
-            let fp = self.stage_fp(&state);
-            let state_key = format!("s{i}_state.zlm");
+            // whole-stage results depend on the env (the chosen profile
+            // does), so both key and fingerprint carry the env half
+            let fp = solve_fingerprint(&self.stage_fp(&state), &self.env_fp);
+            let state_key = format!("s{i}_state_{}.zlm", self.env_fp);
             let trainer_ref = &mut trainer;
             let state_ref = &state;
             let ((st, report, loss), loaded) = self.store.load_or_compute(
-                &format!("s{i}_report.json"),
+                &format!("s{i}_report_{}.json", self.env_fp),
                 |p| load_stage_result(p, &state_key, &fp, target),
                 |p, v: &(ModelState, PruneReport, f64)| save_stage_result(p, &state_key, &fp, v),
                 || {
@@ -374,6 +470,9 @@ impl<'e> CompressionSession<'e> {
 
     /// Final stage: record the certified family under `dir` (manifest +
     /// per-member checkpoints) for `serve-family` and the coordinator.
+    /// The manifest embeds this session's env, so serving tools price
+    /// admission with the exact value the family was certified against
+    /// instead of re-measuring.
     pub fn emit_family(
         &self,
         dense: &ModelState,
@@ -381,6 +480,113 @@ impl<'e> CompressionSession<'e> {
         dir: &Path,
     ) -> Result<FamilyManifest> {
         let fam = pipeline::emit_family(&self.env, dense, stages, dir)?;
+        self.emit(Stage::EmitFamily, self.targets.len(), None, false);
+        Ok(fam)
+    }
+
+    /// One capture → N certified families (the paper's "any given
+    /// inference environment" claim made operational). Capture and
+    /// database build run — or load from checkpoints — exactly once;
+    /// each env in `envs` then gets the full SPDY solve + apply +
+    /// manifest emission for every configured target, fanned out in
+    /// parallel on the global pool. Families land under
+    /// `base/<env_slug>/family.json`, each manifest embedding the env
+    /// it was certified against. Post-training mode: members are
+    /// one-shot variants of `state`, not fine-tuned.
+    pub fn emit_families(
+        &self,
+        state: &ModelState,
+        data: &Dataset,
+        envs: &[InferenceEnv],
+        base: &Path,
+    ) -> Result<Vec<FamilyManifest>> {
+        if envs.is_empty() {
+            return Err(anyhow!("emit_families needs at least one env"));
+        }
+        if self.targets.is_empty() {
+            return Err(anyhow!("session has no targets (use with_targets)"));
+        }
+        for env in envs {
+            self.record_env(env)?;
+        }
+        let dbs_stage = self.capture(state, data)?.build_dbs()?;
+        let stage_fp = dbs_stage.fp.clone();
+        let (state0, dbs) = (dbs_stage.state, dbs_stage.dbs);
+        let outs = parallel_tasks(envs.len(), |e| -> Result<FamilyManifest> {
+            let env = &envs[e];
+            self.emit_family_for_env(env, &stage_fp, &state0, &dbs, data, &base.join(env_slug(env)))
+        });
+        outs.into_iter().collect()
+    }
+
+    /// Solve + apply every target against one env over prebuilt
+    /// databases, then write that env's family. The solve artifacts go
+    /// through the same per-env checkpoint keys the single-env path
+    /// uses, so a later session pinned to this env resumes from them.
+    fn emit_family_for_env(
+        &self,
+        env: &InferenceEnv,
+        stage_fp: &str,
+        state0: &ModelState,
+        dbs: &[ModuleDb],
+        data: &Dataset,
+        dir: &Path,
+    ) -> Result<FamilyManifest> {
+        let env_fp = store::env_fingerprint(env);
+        let dense_cost = pipeline::dense_cost(env, &self.minfo, self.prune.target_mode);
+        let problem = pipeline::spdy_problem(dbs, env, &self.minfo, self.prune.target_mode);
+        let mut stages = Vec::with_capacity(self.targets.len());
+        for (k, &target) in self.targets.iter().enumerate() {
+            let budget = dense_cost / target;
+            pipeline::check_budget(&problem, target, budget)
+                .map_err(|e| anyhow!("{e} (on {})", env.describe()))?;
+            let fp = solve_fingerprint(stage_fp, &env_fp);
+            let (sol, loaded) = self.store.load_or_compute(
+                &solve_key(0, &env_fp, target),
+                |p| store::load_profile(p, &fp, target),
+                |p, v: &(Vec<usize>, f64)| store::save_profile(p, &fp, target, &v.0, v.1),
+                || {
+                    let out = pipeline::solve_profile(
+                        self.engine,
+                        state0,
+                        data,
+                        dbs,
+                        &problem,
+                        budget,
+                        &self.prune,
+                        &self.minfo,
+                        &self.tinfo,
+                    )?;
+                    Ok((out.profile, out.best_loss))
+                },
+            )?;
+            self.emit(Stage::Solve, k, Some(target), loaded);
+            let mut st = state0.clone();
+            pipeline::apply_profile(&mut st, dbs, &sol.0, &self.minfo, &self.tinfo)?;
+            let layer_profile = problem.as_layer_profile(&sol.0);
+            let est = pipeline::certified_est(
+                env,
+                &problem,
+                &sol.0,
+                &layer_profile,
+                dense_cost,
+                self.prune.target_mode,
+                &self.minfo,
+            );
+            self.emit(Stage::Apply, k, Some(target), false);
+            stages.push(StageResult {
+                report: PruneReport {
+                    target,
+                    est_speedup: est,
+                    layer_profile,
+                    calib_loss: sol.1,
+                    obs_dispatches: 0,
+                },
+                state: st,
+                final_train_loss: f64::NAN,
+            });
+        }
+        let fam = pipeline::emit_family(env, state0, &stages, dir)?;
         self.emit(Stage::EmitFamily, self.targets.len(), None, false);
         Ok(fam)
     }
@@ -443,17 +649,14 @@ impl<'s, 'e> Databases<'s, 'e> {
         let problem =
             pipeline::spdy_problem(&self.dbs, &sess.env, &sess.minfo, sess.prune.target_mode);
         let budget = dense_cost / target;
-        if problem.min_cost() > budget {
-            return Err(anyhow!(
-                "target {target}x infeasible: min cost {:.3e} > budget {:.3e}",
-                problem.min_cost(),
-                budget
-            ));
-        }
+        pipeline::check_budget(&problem, target, budget)?;
+        // per-env key + fingerprint: a retargeted session computes a
+        // fresh profile here while the previous env's stays on disk
+        let fp = solve_fingerprint(&self.fp, &sess.env_fp);
         let (sol, loaded) = sess.store.load_or_compute(
-            &format!("s{}_profile.json", self.idx),
-            |p| store::load_profile(p, &self.fp, target),
-            |p, v: &(Vec<usize>, f64)| store::save_profile(p, &self.fp, target, &v.0, v.1),
+            &solve_key(self.idx, &sess.env_fp, target),
+            |p| store::load_profile(p, &fp, target),
+            |p, v: &(Vec<usize>, f64)| store::save_profile(p, &fp, target, &v.0, v.1),
             || {
                 let out = pipeline::solve_profile(
                     sess.engine,
@@ -507,12 +710,15 @@ impl Solved<'_, '_> {
         let mut state = self.state;
         pipeline::apply_profile(&mut state, &self.dbs, &self.profile, &sess.minfo, &sess.tinfo)?;
         let layer_profile = self.problem.as_layer_profile(&self.profile);
-        let est = match sess.prune.target_mode {
-            TargetMode::Speedup => self.dense_cost / self.problem.profile_cost(&self.profile),
-            TargetMode::Sparsity => {
-                sess.env.dense_time(sess.minfo.n_layers) / sess.env.model_time(&layer_profile)
-            }
-        };
+        let est = pipeline::certified_est(
+            &sess.env,
+            &self.problem,
+            &self.profile,
+            &layer_profile,
+            self.dense_cost,
+            sess.prune.target_mode,
+            &sess.minfo,
+        );
         let report = PruneReport {
             target: self.target,
             est_speedup: est,

@@ -4,11 +4,14 @@
 //! These are the algorithmic bodies behind [`super::CompressionSession`]
 //! — Hessian capture, parallel database builds, SPDY assembly/search,
 //! profile application, the gradual driver, and family emission. The
-//! session stages wrap them with checkpointing and progress hooks; the
-//! deprecated `pruner::*` shims delegate here directly (the "legacy
-//! free-function path" the equivalence tests drive). Every latency
-//! question goes through one [`InferenceEnv`] — the same value the
-//! family coordinator later routes with.
+//! session stages wrap them with checkpointing and progress hooks;
+//! the straight-line drivers here ([`prune_to_target`], [`gradual`])
+//! are the checkpoint-free equivalents the legacy-vs-session
+//! equivalence tests drive. Every latency question goes through one
+//! [`InferenceEnv`] — the same value the family coordinator later
+//! routes with. Note the env split: [`capture_hessians`] and
+//! [`build_databases`] never see an env (their artifacts retarget for
+//! free), while [`spdy_problem`] onward price against exactly one.
 
 use std::path::Path;
 
@@ -174,6 +177,42 @@ pub fn dense_cost(env: &InferenceEnv, minfo: &ModelInfo, mode: TargetMode) -> f6
     }
 }
 
+/// Reject a target whose budget not even the cheapest configuration
+/// meets. ONE definition shared by every solve path (one-shot,
+/// gradual, retargeted, multi-env) so the feasibility contract cannot
+/// drift between them.
+pub fn check_budget(problem: &SpdyProblem, target: f64, budget: f64) -> Result<()> {
+    if problem.min_cost() > budget {
+        return Err(anyhow!(
+            "target {target}x infeasible: min cost {:.3e} > budget {:.3e}",
+            problem.min_cost(),
+            budget
+        ));
+    }
+    Ok(())
+}
+
+/// Certified-speedup estimate for a chosen profile. ONE definition
+/// shared by every solve path — in speedup mode the profile's priced
+/// cost against the dense anchor, in sparsity mode the env speedup the
+/// chosen sparsity happens to deliver — so `emit_families`,
+/// `retarget`-ed solves, and the straight-line drivers can never
+/// certify the same profile differently.
+pub fn certified_est(
+    env: &InferenceEnv,
+    problem: &SpdyProblem,
+    profile: &[usize],
+    layer_profile: &[(usize, usize)],
+    dense_cost: f64,
+    mode: TargetMode,
+    minfo: &ModelInfo,
+) -> f64 {
+    match mode {
+        TargetMode::Speedup => dense_cost / problem.profile_cost(profile),
+        TargetMode::Sparsity => env.dense_time(minfo.n_layers) / env.model_time(layer_profile),
+    }
+}
+
 /// Assemble the SPDY problem from databases + the environment's costs.
 pub fn spdy_problem(
     dbs: &[ModuleDb],
@@ -296,23 +335,19 @@ pub fn prune_to_target(
     let dbs = build_databases(engine, state, &hs, cfg)?;
     let problem = spdy_problem(&dbs, env, &minfo, cfg.target_mode);
     let budget = dense_cost / target;
-    if problem.min_cost() > budget {
-        return Err(anyhow!(
-            "target {target}x infeasible: min cost {:.3e} > budget {:.3e}",
-            problem.min_cost(),
-            budget
-        ));
-    }
+    check_budget(&problem, target, budget)?;
     let sol = solve_profile(engine, state, data, &dbs, &problem, budget, cfg, &minfo, &tinfo)?;
     apply_profile(state, &dbs, &sol.profile, &minfo, &tinfo)?;
     let layer_profile = problem.as_layer_profile(&sol.profile);
-    let est = match cfg.target_mode {
-        TargetMode::Speedup => dense_cost / problem.profile_cost(&sol.profile),
-        TargetMode::Sparsity => {
-            // report the env speedup this sparsity happens to give
-            env.dense_time(minfo.n_layers) / env.model_time(&layer_profile)
-        }
-    };
+    let est = certified_est(
+        env,
+        &problem,
+        &sol.profile,
+        &layer_profile,
+        dense_cost,
+        cfg.target_mode,
+        &minfo,
+    );
     crate::zlog!(
         "info",
         "pruned to {target}x: est_speedup={est:.2} profile={layer_profile:?} candidates={}",
@@ -360,7 +395,9 @@ pub fn gradual(
 /// gradual run (paper App. F: one run, a whole certified family). The
 /// dense teacher becomes the `"dense"` member; each SPDY stage becomes
 /// a `"<target>x"` member carrying its certified profile/speedup —
-/// certified against exactly the `env` the run targeted.
+/// certified against exactly the `env` the run targeted, which the
+/// manifest embeds in full so `serve-family` admission prices with
+/// the same value instead of re-measuring.
 pub fn emit_family(
     env: &InferenceEnv,
     dense: &ModelState,
@@ -369,6 +406,7 @@ pub fn emit_family(
 ) -> Result<FamilyManifest> {
     std::fs::create_dir_all(dir)?;
     let mut fam = FamilyManifest::new(&dense.model, &dense.task, env.regime().name());
+    fam.env = Some(env.clone());
     let dense_profile = dense.masks.summary();
     dense.save(&dir.join("dense.zlm"))?;
     fam.push(FamilyMember {

@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::env::InferenceEnv;
 use crate::models::ModelState;
 use crate::pruner::Hessians;
 use crate::tensor::Tensor;
@@ -53,6 +54,16 @@ pub fn fingerprint_with(state: &ModelState, context: &[u8]) -> String {
     let ffn = state.masks.ffn.iter().flat_map(|x| x.to_le_bytes());
     let ctxt = context.iter().copied();
     format!("{:016x}", fnv1a(params.chain(head).chain(ffn).chain(ctxt)))
+}
+
+/// Fingerprint of an inference environment's serialized JSON form.
+/// This is the env half of the multi-env checkpoint scheme: capture
+/// artifacts (Hessians, databases) are keyed env-free, while every
+/// solve-side artifact folds this value into both its file name and
+/// its stored fingerprint, so N environments' certifications coexist
+/// in one session directory without ever cross-loading.
+pub fn env_fingerprint(env: &InferenceEnv) -> String {
+    format!("{:016x}", fnv1a(env.to_json().to_string().bytes()))
 }
 
 /// Load-or-compute gate over one checkpoint directory.
@@ -471,6 +482,29 @@ mod tests {
         assert!(load_profile(&path, "ab", 3.0).is_none());
         assert!(load_profile(&path, "xy", 2.0).is_none());
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn env_fingerprint_stable_and_discriminating() {
+        use crate::latency::LatencyTable;
+        let table = |ov: f64| LatencyTable {
+            model: "m".into(),
+            device: "d".into(),
+            regime: "throughput".into(),
+            attn: vec![0.0, 1e-3],
+            mlp: vec![(8, 4e-3), (0, 0.0)],
+            overhead: ov,
+        };
+        let a = InferenceEnv::measured(table(1e-3)).unwrap();
+        let b = InferenceEnv::measured(table(1e-3)).unwrap();
+        let c = InferenceEnv::measured(table(2e-3)).unwrap();
+        assert_eq!(env_fingerprint(&a), env_fingerprint(&b));
+        assert_ne!(env_fingerprint(&a), env_fingerprint(&c));
+        // the batch shape is part of the env's identity too
+        assert_ne!(
+            env_fingerprint(&a),
+            env_fingerprint(&a.clone().with_batch_shape(8, 128))
+        );
     }
 
     #[test]

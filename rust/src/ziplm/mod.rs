@@ -13,7 +13,10 @@
 //! pass divided by diag(Hinv)), batched block extraction + inversion
 //! for g>1, and in-place rank-g downdates — `multi_update` clones W
 //! and Hinv once and then streams every removal step in place with an
-//! incrementally-maintained alive list. The original gather+matmul
+//! incrementally-maintained alive list AND incrementally-maintained
+//! column sums of squares (the scores for the next step are updated
+//! inside the same axpy pass that rewrites W, so no per-step rescan
+//! of the whole weight matrix remains). The original gather+matmul
 //! formulation survives as `scores_ref`/`update_ref`/
 //! `multi_update_ref`: the equivalence oracle for property tests
 //! (rust/tests/proptests.rs) and the "before" half of the hot-path
@@ -399,7 +402,18 @@ impl ObsOps for NativeBackend {
         // columns, shrunk as structures are removed.
         let mut alive: Vec<usize> = (0..d_col.min(act.len())).filter(|&j| act[j] > 0.0).collect();
         let mut order = Vec::with_capacity(n);
+        // Column sums of squares, computed ONCE and then maintained
+        // incrementally inside the per-step W axpy pass (the pass
+        // already touches every element it changes, so the separate
+        // whole-matrix rescan per step is pure overhead). Accumulation
+        // stays in f64; a column the downdates cancel to ~0 can drift
+        // a few ulps negative, so scores clamp at 0 when read.
         let mut colsq = vec![0f64; d_col];
+        for i in 0..d_row {
+            for (acc, &v) in colsq.iter_mut().zip(w.row(i)) {
+                *acc += (v as f64) * (v as f64);
+            }
+        }
         let mut p = vec![0f32; d_col];
         let mut cbuf = vec![0f32; d_col];
         for _step in 0..n {
@@ -409,17 +423,11 @@ impl ObsOps for NativeBackend {
             // Closed-form g=1 scores over the alive set; the argmin
             // mirrors `argmin(&scores)` exactly (ascending scan,
             // strict <, f32 compare) so removal order is identical to
-            // the step-by-step path.
-            colsq.fill(0.0);
-            for i in 0..d_row {
-                for (acc, &v) in colsq.iter_mut().zip(w.row(i)) {
-                    *acc += (v as f64) * (v as f64);
-                }
-            }
+            // the step-by-step path up to f64 accumulation order.
             let mut best = alive[0];
             let mut best_s = f32::INFINITY;
             for &j in &alive {
-                let s = (colsq[j] / h.at2(j, j) as f64) as f32;
+                let s = (colsq[j].max(0.0) / h.at2(j, j) as f64) as f32;
                 if s < best_s {
                     best_s = s;
                     best = j;
@@ -443,12 +451,15 @@ impl ObsOps for NativeBackend {
                 let row = w.row_mut(i);
                 let wij = row[j];
                 if wij != 0.0 {
-                    for (rv, pv) in row.iter_mut().zip(&p) {
+                    for ((rv, pv), acc) in row.iter_mut().zip(&p).zip(colsq.iter_mut()) {
+                        let old = *rv as f64;
                         *rv -= wij * pv;
+                        *acc += (*rv as f64) * (*rv as f64) - old * old;
                     }
                 }
                 row[j] = 0.0;
             }
+            colsq[j] = 0.0;
             for (r, c) in cbuf.iter_mut().enumerate() {
                 *c = h.at2(r, j);
             }

@@ -1,8 +1,9 @@
-//! CompressionSession integration: legacy-shim vs session equivalence
-//! (the api_redesign acceptance test) and crash-resume behavior.
-//! Skipped when artifacts/ is absent, like the other integration
-//! suites; the engine-free resume mechanics are covered by the
-//! `session::store` unit tests.
+//! CompressionSession integration: straight-line-pipeline vs session
+//! equivalence, crash-resume behavior, and the multi-env axis
+//! (retarget + emit_families). Skipped when artifacts/ is absent, like
+//! the other integration suites; the engine-free resume/fingerprint
+//! mechanics are covered by `session::store` unit tests and
+//! tests/proptests.rs.
 
 mod support;
 
@@ -13,7 +14,7 @@ use ziplm::data;
 use ziplm::env::InferenceEnv;
 use ziplm::models::ModelState;
 use ziplm::pruner::{PruneCfg, SpdyCfgLite};
-use ziplm::session::CompressionSession;
+use ziplm::session::{env_slug, CompressionSession};
 use ziplm::train::TrainCfg;
 
 fn temp_dir(tag: &str) -> PathBuf {
@@ -37,13 +38,25 @@ fn tcfg() -> TrainCfg {
     }
 }
 
-/// Acceptance: a small seeded model driven through BOTH the legacy
-/// free-function path (via the deprecated shims) and the
+/// A second, differently-priced environment derived from `env`: same
+/// ladder shape, uniformly different block times — enough to change
+/// SPDY's cost trade-offs without breaking table monotonicity.
+fn other_env(env: &InferenceEnv) -> InferenceEnv {
+    let mut t = env.table().clone();
+    for v in t.attn.iter_mut() {
+        *v *= 3.0;
+    }
+    t.overhead *= 0.25;
+    t.device = "toy-b".into();
+    InferenceEnv::measured(t).unwrap()
+}
+
+/// Acceptance: a small seeded model driven through BOTH the
+/// straight-line free-function pipeline (`session::pipeline`) and the
 /// CompressionSession stage API must produce identical chosen
 /// profiles, certified speedups, and emitted family manifests.
 #[test]
-#[allow(deprecated)]
-fn legacy_shim_path_and_session_agree_exactly() {
+fn pipeline_free_functions_and_session_agree_exactly() {
     let Some(engine) = engine() else { return };
     let model = "bert-syn-base";
     let task = "sst2-syn";
@@ -54,8 +67,8 @@ fn legacy_shim_path_and_session_agree_exactly() {
     let env = toy_env(&engine, model);
     let targets = [1.5, 2.5];
 
-    // legacy: deprecated free-function shims
-    let legacy = ziplm::pruner::gradual(
+    // straight-line: the checkpoint-free pipeline free functions
+    let straight = ziplm::session::pipeline::gradual(
         &engine,
         teacher.clone(),
         &ds,
@@ -66,9 +79,9 @@ fn legacy_shim_path_and_session_agree_exactly() {
         None,
     )
     .unwrap();
-    let legacy_dir = temp_dir("legacy_family");
-    let legacy_fam =
-        ziplm::session::pipeline::emit_family(&env, &teacher, &legacy, &legacy_dir).unwrap();
+    let straight_dir = temp_dir("straight_family");
+    let straight_fam =
+        ziplm::session::pipeline::emit_family(&env, &teacher, &straight, &straight_dir).unwrap();
 
     // session: typed stage API (checkpointing off → pure compute path)
     let sess = CompressionSession::for_model(&engine, model, task)
@@ -82,20 +95,22 @@ fn legacy_shim_path_and_session_agree_exactly() {
     let session_dir = temp_dir("session_family");
     let session_fam = sess.emit_family(&teacher, &staged, &session_dir).unwrap();
 
-    assert_eq!(legacy.len(), staged.len());
-    for (l, s) in legacy.iter().zip(&staged) {
+    assert_eq!(straight.len(), staged.len());
+    for (l, s) in straight.iter().zip(&staged) {
         assert_eq!(l.report.layer_profile, s.report.layer_profile, "chosen profiles differ");
         assert_eq!(l.report.est_speedup, s.report.est_speedup, "certified speedups differ");
         assert_eq!(l.state.masks, s.state.masks, "masks differ");
         assert_eq!(l.state.params, s.state.params, "weights differ");
     }
-    // identical manifests, byte for byte (ckpt names are relative)
+    // identical manifests, byte for byte (ckpt names are relative),
+    // both embedding the certification env
     assert_eq!(
-        legacy_fam.to_json().to_pretty(),
+        straight_fam.to_json().to_pretty(),
         session_fam.to_json().to_pretty(),
         "family manifests differ"
     );
-    let _ = std::fs::remove_dir_all(legacy_dir);
+    assert_eq!(session_fam.env.as_ref(), Some(&env), "manifest must embed its env");
+    let _ = std::fs::remove_dir_all(straight_dir);
     let _ = std::fs::remove_dir_all(session_dir);
 }
 
@@ -146,17 +161,154 @@ fn session_resume_loads_checkpointed_stages() {
         assert_eq!(a.state.masks, b.state.masks);
     }
 
-    // a session dir is pinned to its env: resuming with a different
-    // environment must be refused, not silently re-certified
-    let mut t2 = env.table().clone();
-    t2.overhead *= 2.0;
-    let other = InferenceEnv::measured(t2).unwrap();
+    // a session dir records the envs it has certified against: opening
+    // with an env it has never seen must be refused (retarget() is the
+    // sanctioned way to introduce one), not silently re-certified
     let refused = CompressionSession::for_model(&engine, model, task)
-        .with_env(other)
+        .with_env(other_env(&env))
         .with_targets(&[1.5, 2.5])
         .with_prune_cfg(cfg())
         .checkpoint_to(&dir)
         .open();
-    assert!(refused.is_err(), "resume against a different env was not refused");
+    assert!(refused.is_err(), "resume against an unrecorded env was not refused");
     let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Satellite acceptance: `retarget(env2)` on a checkpointed session
+/// produces profiles identical to a fresh capture+solve against env2,
+/// while the store counters prove the Hessians and databases were
+/// LOADED, not recomputed — and env1's certification stays intact.
+#[test]
+fn retarget_reuses_databases_and_matches_fresh_solve() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 64, 32);
+    let teacher = ModelState::init(&minfo, task, &tinfo, 21);
+    let env1 = toy_env(&engine, model);
+    let env2 = other_env(&env1);
+    let target = 1.5;
+    let dir = temp_dir("retarget");
+
+    let open = |env: &InferenceEnv| {
+        CompressionSession::for_model(&engine, model, task)
+            .with_env(env.clone())
+            .with_prune_cfg(cfg())
+            .checkpoint_to(&dir)
+            .open()
+            .unwrap()
+    };
+
+    // 1. certify against env1, checkpointed
+    let sess1 = open(&env1);
+    let mut s1 = teacher.clone();
+    let rep1 = sess1.oneshot(&mut s1, &ds, target).unwrap();
+    drop(sess1);
+
+    // 2. re-open with env1, retarget to env2: capture + databases must
+    //    load; ONLY the env2 profile is computed
+    let mut sess2 = open(&env1);
+    sess2.retarget(env2.clone()).unwrap();
+    assert_eq!(sess2.env(), &env2);
+    let mut s2 = teacher.clone();
+    let rep2 = sess2.oneshot(&mut s2, &ds, target).unwrap();
+    let (c2, l2) = sess2.counters();
+    assert_eq!(c2, 1, "retarget must compute exactly the env2 profile, computed {c2}");
+    assert_eq!(l2, 2, "retarget must load hessians + databases, loaded {l2}");
+
+    // 3. fresh, checkpoint-free session against env2: ground truth
+    let fresh = CompressionSession::for_model(&engine, model, task)
+        .with_env(env2.clone())
+        .with_prune_cfg(cfg())
+        .open()
+        .unwrap();
+    let mut s3 = teacher.clone();
+    let rep3 = fresh.oneshot(&mut s3, &ds, target).unwrap();
+    assert_eq!(rep2.layer_profile, rep3.layer_profile, "retargeted profile != fresh env2 profile");
+    assert_eq!(rep2.est_speedup, rep3.est_speedup);
+    assert_eq!(s2.params, s3.params);
+    assert_eq!(s2.masks, s3.masks);
+
+    // 4. env1's certification is untouched AND env2 is now a recorded
+    //    env: opening with either resumes fully (computed == 0)
+    for (env, rep_expect) in [(&env1, &rep1), (&env2, &rep2)] {
+        let sess = open(env);
+        let mut st = teacher.clone();
+        let rep = sess.oneshot(&mut st, &ds, target).unwrap();
+        let (c, l) = sess.counters();
+        assert_eq!(c, 0, "resume against {} recomputed {c}", env.describe());
+        assert_eq!(l, 3, "resume against {} loaded {l}", env.describe());
+        assert_eq!(rep.layer_profile, rep_expect.layer_profile);
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Tentpole acceptance: emit_families produces one certified family
+/// per env from ONE capture, each manifest embedding its env; a fresh
+/// session pinned to the second env then resumes every stage with
+/// zero recomputation.
+#[test]
+fn emit_families_one_capture_many_envs() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 64, 32);
+    let teacher = ModelState::init(&minfo, task, &tinfo, 22);
+    let env1 = toy_env(&engine, model);
+    let env2 = other_env(&env1);
+    let targets = [1.5, 2.5];
+    let dir = temp_dir("families_session");
+    let base = temp_dir("families_out");
+
+    let sess = CompressionSession::for_model(&engine, model, task)
+        .with_env(env1.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(cfg())
+        .checkpoint_to(&dir)
+        .open()
+        .unwrap();
+    let envs = [env1.clone(), env2.clone()];
+    let fams = sess.emit_families(&teacher, &ds, &envs, &base).unwrap();
+    assert_eq!(fams.len(), 2);
+    let (computed, _loaded) = sess.counters();
+    // one capture + one database build + one profile per (env, target)
+    assert_eq!(computed, 2 + envs.len() * targets.len(), "capture or databases ran twice");
+    for (env, fam) in envs.iter().zip(&fams) {
+        assert_eq!(fam.env.as_ref(), Some(env), "manifest embeds the wrong env");
+        assert_eq!(fam.members.len(), 1 + targets.len());
+        // manifest + member checkpoints landed under the env's slug dir
+        let fdir = base.join(env_slug(env));
+        let loaded = ziplm::models::family::FamilyManifest::load(&fdir.join("family.json"))
+            .expect("family.json written");
+        assert_eq!(&loaded, fam, "on-disk manifest differs (env JSON round-trip?)");
+        assert!(loaded.load_states(&fdir).is_ok(), "member checkpoints missing");
+    }
+    drop(sess);
+
+    // the proof of "one capture, N envs": a session pinned to env2
+    // resumes capture, databases AND its first-target solve without
+    // computing anything
+    let sess2 = CompressionSession::for_model(&engine, model, task)
+        .with_env(env2.clone())
+        .with_targets(&targets)
+        .with_prune_cfg(cfg())
+        .checkpoint_to(&dir)
+        .open()
+        .unwrap();
+    let solved = sess2.capture(&teacher, &ds).unwrap().build_dbs().unwrap();
+    let solved = solved.solve(&ds, targets[0]).unwrap();
+    let (c2, l2) = sess2.counters();
+    assert_eq!(c2, 0, "second env recomputed {c2} artifact(s); expected zero");
+    assert_eq!(l2, 3);
+    // and its profile equals the family's certified member profile
+    let fam2_member = &fams[1].members[1]; // dense is members[0]
+    let layer_profile = &fam2_member.profile;
+    let applied = solved.apply().unwrap();
+    assert_eq!(&applied.report.layer_profile, layer_profile);
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(base);
 }

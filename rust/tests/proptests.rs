@@ -1,8 +1,11 @@
 //! Property tests on coordinator invariants (hand-rolled harness —
 //! proptest is unavailable offline; see util::prop).
 
+use ziplm::env::InferenceEnv;
 use ziplm::latency::LatencyTable;
 use ziplm::models::family::{FamilyManifest, FamilyMember};
+use ziplm::session::store::{env_fingerprint, StageStore};
+use ziplm::session::{solve_fingerprint, solve_key};
 use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
 use ziplm::util::json::Json;
 use ziplm::tensor::{linalg, Tensor};
@@ -505,6 +508,55 @@ fn prop_inplace_multi_update_matches_reference() {
 }
 
 #[test]
+fn prop_multi_update_incremental_colsq_deep_removals() {
+    // PR-4 satellite: multi_update now maintains column sums of
+    // squares incrementally across removal steps instead of
+    // rescanning W. Deep removal chains (leave only 1..3 columns)
+    // over wider instances maximize accumulated drift; the fast path
+    // must still match the reference clone-based loop. Pre-validated
+    // by a numpy transliteration over these EXACT seeds
+    // (DEFAULT_SEED + case): 0 order differences, bit-equal outputs.
+    Prop::new(12).check_msg(
+        "incremental-colsq multi_update == reference, deep removals",
+        |r| {
+            let n = 12 + r.below(13); // 12..=24 columns
+            let d_row = 4 + r.below(13); // 4..=16 rows
+            let w = Tensor::from_vec(&[d_row, n], gen::vec_f32(r, d_row * n, 1.0));
+            let h = Tensor::from_vec(&[n, n], gen::spd(r, n, 0.4));
+            let hinv = linalg::spd_inverse(&h).unwrap();
+            let n_remove = n - 1 - r.below(3); // deep: 1..=3 survivors
+            (w, hinv, n, n_remove)
+        },
+        |(w, hinv, n, n_remove)| {
+            let active = vec![1.0f32; *n];
+            let mut ops = NativeBackend::new(1);
+            let (wf, hf, af, of) =
+                ops.multi_update(w, hinv, &active, *n_remove).map_err(|e| e.to_string())?;
+            let (wr, hr, ar, or) =
+                ops.multi_update_ref(w, hinv, &active, *n_remove).map_err(|e| e.to_string())?;
+            if of != or {
+                let mut sf = of.clone();
+                let mut sr = or.clone();
+                sf.sort_unstable();
+                sr.sort_unstable();
+                if sf != sr {
+                    return Err(format!("removed sets differ: {of:?} vs {or:?}"));
+                }
+            }
+            if af != ar {
+                return Err("active mask mismatch".into());
+            }
+            let dw = wf.max_abs_diff(&wr);
+            let dh = hf.max_abs_diff(&hr);
+            if dw > 1e-4 || dh > 1e-4 {
+                return Err(format!("dW {dw} dH {dh}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_fast_spd_inverse_matches_reference() {
     // small instances run the inline path; the occasional 120..168 one
     // crosses the threaded column sweep's chunking gate on multi-core
@@ -602,12 +654,31 @@ fn prop_latency_table_json_roundtrip_identity() {
     );
 }
 
+fn random_env(r: &mut Rng) -> InferenceEnv {
+    let mut t = random_latency_table(r);
+    // InferenceEnv requires a parseable regime and non-empty blocks;
+    // random_latency_table guarantees both, but its model/device are
+    // tricky strings — exactly what the env JSON embedding must carry.
+    t.regime = if r.f64() < 0.5 { "throughput".into() } else { "latency".into() };
+    let env = InferenceEnv::measured(t).unwrap();
+    if r.f64() < 0.5 {
+        env.with_batch_shape(1 + r.below(256), 1 + r.below(4096))
+    } else {
+        env
+    }
+}
+
 fn random_manifest(r: &mut Rng) -> FamilyManifest {
     let mut fam = FamilyManifest::new(
         &tricky_string(r),
         &tricky_string(r),
         if r.f64() < 0.5 { "throughput" } else { "latency" },
     );
+    // half the manifests embed their certification env (the multi-env
+    // sessions PR); absent env must round-trip as None
+    if r.f64() < 0.5 {
+        fam.env = Some(random_env(r));
+    }
     for i in 0..r.below(6) {
         let n_layers = 1 + r.below(4);
         let profile: Vec<(usize, usize)> =
@@ -645,6 +716,99 @@ fn prop_family_manifest_json_roundtrip_identity() {
             if &text != f {
                 return Err("text roundtrip mismatch".into());
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_per_env_solve_keys_isolate_envs_and_resume() {
+    // Engine-free half of the retarget acceptance: the per-env solve
+    // checkpoint scheme (env_fingerprint folded into solve_key AND
+    // solve_fingerprint, driven through the real StageStore + profile
+    // codecs) must (a) resume an env's own solve, (b) never hand one
+    // env's certification to another, (c) let both coexist in one
+    // directory — the exact mechanics CompressionSession::retarget
+    // and emit_families rely on.
+    Prop::new(30).check_msg(
+        "per-env solve artifacts: same env resumes, other env recomputes",
+        |r| {
+            let e1 = random_env(r);
+            let mut e2 = random_env(r);
+            if e1 == e2 {
+                e2 = e2.with_batch_shape(7, 9999);
+            }
+            let stage_fp = format!("{:016x}", r.next_u64());
+            let target = 1.0 + r.f64() * 9.0;
+            let profile: Vec<usize> = (0..1 + r.below(8)).map(|_| r.below(5)).collect();
+            (e1, e2, stage_fp, target, profile)
+        },
+        |(e1, e2, stage_fp, target, profile)| {
+            use ziplm::session::store::{load_profile, save_profile};
+            let (f1, f2) = (env_fingerprint(e1), env_fingerprint(e2));
+            if env_fingerprint(e1) != f1 {
+                return Err("env fingerprint unstable".into());
+            }
+            if f1 == f2 {
+                return Err("distinct envs share a fingerprint".into());
+            }
+            if solve_key(0, &f1, *target) == solve_key(0, &f2, *target) {
+                return Err("distinct envs share a solve key".into());
+            }
+            let (sf1, sf2) = (solve_fingerprint(stage_fp, &f1), solve_fingerprint(stage_fp, &f2));
+            let dir = std::env::temp_dir().join(format!("ziplm_prop_env_{stage_fp}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            // env1 solves and checkpoints
+            let store = StageStore::new(Some(dir.clone()));
+            let (p1, loaded1) = store
+                .load_or_compute(
+                    &solve_key(0, &f1, *target),
+                    |p| load_profile(p, &sf1, *target),
+                    |p, v: &(Vec<usize>, f64)| save_profile(p, &sf1, *target, &v.0, v.1),
+                    || Ok((profile.clone(), 0.5)),
+                )
+                .map_err(|e| e.to_string())?;
+            if loaded1 || &p1.0 != profile {
+                return Err("first solve did not compute".into());
+            }
+            // a re-opened store resumes env1's solve without computing
+            let store2 = StageStore::new(Some(dir.clone()));
+            let (p2, loaded2) = store2
+                .load_or_compute(
+                    &solve_key(0, &f1, *target),
+                    |p| load_profile(p, &sf1, *target),
+                    |p, v: &(Vec<usize>, f64)| save_profile(p, &sf1, *target, &v.0, v.1),
+                    || Ok((vec![usize::MAX], f64::NAN)),
+                )
+                .map_err(|e| e.to_string())?;
+            if !loaded2 || &p2.0 != profile {
+                return Err("env1 resume failed to load its own solve".into());
+            }
+            // env2 over the same directory must compute afresh
+            let other: Vec<usize> = profile.iter().map(|&x| x + 1).collect();
+            let (p3, loaded3) = store2
+                .load_or_compute(
+                    &solve_key(0, &f2, *target),
+                    |p| load_profile(p, &sf2, *target),
+                    |p, v: &(Vec<usize>, f64)| save_profile(p, &sf2, *target, &v.0, v.1),
+                    || Ok((other.clone(), 1.5)),
+                )
+                .map_err(|e| e.to_string())?;
+            if loaded3 || p3.0 != other {
+                return Err("env2 cross-loaded env1's certification".into());
+            }
+            if store2.counters() != (1, 1) {
+                return Err(format!("counters {:?} != (1, 1)", store2.counters()));
+            }
+            // even at the same path, the fingerprint alone gates
+            let env1_path = dir.join(solve_key(0, &f1, *target));
+            if load_profile(&env1_path, &sf2, *target).is_some() {
+                return Err("env2 fingerprint accepted env1's artifact".into());
+            }
+            if load_profile(&env1_path, &sf1, *target).is_none() {
+                return Err("env1 fingerprint rejected its own artifact".into());
+            }
+            let _ = std::fs::remove_dir_all(&dir);
             Ok(())
         },
     );
