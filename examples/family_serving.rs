@@ -1,15 +1,22 @@
 //! Family serving: produce a ZipLM model family with gradual pruning,
-//! then serve the whole family behind ONE SLA-aware coordinator.
+//! then serve the whole family behind ONE SLA-aware coordinator at the
+//! shape buckets it was certified under (DESIGN.md §6 and §9).
 //!
 //!   make artifacts && cargo run --release --example family_serving
 //!
 //! The run: (1) quick-train a dense teacher, (2) gradual-prune it to
 //! two speedup targets — one run, a whole certified family (paper
-//! §3.2, App. F), (3) record the family manifest, (4) start the family
+//! §3.2, App. F), (3) record the family manifest, including the
+//! shape-bucket ladder certification priced, (4) start the family
 //! coordinator and fire a mixed workload of best-effort,
-//! latency-bound, and min-speedup requests at it, (5) print per-class
-//! p50/p99 latency, SLA-hit rate, and the compile-cache counters that
-//! show every shared graph was compiled exactly once.
+//! latency-bound, and min-speedup requests at it — compatible requests
+//! coalesce ACROSS SLA classes into one shaped batch, and each
+//! (member, bucket) pair lazily warms a shape-specialized executable
+//! (generic fallback while cold), (5) print per-class p50/p99 latency
+//! and SLA-hit rate, then the §9 deliverable: REALIZED per-bucket
+//! execution latency next to the CERTIFIED estimate, plus the
+//! compile-cache counters (one build for the shared masked graph, one
+//! per warmed (member, bucket) specialization).
 
 use std::path::Path;
 use std::time::Duration;
@@ -43,10 +50,15 @@ fn main() -> Result<()> {
     println!("dense teacher: dev acc {:.3}", dense_ev.metric);
 
     // 2. inference environment: ONE value prices the SPDY search AND
-    //    the router's admission estimates — they cannot diverge
-    let env = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?;
+    //    the router's admission estimates — they cannot diverge. The
+    //    measured block artifacts' static shape anchors the serving
+    //    bucket ladder the manifest will record.
+    let (eb, es) = latency::regime_shape(&engine, model, "throughput")?;
+    let env = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?
+        .with_batch_shape(eb, es);
     let dense_ms = env.dense_time(minfo.n_layers) * 1e3;
     println!("dense batched fwd estimate: {dense_ms:.2} ms");
+    println!("serving bucket ladder: {:?}", env.bucket_ladder());
 
     // 3. gradual prune → a 3-member family (dense + 1.5x + 3x)
     let targets = [1.5, 3.0];
@@ -72,9 +84,11 @@ fn main() -> Result<()> {
         );
     }
 
-    // 4. record the family manifest (what `ziplm serve-family` loads)
+    // 4. record the family manifest (what `ziplm serve-family` loads);
+    //    it embeds BOTH the certification env and the bucket ladder
     let fam_dir = Path::new("runs").join(format!("family_{model}_{task}"));
     let fam = sess.emit_family(&teacher, &stages, &fam_dir)?;
+    assert_eq!(fam.buckets, env.bucket_ladder(), "manifest records the certified ladder");
     let members: Vec<(String, ModelState)> = fam
         .load_states(&fam_dir)?
         .into_iter()
@@ -83,13 +97,19 @@ fn main() -> Result<()> {
     drop(sess);
     drop(engine); // the coordinator worker owns its own engine
 
-    // 5. serve the family: one front end, per-member queues, SLA routing
+    // 5. serve the family: one front end, per-member queues, SLA
+    //    routing, cross-SLA coalescing, and lazy shape-specialized
+    //    executables at the manifest's buckets (generic fallback while
+    //    a (member, bucket) pair is still cold — the batch that
+    //    triggers a warm-up never pays the compile)
     let handle = famserve::start(
         famserve::FamilyCfg {
             artifacts: "artifacts".into(),
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             pressure: 64,
+            buckets: famserve::BucketLadder::new(fam.buckets.clone()),
+            specialized: None,
         },
         members,
         &env,
@@ -102,8 +122,8 @@ fn main() -> Result<()> {
     let stats = handle.shutdown()?;
 
     println!(
-        "\nper-class serving report ({} requests, {} batches):",
-        stats.requests, stats.batches
+        "\nper-class serving report ({} requests, {} batches, {} coalesced):",
+        stats.requests, stats.batches, stats.coalesced_batches
     );
     for r in famserve::summarize(&rows) {
         println!(
@@ -114,12 +134,51 @@ fn main() -> Result<()> {
             r.p99.as_secs_f64() * 1e3,
             r.hit_rate * 100.0
         );
+        for bk in &r.per_bucket {
+            println!(
+                "      bucket {}x{}: n={:<3} p50={:>7.1}ms p99={:>7.1}ms",
+                bk.batch,
+                bk.seq,
+                bk.n,
+                bk.p50.as_secs_f64() * 1e3,
+                bk.p99.as_secs_f64() * 1e3
+            );
+        }
+    }
+    // realized vs certified: the certify-vs-realize gap, per bucket
+    println!("\nrealized vs certified (worker-side execution time):");
+    for bkt in &stats.per_bucket {
+        println!(
+            "  {:>6} @ {}x{}{}: batches={:<3} realized p50={:>6.1}ms certified={:>6.1}ms",
+            bkt.member,
+            bkt.batch,
+            bkt.seq,
+            if bkt.specialized { " (specialized)" } else { " (generic)" },
+            bkt.batches,
+            bkt.realized_p50.as_secs_f64() * 1e3,
+            bkt.certified.as_secs_f64() * 1e3
+        );
     }
     println!("per-member requests: {:?}", stats.per_member);
     println!(
-        "compiled executables: {} build(s), {} cache hit(s) — one compile for the whole family",
+        "compiled executables: {} build(s), {} cache hit(s) — one for the shared masked graph \
+         plus one per warmed (member, bucket) specialization",
         stats.cache_builds, stats.cache_hits
     );
-    assert!(stats.cache_builds <= 1, "family members must share the compiled graph");
+    assert!(stats.cache_builds >= 1, "the shared graph must compile");
+    // generic graph: ONE build however many members; specializations
+    // add at most one build per (member, bucket) cell that warmed up
+    let spec_cells = stats
+        .per_bucket
+        .iter()
+        .filter(|r| r.specialized)
+        .map(|r| (r.member.clone(), r.batch, r.seq))
+        .collect::<std::collections::HashSet<_>>()
+        .len();
+    assert!(
+        stats.cache_builds <= 1 + stats.per_member.len() * fam.buckets.len().max(spec_cells),
+        "unexpected compile count: {} builds",
+        stats.cache_builds
+    );
     Ok(())
 }

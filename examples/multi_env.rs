@@ -45,11 +45,16 @@ fn main() -> Result<()> {
     trainer.train(&mut teacher, &ds, &tcfg)?;
 
     // 2. two inference environments, one real and one analytic (the
-    //    same constructor the `multienv` experiment driver uses)
-    let env_cpu = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?;
+    //    same constructor the `multienv` experiment driver uses). The
+    //    measured env anchors its serving bucket at the block
+    //    artifacts' shape; the analytic env carries a full seq sweep,
+    //    so its family records a multi-bucket ladder (DESIGN.md §9)
+    let (eb, es) = latency::regime_shape(&engine, model, "throughput")?;
+    let env_cpu = InferenceEnv::measured(latency::measure_cpu(&engine, model, "throughput", 10)?)?
+        .with_batch_shape(eb, es);
     let env_gpu = ziplm::exp::analytic_gpu_env(&minfo, Regime::Throughput);
-    println!("env A: {}", env_cpu.describe());
-    println!("env B: {}", env_gpu.describe());
+    println!("env A: {} (buckets {:?})", env_cpu.describe(), env_cpu.bucket_ladder());
+    println!("env B: {} (buckets {:?})", env_gpu.describe(), env_gpu.bucket_ladder());
 
     // 3. ONE session, ONE capture, N families
     let targets = [1.5, 3.0];
@@ -113,6 +118,8 @@ fn main() -> Result<()> {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             pressure: 64,
+            buckets: famserve::BucketLadder::new(fam.buckets.clone()),
+            specialized: None,
         },
         members,
         &served_env,

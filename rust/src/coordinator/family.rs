@@ -1,5 +1,6 @@
 //! Model-family serving: one SLA-aware front end over a whole ZipLM
-//! family (paper §3.2, App. F; DESIGN.md §6).
+//! family (paper §3.2, App. F; DESIGN.md §6 and, for the
+//! realized-speedup serving path, §9).
 //!
 //! ZipLM's gradual run emits a *family* of checkpoints — dense plus
 //! one member per speedup target, each certified against a latency
@@ -25,10 +26,46 @@
 //!   for the whole family — build/hit counts come back in
 //!   [`FamilyStats`].
 //!
-//! Routing is a pure function ([`route`]) over [`MemberRoute`] data so
-//! the policy is unit-testable without artifacts or PJRT.
+//! Two mechanisms close the certify-vs-realize gap (DESIGN.md §9):
+//!
+//! * **Shape-specialized executables.** [`FamilyCfg::buckets`] carries
+//!   a [`BucketLadder`] of `(batch, padded seq)` serving shapes. Each
+//!   executed batch is assigned the smallest covering bucket, and the
+//!   worker lazily compiles a per-(member, bucket) specialized export
+//!   (gathered weights, materialized shapes — the same files
+//!   `aot.py --specialize` writes for Table 8) behind a
+//!   [`crate::runtime::ArtifactKey`] in the shared compile cache. The
+//!   FIRST batch that hits a cold (member, bucket) pair is served by
+//!   the generic masked executable and the specialization compiles
+//!   after its replies go out — the triggering batch never pays the
+//!   compile, and later-queued requests absorb at most one compile per
+//!   (member, bucket) pair (the engine-owning worker is
+//!   single-threaded by the PJRT `Send` constraint, DESIGN.md §4, so
+//!   warm-up cannot move off-thread). A pair whose export file is
+//!   absent is re-probed with one cheap `stat` per batch — exports
+//!   generated while serving are picked up — and a pair whose export
+//!   fails to compile or execute (e.g. stale against the member's
+//!   current masks) is quarantined: that shape serves generic from
+//!   then on instead of killing the worker. Every later batch at a
+//!   warm shape runs the specialized executable at the speed the
+//!   pruner certified.
+//! * **Cross-SLA batch coalescing.** [`route_batch`] — pure, like
+//!   [`route`] — merges the oldest queued requests ACROSS SLA classes
+//!   into one shaped batch when a single member's admission estimate
+//!   still meets every merged request's deadline and speedup floor; a
+//!   merge that would break any constituent is refused and the worker
+//!   falls back to the per-member batch.
+//!
+//! [`FamilyStats::per_bucket`] reports the *realized* per-bucket
+//! execution p50/p99 next to the env's certified estimate, so the
+//! certify-vs-realize gap is a number the `family` experiment and
+//! `examples/family_serving.rs` print instead of a caveat.
+//!
+//! Routing stays pure-function territory ([`route`], [`route_batch`],
+//! [`aggregate_buckets`]) over [`MemberRoute`]/[`BucketSample`] data so
+//! every policy is unit-testable without artifacts or PJRT.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -38,8 +75,8 @@ use anyhow::{anyhow, Result};
 
 use crate::env::{CostModel, InferenceEnv};
 use crate::eval::mask_literals;
-use crate::models::ModelState;
-use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine};
+use crate::models::{gather_specialized, ModelState};
+use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, ArtifactKey, Engine};
 
 /// Per-request service-level agreement. All bounds are optional; an
 /// absent bound never excludes a member.
@@ -55,7 +92,7 @@ pub struct Sla {
 
 /// A queued family request (internal; built by [`FamilyHandle::submit`]).
 pub struct FamilyRequest {
-    /// token ids (padded to the graph's seq_len by the worker)
+    /// token ids (padded to the executed shape by the worker)
     pub ids: Vec<i32>,
     /// optional routing constraints
     pub sla: Option<Sla>,
@@ -80,7 +117,79 @@ pub struct FamilyReply {
     pub batch_size: usize,
     /// end-to-end latency (submit → reply)
     pub latency: Duration,
+    /// `(batch, seq)` shape the batch executed at (the graph anchor
+    /// when no bucket applied)
+    pub bucket: (usize, usize),
+    /// whether a shape-specialized executable served the batch
+    pub specialized: bool,
 }
+
+// ------------------------------------------------------------- buckets
+
+/// Ladder of serving shape buckets `(batch, padded seq)` (DESIGN.md §9).
+///
+/// Buckets are the shapes specialized executables are lowered at; a
+/// batch of `n` requests with max raw length `len` executes at the
+/// smallest bucket covering `(n, len)` — smallest padded seq first,
+/// then smallest batch, so padding waste is minimized. An empty ladder
+/// means generic-only serving (every batch pads to the graph anchor),
+/// which is exactly the pre-§9 coordinator.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BucketLadder {
+    buckets: Vec<(usize, usize)>,
+}
+
+impl BucketLadder {
+    /// Build a ladder: zero-dimension buckets are dropped, the rest
+    /// sorted ascending by `(seq, batch)` and deduplicated.
+    pub fn new(mut buckets: Vec<(usize, usize)>) -> BucketLadder {
+        buckets.retain(|&(b, s)| b > 0 && s > 0);
+        buckets.sort_by_key(|&(b, s)| (s, b));
+        buckets.dedup();
+        BucketLadder { buckets }
+    }
+
+    /// The sorted bucket list.
+    pub fn buckets(&self) -> &[(usize, usize)] {
+        &self.buckets
+    }
+
+    /// Whether the ladder has no buckets (generic-only serving).
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Smallest bucket covering a batch of `batch` requests whose
+    /// longest row is `seq` tokens; `None` when nothing covers it (the
+    /// batch then pads to the generic graph shape).
+    pub fn bucket_for(&self, batch: usize, seq: usize) -> Option<(usize, usize)> {
+        self.buckets.iter().copied().find(|&(b, s)| b >= batch && s >= seq)
+    }
+}
+
+/// Artifact id of one member's shape-specialized export — the same
+/// `spec_<model>_<task>_<tag>` naming `aot.py --specialize` and
+/// `exp::measure_specialized` use, so Table 8's exports and the
+/// coordinator's are the same files.
+pub fn spec_artifact(model: &str, task: &str, tag: &str) -> String {
+    format!("spec_{model}_{task}_{tag}")
+}
+
+/// Compile-cache key of a member's specialized executable at `bucket`:
+/// member tag in the artifact id, bucket in the shape half, so distinct
+/// (member, bucket) pairs can never collide with each other or with the
+/// shared generic key (DESIGN.md §9).
+pub fn spec_key(model: &str, task: &str, tag: &str, bucket: (usize, usize)) -> ArtifactKey {
+    ArtifactKey::new(spec_artifact(model, task, tag), bucket.0, bucket.1)
+}
+
+/// File name (inside [`FamilyCfg::specialized`]) holding the HLO text
+/// for `key` — one materialized graph per (member, bucket).
+pub fn spec_file(key: &ArtifactKey) -> String {
+    format!("{}_b{}s{}.hlo.txt", key.artifact, key.batch, key.seq)
+}
+
+// ------------------------------------------------------------- config
 
 /// Family-coordinator configuration.
 pub struct FamilyCfg {
@@ -93,20 +202,46 @@ pub struct FamilyCfg {
     /// total backlog (requests queued across all members) at which
     /// routing falls back to the fastest member; 0 disables
     pub pressure: usize,
+    /// serving shape-bucket ladder (normally the ladder the family was
+    /// certified under, [`crate::models::family::FamilyManifest::buckets`]);
+    /// empty = generic-only serving
+    pub buckets: BucketLadder,
+    /// directory of shape-specialized HLO exports ([`spec_file`] names);
+    /// `None` = `<artifacts>/specialized`
+    pub specialized: Option<PathBuf>,
 }
 
 /// Routing view of one family member: pure data (priced from the
-/// family's [`InferenceEnv`] at startup), so the routing policy can be
-/// exercised without PJRT.
+/// family's [`InferenceEnv`] at startup), so the routing policies can
+/// be exercised without PJRT.
 #[derive(Clone, Debug)]
 pub struct MemberRoute {
     /// member tag (diagnostics)
     pub tag: String,
     /// certified speedup from the latency table (dense = 1.0)
     pub est_speedup: f64,
-    /// latency-table estimate of one batched forward of this member
+    /// latency-table estimate of one batched forward of this member at
+    /// the anchor shape
     pub est_batch_time: f64,
+    /// per-bucket estimates of one batched forward, ladder order
+    /// (priced by [`InferenceEnv::batch_time`] at startup); empty when
+    /// serving generic-only
+    pub bucket_times: Vec<((usize, usize), f64)>,
 }
+
+impl MemberRoute {
+    /// Admission estimate of one batched forward at `bucket`
+    /// (`None`, or a bucket the ladder never priced, falls back to the
+    /// anchor estimate).
+    pub fn time_at(&self, bucket: Option<(usize, usize)>) -> f64 {
+        bucket
+            .and_then(|bk| self.bucket_times.iter().find(|&&(b, _)| b == bk))
+            .map(|&(_, t)| t)
+            .unwrap_or(self.est_batch_time)
+    }
+}
+
+// ------------------------------------------------------------- routing
 
 /// Pick the member index for a request.
 ///
@@ -165,6 +300,178 @@ pub fn route(
     fastest
 }
 
+/// One queued request as [`route_batch`] sees it: its SLA (if any),
+/// its raw token length (pre-padding, for bucket selection), and how
+/// long it has already waited in a queue (spent deadline budget).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchReq<'a> {
+    /// the request's routing constraints
+    pub sla: Option<&'a Sla>,
+    /// raw token-id length
+    pub len: usize,
+    /// time already spent queued (0 at submit-time routing)
+    pub waited: Duration,
+}
+
+/// Decision of [`route_batch`]: serve the merged batch on `member` at
+/// `bucket` (`None` = the generic graph shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchRoute {
+    /// index into the member list (ascending-speedup order)
+    pub member: usize,
+    /// executing shape bucket, when the ladder covers the batch
+    pub bucket: Option<(usize, usize)>,
+}
+
+/// Coalesce `reqs` — the oldest queued requests, possibly spanning
+/// several SLA classes — into ONE shaped batch on one member, if any
+/// member can honor every merged request (DESIGN.md §9).
+///
+/// `depths` are the queue lengths EXCLUDING the candidate requests
+/// (the caller is about to pop them), so `pending` prices only the
+/// work that genuinely runs before this batch. The decision rule:
+///
+/// 1. one request degenerates EXACTLY to [`route`] (same member, plus
+///    the bucket its shape selects) — never refused;
+/// 2. under pressure the merge goes to the fastest member wholesale;
+/// 3. otherwise the most accurate member satisfying EVERY request is
+///    chosen: each `min_speedup` floor must hold, and the member's
+///    bucket-priced execution estimate plus pending backlog must fit
+///    inside each request's REMAINING deadline (`max_latency` minus
+///    time already waited);
+/// 4. no such member → `None`: the merge is refused and the caller
+///    falls back to per-member batches. Refusal is the correctness
+///    half of the policy — a merge must never convert an admitted
+///    request into a deadline miss.
+pub fn route_batch(
+    reqs: &[BatchReq],
+    members: &[MemberRoute],
+    depths: &[usize],
+    ladder: &BucketLadder,
+    max_batch: usize,
+    pressure: usize,
+) -> Option<BatchRoute> {
+    debug_assert_eq!(members.len(), depths.len());
+    if reqs.is_empty() || reqs.len() > max_batch.max(1) {
+        return None;
+    }
+    let max_len = reqs.iter().map(|r| r.len).max().unwrap_or(0);
+    let bucket = ladder.bucket_for(reqs.len(), max_len);
+    if reqs.len() == 1 {
+        let member = route(reqs[0].sla, members, depths, max_batch, pressure);
+        return Some(BatchRoute { member, bucket });
+    }
+    let fastest = members.len() - 1;
+    // backlog includes the candidates themselves (depths exclude them)
+    if pressure > 0 && depths.iter().sum::<usize>() + reqs.len() >= pressure {
+        return Some(BatchRoute { member: fastest, bucket });
+    }
+    let b = max_batch.max(1);
+    let pending: f64 = members
+        .iter()
+        .zip(depths)
+        .map(|(m, &d)| d.div_ceil(b) as f64 * m.est_batch_time)
+        .sum();
+    'member: for (i, m) in members.iter().enumerate() {
+        let exec = m.time_at(bucket);
+        for r in reqs {
+            let Some(sla) = r.sla else { continue };
+            if let Some(min_s) = sla.min_speedup {
+                if m.est_speedup + 1e-9 < min_s {
+                    continue 'member;
+                }
+            }
+            if let Some(max_l) = sla.max_latency {
+                let remaining = max_l.saturating_sub(r.waited).as_secs_f64();
+                if pending + exec > remaining {
+                    continue 'member;
+                }
+            }
+        }
+        return Some(BatchRoute { member: i, bucket });
+    }
+    None
+}
+
+// --------------------------------------------------------------- stats
+
+/// Realized-vs-certified serving record for one (member, bucket,
+/// specialized?) cell (DESIGN.md §9 "certified vs realized").
+#[derive(Clone, Debug)]
+pub struct BucketStats {
+    /// member tag
+    pub member: String,
+    /// executed batch dimension
+    pub batch: usize,
+    /// executed padded seq
+    pub seq: usize,
+    /// whether a shape-specialized executable served these batches
+    pub specialized: bool,
+    /// executed batches in this cell
+    pub batches: usize,
+    /// real requests served in this cell
+    pub requests: usize,
+    /// median realized execution time of one batch
+    pub realized_p50: Duration,
+    /// 99th-percentile realized execution time
+    pub realized_p99: Duration,
+    /// the env's certified estimate of one batched forward at this
+    /// shape — what admission promised; `realized_p50 / certified` is
+    /// the certify-vs-realize gap
+    pub certified: Duration,
+}
+
+/// One executed batch, as the worker records it (input to
+/// [`aggregate_buckets`]).
+#[derive(Clone, Debug)]
+pub struct BucketSample {
+    /// member tag that served the batch
+    pub member: String,
+    /// executed batch dimension
+    pub batch: usize,
+    /// executed padded seq
+    pub seq: usize,
+    /// whether the specialized executable ran
+    pub specialized: bool,
+    /// measured execution time
+    pub exec: Duration,
+    /// real requests in the batch
+    pub requests: usize,
+    /// certified estimate of one batched forward at this shape (secs)
+    pub certified: f64,
+}
+
+/// Fold per-batch [`BucketSample`]s into per-(member, bucket,
+/// specialized?) [`BucketStats`] rows, sorted deterministically. Pure,
+/// so the realized-vs-certified reporting is testable without PJRT.
+pub fn aggregate_buckets(samples: &[BucketSample]) -> Vec<BucketStats> {
+    // (member, batch, seq, specialized) → (exec secs, requests, certified)
+    let mut by = BTreeMap::new();
+    for s in samples {
+        let e = by
+            .entry((s.member.clone(), s.batch, s.seq, s.specialized))
+            .or_insert((Vec::new(), 0, s.certified));
+        e.0.push(s.exec.as_secs_f64());
+        e.1 += s.requests;
+    }
+    by.into_iter()
+        .map(|((member, batch, seq, specialized), (mut execs, requests, certified))| {
+            execs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            BucketStats {
+                member,
+                batch,
+                seq,
+                specialized,
+                batches: execs.len(),
+                requests,
+                realized_p50: Duration::from_secs_f64(percentile(&execs, 0.50)),
+                realized_p99: Duration::from_secs_f64(percentile(&execs, 0.99)),
+                certified: Duration::from_secs_f64(certified),
+            }
+        })
+        .collect()
+}
+
 /// Aggregate serving statistics returned by [`FamilyHandle::shutdown`].
 #[derive(Clone, Debug, Default)]
 pub struct FamilyStats {
@@ -178,8 +485,13 @@ pub struct FamilyStats {
     pub per_member: Vec<(String, usize)>,
     /// requests rerouted to the fastest member by queue pressure
     pub pressure_reroutes: usize,
-    /// executable-cache builds — at most one per shared graph,
-    /// however many members the family has
+    /// batches that merged requests from ≥ 2 member queues
+    /// ([`route_batch`] coalescing)
+    pub coalesced_batches: usize,
+    /// realized-vs-certified per-bucket serving rows (DESIGN.md §9)
+    pub per_bucket: Vec<BucketStats>,
+    /// executable-cache builds: one for the shared masked graph plus
+    /// one per (member, bucket) specialization that warmed up
     pub cache_builds: usize,
     /// executable-cache hits
     pub cache_hits: usize,
@@ -232,8 +544,10 @@ struct MemberSpec {
 /// are read from the checkpoint masks and priced with `env` — the same
 /// [`InferenceEnv`] the pruning session certified the members against,
 /// so admission estimates cannot silently diverge from certification.
-/// Members are served in ascending-speedup order (index 0 = most
-/// accurate).
+/// Each [`FamilyCfg::buckets`] bucket is priced per member through
+/// [`InferenceEnv::batch_time`] (seq sweep + batch scaling), giving
+/// [`route_batch`] its shaped admission estimates. Members are served
+/// in ascending-speedup order (index 0 = most accurate).
 pub fn start(
     cfg: FamilyCfg,
     members: Vec<(String, ModelState)>,
@@ -257,6 +571,12 @@ pub fn start(
             tag: tag.clone(),
             est_speedup: env.speedup(&profile),
             est_batch_time: env.model_time(&profile),
+            bucket_times: cfg
+                .buckets
+                .buckets()
+                .iter()
+                .map(|&(b, s)| ((b, s), env.batch_time(&profile, b, s)))
+                .collect(),
         };
         specs.push(MemberSpec { tag, state, route });
     }
@@ -277,17 +597,17 @@ fn serve_family_loop(
     let engine = Engine::open(&cfg.artifacts)?;
     let (model, task) = (specs[0].state.model.clone(), specs[0].state.task.clone());
     let minfo = engine.manifest.model(&model).clone();
+    let tinfo = engine.manifest.task(&model, &task).clone();
     let b = engine.manifest.batch_eval.min(cfg.max_batch.max(1));
     let graph_b = engine.manifest.batch_eval;
     let art = format!("{model}__{task}__fwd");
-    let n_out: usize = {
-        let a = engine
-            .manifest
-            .artifacts
-            .get(&art)
-            .ok_or_else(|| anyhow!("missing fwd artifact {art}"))?;
-        a.outputs[0].shape.iter().product::<usize>() / graph_b
-    };
+    engine
+        .manifest
+        .artifacts
+        .get(&art)
+        .ok_or_else(|| anyhow!("missing fwd artifact {art}"))?;
+    let ladder = cfg.buckets.clone();
+    let spec_dir = cfg.specialized.clone().unwrap_or_else(|| cfg.artifacts.join("specialized"));
     // Per-member device literals, built once.
     let mut lits = Vec::with_capacity(specs.len());
     for s in &specs {
@@ -299,6 +619,18 @@ fn serve_family_loop(
     let mut queues: Vec<VecDeque<FamilyRequest>> = specs.iter().map(|_| VecDeque::new()).collect();
     let mut served = vec![0usize; specs.len()];
     let mut stats = FamilyStats::default();
+    let mut samples: Vec<BucketSample> = Vec::new();
+    // shape-specialization warm-up state: per-member gathered params
+    // (built with the first successful compile) and the quarantined
+    // (member, bucket) pairs whose export failed to compile or execute
+    // (stale against the member's masks, truncated file, …) — those
+    // serve generic forever instead of retrying or killing the worker.
+    // Warmth itself is probed through the compile cache
+    // ([`Engine::cached_keyed`]), and a pair with NO export file is
+    // simply not warm yet: the file is re-stat'ed per batch, so
+    // exports generated while serving get picked up.
+    let mut spec_lits: Vec<Option<xla::Literal>> = specs.iter().map(|_| None).collect();
+    let mut bad: HashSet<(usize, (usize, usize))> = HashSet::new();
     let mut open = true;
 
     fn enqueue(
@@ -317,6 +649,32 @@ fn serve_family_loop(
         }
         queues[i].push_back(req);
     }
+
+    // generic fallback: pad to the static graph batch and execute with
+    // the member's params + masks through the SHARED fwd executable
+    let run_generic = |member: usize, batch: &[FamilyRequest]| -> Result<Vec<f32>> {
+        let ids = super::pad_ids(batch.iter().map(|r| r.ids.as_slice()), graph_b, minfo.seq_len);
+        let (params, hm, fm) = &lits[member];
+        let exe = engine.executable(&art)?;
+        let out = Engine::run_exe(
+            &exe,
+            &[params.clone(), lit_i32(&[graph_b, minfo.seq_len], &ids)?, hm.clone(), fm.clone()],
+        )?;
+        lit_to_f32(&out[0])
+    };
+
+    // specialized path: the member's gathered weights + the bucket's
+    // materialized graph (masks are baked in, so only two inputs)
+    let run_specialized = |key: &ArtifactKey,
+                           params: &xla::Literal,
+                           batch: &[FamilyRequest],
+                           bk: (usize, usize)|
+     -> Result<Vec<f32>> {
+        let exe = engine.executable_file_keyed(key, &spec_dir.join(spec_file(key)))?;
+        let ids = super::pad_ids(batch.iter().map(|r| r.ids.as_slice()), bk.0, bk.1);
+        let out = Engine::run_exe(&exe, &[params.clone(), lit_i32(&[bk.0, bk.1], &ids)?])?;
+        lit_to_f32(&out[0])
+    };
 
     // Serve until the channel closes AND every queue is flushed.
     while open || queues.iter().any(|q| !q.is_empty()) {
@@ -368,45 +726,188 @@ fn serve_family_loop(
                 }
             }
         }
-        let take = queues[mi].len().min(b);
-        let batch: Vec<FamilyRequest> = queues[mi].drain(..take).collect();
-        // pad to the static graph batch and execute with this member's
-        // params/masks; the compiled fwd executable is shared by every
-        // member (one cache key), so only the first batch compiles
+        // ---- cross-SLA coalescing: offer the globally oldest ≤ b
+        // requests (possibly spanning several member queues) to
+        // route_batch; a refused merge falls back to member mi's own
+        // batch, exactly the pre-coalescing behavior
+        let mut cursors = vec![0usize; queues.len()];
+        let mut picked: Vec<(usize, usize)> = Vec::new();
+        while picked.len() < b {
+            let mut best: Option<(usize, Instant)> = None;
+            for (qi, q) in queues.iter().enumerate() {
+                if let Some(r) = q.get(cursors[qi]) {
+                    if best.is_none_or(|(_, t)| r.submitted < t) {
+                        best = Some((qi, r.submitted));
+                    }
+                }
+            }
+            let Some((qi, _)) = best else { break };
+            picked.push((qi, cursors[qi]));
+            cursors[qi] += 1;
+        }
+        let now = Instant::now();
+        let breqs: Vec<BatchReq> = picked
+            .iter()
+            .map(|&(qi, k)| BatchReq {
+                sla: queues[qi][k].sla.as_ref(),
+                len: queues[qi][k].ids.len(),
+                waited: now.duration_since(queues[qi][k].submitted),
+            })
+            .collect();
+        let depths_excl: Vec<usize> =
+            queues.iter().zip(&cursors).map(|(q, &c)| q.len() - c).collect();
+        let decision = route_batch(&breqs, &routes, &depths_excl, &ladder, b, cfg.pressure);
+        drop(breqs);
+        let (member, batch, bucket) = match decision {
+            Some(br) => {
+                let spanned: HashSet<usize> = picked.iter().map(|&(qi, _)| qi).collect();
+                if spanned.len() > 1 {
+                    stats.coalesced_batches += 1;
+                }
+                let mut drained: Vec<VecDeque<FamilyRequest>> = queues
+                    .iter_mut()
+                    .zip(&cursors)
+                    .map(|(q, &c)| q.drain(..c).collect())
+                    .collect();
+                let mut batch = Vec::with_capacity(picked.len());
+                for &(qi, _) in &picked {
+                    batch.push(drained[qi].pop_front().expect("picked request drained"));
+                }
+                (br.member, batch, br.bucket)
+            }
+            None => {
+                let take = queues[mi].len().min(b);
+                let batch: Vec<FamilyRequest> = queues[mi].drain(..take).collect();
+                let max_len = batch.iter().map(|r| r.ids.len()).max().unwrap_or(0);
+                (mi, batch, ladder.bucket_for(take, max_len))
+            }
+        };
+        // ---- execute: specialized when the (member, bucket) pair is
+        // warm (compiled + weights gathered), generic otherwise
+        // (cold-start fallback, DESIGN.md §9). A specialized run that
+        // FAILS — stale export vs the member's current masks, bad
+        // file — quarantines the pair and falls back to the generic
+        // graph for this and every later batch, rather than taking the
+        // whole worker (and every queued request) down with it.
         let t0 = Instant::now();
-        let ids =
-            super::pad_ids(batch.iter().map(|r| r.ids.as_slice()), graph_b, minfo.seq_len);
-        let (params, hm, fm) = &lits[mi];
-        let exe = engine.executable(&art)?;
-        let out = Engine::run_exe(
-            &exe,
-            &[params.clone(), lit_i32(&[graph_b, minfo.seq_len], &ids)?, hm.clone(), fm.clone()],
-        )?;
-        let logits = lit_to_f32(&out[0])?;
-        stats.busy_time += t0.elapsed();
+        let mut shape = (graph_b, minfo.seq_len);
+        let mut used_spec = false;
+        let mut logits: Option<Vec<f32>> = None;
+        if let Some(bk) = bucket {
+            let pair = (member, bk);
+            if !bad.contains(&pair) {
+                if let Some(params) = spec_lits[member].as_ref() {
+                    let key = spec_key(&model, &task, &specs[member].tag, bk);
+                    if engine.cached_keyed(&key) {
+                        match run_specialized(&key, params, &batch, bk) {
+                            Ok(l) => {
+                                shape = bk;
+                                used_spec = true;
+                                logits = Some(l);
+                            }
+                            Err(_) => {
+                                bad.insert(pair);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let logits = match logits {
+            Some(l) => l,
+            None => run_generic(member, &batch)?,
+        };
+        let exec_time = t0.elapsed();
+        stats.busy_time += exec_time;
         stats.batches += 1;
-        served[mi] += batch.len();
+        served[member] += batch.len();
+        samples.push(BucketSample {
+            member: specs[member].tag.clone(),
+            batch: shape.0,
+            seq: shape.1,
+            specialized: used_spec,
+            exec: exec_time,
+            requests: batch.len(),
+            certified: if used_spec {
+                routes[member].time_at(Some(shape))
+            } else {
+                routes[member].est_batch_time
+            },
+        });
+        // per-example output width comes from the EXECUTED shape, not
+        // the generic anchor: seq-dependent task outputs (span, lm)
+        // shrink with the bucket's padded seq, and slicing them with
+        // the anchor width would hand requests each other's rows
+        let out_w = logits.len() / shape.0.max(1);
         for (k, r) in batch.iter().enumerate() {
             stats.requests += 1;
             let _ = r.reply.send(FamilyReply {
-                logits: logits[k * n_out..(k + 1) * n_out].to_vec(),
-                member: specs[mi].tag.clone(),
-                member_speedup: specs[mi].route.est_speedup,
+                logits: logits[k * out_w..(k + 1) * out_w].to_vec(),
+                member: specs[member].tag.clone(),
+                member_speedup: specs[member].route.est_speedup,
                 queue_time: t0.duration_since(r.submitted),
                 batch_size: batch.len(),
                 latency: r.submitted.elapsed(),
+                bucket: shape,
+                specialized: used_spec,
             });
+        }
+        // ---- lazy warm-up AFTER the replies went out: the first hit
+        // on a cold (member, bucket) pair compiles its specialized
+        // executable (and gathers the member's packed weights) without
+        // adding a compile to the triggering batch's latency. A pair
+        // with no export file is left cold and re-stat'ed on its next
+        // hit (exports generated while serving get picked up, per
+        // [`Engine::executable_file_keyed`]'s contract); a compile
+        // failure quarantines the pair instead of retrying forever.
+        if let Some(bk) = bucket {
+            let pair = (member, bk);
+            if !used_spec && !bad.contains(&pair) {
+                let key = spec_key(&model, &task, &specs[member].tag, bk);
+                let path = spec_dir.join(spec_file(&key));
+                if !engine.cached_keyed(&key) && path.exists() {
+                    match engine.executable_file_keyed(&key, &path) {
+                        Ok(_) => {
+                            if spec_lits[member].is_none() {
+                                let (flat, _, _) =
+                                    gather_specialized(&specs[member].state, &minfo, &tinfo)?;
+                                spec_lits[member] = Some(lit_f32_shaped(&[flat.len()], &flat)?);
+                            }
+                        }
+                        Err(_) => {
+                            bad.insert(pair);
+                        }
+                    }
+                }
+            }
         }
     }
     let (builds, hits) = engine.cache_stats();
     stats.cache_builds = builds;
     stats.cache_hits = hits;
+    stats.per_bucket = aggregate_buckets(&samples);
     stats.per_member =
         specs.iter().zip(&served).map(|(s, &n)| (s.tag.clone(), n)).collect();
     Ok(stats)
 }
 
 // ------------------------------------------------------------ reporting
+
+/// Per-(class, bucket) latency line inside a [`ClassReport`]: how one
+/// workload class fared at one executed shape.
+#[derive(Clone, Debug)]
+pub struct ClassBucket {
+    /// executed batch dimension
+    pub batch: usize,
+    /// executed padded seq
+    pub seq: usize,
+    /// requests of the class served at this shape
+    pub n: usize,
+    /// median end-to-end latency at this shape
+    pub p50: Duration,
+    /// 99th-percentile end-to-end latency at this shape
+    pub p99: Duration,
+}
 
 /// Per-class latency/SLA report (client-side aggregation).
 #[derive(Clone, Debug)]
@@ -421,27 +922,63 @@ pub struct ClassReport {
     pub p99: Duration,
     /// fraction of requests whose latency met their SLA bound
     pub hit_rate: f64,
+    /// per-executed-shape breakdown (realized client-side latencies;
+    /// the worker-side twin is [`FamilyStats::per_bucket`])
+    pub per_bucket: Vec<ClassBucket>,
 }
 
-/// Aggregate `(class, latency, sla_hit)` rows into per-class reports,
-/// sorted by class name.
-pub fn summarize(rows: &[(String, Duration, bool)]) -> Vec<ClassReport> {
-    use std::collections::BTreeMap;
-    let mut by: BTreeMap<&str, (Vec<f64>, usize)> = BTreeMap::new();
-    for (class, lat, hit) in rows {
-        let e = by.entry(class.as_str()).or_default();
-        e.0.push(lat.as_secs_f64());
-        e.1 += usize::from(*hit);
+/// One served request's client-side row (input to [`summarize`]),
+/// normally built from a [`FamilyReply`].
+#[derive(Clone, Debug)]
+pub struct WorkRow {
+    /// workload-class label
+    pub class: String,
+    /// end-to-end latency
+    pub latency: Duration,
+    /// whether the request's SLA was honored
+    pub sla_hit: bool,
+    /// `(batch, seq)` shape the serving batch executed at
+    pub bucket: (usize, usize),
+}
+
+/// Aggregate per-request [`WorkRow`]s into per-class reports (sorted by
+/// class name), each with a per-bucket latency breakdown.
+pub fn summarize(rows: &[WorkRow]) -> Vec<ClassReport> {
+    let mut by: BTreeMap<&str, Vec<&WorkRow>> = BTreeMap::new();
+    for r in rows {
+        by.entry(r.class.as_str()).or_default().push(r);
     }
+    let pctiles = |lats: &mut Vec<f64>| -> (Duration, Duration) {
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            Duration::from_secs_f64(percentile(lats, 0.50)),
+            Duration::from_secs_f64(percentile(lats, 0.99)),
+        )
+    };
     by.into_iter()
-        .map(|(class, (mut lats, hits))| {
-            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        .map(|(class, rs)| {
+            let hits = rs.iter().filter(|r| r.sla_hit).count();
+            let mut lats: Vec<f64> = rs.iter().map(|r| r.latency.as_secs_f64()).collect();
+            let (p50, p99) = pctiles(&mut lats);
+            let mut buckets: BTreeMap<(usize, usize), Vec<f64>> = BTreeMap::new();
+            for r in &rs {
+                buckets.entry(r.bucket).or_default().push(r.latency.as_secs_f64());
+            }
+            let per_bucket = buckets
+                .into_iter()
+                .map(|((batch, seq), mut ls)| {
+                    let n = ls.len();
+                    let (p50, p99) = pctiles(&mut ls);
+                    ClassBucket { batch, seq, n, p50, p99 }
+                })
+                .collect();
             ClassReport {
                 class: class.to_string(),
-                n: lats.len(),
-                p50: Duration::from_secs_f64(percentile(&lats, 0.50)),
-                p99: Duration::from_secs_f64(percentile(&lats, 0.99)),
-                hit_rate: hits as f64 / lats.len().max(1) as f64,
+                n: rs.len(),
+                p50,
+                p99,
+                hit_rate: hits as f64 / rs.len().max(1) as f64,
+                per_bucket,
             }
         })
         .collect()
@@ -464,10 +1001,40 @@ mod tests {
     fn routes() -> Vec<MemberRoute> {
         // sorted ascending by speedup, as `start` guarantees
         vec![
-            MemberRoute { tag: "dense".into(), est_speedup: 1.0, est_batch_time: 80e-3 },
-            MemberRoute { tag: "2x".into(), est_speedup: 2.1, est_batch_time: 38e-3 },
-            MemberRoute { tag: "4x".into(), est_speedup: 4.3, est_batch_time: 19e-3 },
+            MemberRoute {
+                tag: "dense".into(),
+                est_speedup: 1.0,
+                est_batch_time: 80e-3,
+                bucket_times: Vec::new(),
+            },
+            MemberRoute {
+                tag: "2x".into(),
+                est_speedup: 2.1,
+                est_batch_time: 38e-3,
+                bucket_times: Vec::new(),
+            },
+            MemberRoute {
+                tag: "4x".into(),
+                est_speedup: 4.3,
+                est_batch_time: 19e-3,
+                bucket_times: Vec::new(),
+            },
         ]
+    }
+
+    /// The same family, priced over a two-bucket ladder: the short
+    /// bucket costs 30% of the anchor.
+    fn routes_with_buckets() -> (Vec<MemberRoute>, BucketLadder) {
+        let ladder = BucketLadder::new(vec![(8, 32), (8, 128)]);
+        let routes = routes()
+            .into_iter()
+            .map(|mut m| {
+                m.bucket_times =
+                    vec![((8, 32), m.est_batch_time * 0.3), ((8, 128), m.est_batch_time)];
+                m
+            })
+            .collect();
+        (routes, ladder)
     }
 
     fn sla(max_ms: Option<u64>, min_speedup: Option<f64>) -> Sla {
@@ -476,6 +1043,10 @@ mod tests {
             max_latency: max_ms.map(Duration::from_millis),
             min_speedup,
         }
+    }
+
+    fn breq(sla: Option<&Sla>, len: usize) -> BatchReq<'_> {
+        BatchReq { sla, len, waited: Duration::ZERO }
     }
 
     #[test]
@@ -539,33 +1110,291 @@ mod tests {
         assert_eq!(route(Some(&s), &routes(), &[0, 0, 0], 8, 0), 2);
     }
 
+    // ----------------------------------------------------- bucket ladder
+
     #[test]
-    fn summarize_percentiles_and_hit_rate() {
-        let ms = Duration::from_millis;
+    fn bucket_ladder_picks_smallest_cover() {
+        let l = BucketLadder::new(vec![(8, 128), (8, 32), (4, 32), (0, 16), (8, 0), (8, 32)]);
+        // zero dims dropped, sorted by (seq, batch), deduped
+        assert_eq!(l.buckets(), &[(4, 32), (8, 32), (8, 128)]);
+        assert_eq!(l.bucket_for(3, 20), Some((4, 32)));
+        assert_eq!(l.bucket_for(6, 20), Some((8, 32)));
+        assert_eq!(l.bucket_for(2, 60), Some((8, 128)));
+        // nothing covers: batch too big, or seq too long
+        assert_eq!(l.bucket_for(9, 20), None);
+        assert_eq!(l.bucket_for(1, 200), None);
+        assert!(BucketLadder::default().bucket_for(1, 1).is_none());
+        assert!(BucketLadder::default().is_empty());
+    }
+
+    #[test]
+    fn spec_keys_separate_members_and_buckets() {
+        let a = spec_key("m", "t", "2x", (8, 32));
+        let b = spec_key("m", "t", "2x", (8, 128));
+        let c = spec_key("m", "t", "4x", (8, 32));
+        assert_ne!(a.encode(), b.encode());
+        assert_ne!(a.encode(), c.encode());
+        // and never the shared generic key
+        assert_ne!(a.encode(), ArtifactKey::new("m__t__fwd", 8, 32).encode());
+        assert_eq!(spec_file(&a), "spec_m_t_2x_b8s32.hlo.txt");
+    }
+
+    // ------------------------------------------------------- route_batch
+
+    #[test]
+    fn route_batch_single_request_degenerates_to_route() {
+        let (routes, ladder) = routes_with_buckets();
+        let cases = [
+            (None, [0usize, 0, 0]),
+            (Some(sla(Some(100), None)), [0, 0, 0]),
+            (Some(sla(Some(200), None)), [16, 0, 0]),
+            (Some(sla(None, Some(4.0))), [0, 0, 0]),
+            (Some(sla(Some(5), None)), [0, 0, 0]), // unsatisfiable → fastest
+        ];
+        for (s, depths) in &cases {
+            let expect = route(s.as_ref(), &routes, depths, 8, 0);
+            let got = route_batch(&[breq(s.as_ref(), 24)], &routes, depths, &ladder, 8, 0)
+                .expect("single request is never refused");
+            assert_eq!(got.member, expect, "sla {s:?}");
+            assert_eq!(got.bucket, Some((8, 32)));
+        }
+        // pressure path degenerates too
+        let got =
+            route_batch(&[breq(None, 24)], &routes, &[12, 0, 0], &ladder, 8, 12).unwrap();
+        assert_eq!(got.member, 2);
+    }
+
+    #[test]
+    fn route_batch_coalesces_compatible_sla_classes() {
+        let (routes, ladder) = routes_with_buckets();
+        // latency-bound (30ms) + min-speedup (2.0) classes, short rows:
+        // bucket (8,32); dense fails the speedup floor, 2x fits both
+        // (11.4ms ≤ 30ms, 2.1 ≥ 2.0) → most accurate qualifier
+        let interactive = sla(Some(30), None);
+        let cheap = sla(None, Some(2.0));
+        let reqs = [breq(Some(&interactive), 24), breq(Some(&cheap), 30)];
+        let br = route_batch(&reqs, &routes, &[0, 0, 0], &ladder, 8, 0).expect("compatible");
+        assert_eq!(br, BatchRoute { member: 1, bucket: Some((8, 32)) });
+        // a long row in the merge moves the bucket up the ladder, and
+        // the anchor-priced 2x (38ms) still fits the 50ms bound
+        let relaxed = sla(Some(50), None);
+        let reqs = [breq(Some(&relaxed), 120), breq(Some(&cheap), 30)];
+        let br = route_batch(&reqs, &routes, &[0, 0, 0], &ladder, 8, 0).expect("compatible");
+        assert_eq!(br, BatchRoute { member: 1, bucket: Some((8, 128)) });
+        // no-SLA requests merge with anything
+        let reqs = [breq(None, 24), breq(Some(&cheap), 24)];
+        let br = route_batch(&reqs, &routes, &[0, 0, 0], &ladder, 8, 0).unwrap();
+        assert_eq!(br.member, 1);
+    }
+
+    #[test]
+    fn route_batch_refuses_deadline_violating_merge() {
+        let (routes, ladder) = routes_with_buckets();
+        // 4ms bound: even 4x at the short bucket (5.7ms) misses → the
+        // merge must be REFUSED, not served best-effort (that would
+        // convert an admitted request into a guaranteed miss)
+        let tight = sla(Some(4), None);
+        let cheap = sla(None, Some(2.0));
+        let reqs = [breq(Some(&tight), 24), breq(Some(&cheap), 24)];
+        assert!(route_batch(&reqs, &routes, &[0, 0, 0], &ladder, 8, 0).is_none());
+        // speedup floor vs deadline conflict: one request insists on
+        // ≥4x, the other's 5ms bound excludes 4x at the anchor bucket
+        // (19ms) — no member satisfies both → refused
+        let fast_floor = sla(None, Some(4.0));
+        let bound = sla(Some(5), None);
+        let reqs = [breq(Some(&fast_floor), 120), breq(Some(&bound), 24)];
+        assert!(route_batch(&reqs, &routes, &[0, 0, 0], &ladder, 8, 0).is_none());
+        // queued backlog counts: 16 dense requests pending = 160ms, a
+        // 100ms bound can no longer be met by anyone
+        let bound = sla(Some(100), None);
+        let reqs = [breq(Some(&bound), 24), breq(None, 24)];
+        assert!(route_batch(&reqs, &routes, &[16, 0, 0], &ladder, 8, 0).is_none());
+        // time already waited eats the budget: 30ms bound, 27ms waited
+        // → 3ms remaining < 5.7ms short-bucket exec → refused
+        let bound = sla(Some(30), None);
+        let waited = BatchReq {
+            sla: Some(&bound),
+            len: 24,
+            waited: Duration::from_millis(27),
+        };
+        assert!(route_batch(&[waited, breq(None, 24)], &routes, &[0, 0, 0], &ladder, 8, 0)
+            .is_none());
+        // ...but the same merge with fresh requests is fine
+        assert!(route_batch(
+            &[breq(Some(&bound), 24), breq(None, 24)],
+            &routes,
+            &[0, 0, 0],
+            &ladder,
+            8,
+            0
+        )
+        .is_some());
+    }
+
+    #[test]
+    fn route_batch_pressure_and_size_limits() {
+        let (routes, ladder) = routes_with_buckets();
+        // pressure coalesces everything to the fastest member
+        let s = sla(Some(1_000), Some(1.0));
+        let reqs = [breq(Some(&s), 24), breq(None, 24)];
+        let br = route_batch(&reqs, &routes, &[5, 5, 0], &ladder, 8, 12).unwrap();
+        assert_eq!(br.member, 2);
+        // empty and over-sized candidate sets are not batches
+        assert!(route_batch(&[], &routes, &[0, 0, 0], &ladder, 8, 0).is_none());
+        let many: Vec<BatchReq> = (0..9).map(|_| breq(None, 8)).collect();
+        assert!(route_batch(&many, &routes, &[0, 0, 0], &ladder, 8, 0).is_none());
+    }
+
+    // ------------------------------------------- acceptance: §9 end-to-end
+
+    #[test]
+    fn coalesced_batch_one_specialized_executable_realized_vs_certified() {
+        // Acceptance (ISSUE 5): two SLA classes with compatible shapes
+        // coalesce into ONE batch served by ONE specialized executable;
+        // the compile cache builds exactly one executable per distinct
+        // (member, bucket) pair exercised and serves the rest as hits;
+        // FamilyStats reports realized per-bucket latency next to the
+        // certified estimate; a deadline-incompatible merge is refused.
+        let (routes, ladder) = routes_with_buckets();
+        let interactive = sla(Some(30), None);
+        let cheap = sla(None, Some(2.0));
+        let reqs = [breq(Some(&interactive), 24), breq(Some(&cheap), 30)];
+        let br = route_batch(&reqs, &routes, &[0, 0, 0], &ladder, 8, 0)
+            .expect("compatible classes must coalesce");
+        assert_eq!(br, BatchRoute { member: 1, bucket: Some((8, 32)) });
+
+        // resolve executables exactly the way the worker does: one
+        // get_or_build per executed batch, keyed by (member, bucket)
+        let cache: CompileCache<String> = CompileCache::new();
+        let mut samples: Vec<BucketSample> = Vec::new();
+        let mut serve = |member: usize, bucket: (usize, usize), n: usize, exec_ms: f64| {
+            let key = spec_key("m", "t", &routes[member].tag, bucket);
+            cache.get_or_build(&key.encode(), || Ok(key.encode())).unwrap();
+            samples.push(BucketSample {
+                member: routes[member].tag.clone(),
+                batch: bucket.0,
+                seq: bucket.1,
+                specialized: true,
+                exec: Duration::from_secs_f64(exec_ms * 1e-3),
+                requests: n,
+                certified: routes[member].time_at(Some(bucket)),
+            });
+        };
+        // the coalesced (2x, 8x32) batch, then repeats, then a second
+        // distinct pair (4x at the anchor bucket)
+        for k in 0..4 {
+            serve(br.member, br.bucket.unwrap(), 2, 12.0 + k as f64);
+        }
+        for _ in 0..2 {
+            serve(2, (8, 128), 8, 21.0);
+        }
+        assert_eq!(cache.builds(), 2, "one build per distinct (member, bucket) pair");
+        assert!(cache.hits() > 0, "repeat shapes must be cache hits");
+
+        let stats = FamilyStats {
+            coalesced_batches: 1,
+            per_bucket: aggregate_buckets(&samples),
+            ..FamilyStats::default()
+        };
+        assert_eq!(stats.per_bucket.len(), 2);
+        let row = stats
+            .per_bucket
+            .iter()
+            .find(|r| r.member == "2x" && (r.batch, r.seq) == (8, 32))
+            .expect("realized row for the coalesced bucket");
+        assert!(row.specialized);
+        assert_eq!((row.batches, row.requests), (4, 8));
+        // realized p50/p99 sit NEXT TO the certified estimate
+        assert!((row.certified.as_secs_f64() - 38e-3 * 0.3).abs() < 1e-12);
+        assert!(row.realized_p50 >= Duration::from_millis(12));
+        assert!(row.realized_p99 <= Duration::from_millis(16));
+        assert!(row.realized_p50 <= row.realized_p99);
+        assert!(stats.coalesced_batches > 0);
+
+        // the refusal half: a deadline-incompatible merge stays split
+        let tight = sla(Some(4), None);
+        let reqs = [breq(Some(&tight), 24), breq(Some(&cheap), 24)];
+        assert!(route_batch(&reqs, &routes, &[0, 0, 0], &ladder, 8, 0).is_none());
+    }
+
+    // --------------------------------------------------------- reporting
+
+    fn row(class: &str, ms: u64, hit: bool, bucket: (usize, usize)) -> WorkRow {
+        WorkRow {
+            class: class.to_string(),
+            latency: Duration::from_millis(ms),
+            sla_hit: hit,
+            bucket,
+        }
+    }
+
+    #[test]
+    fn summarize_percentiles_hit_rate_and_buckets() {
         let mut rows = Vec::new();
         for i in 1..=100u64 {
-            rows.push(("a".to_string(), ms(i), i <= 90));
+            let bucket = if i % 2 == 0 { (8, 32) } else { (8, 128) };
+            rows.push(row("a", i, i <= 90, bucket));
         }
-        rows.push(("b".to_string(), ms(7), true));
+        rows.push(row("b", 7, true, (8, 128)));
         let reps = summarize(&rows);
         assert_eq!(reps.len(), 2);
         let a = &reps[0];
         assert_eq!(a.class, "a");
         assert_eq!(a.n, 100);
         assert!((a.hit_rate - 0.90).abs() < 1e-9);
+        let ms = Duration::from_millis;
         assert!(a.p50 >= ms(49) && a.p50 <= ms(52), "{:?}", a.p50);
         assert!(a.p99 >= ms(98), "{:?}", a.p99);
+        // per-bucket breakdown: evens at (8,32), odds at (8,128)
+        assert_eq!(a.per_bucket.len(), 2);
+        let short = a.per_bucket.iter().find(|b| b.seq == 32).unwrap();
+        let long = a.per_bucket.iter().find(|b| b.seq == 128).unwrap();
+        assert_eq!((short.n, long.n), (50, 50));
+        assert!(short.p50 >= ms(48) && short.p50 <= ms(54));
+        assert!(long.p99 >= ms(97));
         let b = &reps[1];
         assert_eq!((b.n, b.p50, b.hit_rate), (1, ms(7), 1.0));
+        assert_eq!(b.per_bucket.len(), 1);
+    }
+
+    #[test]
+    fn aggregate_buckets_groups_and_orders_rows() {
+        let mk = |member: &str, seq: usize, specialized: bool, exec_ms: f64| BucketSample {
+            member: member.into(),
+            batch: 8,
+            seq,
+            specialized,
+            exec: Duration::from_secs_f64(exec_ms * 1e-3),
+            requests: 3,
+            certified: 10e-3,
+        };
+        let rows = aggregate_buckets(&[
+            mk("2x", 32, true, 12.0),
+            mk("2x", 32, true, 14.0),
+            // generic cold-start batches of the same member land in a
+            // SEPARATE row — the gap between the two rows is the
+            // specialization win
+            mk("2x", 128, false, 40.0),
+            mk("dense", 128, false, 80.0),
+        ]);
+        assert_eq!(rows.len(), 3);
+        let spec = rows.iter().find(|r| r.member == "2x" && r.specialized).unwrap();
+        assert_eq!((spec.batches, spec.requests, spec.seq), (2, 6, 32));
+        assert_eq!(spec.certified, Duration::from_secs_f64(10e-3));
+        assert!(spec.realized_p50 >= Duration::from_millis(12));
+        assert!(spec.realized_p99 <= Duration::from_millis(14));
+        let generic = rows.iter().find(|r| r.member == "2x" && !r.specialized).unwrap();
+        assert_eq!(generic.batches, 1);
+        assert!(aggregate_buckets(&[]).is_empty());
     }
 
     #[test]
     fn family_members_share_one_compiled_artifact() {
-        // Acceptance: each compiled artifact is built at most once
-        // across the family. All masked variants of one (model, task)
-        // map to the same (artifact, batch-shape) cache key, so N
-        // members × M requests produce exactly one build; a
-        // shape-specialized variant gets its own key and one build.
+        // Each compiled artifact is built at most once across the
+        // family. All masked variants of one (model, task) map to the
+        // same (artifact, batch-shape) cache key, so N members × M
+        // requests produce exactly one build; a shape-specialized
+        // variant gets its own key and one build.
         let cache: CompileCache<&'static str> = CompileCache::new();
         let shared = ArtifactKey::new("bert__sst2__fwd", 8, 128);
         for _member in 0..3 {
@@ -576,7 +1405,7 @@ mod tests {
         }
         assert_eq!(cache.builds(), 1, "shared graph compiled more than once");
         assert_eq!(cache.hits(), 11);
-        let spec = ArtifactKey::new("spec_bert_sst2_4x", 8, 128);
+        let spec = spec_key("bert", "sst2", "4x", (8, 128));
         cache.get_or_build(&spec.encode(), || Ok("spec")).unwrap();
         assert_eq!(cache.builds(), 2);
     }
@@ -597,6 +1426,8 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             pressure: 0,
+            buckets: BucketLadder::default(),
+            specialized: None,
         };
         assert!(start(cfg(), vec![], &env).is_err());
         // members disagreeing on (model, task) are rejected up front

@@ -18,7 +18,9 @@
 //!
 //! The [`family`] submodule generalizes this single-model loop to a
 //! whole SPDY-produced model family behind one front end, with
-//! per-request SLA routing and per-variant batch queues (DESIGN.md §6).
+//! per-request SLA routing and per-variant batch queues (DESIGN.md §6),
+//! plus shape-specialized executables and cross-SLA batch coalescing
+//! for realized — not just certified — speedups (DESIGN.md §9).
 
 pub mod family;
 

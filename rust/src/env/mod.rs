@@ -25,6 +25,18 @@
 //! by both [`InferenceEnv`] and the underlying [`LatencyTable`], so
 //! code that only prices profiles never needs to know which source
 //! produced the numbers.
+//!
+//! Beyond the anchor batch shape, an env can carry a **seq-length
+//! sweep** ([`InferenceEnv::with_seq_sweep`], DESIGN.md §9): one
+//! `(padded seq, relative cost scale)` row per serving shape bucket,
+//! normalized to 1.0 at the anchor seq. The sweep is what lets the
+//! family coordinator price a *shaped* batch — [`InferenceEnv::batch_time`]
+//! scales the anchor estimate by the request bucket — and what
+//! [`InferenceEnv::bucket_ladder`] derives the coordinator's default
+//! shape-bucket ladder from. Sources: [`crate::latency::analytic_seq_sweep`]
+//! for roofline envs (the latency-regime seq dependence is analytic)
+//! and [`crate::latency::regime_sweep`] for measured ones (one row per
+//! lowered block-artifact shape).
 
 use std::path::Path;
 
@@ -151,6 +163,9 @@ pub struct InferenceEnv {
     seq: usize,
     source: CostSource,
     table: LatencyTable,
+    /// per-seq-bucket relative cost scale `(padded seq, scale)`,
+    /// ascending in seq, `1.0` at the anchor seq; empty = no sweep
+    sweep: Vec<(usize, f64)>,
 }
 
 impl InferenceEnv {
@@ -170,6 +185,7 @@ impl InferenceEnv {
             seq: 0,
             source: CostSource::Measured,
             table,
+            sweep: Vec::new(),
         })
     }
 
@@ -189,7 +205,24 @@ impl InferenceEnv {
             seq: dims.seq,
             source: CostSource::Analytic,
             table,
+            sweep: Vec::new(),
         }
+    }
+
+    /// [`InferenceEnv::analytic`] with a seq-length sweep attached:
+    /// one relative-cost row per padded seq in `seqs`, derived from the
+    /// same roofline model ([`crate::latency::analytic_seq_sweep`]).
+    /// This is the batch-shape-aware constructor for the latency
+    /// regime, where cost depends strongly on the padded seq.
+    pub fn analytic_swept(
+        dev: Device,
+        dims: &ArchDims,
+        regime: Regime,
+        mlp_widths: &[usize],
+        seqs: &[usize],
+    ) -> InferenceEnv {
+        InferenceEnv::analytic(dev, dims, regime, mlp_widths)
+            .with_seq_sweep(latency::analytic_seq_sweep(dev, dims, seqs))
     }
 
     /// Record the static `(batch, seq)` shape the numbers were taken at.
@@ -197,6 +230,79 @@ impl InferenceEnv {
         self.batch = batch;
         self.seq = seq;
         self
+    }
+
+    /// Attach a seq-length sweep: `(padded seq, relative cost scale)`
+    /// rows, scale `1.0` meaning "costs exactly like the anchor seq".
+    /// Rows are sorted ascending and non-positive seqs dropped; an
+    /// empty sweep leaves the env shape-agnostic (scale always 1.0).
+    pub fn with_seq_sweep(mut self, mut sweep: Vec<(usize, f64)>) -> InferenceEnv {
+        sweep.retain(|&(s, scale)| s > 0 && scale.is_finite() && scale > 0.0);
+        sweep.sort_by_key(|&(s, _)| s);
+        sweep.dedup_by_key(|p| p.0);
+        self.sweep = sweep;
+        self
+    }
+
+    /// The attached seq sweep (empty when none was recorded).
+    pub fn seq_sweep(&self) -> &[(usize, f64)] {
+        &self.sweep
+    }
+
+    /// Relative cost scale at padded length `seq`: linear interpolation
+    /// between sweep rows, clamped at the ends. Without a sweep (or
+    /// with `seq == 0`, "unknown") the scale is `1.0` — the anchor
+    /// estimate is all the env knows.
+    pub fn seq_scale(&self, seq: usize) -> f64 {
+        if seq == 0 || self.sweep.is_empty() {
+            return 1.0;
+        }
+        let first = self.sweep[0];
+        let last = self.sweep[self.sweep.len() - 1];
+        if seq <= first.0 {
+            return first.1;
+        }
+        if seq >= last.0 {
+            return last.1;
+        }
+        for pair in self.sweep.windows(2) {
+            let (lo, hi) = (pair[0], pair[1]);
+            if seq >= lo.0 && seq <= hi.0 {
+                let frac = (seq - lo.0) as f64 / (hi.0 - lo.0) as f64;
+                return lo.1 + frac * (hi.1 - lo.1);
+            }
+        }
+        1.0
+    }
+
+    /// Estimate of ONE batched forward of `profile` at shape
+    /// `(batch, seq)`: the anchor [`CostModel::model_time`] scaled
+    /// linearly in batch (relative to the anchor batch, when both are
+    /// known) and by [`InferenceEnv::seq_scale`]. This is the pricing
+    /// behind the coordinator's shaped-batch admission estimates
+    /// (DESIGN.md §9); at the anchor shape it equals `model_time`.
+    pub fn batch_time(&self, profile: &[(usize, usize)], batch: usize, seq: usize) -> f64 {
+        let batch_factor = if self.batch > 0 && batch > 0 {
+            batch as f64 / self.batch as f64
+        } else {
+            1.0
+        };
+        self.model_time(profile) * batch_factor * self.seq_scale(seq)
+    }
+
+    /// Default shape-bucket ladder for serving against this env: one
+    /// `(anchor batch, seq)` bucket per sweep row, or the single anchor
+    /// shape when no sweep is recorded, or empty when the shape is
+    /// unknown — the coordinator then serves only the generic graph.
+    pub fn bucket_ladder(&self) -> Vec<(usize, usize)> {
+        if !self.sweep.is_empty() {
+            let b = self.batch.max(1);
+            return self.sweep.iter().map(|&(s, _)| (b, s)).collect();
+        }
+        if self.batch > 0 && self.seq > 0 {
+            return vec![(self.batch, self.seq)];
+        }
+        Vec::new()
     }
 
     /// Device name (canonical for analytic devices; as-measured otherwise).
@@ -239,22 +345,48 @@ impl InferenceEnv {
 
     // ----------------------------------------------------------- persist
 
-    /// Serialize to the on-disk JSON form (session checkpoints).
+    /// Serialize to the on-disk JSON form (session checkpoints). The
+    /// `sweep` key is present only when a seq sweep is attached, so
+    /// pre-sweep readers and files stay compatible both ways.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("device", Json::Str(self.device.clone())),
             ("regime", Json::Str(self.regime.name().to_string())),
             ("batch", Json::Num(self.batch as f64)),
             ("seq", Json::Num(self.seq as f64)),
             ("source", Json::Str(self.source.name().to_string())),
             ("table", self.table.to_json()),
-        ])
+        ];
+        if !self.sweep.is_empty() {
+            pairs.push((
+                "sweep",
+                Json::Arr(
+                    self.sweep
+                        .iter()
+                        .map(|&(s, scale)| {
+                            Json::Arr(vec![Json::Num(s as f64), Json::Num(scale)])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 
-    /// Parse the on-disk JSON form.
+    /// Parse the on-disk JSON form. A `sweep` read from disk goes
+    /// through [`InferenceEnv::with_seq_sweep`]'s normalization (sort,
+    /// dedup, drop non-positive rows), so [`InferenceEnv::seq_scale`]'s
+    /// ordering invariants hold even for hand-edited files.
     pub fn from_json(j: &Json) -> Result<InferenceEnv> {
         let table =
             LatencyTable::from_json(j.get("table").ok_or_else(|| anyhow!("env: no table"))?)?;
+        let sweep = j
+            .get("sweep")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| Some((e.idx(0)?.as_usize()?, e.idx(1)?.as_f64()?)))
+            .collect();
         Ok(InferenceEnv {
             device: j.req_str("device").to_string(),
             regime: Regime::parse(j.req_str("regime"))?,
@@ -262,7 +394,9 @@ impl InferenceEnv {
             seq: j.get("seq").and_then(Json::as_usize).unwrap_or(0),
             source: CostSource::parse(j.req_str("source"))?,
             table,
-        })
+            sweep: Vec::new(),
+        }
+        .with_seq_sweep(sweep))
     }
 
     /// Write the env as pretty JSON, creating parent directories.
@@ -362,6 +496,96 @@ mod tests {
         let back2 =
             InferenceEnv::from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
         assert_eq!(env, back2);
+    }
+
+    #[test]
+    fn seq_scale_interpolates_and_clamps() {
+        let env = InferenceEnv::measured(table())
+            .unwrap()
+            .with_batch_shape(8, 128)
+            .with_seq_sweep(vec![(128, 1.0), (32, 0.3), (64, 0.55), (0, 9.0), (64, 42.0)]);
+        // non-positive seqs dropped, duplicates deduped, rows sorted
+        assert_eq!(env.seq_sweep(), &[(32, 0.3), (64, 0.55), (128, 1.0)]);
+        assert_eq!(env.seq_scale(32), 0.3);
+        assert_eq!(env.seq_scale(128), 1.0);
+        // clamped outside the sweep, interpolated inside
+        assert_eq!(env.seq_scale(8), 0.3);
+        assert_eq!(env.seq_scale(512), 1.0);
+        let mid = env.seq_scale(48);
+        assert!((mid - 0.425).abs() < 1e-12, "{mid}");
+        // unknown seq or no sweep → anchor scale
+        assert_eq!(env.seq_scale(0), 1.0);
+        assert_eq!(InferenceEnv::measured(table()).unwrap().seq_scale(64), 1.0);
+    }
+
+    #[test]
+    fn batch_time_scales_anchor_estimate() {
+        let env = InferenceEnv::measured(table())
+            .unwrap()
+            .with_batch_shape(8, 128)
+            .with_seq_sweep(vec![(32, 0.25), (128, 1.0)]);
+        let profile = vec![(2usize, 256usize); 2];
+        let anchor = env.model_time(&profile);
+        // at the anchor shape, batch_time == model_time
+        assert!((env.batch_time(&profile, 8, 128) - anchor).abs() < 1e-15);
+        // half the batch at a quarter-cost seq bucket
+        let t = env.batch_time(&profile, 4, 32);
+        assert!((t - anchor * 0.5 * 0.25).abs() < 1e-15, "{t} vs {anchor}");
+        // unknown anchor batch → no batch scaling
+        let flat = InferenceEnv::measured(table()).unwrap();
+        assert_eq!(flat.batch_time(&profile, 4, 32), flat.model_time(&profile));
+    }
+
+    #[test]
+    fn bucket_ladder_follows_sweep_then_anchor() {
+        let base = InferenceEnv::measured(table()).unwrap();
+        assert!(base.bucket_ladder().is_empty());
+        let anchored = base.clone().with_batch_shape(8, 128);
+        assert_eq!(anchored.bucket_ladder(), vec![(8, 128)]);
+        let swept = anchored.with_seq_sweep(vec![(128, 1.0), (32, 0.3)]);
+        assert_eq!(swept.bucket_ladder(), vec![(8, 32), (8, 128)]);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_sweep() {
+        let env = InferenceEnv::measured(table())
+            .unwrap()
+            .with_batch_shape(8, 128)
+            .with_seq_sweep(vec![(32, 0.25), (64, 0.5), (128, 1.0)]);
+        let back = InferenceEnv::from_json(&env.to_json()).unwrap();
+        assert_eq!(env, back);
+        let back2 =
+            InferenceEnv::from_json(&Json::parse(&env.to_json().to_pretty()).unwrap()).unwrap();
+        assert_eq!(env, back2);
+        // sweepless envs keep their pre-sweep JSON shape (no key)
+        let plain = InferenceEnv::measured(table()).unwrap();
+        assert!(plain.to_json().get("sweep").is_none());
+    }
+
+    #[test]
+    fn from_json_normalizes_hand_written_sweeps() {
+        // a sweep written out of order / with a zero seq by hand or by
+        // another tool must come back normalized, or seq_scale's
+        // clamp-and-interpolate invariants silently break
+        let j = Json::obj(vec![
+            ("device", Json::Str("test".into())),
+            ("regime", Json::Str("throughput".into())),
+            ("batch", Json::Num(8.0)),
+            ("seq", Json::Num(128.0)),
+            ("source", Json::Str("measured".into())),
+            ("table", table().to_json()),
+            (
+                "sweep",
+                Json::Arr(vec![
+                    Json::Arr(vec![Json::Num(128.0), Json::Num(1.0)]),
+                    Json::Arr(vec![Json::Num(0.0), Json::Num(5.0)]),
+                    Json::Arr(vec![Json::Num(32.0), Json::Num(0.3)]),
+                ]),
+            ),
+        ]);
+        let env = InferenceEnv::from_json(&j).unwrap();
+        assert_eq!(env.seq_sweep(), &[(32, 0.3), (128, 1.0)]);
+        assert_eq!(env.seq_scale(64), 0.3 + (64.0 - 32.0) / 96.0 * 0.7);
     }
 
     #[test]

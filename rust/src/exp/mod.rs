@@ -1,7 +1,7 @@
 //! Experiment drivers: one function per paper table/figure (DESIGN.md §5).
 //!
 //! Every driver is seeded, prints the paper-shaped rows to stdout, and
-//! writes a JSON record under `results/` that EXPERIMENTS.md cites.
+//! writes a JSON record under `results/`.
 //! Sizes are scaled to the 1-core testbed; pass `--fast` for CI-sized
 //! runs (the benches use the same entry points).
 
@@ -583,90 +583,7 @@ pub fn measure_specialized(ctx: &ExpCtx, state: &ModelState, tag: &str) -> Resul
     Ok(stats.median_ns / 1e9)
 }
 
-/// Mirror of python specialized_layout: gather surviving rows/cols of a
-/// masked checkpoint into the specialized packing.
-pub fn gather_specialized(
-    state: &ModelState,
-    minfo: &crate::runtime::ModelInfo,
-    tinfo: &crate::runtime::TaskInfo,
-) -> Result<(Vec<f32>, Vec<usize>, Vec<usize>)> {
-    let mut heads = Vec::new();
-    let mut inters = Vec::new();
-    let mut head_keep: Vec<Vec<usize>> = Vec::new();
-    let mut ffn_keep: Vec<Vec<usize>> = Vec::new();
-    for l in 0..minfo.n_layers {
-        let hk: Vec<usize> =
-            (0..minfo.n_heads).filter(|&h| state.masks.head_row(l)[h] > 0.0).collect();
-        let fk: Vec<usize> = (0..minfo.d_ff).filter(|&c| state.masks.ffn_row(l)[c] > 0.0).collect();
-        heads.push(hk.len());
-        inters.push(fk.len());
-        head_keep.push(hk);
-        ffn_keep.push(fk);
-    }
-    let mut out: Vec<f32> = Vec::new();
-    let mut push_full = |state: &ModelState, name: &str, out: &mut Vec<f32>| {
-        if let Some(e) = tinfo.entry(name) {
-            out.extend_from_slice(&state.params[e.offset..e.offset + e.numel()]);
-        }
-    };
-    push_full(state, "tok_emb", &mut out);
-    push_full(state, "pos_emb", &mut out);
-    if !minfo.causal {
-        push_full(state, "emb_ln_g", &mut out);
-        push_full(state, "emb_ln_b", &mut out);
-    }
-    for l in 0..minfo.n_layers {
-        let hk = &head_keep[l];
-        let fk = &ffn_keep[l];
-        let cols_a: Vec<usize> =
-            hk.iter().flat_map(|&h| (h * minfo.d_head..(h + 1) * minfo.d_head)).collect();
-        if !hk.is_empty() {
-            for name in ["wq", "wk", "wv"] {
-                let t = state.get2(tinfo, &format!("layer{l}.{name}"))?;
-                let g = t.gather_cols(&cols_a);
-                out.extend_from_slice(&g.data);
-                let b = state.get1(tinfo, &format!("layer{l}.{}", name.replace('w', "b")))?;
-                for &c in &cols_a {
-                    out.push(b[c]);
-                }
-            }
-            let wo = state.get2(tinfo, &format!("layer{l}.wo"))?;
-            let g = wo.gather_rows(&cols_a);
-            out.extend_from_slice(&g.data);
-            out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.bo"))?);
-        }
-        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln1_g"))?);
-        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln1_b"))?);
-        if !fk.is_empty() {
-            let w1 = state.get2(tinfo, &format!("layer{l}.w1"))?;
-            out.extend_from_slice(&w1.gather_cols(fk).data);
-            let b1 = state.get1(tinfo, &format!("layer{l}.b1"))?;
-            for &c in fk {
-                out.push(b1[c]);
-            }
-            let w2 = state.get2(tinfo, &format!("layer{l}.w2"))?;
-            out.extend_from_slice(&w2.gather_rows(fk).data);
-            out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.b2"))?);
-        }
-        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln2_g"))?);
-        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln2_b"))?);
-    }
-    match tinfo.kind.as_str() {
-        "cls" => {
-            push_full(state, "cls_w", &mut out);
-            push_full(state, "cls_b", &mut out);
-        }
-        "span" => {
-            push_full(state, "span_w", &mut out);
-            push_full(state, "span_b", &mut out);
-        }
-        _ => {
-            push_full(state, "lnf_g", &mut out);
-            push_full(state, "lnf_b", &mut out);
-        }
-    }
-    Ok((out, heads, inters))
-}
+pub use crate::models::gather_specialized;
 
 // ===================================================================
 // fig4: pruning for speedup vs pruning for sparsity
@@ -855,14 +772,15 @@ pub fn fig8(ctx: &ExpCtx) -> Result<()> {
 /// queues see real pressure. A request counts as an SLA hit only if
 /// its observed latency met the bound AND the member that served it
 /// certified the requested speedup. Returns per-request
-/// `(class, latency, sla_hit)` rows for [`famserve::summarize`].
+/// [`famserve::WorkRow`]s — class, latency, hit, and the shape bucket
+/// the serving batch executed at — for [`famserve::summarize`].
 pub fn mixed_workload(
     handle: &famserve::FamilyHandle,
     ds: &Dataset,
     n: usize,
     interactive_bound: std::time::Duration,
     cheap_speedup: f64,
-) -> Result<Vec<(String, std::time::Duration, bool)>> {
+) -> Result<Vec<famserve::WorkRow>> {
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
         let ex = &ds.dev[i % ds.dev.len()];
@@ -889,7 +807,12 @@ pub fn mixed_workload(
         let reply = rx.recv()?;
         let latency_ok = bound.map(|b| reply.latency <= b).unwrap_or(true);
         let speedup_ok = min_s.map(|m| reply.member_speedup + 1e-9 >= m).unwrap_or(true);
-        rows.push((class, reply.latency, latency_ok && speedup_ok));
+        rows.push(famserve::WorkRow {
+            class,
+            latency: reply.latency,
+            sla_hit: latency_ok && speedup_ok,
+            bucket: reply.bucket,
+        });
     }
     Ok(rows)
 }
@@ -918,12 +841,17 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
     let members: Vec<(String, ModelState)> =
         fam.load_states(&base)?.into_iter().map(|(m, st)| (m.tag, st)).collect();
     let minfo = ctx.engine.manifest.model(model).clone();
+    // serve at the bucket ladder the manifest was certified under
+    // (DESIGN.md §9): shaped batches + lazy per-(member, bucket)
+    // specialized executables, generic fallback while cold
     let handle = famserve::start(
         famserve::FamilyCfg {
             artifacts: ctx.engine.art_dir().to_path_buf(),
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(2),
             pressure: 64,
+            buckets: famserve::BucketLadder::new(fam.buckets.clone()),
+            specialized: None,
         },
         members,
         &env,
@@ -952,16 +880,52 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
             ("sla_hit_rate", Json::Num(r.hit_rate)),
         ]));
     }
+    // the §9 deliverable: realized per-bucket execution latency NEXT TO
+    // the certified estimate, so the certify-vs-realize gap is a number
+    let mut bucket_rows = Vec::new();
+    for bkt in &stats.per_bucket {
+        let (p50, cert) = (bkt.realized_p50.as_secs_f64(), bkt.certified.as_secs_f64());
+        println!(
+            "  family [bucket] {:>6} @ {}x{}{}: batches={:<3} realized p50={:.1}ms p99={:.1}ms certified={:.1}ms (gap {:+.0}%)",
+            bkt.member,
+            bkt.batch,
+            bkt.seq,
+            if bkt.specialized { " (specialized)" } else { " (generic)" },
+            bkt.batches,
+            p50 * 1e3,
+            bkt.realized_p99.as_secs_f64() * 1e3,
+            cert * 1e3,
+            (p50 / cert.max(1e-12) - 1.0) * 100.0
+        );
+        bucket_rows.push(Json::obj(vec![
+            ("member", Json::Str(bkt.member.clone())),
+            ("batch", Json::Num(bkt.batch as f64)),
+            ("seq", Json::Num(bkt.seq as f64)),
+            ("specialized", Json::Bool(bkt.specialized)),
+            ("batches", Json::Num(bkt.batches as f64)),
+            ("requests", Json::Num(bkt.requests as f64)),
+            ("realized_p50_ms", Json::Num(p50 * 1e3)),
+            ("realized_p99_ms", Json::Num(bkt.realized_p99.as_secs_f64() * 1e3)),
+            ("certified_ms", Json::Num(cert * 1e3)),
+        ]));
+    }
     println!(
-        "  family served {} reqs / {} batches, {} compile(s), {} cache hit(s), per-member {:?}",
-        stats.requests, stats.batches, stats.cache_builds, stats.cache_hits, stats.per_member
+        "  family served {} reqs / {} batches ({} coalesced), {} compile(s), {} cache hit(s), per-member {:?}",
+        stats.requests,
+        stats.batches,
+        stats.coalesced_batches,
+        stats.cache_builds,
+        stats.cache_hits,
+        stats.per_member
     );
     ctx.write_result(
         "family",
         &Json::obj(vec![
             ("classes", Json::Arr(out_rows)),
+            ("buckets", Json::Arr(bucket_rows)),
             ("requests", Json::Num(stats.requests as f64)),
             ("batches", Json::Num(stats.batches as f64)),
+            ("coalesced_batches", Json::Num(stats.coalesced_batches as f64)),
             ("cache_builds", Json::Num(stats.cache_builds as f64)),
             ("cache_hits", Json::Num(stats.cache_hits as f64)),
             ("pressure_reroutes", Json::Num(stats.pressure_reroutes as f64)),
@@ -993,7 +957,10 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
 /// paper's V100 roofline), priced over the model's own FFN ladder —
 /// the "unavailable hardware" half of a multi-env run. Ctx-free so
 /// `examples/multi_env.rs` builds the exact same env the `multienv`
-/// driver certifies against.
+/// driver certifies against. Being analytic, the env also carries a
+/// principled seq-length sweep (quarter / half / full anchor seq,
+/// [`crate::latency::analytic_seq_sweep`]), so families certified
+/// against it record a multi-bucket serving ladder (DESIGN.md §9).
 pub fn analytic_gpu_env(m: &crate::runtime::ModelInfo, regime: Regime) -> InferenceEnv {
     let dims = ArchDims {
         d_model: m.d_model,
@@ -1008,7 +975,8 @@ pub fn analytic_gpu_env(m: &crate::runtime::ModelInfo, regime: Regime) -> Infere
     // price the model's own ladder, anchored at its dense width
     let mut widths: Vec<usize> = vec![m.d_ff];
     widths.extend(m.ffn_ladder.iter().copied().filter(|&w| w < m.d_ff));
-    InferenceEnv::analytic(Device::V100Sim, &dims, regime, &widths)
+    let seqs = [m.seq_len / 4, m.seq_len / 2, m.seq_len];
+    InferenceEnv::analytic_swept(Device::V100Sim, &dims, regime, &widths, &seqs)
 }
 
 /// Multi-env experiment: ONE Hessian capture + database build, then

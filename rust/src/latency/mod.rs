@@ -249,8 +249,9 @@ pub fn measure_cpu(engine: &Engine, model: &str, regime: &str, reps: usize) -> R
 }
 
 /// Static `(batch, seq)` shape of the measured block artifacts for
-/// `(model, regime)` — the batch shape an [`crate::env::InferenceEnv`]
-/// records alongside a measured table.
+/// `(model, regime)` — the anchor shape an [`crate::env::InferenceEnv`]
+/// records alongside a measured table. For the full per-bucket set,
+/// see [`regime_sweep`].
 pub fn regime_shape(engine: &Engine, model: &str, regime: &str) -> Result<(usize, usize)> {
     let info = engine.manifest.model(model);
     let name = format!("{model}__block_attn_h{}__{regime}", info.n_heads);
@@ -260,6 +261,32 @@ pub fn regime_shape(engine: &Engine, model: &str, regime: &str) -> Result<(usize
         .get(&name)
         .ok_or_else(|| anyhow!("missing block artifact {name}"))?;
     Ok((a.batch.unwrap_or(1), a.seq.unwrap_or(info.seq_len)))
+}
+
+/// Every distinct `(batch, seq)` shape the dense-attention block
+/// artifacts for `(model, regime)` were lowered at, ascending in seq —
+/// one row per serving shape bucket (DESIGN.md §9). With today's
+/// single-shape artifact sets this returns exactly the
+/// [`regime_shape`] anchor; when `aot.py` emits per-seq block variants
+/// (names extending `{model}__block_attn_h{H}__{regime}`), each
+/// lowered shape becomes a bucket, giving a measured-env seq sweep the
+/// same shape the analytic one ([`analytic_seq_sweep`]) has.
+pub fn regime_sweep(engine: &Engine, model: &str, regime: &str) -> Result<Vec<(usize, usize)>> {
+    let info = engine.manifest.model(model);
+    let prefix = format!("{model}__block_attn_h{}__{regime}", info.n_heads);
+    let mut shapes: Vec<(usize, usize)> = engine
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|(name, _)| name.starts_with(&prefix))
+        .map(|(_, a)| (a.batch.unwrap_or(1), a.seq.unwrap_or(info.seq_len)))
+        .collect();
+    if shapes.is_empty() {
+        return Err(anyhow!("no block artifacts matching {prefix}*"));
+    }
+    shapes.sort_by_key(|&(b, s)| (s, b));
+    shapes.dedup();
+    Ok(shapes)
 }
 
 fn time_artifact(engine: &Engine, name: &str, bench: &Bench) -> Result<f64> {
@@ -410,6 +437,36 @@ pub fn analytic(dev: Device, dims: &ArchDims, regime: &str, mlp_widths: &[usize]
     }
 }
 
+/// Relative per-seq cost scale of one dense transformer layer on an
+/// analytic device: layer time at each padded seq in `seqs`, normalized
+/// to the time at the anchor `dims.seq` (scale 1.0). The attention
+/// score/context term is quadratic in seq while the projections and the
+/// FFN are linear, so the sweep is convex rather than proportional —
+/// exactly the shape dependence the latency regime's shaped batches
+/// need priced (DESIGN.md §9). Feed the result to
+/// [`crate::env::InferenceEnv::with_seq_sweep`].
+pub fn analytic_seq_sweep(dev: Device, dims: &ArchDims, seqs: &[usize]) -> Vec<(usize, f64)> {
+    // one device model, calibrated at the anchor dims, shared by every
+    // seq so only the workload varies across rows
+    let m = device_model(dev, flops_mlp_d(dims, dims.d_ff));
+    let layer_time = |seq: usize| -> f64 {
+        let d = ArchDims { seq, ..*dims };
+        // dense blocks: the saturation floor (a fraction of the dense
+        // block's own time) never binds, so the roofline term is exact
+        let block = |flops: f64| m.t_fix + flops / m.peak_flops;
+        block(flops_attn_d(&d, d.n_heads)) + block(flops_mlp_d(&d, d.d_ff))
+    };
+    let anchor = layer_time(dims.seq);
+    let mut out: Vec<(usize, f64)> = seqs
+        .iter()
+        .filter(|&&s| s > 0)
+        .map(|&s| (s, layer_time(s) / anchor))
+        .collect();
+    out.sort_by_key(|&(s, _)| s);
+    out.dedup_by_key(|p| p.0);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -483,5 +540,23 @@ mod tests {
     fn attn_time_zero_when_dropped() {
         let t = table();
         assert_eq!(t.attn_time(0), 0.0);
+    }
+
+    #[test]
+    fn analytic_seq_sweep_anchored_monotone_superlinear() {
+        let dims = ArchDims::bert_base_paper(); // anchor seq 128
+        let sweep = analytic_seq_sweep(Device::V100Sim, &dims, &[512, 32, 64, 128, 0, 64]);
+        // non-positive dropped, dups deduped, ascending
+        let seqs: Vec<usize> = sweep.iter().map(|&(s, _)| s).collect();
+        assert_eq!(seqs, vec![32, 64, 128, 512]);
+        // scale 1.0 at the anchor, monotone in seq
+        let at = |s: usize| sweep.iter().find(|&&(q, _)| q == s).unwrap().1;
+        assert!((at(128) - 1.0).abs() < 1e-12);
+        assert!(at(32) < at(64) && at(64) < at(128) && at(128) < at(512));
+        // attention's seq² term makes the sweep superlinear: 4x the
+        // anchor seq costs MORE than 4x the anchor layer time
+        assert!(at(512) > 4.0, "seq² term missing: {}", at(512));
+        // and shorter-than-anchor seqs cost less than proportionally
+        assert!(at(32) > 32.0 / 128.0 * 0.5, "sub-anchor scale collapsed: {}", at(32));
     }
 }

@@ -15,8 +15,9 @@
 //!   head-masked attention core.
 //!
 //! The request path is pure Rust → PJRT; Python never executes after
-//! artifacts are built. See DESIGN.md for the full system inventory and
-//! EXPERIMENTS.md for the paper-vs-measured results.
+//! artifacts are built. See DESIGN.md for the full system inventory;
+//! the experiment drivers (`exp/`) write paper-vs-measured results
+//! under `results/`.
 
 pub mod baselines;
 pub mod coordinator;

@@ -266,12 +266,19 @@ fn serve_family(args: &Args) -> Result<()> {
     };
     let minfo = ctx.engine.manifest.model(&fam.model).clone();
     let ds = ctx.dataset(&fam.model, &fam.task);
+    // shaped batches + specialized executables at the bucket ladder the
+    // manifest was certified under (empty ladder = generic-only)
+    if !fam.buckets.is_empty() {
+        println!("serving shape buckets: {:?}", fam.buckets);
+    }
     let handle = ziplm::coordinator::family::start(
         ziplm::coordinator::family::FamilyCfg {
             artifacts: artifacts_dir(args),
             max_batch: args.usize_or("batch", 8),
             max_wait: std::time::Duration::from_millis(args.u64_or("wait-ms", 2)),
             pressure: args.usize_or("pressure", 64),
+            buckets: ziplm::coordinator::family::BucketLadder::new(fam.buckets.clone()),
+            specialized: None,
         },
         members,
         &env,
@@ -297,9 +304,25 @@ fn serve_family(args: &Args) -> Result<()> {
             r.hit_rate * 100.0
         );
     }
+    for bkt in &stats.per_bucket {
+        println!(
+            "  [bucket] {:>6} @ {}x{}{}: realized p50={:.1}ms certified={:.1}ms",
+            bkt.member,
+            bkt.batch,
+            bkt.seq,
+            if bkt.specialized { " spec" } else { "" },
+            bkt.realized_p50.as_secs_f64() * 1e3,
+            bkt.certified.as_secs_f64() * 1e3
+        );
+    }
     println!(
-        "served {} requests / {} batches; {} compile(s), {} cache hit(s); per-member {:?}",
-        stats.requests, stats.batches, stats.cache_builds, stats.cache_hits, stats.per_member
+        "served {} requests / {} batches ({} coalesced); {} compile(s), {} cache hit(s); per-member {:?}",
+        stats.requests,
+        stats.batches,
+        stats.coalesced_batches,
+        stats.cache_builds,
+        stats.cache_hits,
+        stats.per_member
     );
     Ok(())
 }

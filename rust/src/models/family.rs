@@ -48,6 +48,12 @@ pub struct FamilyManifest {
     /// re-measuring, closing the certify-vs-admit gap. `None` only
     /// for manifests written before env embedding existed.
     pub env: Option<InferenceEnv>,
+    /// `(batch, padded seq)` shape-bucket ladder the family was
+    /// certified under (DESIGN.md §9) — the default
+    /// `coordinator::family::BucketLadder` serving tools shape batches
+    /// and specialized executables with. Empty for manifests written
+    /// before shape-specialized serving existed (generic-only).
+    pub buckets: Vec<(usize, usize)>,
     /// members ordered by ascending `est_speedup` (dense first)
     pub members: Vec<FamilyMember>,
 }
@@ -60,6 +66,7 @@ impl FamilyManifest {
             task: task.to_string(),
             regime: regime.to_string(),
             env: None,
+            buckets: Vec::new(),
             members: Vec::new(),
         }
     }
@@ -86,8 +93,9 @@ impl FamilyManifest {
         self.members.iter().find(|m| m.est_speedup + 1e-9 >= min_speedup)
     }
 
-    /// Serialize to the on-disk JSON form (the `env` key is present
-    /// only when the certification env is embedded).
+    /// Serialize to the on-disk JSON form (the `env` and `buckets`
+    /// keys are present only when a certification env / bucket ladder
+    /// is recorded, so older readers and files stay compatible).
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("model", Json::Str(self.model.clone())),
@@ -96,6 +104,19 @@ impl FamilyManifest {
         ];
         if let Some(env) = &self.env {
             pairs.push(("env", env.to_json()));
+        }
+        if !self.buckets.is_empty() {
+            pairs.push((
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&(b, s)| {
+                            Json::Arr(vec![Json::Num(b as f64), Json::Num(s as f64)])
+                        })
+                        .collect(),
+                ),
+            ));
         }
         pairs.push((
                 "members",
@@ -131,7 +152,8 @@ impl FamilyManifest {
     }
 
     /// Parse the on-disk JSON form (members are re-sorted defensively;
-    /// an absent `env` key parses as `None` for pre-embedding files).
+    /// absent `env`/`buckets` keys parse as `None`/empty for files
+    /// written before those were recorded).
     pub fn from_json(j: &Json) -> Result<FamilyManifest> {
         let mut out = FamilyManifest::new(
             j.req_str("model"),
@@ -139,6 +161,13 @@ impl FamilyManifest {
             j.get("regime").and_then(Json::as_str).unwrap_or("throughput"),
         );
         out.env = j.get("env").map(InferenceEnv::from_json).transpose()?;
+        out.buckets = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| Some((e.idx(0)?.as_usize()?, e.idx(1)?.as_usize()?)))
+            .collect();
         for m in j.get("members").and_then(Json::as_arr).unwrap_or(&[]) {
             let profile = m
                 .get("profile")
@@ -246,8 +275,25 @@ mod tests {
         let j = f.to_json();
         let f2 = FamilyManifest::from_json(&j).unwrap();
         assert_eq!(f, f2);
-        // no env embedded → no env key in the JSON (older readers)
+        // no env/ladder recorded → no keys in the JSON (older readers)
         assert!(j.get("env").is_none());
+        assert!(j.get("buckets").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_with_bucket_ladder() {
+        let mut f = FamilyManifest::new("bert-syn-base", "sst2-syn", "latency");
+        f.buckets = vec![(1, 32), (1, 64), (8, 128)];
+        f.push(member("dense", 1.0));
+        let f2 = FamilyManifest::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, f2);
+        assert_eq!(f2.buckets, vec![(1, 32), (1, 64), (8, 128)]);
+        // through text as well (serving tools go through the parser)
+        let f3 = FamilyManifest::from_json(
+            &crate::util::json::Json::parse(&f.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f, f3);
     }
 
     #[test]

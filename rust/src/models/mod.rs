@@ -304,6 +304,97 @@ impl ModelState {
     }
 }
 
+/// Mirror of python `specialized_layout`: gather the surviving
+/// rows/cols of a masked checkpoint into the packed parameter order a
+/// shape-specialized export (`aot.py --specialize`) expects. Returns
+/// `(flat params, heads alive per layer, FFN columns alive per layer)`.
+/// Used by `exp::measure_specialized` (paper Table 8) and by the family
+/// coordinator's per-(member, bucket) specialized executables
+/// (DESIGN.md §9), which is why it lives model-side rather than with
+/// the experiment drivers.
+pub fn gather_specialized(
+    state: &ModelState,
+    minfo: &ModelInfo,
+    tinfo: &TaskInfo,
+) -> Result<(Vec<f32>, Vec<usize>, Vec<usize>)> {
+    let mut heads = Vec::new();
+    let mut inters = Vec::new();
+    let mut head_keep: Vec<Vec<usize>> = Vec::new();
+    let mut ffn_keep: Vec<Vec<usize>> = Vec::new();
+    for l in 0..minfo.n_layers {
+        let hk: Vec<usize> =
+            (0..minfo.n_heads).filter(|&h| state.masks.head_row(l)[h] > 0.0).collect();
+        let fk: Vec<usize> = (0..minfo.d_ff).filter(|&c| state.masks.ffn_row(l)[c] > 0.0).collect();
+        heads.push(hk.len());
+        inters.push(fk.len());
+        head_keep.push(hk);
+        ffn_keep.push(fk);
+    }
+    let mut out: Vec<f32> = Vec::new();
+    let mut push_full = |state: &ModelState, name: &str, out: &mut Vec<f32>| {
+        if let Some(e) = tinfo.entry(name) {
+            out.extend_from_slice(&state.params[e.offset..e.offset + e.numel()]);
+        }
+    };
+    push_full(state, "tok_emb", &mut out);
+    push_full(state, "pos_emb", &mut out);
+    if !minfo.causal {
+        push_full(state, "emb_ln_g", &mut out);
+        push_full(state, "emb_ln_b", &mut out);
+    }
+    for l in 0..minfo.n_layers {
+        let hk = &head_keep[l];
+        let fk = &ffn_keep[l];
+        let cols_a: Vec<usize> =
+            hk.iter().flat_map(|&h| (h * minfo.d_head..(h + 1) * minfo.d_head)).collect();
+        if !hk.is_empty() {
+            for name in ["wq", "wk", "wv"] {
+                let t = state.get2(tinfo, &format!("layer{l}.{name}"))?;
+                let g = t.gather_cols(&cols_a);
+                out.extend_from_slice(&g.data);
+                let b = state.get1(tinfo, &format!("layer{l}.{}", name.replace('w', "b")))?;
+                for &c in &cols_a {
+                    out.push(b[c]);
+                }
+            }
+            let wo = state.get2(tinfo, &format!("layer{l}.wo"))?;
+            let g = wo.gather_rows(&cols_a);
+            out.extend_from_slice(&g.data);
+            out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.bo"))?);
+        }
+        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln1_g"))?);
+        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln1_b"))?);
+        if !fk.is_empty() {
+            let w1 = state.get2(tinfo, &format!("layer{l}.w1"))?;
+            out.extend_from_slice(&w1.gather_cols(fk).data);
+            let b1 = state.get1(tinfo, &format!("layer{l}.b1"))?;
+            for &c in fk {
+                out.push(b1[c]);
+            }
+            let w2 = state.get2(tinfo, &format!("layer{l}.w2"))?;
+            out.extend_from_slice(&w2.gather_rows(fk).data);
+            out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.b2"))?);
+        }
+        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln2_g"))?);
+        out.extend_from_slice(&state.get1(tinfo, &format!("layer{l}.ln2_b"))?);
+    }
+    match tinfo.kind.as_str() {
+        "cls" => {
+            push_full(state, "cls_w", &mut out);
+            push_full(state, "cls_b", &mut out);
+        }
+        "span" => {
+            push_full(state, "span_w", &mut out);
+            push_full(state, "span_b", &mut out);
+        }
+        _ => {
+            push_full(state, "lnf_g", &mut out);
+            push_full(state, "lnf_b", &mut out);
+        }
+    }
+    Ok((out, heads, inters))
+}
+
 /// Shared fixtures for unit tests across modules (only in test builds).
 #[cfg(test)]
 pub mod tests_support {

@@ -1,4 +1,5 @@
-//! Shared compiled-artifact cache (DESIGN.md §6).
+//! Shared compiled-artifact cache (DESIGN.md §6; shape-specialized
+//! keys in §9).
 //!
 //! Compiling an HLO artifact is the most expensive control-plane
 //! operation in the coordinator (hundreds of ms per graph), so every
@@ -12,7 +13,12 @@
 //!   no matter how many variants the family coordinator serves;
 //! * shape-specialized exports (one materialized graph per variant,
 //!   table 8 / production serving) get distinct keys per variant and
-//!   batch shape, so they coexist without eviction fights.
+//!   batch shape, so they coexist without eviction fights. The family
+//!   coordinator's per-(member, bucket) executables (DESIGN.md §9)
+//!   live behind exactly these keys: the member tag goes into the
+//!   artifact id, the bucket into `batch`/`seq`, so "builds == distinct
+//!   (member, bucket) pairs exercised" is the cache-counter invariant
+//!   the coordinator tests assert.
 //!
 //! Concurrency follows PR 1's per-artifact compile gate: a per-key
 //! mutex makes check-then-compile atomic, so racing callers (the
@@ -51,7 +57,11 @@ impl ArtifactKey {
         ArtifactKey { artifact: artifact.into(), batch, seq }
     }
 
-    /// Canonical string form used as the cache map key.
+    /// Canonical string form used as the cache map key. Injective:
+    /// the shape suffix after the final `@` is all digits, so two
+    /// distinct `(artifact, batch, seq)` triples can never encode to
+    /// one string even when the artifact id itself contains `@b…s…`
+    /// (property-tested in `tests/proptests.rs`).
     pub fn encode(&self) -> String {
         format!("{}@b{}s{}", self.artifact, self.batch, self.seq)
     }
@@ -118,6 +128,16 @@ impl<V> CompileCache<V> {
             self.hits.fetch_add(1, Ordering::Relaxed);
         }
         v
+    }
+
+    /// Whether `key` is cached, WITHOUT counting a hit. The family
+    /// coordinator uses this to decide between serving a batch on an
+    /// already-specialized executable and falling back to the generic
+    /// one while the specialization is still cold (DESIGN.md §9), so
+    /// probing must not distort the build/hit counters the serving
+    /// stats report.
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.lock().unwrap().contains_key(key)
     }
 
     /// Drop a cached value (memory control for block sweeps). Returns
@@ -211,6 +231,53 @@ mod tests {
         assert_eq!(attempts.load(Ordering::SeqCst), 1, "builder raced");
         assert_eq!(cache.builds(), 1);
         assert_eq!(cache.hits(), 7);
+    }
+
+    #[test]
+    fn contains_probes_without_counting_hits() {
+        let cache: CompileCache<usize> = CompileCache::new();
+        assert!(!cache.contains("k"));
+        cache.get_or_build("k", || Ok(1usize)).unwrap();
+        assert!(cache.contains("k"));
+        assert!(cache.contains("k"));
+        assert_eq!(cache.hits(), 0, "contains() must not count hits");
+        assert_eq!(cache.builds(), 1);
+    }
+
+    #[test]
+    fn eviction_under_contention_stays_consistent() {
+        // Readers hammer get_or_build while an evictor repeatedly drops
+        // the entry: every reader must still observe a valid value,
+        // outstanding Arcs stay usable, and the counters must balance —
+        // every lookup is exactly one build or one hit, with at least
+        // one rebuild forced by the evictions.
+        let cache: CompileCache<u64> = CompileCache::new();
+        const READERS: usize = 4;
+        const ROUNDS: usize = 200;
+        std::thread::scope(|s| {
+            for _ in 0..READERS {
+                s.spawn(|| {
+                    for _ in 0..ROUNDS {
+                        let v = cache.get_or_build("hot", || Ok(7u64)).unwrap();
+                        assert_eq!(*v, 7);
+                    }
+                });
+            }
+            s.spawn(|| {
+                for _ in 0..ROUNDS / 4 {
+                    cache.evict("hot");
+                    std::thread::yield_now();
+                }
+            });
+        });
+        let (builds, hits) = (cache.builds(), cache.hits());
+        assert_eq!(builds + hits, READERS * ROUNDS, "lookup neither built nor hit");
+        assert!(builds >= 1, "never built");
+        assert!(hits > 0, "never hit");
+        // the survivor (if any) is still the same value
+        if let Some(v) = cache.get("hot") {
+            assert_eq!(*v, 7);
+        }
     }
 
     #[test]

@@ -163,6 +163,32 @@ impl Engine {
         })
     }
 
+    /// Compile-or-fetch a shape-specialized export that lives OUTSIDE
+    /// the manifest: `key` carries the member tag + bucket shape
+    /// (DESIGN.md §9), `path` the materialized HLO file that
+    /// `aot.py --specialize` wrote for exactly that shape. A missing
+    /// file is an error and caches nothing, so the family coordinator
+    /// can fall back to the generic executable and retry once the
+    /// export appears.
+    pub fn executable_file_keyed(
+        &self,
+        key: &ArtifactKey,
+        path: &Path,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.exe_cache.get_or_build(&key.encode(), || {
+            if !path.exists() {
+                return Err(anyhow!("no specialized export at {path:?} for `{}`", key.encode()));
+            }
+            self.compile_file(path)
+        })
+    }
+
+    /// Whether the executable for `key` is already compiled and cached
+    /// (no hit is counted — see [`CompileCache::contains`]).
+    pub fn cached_keyed(&self, key: &ArtifactKey) -> bool {
+        self.exe_cache.contains(&key.encode())
+    }
+
     /// Compile an HLO-text file outside the manifest (specialized exports).
     pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(path)

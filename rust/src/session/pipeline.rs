@@ -397,7 +397,10 @@ pub fn gradual(
 /// a `"<target>x"` member carrying its certified profile/speedup —
 /// certified against exactly the `env` the run targeted, which the
 /// manifest embeds in full so `serve-family` admission prices with
-/// the same value instead of re-measuring.
+/// the same value instead of re-measuring. The env's shape-bucket
+/// ladder ([`InferenceEnv::bucket_ladder`]) is recorded alongside, so
+/// serving tools shape batches and specialized executables at exactly
+/// the buckets certification priced (DESIGN.md §9).
 pub fn emit_family(
     env: &InferenceEnv,
     dense: &ModelState,
@@ -407,6 +410,7 @@ pub fn emit_family(
     std::fs::create_dir_all(dir)?;
     let mut fam = FamilyManifest::new(&dense.model, &dense.task, env.regime().name());
     fam.env = Some(env.clone());
+    fam.buckets = env.bucket_ladder();
     let dense_profile = dense.masks.summary();
     dense.save(&dir.join("dense.zlm"))?;
     fam.push(FamilyMember {

@@ -1,9 +1,13 @@
 //! Property tests on coordinator invariants (hand-rolled harness —
 //! proptest is unavailable offline; see util::prop).
 
+use std::time::Duration;
+
+use ziplm::coordinator::family::{route, route_batch, BatchReq, BucketLadder, MemberRoute, Sla};
 use ziplm::env::InferenceEnv;
 use ziplm::latency::LatencyTable;
 use ziplm::models::family::{FamilyManifest, FamilyMember};
+use ziplm::runtime::ArtifactKey;
 use ziplm::session::store::{env_fingerprint, StageStore};
 use ziplm::session::{solve_fingerprint, solve_key};
 use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
@@ -660,12 +664,19 @@ fn random_env(r: &mut Rng) -> InferenceEnv {
     // random_latency_table guarantees both, but its model/device are
     // tricky strings — exactly what the env JSON embedding must carry.
     t.regime = if r.f64() < 0.5 { "throughput".into() } else { "latency".into() };
-    let env = InferenceEnv::measured(t).unwrap();
+    let mut env = InferenceEnv::measured(t).unwrap();
     if r.f64() < 0.5 {
-        env.with_batch_shape(1 + r.below(256), 1 + r.below(4096))
-    } else {
-        env
+        env = env.with_batch_shape(1 + r.below(256), 1 + r.below(4096));
     }
+    // half the envs carry a seq-length sweep (shape-specialized
+    // serving); with_seq_sweep normalizes, so the JSON round-trip must
+    // preserve the normalized rows exactly
+    if r.f64() < 0.5 {
+        let sweep: Vec<(usize, f64)> =
+            (0..1 + r.below(5)).map(|_| (1 + r.below(4096), 0.05 + r.f64() * 4.0)).collect();
+        env = env.with_seq_sweep(sweep);
+    }
+    env
 }
 
 fn random_manifest(r: &mut Rng) -> FamilyManifest {
@@ -678,6 +689,11 @@ fn random_manifest(r: &mut Rng) -> FamilyManifest {
     // sessions PR); absent env must round-trip as None
     if r.f64() < 0.5 {
         fam.env = Some(random_env(r));
+    }
+    // half record a serving bucket ladder; absent → empty (pre-§9 files)
+    if r.f64() < 0.5 {
+        fam.buckets =
+            (0..1 + r.below(4)).map(|_| (1 + r.below(64), 1 + r.below(512))).collect();
     }
     for i in 0..r.below(6) {
         let n_layers = 1 + r.below(4);
@@ -892,6 +908,189 @@ fn prop_checkpoint_roundtrip_random_masks() {
             } else {
                 Err("mismatch".into())
             }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shape-specialized serving (DESIGN.md §9): cache-key injectivity and
+// the route_batch coalescing policy.
+// ---------------------------------------------------------------------
+
+/// Artifact names that try to collide with the `@b<batch>s<seq>` shape
+/// suffix of `ArtifactKey::encode` — including names that already end
+/// in a fake suffix.
+fn tricky_artifact(r: &mut Rng) -> String {
+    let pool = ["fwd", "m__t__fwd", "spec_m_t_2x", "a@b1s2", "x@b", "s1@b0s0", "@", ""];
+    let mut s = pool[r.below(pool.len())].to_string();
+    if r.f64() < 0.5 {
+        s.push_str(&format!("@b{}s{}", r.below(40), r.below(40)));
+    }
+    s
+}
+
+#[test]
+fn prop_artifact_key_encoding_injective() {
+    // Distinct (artifact, batch, seq) triples must encode to distinct
+    // cache keys even when the artifact id itself contains `@b…s…`
+    // fragments — a collision would silently hand one (member, bucket)
+    // pair another pair's compiled executable.
+    Prop::new(400).check_msg(
+        "ArtifactKey::encode injective",
+        |r| {
+            let k1 = ArtifactKey::new(tricky_artifact(r), r.below(40), r.below(40));
+            let k2 = if r.f64() < 0.2 {
+                k1.clone()
+            } else {
+                ArtifactKey::new(tricky_artifact(r), r.below(40), r.below(40))
+            };
+            (k1, k2)
+        },
+        |(k1, k2)| {
+            if (k1 == k2) != (k1.encode() == k2.encode()) {
+                return Err(format!("`{}` vs `{}`", k1.encode(), k2.encode()));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_routing(r: &mut Rng) -> (Vec<MemberRoute>, BucketLadder, Vec<usize>) {
+    let n = 1 + r.below(4);
+    let mut speeds: Vec<f64> = (0..n).map(|_| 1.0 + r.f64() * 9.0).collect();
+    speeds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ladder = BucketLadder::new(
+        (0..r.below(4)).map(|_| (1 + r.below(16), 8 * (1 + r.below(64)))).collect(),
+    );
+    let members: Vec<MemberRoute> = speeds
+        .iter()
+        .enumerate()
+        .map(|(i, &sp)| {
+            let t = 0.2 / sp;
+            MemberRoute {
+                tag: format!("m{i}"),
+                est_speedup: sp,
+                est_batch_time: t,
+                bucket_times: ladder
+                    .buckets()
+                    .iter()
+                    .map(|&(b, s)| ((b, s), t * (0.1 + r.f64())))
+                    .collect(),
+            }
+        })
+        .collect();
+    let depths: Vec<usize> = (0..n).map(|_| r.below(20)).collect();
+    (members, ladder, depths)
+}
+
+fn random_sla(r: &mut Rng) -> Option<Sla> {
+    if r.f64() < 0.3 {
+        return None;
+    }
+    Some(Sla {
+        class: "c".into(),
+        max_latency: (r.f64() < 0.7).then(|| Duration::from_millis(r.below(400) as u64)),
+        min_speedup: (r.f64() < 0.7).then(|| 1.0 + r.f64() * 9.0),
+    })
+}
+
+#[test]
+fn prop_route_batch_singleton_degenerates_to_route() {
+    // A one-request "merge" must pick exactly the member the
+    // per-request policy picks (and is never refused), plus the bucket
+    // its own shape selects — the coalescing layer cannot change
+    // single-request semantics.
+    Prop::new(300).check_msg(
+        "route_batch singleton == route",
+        |r| {
+            let (members, ladder, depths) = random_routing(r);
+            let sla = random_sla(r);
+            let len = 1 + r.below(600);
+            let max_batch = 1 + r.below(16);
+            let pressure = if r.f64() < 0.5 { 0 } else { 1 + r.below(40) };
+            (members, ladder, depths, sla, len, max_batch, pressure)
+        },
+        |(members, ladder, depths, sla, len, max_batch, pressure)| {
+            let expect = route(sla.as_ref(), members, depths, *max_batch, *pressure);
+            let req = BatchReq { sla: sla.as_ref(), len: *len, waited: Duration::ZERO };
+            match route_batch(&[req], members, depths, ladder, *max_batch, *pressure) {
+                Some(br) => {
+                    if br.member != expect {
+                        return Err(format!("member {} != route's {expect}", br.member));
+                    }
+                    if br.bucket != ladder.bucket_for(1, *len) {
+                        return Err(format!("bucket {:?} mismatch", br.bucket));
+                    }
+                    Ok(())
+                }
+                None => Err("singleton refused".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_route_batch_merge_honors_every_constituent() {
+    // Whenever route_batch accepts a multi-request merge (pressure
+    // off), the chosen member must satisfy EVERY request: speedup
+    // floors hold, and pending backlog + the member's bucket-priced
+    // execution fits inside every remaining deadline. This re-derives
+    // the §9 decision rule independently of the implementation's loop.
+    Prop::new(300).check_msg(
+        "accepted merge satisfies all requests",
+        |r| {
+            let (members, ladder, depths) = random_routing(r);
+            let n_reqs = 2 + r.below(7);
+            let reqs: Vec<(Option<Sla>, usize, u64)> = (0..n_reqs)
+                .map(|_| (random_sla(r), 1 + r.below(600), r.below(50) as u64))
+                .collect();
+            (members, ladder, depths, reqs)
+        },
+        |(members, ladder, depths, reqs)| {
+            let breqs: Vec<BatchReq> = reqs
+                .iter()
+                .map(|(sla, len, waited_ms)| BatchReq {
+                    sla: sla.as_ref(),
+                    len: *len,
+                    waited: Duration::from_millis(*waited_ms),
+                })
+                .collect();
+            let max_batch = 8usize.max(breqs.len());
+            let Some(br) = route_batch(&breqs, members, depths, ladder, max_batch, 0) else {
+                return Ok(()); // refusals are always allowed
+            };
+            let m = &members[br.member];
+            let pending: f64 = members
+                .iter()
+                .zip(depths)
+                .map(|(mm, &d)| d.div_ceil(max_batch) as f64 * mm.est_batch_time)
+                .sum();
+            let exec = m.time_at(br.bucket);
+            for (sla, _, waited_ms) in reqs {
+                let Some(sla) = sla else { continue };
+                if let Some(min_s) = sla.min_speedup {
+                    if m.est_speedup + 1e-9 < min_s {
+                        return Err(format!("speedup floor {min_s} broken by {}", m.tag));
+                    }
+                }
+                if let Some(max_l) = sla.max_latency {
+                    let remaining =
+                        max_l.saturating_sub(Duration::from_millis(*waited_ms)).as_secs_f64();
+                    if pending + exec > remaining + 1e-12 {
+                        return Err(format!(
+                            "deadline broken: pending {pending} + exec {exec} > {remaining}"
+                        ));
+                    }
+                }
+            }
+            // and the bucket, when chosen, really covers the batch
+            if let Some((bb, bs)) = br.bucket {
+                let max_len = breqs.iter().map(|q| q.len).max().unwrap();
+                if bb < breqs.len() || bs < max_len {
+                    return Err(format!("bucket ({bb},{bs}) does not cover the batch"));
+                }
+            }
+            Ok(())
         },
     );
 }

@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Doc link/anchor checker for the ziplm repo (CI: `doc-links` step).
+
+Stdlib-only, in the spirit of rust/benches/mirror/check_regression.py:
+a small, dependency-free gate that keeps prose and code honest.
+
+Checks, over README.md / DESIGN.md / ROADMAP.md / CHANGES.md and the
+rustdoc comments under rust/src + examples:
+
+1. every relative markdown link `[text](path)` resolves to a file or
+   directory in the repo (absolute URLs are skipped);
+2. every `#anchor` used in a markdown link matches a real heading of
+   the target document (GitHub slugification);
+3. every `DESIGN.md §N` / standalone `§N` section reference — in the
+   markdown AND in rustdoc comments — names a section DESIGN.md
+   actually has, so doc comments can't cite sections that were never
+   written (or got renumbered away).
+
+Exit code 0 = clean, 1 = problems (each printed as `file: problem`).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MARKDOWN = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md", "PAPER.md"]
+RUST_DIRS = [REPO / "rust" / "src", REPO / "examples"]
+
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+SECTION_REF_RE = re.compile(r"§(\d+)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading → anchor slug (close enough for ours)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\s§\-]", "", slug, flags=re.UNICODE)
+    slug = slug.replace("§", "")
+    slug = re.sub(r"\s+", "-", slug.strip())
+    return slug
+
+
+def headings_of(path: Path) -> set:
+    slugs = set()
+    in_code = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            slugs.add(github_slug(m.group(2)))
+    return slugs
+
+
+def design_sections() -> set:
+    """The §N numbers DESIGN.md actually defines (## §N … headings)."""
+    out = set()
+    for line in (REPO / "DESIGN.md").read_text(encoding="utf-8").splitlines():
+        m = re.match(r"^##\s+§(\d+)\b", line)
+        if m:
+            out.add(int(m.group(1)))
+    return out
+
+
+def strip_code(md_text: str) -> str:
+    """Drop fenced code blocks and inline code spans before scanning."""
+    out, in_code = [], False
+    for line in md_text.splitlines():
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if not in_code:
+            out.append(re.sub(r"`[^`]*`", "", line))
+    return "\n".join(out)
+
+
+def check_markdown(problems: list) -> None:
+    sections = design_sections()
+    for name in MARKDOWN:
+        path = REPO / name
+        if not path.exists():
+            continue
+        text = strip_code(path.read_text(encoding="utf-8"))
+        for target in LINK_RE.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            if target:
+                dest = (path.parent / target).resolve()
+                if not dest.exists():
+                    problems.append(f"{name}: broken link target `{target}`")
+                    continue
+            else:
+                dest = path
+            if frag is not None and dest.suffix == ".md" and dest.is_file():
+                if github_slug(frag) not in headings_of(dest):
+                    problems.append(f"{name}: broken anchor `#{frag}` into {dest.name}")
+        for n in SECTION_REF_RE.findall(text):
+            if int(n) not in sections:
+                problems.append(f"{name}: references §{n}, which DESIGN.md does not define")
+
+
+def check_rustdoc(problems: list) -> None:
+    sections = design_sections()
+    for root in RUST_DIRS:
+        for path in sorted(root.rglob("*.rs")):
+            rel = path.relative_to(REPO)
+            for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+                stripped = line.strip()
+                if not (stripped.startswith("//!") or stripped.startswith("///")
+                        or stripped.startswith("//")):
+                    continue
+                for n in SECTION_REF_RE.findall(stripped):
+                    if int(n) not in sections:
+                        problems.append(
+                            f"{rel}:{i}: cites §{n}, which DESIGN.md does not define"
+                        )
+
+
+def main() -> int:
+    problems: list = []
+    check_markdown(problems)
+    check_rustdoc(problems)
+    if problems:
+        for p in problems:
+            print(f"FAIL {p}")
+        print(f"{len(problems)} doc link/anchor problem(s)")
+        return 1
+    print("doc links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
