@@ -12,6 +12,8 @@
 //!
 //!   cargo run --release --example e2e_pipeline
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 use anyhow::Result;
 use ziplm::coordinator::{self, ServerCfg};
 use ziplm::data;
@@ -87,7 +89,7 @@ fn main() -> Result<()> {
         lat.push(handle.infer(ex.ids.clone())?.latency.as_secs_f64());
     }
     let wall = t1.elapsed().as_secs_f64();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(|a, b| a.total_cmp(b));
     let stats = handle.shutdown()?;
     println!(
         "served 64 reqs in {wall:.2}s ({} batches): {:.1} req/s, p50 {:.1} ms",

@@ -6,6 +6,8 @@
 //!
 //!   cargo run --release --example gpt_regimes
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 use anyhow::Result;
 use ziplm::data;
 use ziplm::env::InferenceEnv;

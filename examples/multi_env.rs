@@ -16,6 +16,8 @@
 //! recomputation, (5) serve the CPU family with the env *loaded from
 //! its manifest* (no re-measuring) behind the SLA-aware coordinator.
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 use std::path::Path;
 use std::time::Duration;
 

@@ -10,6 +10,8 @@
 //! `BENCH_hotpath.json` at the repo root (flat `name → ns/iter`
 //! median; see util::bench::JsonReport) for cross-PR tracking.
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 use std::path::Path;
 
 use ziplm::runtime::{lit_f32_shaped, lit_scalar_i32, Engine};

@@ -5,6 +5,8 @@
 //!
 //!   cargo bench --bench bench_tables
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 use std::path::Path;
 
 use ziplm::exp::{self, ExpCtx};

@@ -62,7 +62,7 @@ pub fn magnitude_for_speedup(
             mags.push((l, false, j, m));
         }
     }
-    mags.sort_by(|a, b| a.3.partial_cmp(&b.3).unwrap());
+    mags.sort_by(|a, b| a.3.total_cmp(&b.3));
     let mut profile: Vec<(usize, usize)> =
         (0..minfo.n_layers).map(|_| (minfo.n_heads, minfo.d_ff)).collect();
     let mut k = 0;
@@ -155,7 +155,7 @@ pub fn fisher_oneshot(
             }
             let total: f64 = scores.iter().sum::<f64>().max(1e-12);
             let mut order: Vec<usize> = (0..n).collect();
-            order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+            order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
             let ladder: Vec<usize> = if is_attn {
                 (0..=n).rev().collect()
             } else {

@@ -1,0 +1,318 @@
+//! Chaos harness for the supervised fleet (DESIGN.md §10): a seeded
+//! trace-driven load generator plus a driver that submits the trace
+//! against a fault-injected [`fleet`](super::fleet) and audits the
+//! terminal outcomes.
+//!
+//! The harness closes the loop the fault layer opens: a
+//! [`crate::runtime::FaultPlan`] decides *where* faults strike, a
+//! [`TraceCfg`] decides *what load* arrives, and [`run_chaos`] checks
+//! the contract that must survive both — every submitted request gets
+//! exactly one terminal [`Outcome`] (`lost == 0`), and the shed /
+//! abandoned / replied counts balance against submissions. The same
+//! `(plan seed, trace seed)` pair replays the same campaign, which is
+//! what the CI chaos smoke job pins.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::family::Sla;
+use super::fleet::{self, FleetCfg, FleetMember, FleetStats, Outcome, ShedReason};
+use crate::env::InferenceEnv;
+use crate::runtime::FaultPlan;
+use crate::util::rng::Rng;
+
+/// One workload class in a trace: a weight and the SLA its requests
+/// carry (`None` bounds = best-effort traffic).
+#[derive(Clone, Debug)]
+pub struct TraceClass {
+    /// class label (lands in [`Sla::class`])
+    pub class: String,
+    /// sampling weight relative to the other classes
+    pub weight: f64,
+    /// admission latency bound for this class's requests
+    pub max_latency: Option<Duration>,
+    /// certified-speedup floor for this class's requests
+    pub min_speedup: Option<f64>,
+}
+
+impl TraceClass {
+    /// A best-effort class with no SLA bounds.
+    pub fn best_effort(weight: f64) -> TraceClass {
+        TraceClass { class: "best-effort".into(), weight, max_latency: None, min_speedup: None }
+    }
+}
+
+/// Seeded load-trace configuration.
+#[derive(Clone, Debug)]
+pub struct TraceCfg {
+    /// requests in the trace
+    pub requests: usize,
+    /// trace seed (independent of the fault-plan seed)
+    pub seed: u64,
+    /// wall gap between consecutive submissions (0 = burst)
+    pub arrival_gap: Duration,
+    /// inclusive token-length range of generated requests
+    pub len_range: (usize, usize),
+    /// workload classes (empty = all requests best-effort, no SLA)
+    pub classes: Vec<TraceClass>,
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        TraceCfg {
+            requests: 64,
+            seed: 0x7ace,
+            arrival_gap: Duration::ZERO,
+            len_range: (4, 32),
+            classes: Vec::new(),
+        }
+    }
+}
+
+/// One generated request: token ids + the SLA it carries.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    /// token ids
+    pub ids: Vec<i32>,
+    /// SLA (None = best-effort)
+    pub sla: Option<Sla>,
+}
+
+/// Generate the seeded request trace for `cfg` — pure in `cfg.seed`.
+pub fn gen_trace(cfg: &TraceCfg) -> Vec<TraceItem> {
+    let mut rng = Rng::new(cfg.seed ^ 0x7_ace_0f_1_0ad);
+    let (lo, hi) = cfg.len_range;
+    let lo = lo.max(1);
+    let hi = hi.max(lo);
+    let weights: Vec<f64> = cfg.classes.iter().map(|c| c.weight.max(0.0)).collect();
+    let any_weight = weights.iter().any(|&w| w > 0.0);
+    (0..cfg.requests)
+        .map(|_| {
+            let len = lo + rng.below(hi - lo + 1);
+            let ids: Vec<i32> = (0..len).map(|_| rng.below(30_000) as i32).collect();
+            let sla = if any_weight {
+                let c = &cfg.classes[rng.weighted(&weights)];
+                Some(Sla {
+                    class: c.class.clone(),
+                    max_latency: c.max_latency,
+                    min_speedup: c.min_speedup,
+                })
+            } else {
+                None
+            };
+            TraceItem { ids, sla }
+        })
+        .collect()
+}
+
+/// Outcome audit of one chaos campaign.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    /// requests submitted from the trace
+    pub submitted: usize,
+    /// requests that terminated `Replied`
+    pub replied: usize,
+    /// requests shed at admission
+    pub shed: usize,
+    /// requests abandoned (deadline or retry exhaustion)
+    pub abandoned: usize,
+    /// requests with NO terminal outcome — the invariant says 0;
+    /// anything else is a lost request and a bug
+    pub lost: usize,
+    /// replies that survived at least one re-dispatch
+    pub retried_replies: usize,
+    /// replies served while the fleet was degraded
+    pub degraded_replies: usize,
+    /// shed-reason breakdown `(queue_full, no_capacity, deadline)`
+    pub shed_reasons: (usize, usize, usize),
+    /// fleet stats at shutdown
+    pub stats: FleetStats,
+}
+
+impl ChaosReport {
+    /// Whether every submitted request reached exactly one terminal
+    /// outcome and the fleet's own accounting agrees.
+    pub fn balanced(&self) -> bool {
+        self.lost == 0
+            && self.replied + self.shed + self.abandoned == self.submitted
+            && self.stats.accounted() == self.stats.submitted
+    }
+}
+
+/// Run one chaos campaign: start a fleet under `plan`, submit the
+/// seeded trace, await a terminal [`Outcome`] for every request, shut
+/// down, and audit the books.
+pub fn run_chaos(
+    cfg: FleetCfg,
+    members: Vec<FleetMember>,
+    env: &InferenceEnv,
+    plan: FaultPlan,
+    trace: &TraceCfg,
+) -> Result<ChaosReport> {
+    let handle = fleet::start(cfg, members, env, plan)?;
+    let items = gen_trace(trace);
+    let mut receivers = Vec::with_capacity(items.len());
+    for item in items {
+        receivers.push(handle.submit(item.ids, item.sla)?);
+        if trace.arrival_gap > Duration::ZERO {
+            std::thread::sleep(trace.arrival_gap);
+        }
+    }
+    let mut report = ChaosReport { submitted: receivers.len(), ..ChaosReport::default() };
+    for rx in receivers {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Outcome::Replied(r)) => {
+                report.replied += 1;
+                if r.attempts > 0 {
+                    report.retried_replies += 1;
+                }
+                if r.degraded {
+                    report.degraded_replies += 1;
+                }
+            }
+            Ok(Outcome::Shed(reason)) => {
+                report.shed += 1;
+                match reason {
+                    ShedReason::QueueFull => report.shed_reasons.0 += 1,
+                    ShedReason::NoCapacity => report.shed_reasons.1 += 1,
+                    ShedReason::DeadlineUnmeetable => report.shed_reasons.2 += 1,
+                }
+            }
+            Ok(Outcome::Abandoned { .. }) => report.abandoned += 1,
+            // a dropped or never-resolved receiver IS the lost-request
+            // bug this harness exists to catch
+            Err(_) => report.lost += 1,
+        }
+    }
+    report.stats = handle.shutdown()?;
+    Ok(report)
+}
+
+/// Render a one-screen chaos summary (the fleet example and the `chaos`
+/// experiment both print this).
+pub fn render_report(r: &ChaosReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "chaos: {} submitted → {} replied / {} shed / {} abandoned / {} LOST\n",
+        r.submitted, r.replied, r.shed, r.abandoned, r.lost
+    ));
+    out.push_str(&format!(
+        "  shed reasons: queue-full {} / no-capacity {} / deadline {}\n",
+        r.shed_reasons.0, r.shed_reasons.1, r.shed_reasons.2
+    ));
+    out.push_str(&format!(
+        "  faults: {} crashes, {} restarts, {} compile failures, {} retries ({} replies survived a retry)\n",
+        r.stats.crashes, r.stats.restarts, r.stats.compile_failures, r.stats.retries, r.retried_replies
+    ));
+    out.push_str(&format!(
+        "  tails (priced exec s): normal p50 {:.4} p99 {:.4} (n={}) | degraded p50 {:.4} p99 {:.4} (n={})\n",
+        r.stats.tails.normal_p50,
+        r.stats.tails.normal_p99,
+        r.stats.tails.normal_n,
+        r.stats.tails.degraded_p50,
+        r.stats.tails.degraded_p99,
+        r.stats.tails.degraded_n
+    ));
+    for w in &r.stats.per_worker {
+        out.push_str(&format!(
+            "  w{}: inc {} served {} crashes {} restarts {}{} | shard builds {} hits {}\n",
+            w.worker,
+            w.incarnation,
+            w.served,
+            w.crashes,
+            w.restarts,
+            if w.quarantined { " QUARANTINED" } else { "" },
+            w.builds,
+            w.hits
+        ));
+    }
+    out
+}
+
+/// Convenience: assert the no-lost-request invariant, returning the
+/// report on success (the chaos smoke job's single call).
+pub fn run_chaos_checked(
+    cfg: FleetCfg,
+    members: Vec<FleetMember>,
+    env: &InferenceEnv,
+    plan: FaultPlan,
+    trace: &TraceCfg,
+) -> Result<ChaosReport> {
+    let report = run_chaos(cfg, members, env, plan, trace)?;
+    if !report.balanced() {
+        return Err(anyhow!(
+            "chaos invariant violated: submitted {} != replied {} + shed {} + abandoned {} (lost {})",
+            report.submitted,
+            report.replied,
+            report.shed,
+            report.abandoned,
+            report.lost
+        ));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_seeded_and_respects_bounds() {
+        let cfg = TraceCfg {
+            requests: 50,
+            seed: 42,
+            len_range: (3, 9),
+            classes: vec![
+                TraceClass::best_effort(1.0),
+                TraceClass {
+                    class: "rt".into(),
+                    weight: 2.0,
+                    max_latency: Some(Duration::from_millis(50)),
+                    min_speedup: None,
+                },
+            ],
+            ..TraceCfg::default()
+        };
+        let a = gen_trace(&cfg);
+        let b = gen_trace(&cfg);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ids, y.ids, "trace must replay bit-identically");
+            assert_eq!(
+                x.sla.as_ref().map(|s| s.class.clone()),
+                y.sla.as_ref().map(|s| s.class.clone())
+            );
+            assert!(x.ids.len() >= 3 && x.ids.len() <= 9);
+            assert!(x.sla.is_some(), "weighted classes always assign an SLA");
+        }
+        let mut other = cfg.clone();
+        other.seed = 43;
+        assert!(
+            gen_trace(&other).iter().zip(&a).any(|(x, y)| x.ids != y.ids),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn empty_classes_mean_best_effort() {
+        let cfg = TraceCfg { requests: 8, classes: Vec::new(), ..TraceCfg::default() };
+        assert!(gen_trace(&cfg).iter().all(|t| t.sla.is_none()));
+    }
+
+    #[test]
+    fn report_balance_detects_loss() {
+        let mut r = ChaosReport { submitted: 4, replied: 2, shed: 1, abandoned: 1, ..Default::default() };
+        r.stats.submitted = 4;
+        r.stats.replied = 2;
+        r.stats.shed = 1;
+        r.stats.abandoned = 1;
+        assert!(r.balanced());
+        r.lost = 1;
+        assert!(!r.balanced());
+        r.lost = 0;
+        r.replied = 1;
+        assert!(!r.balanced());
+    }
+}

@@ -456,7 +456,9 @@ pub fn aggregate_buckets(samples: &[BucketSample]) -> Vec<BucketStats> {
     }
     by.into_iter()
         .map(|((member, batch, seq, specialized), (mut execs, requests, certified))| {
-            execs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: a NaN exec sample sorts to the end instead of
+            // panicking the worker (ISSUE 6 — fault-injected NaNs)
+            execs.sort_by(|a, b| a.total_cmp(b));
             BucketStats {
                 member,
                 batch,
@@ -580,12 +582,12 @@ pub fn start(
         };
         specs.push(MemberSpec { tag, state, route });
     }
-    specs.sort_by(|a, b| a.route.est_speedup.partial_cmp(&b.route.est_speedup).unwrap());
+    specs.sort_by(|a, b| a.route.est_speedup.total_cmp(&b.route.est_speedup));
     let (tx, rx) = mpsc::channel::<FamilyRequest>();
     let worker = std::thread::Builder::new()
         .name("ziplm-family".into())
         .spawn(move || serve_family_loop(cfg, specs, rx))
-        .expect("spawn family server");
+        .map_err(|e| anyhow!("spawn family server: {e}"))?;
     Ok(FamilyHandle { tx: Some(tx), worker: Some(worker) })
 }
 
@@ -771,7 +773,10 @@ fn serve_family_loop(
                     .collect();
                 let mut batch = Vec::with_capacity(picked.len());
                 for &(qi, _) in &picked {
-                    batch.push(drained[qi].pop_front().expect("picked request drained"));
+                    let r = drained[qi]
+                        .pop_front()
+                        .ok_or_else(|| anyhow!("picked request missing from drained queue"))?;
+                    batch.push(r);
                 }
                 (br.member, batch, br.bucket)
             }
@@ -949,7 +954,8 @@ pub fn summarize(rows: &[WorkRow]) -> Vec<ClassReport> {
         by.entry(r.class.as_str()).or_default().push(r);
     }
     let pctiles = |lats: &mut Vec<f64>| -> (Duration, Duration) {
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // NaN-tolerant: a poisoned latency sample sorts last, never panics
+        lats.sort_by(|a, b| a.total_cmp(b));
         (
             Duration::from_secs_f64(percentile(lats, 0.50)),
             Duration::from_secs_f64(percentile(lats, 0.99)),
@@ -985,7 +991,8 @@ pub fn summarize(rows: &[WorkRow]) -> Vec<ClassReport> {
 }
 
 /// Nearest-rank percentile of an ascending-sorted slice (q in [0, 1]).
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+/// Shared with the fleet coordinator's tail-latency stats.
+pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
@@ -994,6 +1001,7 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::runtime::{ArtifactKey, CompileCache};

@@ -21,8 +21,16 @@
 //! per-request SLA routing and per-variant batch queues (DESIGN.md §6),
 //! plus shape-specialized executables and cross-SLA batch coalescing
 //! for realized — not just certified — speedups (DESIGN.md §9).
+//!
+//! The [`fleet`] submodule splits the family loop into a supervised
+//! N-worker fleet with an explicit Replied/Shed/Abandoned request
+//! lifecycle, bounded retry of work lost to worker crashes, and
+//! supervisor-driven restart + cache-shard re-warm (DESIGN.md §10);
+//! [`chaos`] is its deterministic fault-injection harness.
 
+pub mod chaos;
 pub mod family;
+pub mod fleet;
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -115,13 +123,13 @@ impl ServerHandle {
 }
 
 /// Start the serving worker for a (masked) checkpoint.
-pub fn start(cfg: ServerCfg, state: ModelState) -> ServerHandle {
+pub fn start(cfg: ServerCfg, state: ModelState) -> Result<ServerHandle> {
     let (tx, rx) = mpsc::channel::<Request>();
     let worker = std::thread::Builder::new()
         .name("ziplm-server".into())
         .spawn(move || serve_loop(cfg, state, rx))
-        .expect("spawn server");
-    ServerHandle { tx: Some(tx), worker: Some(worker) }
+        .map_err(|e| anyhow!("spawn server: {e}"))?;
+    Ok(ServerHandle { tx: Some(tx), worker: Some(worker) })
 }
 
 /// Pad per-request token ids into one flat `[graph_b, seq_len]` id
@@ -152,7 +160,11 @@ fn serve_loop(cfg: ServerCfg, state: ModelState, rx: mpsc::Receiver<Request>) ->
     let (hm, fm) = mask_literals(&state)?;
     let params = lit_f32_shaped(&[tinfo.n_params], &state.params)?;
     let n_out: usize = {
-        let a = engine.manifest.artifacts.get(&art).unwrap();
+        let a = engine
+            .manifest
+            .artifacts
+            .get(&art)
+            .ok_or_else(|| anyhow!("missing fwd artifact {art}"))?;
         a.outputs[0].shape.iter().product::<usize>() / graph_b
     };
     let mut stats = ServerStats::default();
@@ -201,6 +213,7 @@ fn serve_loop(cfg: ServerCfg, state: ModelState, rx: mpsc::Receiver<Request>) ->
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     // The serving loop needs real artifacts; covered by
     // rust/tests/integration_pipeline.rs. Here we only test pure logic.

@@ -77,7 +77,7 @@ impl Zipf {
 
     fn sample(&self, rng: &mut Rng) -> usize {
         let t = rng.f64() * self.cdf.last().unwrap();
-        match self.cdf.binary_search_by(|x| x.partial_cmp(&t).unwrap()) {
+        match self.cdf.binary_search_by(|x| x.total_cmp(&t)) {
             Ok(i) | Err(i) => i.min(self.cdf.len() - 1),
         }
     }

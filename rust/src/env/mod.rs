@@ -232,6 +232,29 @@ impl InferenceEnv {
         self
     }
 
+    /// A copy of this env with every priced time scaled by `skew` —
+    /// the per-device latency skew of one fleet worker (DESIGN.md §10):
+    /// `skew > 1.0` is a slower device, `< 1.0` a faster one. Relative
+    /// pricing (speedups, routing order) is unchanged because attn,
+    /// mlp and overhead all scale together; only absolute batch-time
+    /// estimates move. Non-finite or non-positive skews are ignored
+    /// (returns an unmodified copy) so a corrupt fleet spec degrades
+    /// to homogeneous pricing instead of poisoning admission.
+    pub fn with_device_skew(&self, skew: f64) -> InferenceEnv {
+        let mut env = self.clone();
+        if !skew.is_finite() || skew <= 0.0 || skew == 1.0 {
+            return env;
+        }
+        for t in &mut env.table.attn {
+            *t *= skew;
+        }
+        for (_, t) in &mut env.table.mlp {
+            *t *= skew;
+        }
+        env.table.overhead *= skew;
+        env
+    }
+
     /// Attach a seq-length sweep: `(padded seq, relative cost scale)`
     /// rows, scale `1.0` meaning "costs exactly like the anchor seq".
     /// Rows are sorted ascending and non-positive seqs dropped; an
@@ -484,6 +507,25 @@ mod tests {
         assert_eq!(env.batch_shape(), (128, 128));
         // shrinking the MLP must speed the block up
         assert!(CostModel::mlp_time(&env, 33) < CostModel::mlp_time(&env, 3072));
+    }
+
+    #[test]
+    fn device_skew_scales_absolute_times_not_speedups() {
+        let env = InferenceEnv::measured(table()).unwrap().with_batch_shape(8, 128);
+        let slow = env.with_device_skew(1.5);
+        let profile = vec![(2usize, 256usize), (4, 512)];
+        let t = env.model_time(&profile);
+        assert!((slow.model_time(&profile) - 1.5 * t).abs() < 1e-12);
+        assert!((slow.batch_time(&profile, 16, 128) - 1.5 * env.batch_time(&profile, 16, 128))
+            .abs()
+            < 1e-12);
+        // relative pricing unchanged: routing order survives skew
+        assert!((slow.speedup(&profile) - env.speedup(&profile)).abs() < 1e-12);
+        // degenerate skews are ignored
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -2.0] {
+            assert_eq!(env.with_device_skew(bad), env);
+        }
+        assert_eq!(env.with_device_skew(1.0), env);
     }
 
     #[test]

@@ -73,7 +73,7 @@ fn eval_argmax(
             let pred = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(j, _)| j)
                 .unwrap_or(0);
             if pred == label as usize {

@@ -1059,6 +1059,118 @@ pub fn multienv(ctx: &ExpCtx) -> Result<()> {
     )
 }
 
+// ===================================================================
+// chaos: supervised-fleet serving under injected faults (DESIGN §10)
+// ===================================================================
+
+/// Chaos experiment: run the seeded fault-injection campaign against a
+/// simulated fleet serving a synthetic family derived from the model's
+/// own anatomy, and record the outcome audit. Engine-light — pricing
+/// comes from the analytic GPU env, no PJRT execution happens — so the
+/// request-lifecycle invariant (`lost == 0`, replied + shed +
+/// abandoned == submitted) is checked exactly, not sampled.
+pub fn chaos(ctx: &ExpCtx) -> Result<()> {
+    use crate::coordinator::chaos::{run_chaos_checked, TraceCfg, TraceClass};
+    use crate::coordinator::family::BucketLadder;
+    use crate::coordinator::fleet::{FleetCfg, FleetMember};
+    use crate::runtime::{FaultPlan, FaultRates};
+
+    let model = "bert-syn-base";
+    let m = ctx.engine.manifest.model(model);
+    let env = analytic_gpu_env(m, Regime::Throughput);
+    // synthetic family anatomy from the model's own dims: dense plus
+    // progressively narrower members down the FFN ladder
+    let (dh, df) = env.dense_profile();
+    let members: Vec<FleetMember> = [(1usize, 1usize), (2, 2), (4, 4)]
+        .iter()
+        .enumerate()
+        .map(|(i, &(hdiv, fdiv))| FleetMember {
+            tag: if i == 0 { "dense".into() } else { format!("{}x", 1 << i) },
+            profile: vec![((dh / hdiv).max(1), (df / fdiv).max(1)); m.n_layers],
+        })
+        .collect();
+    let requests = if ctx.fast { 96 } else { 256 };
+    let cfg = FleetCfg {
+        workers: 3,
+        skews: vec![1.0, 1.25, 0.9],
+        buckets: BucketLadder::new(env.bucket_ladder()),
+        ..FleetCfg::default()
+    };
+    let rates = FaultRates {
+        crash: 0.05,
+        compile_fail: 0.1,
+        slowdown: 0.1,
+        slowdown_factor: 3.0,
+        nan_latency: 0.02,
+    };
+    let trace = TraceCfg {
+        requests,
+        seed: 0xC0FFEE,
+        arrival_gap: std::time::Duration::from_micros(50),
+        len_range: (4, 32),
+        classes: vec![
+            TraceClass::best_effort(2.0),
+            TraceClass {
+                class: "realtime".into(),
+                weight: 1.0,
+                max_latency: Some(std::time::Duration::from_secs_f64(
+                    env.dense_time(m.n_layers) * 0.8,
+                )),
+                min_speedup: None,
+            },
+            TraceClass {
+                class: "throughput".into(),
+                weight: 1.0,
+                max_latency: None,
+                min_speedup: Some(2.0),
+            },
+        ],
+    };
+    // faulty campaign + a fault-free control at the same trace seed
+    let faulty = run_chaos_checked(
+        cfg.clone(),
+        members.clone(),
+        &env,
+        FaultPlan::seeded(0xDECAF, rates),
+        &trace,
+    )?;
+    let control = run_chaos_checked(cfg, members, &env, FaultPlan::none(), &trace)?;
+    println!("[chaos] faulty:\n{}", crate::coordinator::chaos::render_report(&faulty));
+    println!("[chaos] control:\n{}", crate::coordinator::chaos::render_report(&control));
+    // the control must show zero failure-path activity; admission may
+    // still shed under transient backlog (that is admission control
+    // working, not a fault), so shed stays a reported, legal outcome
+    if control.stats.crashes != 0 || control.retried_replies != 0 {
+        return Err(anyhow!(
+            "fault-free control hit the failure path: {} crashes, {} retried replies",
+            control.stats.crashes,
+            control.retried_replies
+        ));
+    }
+    let audit = |r: &crate::coordinator::chaos::ChaosReport| {
+        Json::obj(vec![
+            ("submitted", Json::Num(r.submitted as f64)),
+            ("replied", Json::Num(r.replied as f64)),
+            ("shed", Json::Num(r.shed as f64)),
+            ("abandoned", Json::Num(r.abandoned as f64)),
+            ("lost", Json::Num(r.lost as f64)),
+            ("retried_replies", Json::Num(r.retried_replies as f64)),
+            ("degraded_replies", Json::Num(r.degraded_replies as f64)),
+            ("crashes", Json::Num(r.stats.crashes as f64)),
+            ("restarts", Json::Num(r.stats.restarts as f64)),
+            ("compile_failures", Json::Num(r.stats.compile_failures as f64)),
+            ("normal_p50", Json::Num(r.stats.tails.normal_p50)),
+            ("normal_p99", Json::Num(r.stats.tails.normal_p99)),
+            ("degraded_p50", Json::Num(r.stats.tails.degraded_p50)),
+            ("degraded_p99", Json::Num(r.stats.tails.degraded_p99)),
+        ])
+    };
+    ctx.write_result(
+        "chaos",
+        &Json::obj(vec![("faulty", audit(&faulty)), ("control", audit(&control))]),
+    )
+}
+
 /// One experiment driver.
 pub type Driver = fn(&ExpCtx) -> Result<()>;
 
@@ -1083,6 +1195,7 @@ pub const EXPERIMENTS: &[(&str, Driver)] = &[
     ("fig8", fig8),
     ("family", family),
     ("multienv", multienv),
+    ("chaos", chaos),
 ];
 
 /// Every experiment id [`run`] accepts, besides the `all` meta-id.

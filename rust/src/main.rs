@@ -8,7 +8,8 @@
 //!   eval           --ckpt path [--split dev|test]
 //!   serve          --ckpt path [--batch B] [--wait-ms W]
 //!   serve-family   --family runs/family_M_T/family.json [--requests N] [--pressure P]
-//!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|multienv|all> [--fast]
+//!   serve-fleet    --family runs/family_M_T/family.json [--workers N] [--crash P] [--seed S]
+//!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|multienv|chaos|all> [--fast]
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --fast.
 //!
@@ -51,7 +52,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "ziplm — inference-aware structured pruning (NeurIPS'23 reproduction)\n\
-         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|experiment> [flags]\n\
+         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|serve-fleet|experiment> [flags]\n\
          see README.md for the full flag reference"
     );
 }
@@ -69,6 +70,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "eval" => eval_cmd(args),
         "serve" => serve(args),
         "serve-family" => serve_family(args),
+        "serve-fleet" => serve_fleet(args),
         "experiment" => experiment(args),
         _ => {
             usage();
@@ -211,7 +213,7 @@ fn serve(args: &Args) -> Result<()> {
     let info = engine.manifest.model(&model);
     let ds = data::load_sized(info, &task, 256, n.max(32));
     drop(engine);
-    let handle = coordinator::start(cfg, st);
+    let handle = coordinator::start(cfg, st)?;
     let t0 = std::time::Instant::now();
     let mut latencies = Vec::new();
     for ex in ds.dev.iter().take(n) {
@@ -219,7 +221,7 @@ fn serve(args: &Args) -> Result<()> {
         latencies.push(reply.latency.as_secs_f64());
     }
     let wall = t0.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(|a, b| a.total_cmp(b));
     let stats = handle.shutdown()?;
     println!(
         "served {n} requests ({} batches) in {wall:.2}s → {:.1} req/s, p50 {:.1}ms p95 {:.1}ms",
@@ -324,6 +326,105 @@ fn serve_family(args: &Args) -> Result<()> {
         stats.cache_hits,
         stats.per_member
     );
+    Ok(())
+}
+
+/// Serve a recorded family on the supervised simulated fleet under an
+/// optional fault plan (DESIGN.md §10). Engine-free: members are priced
+/// through the manifest's embedded certification env, so this runs
+/// without artifacts — it is the CLI face of the chaos harness.
+fn serve_fleet(args: &Args) -> Result<()> {
+    use ziplm::coordinator::chaos::{self, TraceCfg, TraceClass};
+    use ziplm::coordinator::family::BucketLadder;
+    use ziplm::coordinator::fleet::{FleetCfg, FleetMember, RetryPolicy};
+    use ziplm::runtime::{FaultPlan, FaultRates};
+
+    let man_path = args
+        .get("family")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("runs/family_bert-syn-base_sst2-syn/family.json"));
+    let fam = ziplm::models::family::FamilyManifest::load(&man_path)?;
+    let env = fam.env.clone().ok_or_else(|| {
+        anyhow!(
+            "manifest `{}` has no embedded env; serve-fleet is engine-free and \
+             cannot measure one — re-run prune-gradual (or `experiment family`) \
+             to emit a manifest with an env",
+            man_path.display()
+        )
+    })?;
+    let spec = fam.fleet.clone().unwrap_or_default();
+    let workers = args.usize_or("workers", spec.workers.max(2));
+    let cfg = FleetCfg {
+        workers,
+        skews: spec.skews,
+        max_batch: args.usize_or("batch", 8),
+        max_wait: std::time::Duration::from_millis(args.u64_or("wait-ms", 1)),
+        queue_cap: args.usize_or("queue-cap", 64),
+        retry: RetryPolicy {
+            max_retries: args.usize_or("retries", 2) as u32,
+            ..RetryPolicy::default()
+        },
+        buckets: BucketLadder::new(fam.buckets.clone()),
+        ..FleetCfg::default()
+    };
+    let members: Vec<FleetMember> = fam
+        .members
+        .iter()
+        .map(|m| FleetMember { tag: m.tag.clone(), profile: m.profile.clone() })
+        .collect();
+    println!(
+        "fleet {}/{}: {} workers × {} members {:?}",
+        fam.model,
+        fam.task,
+        workers,
+        members.len(),
+        fam.members.iter().map(|m| m.tag.as_str()).collect::<Vec<_>>()
+    );
+    let rates = FaultRates {
+        crash: args.f64_or("crash", 0.0),
+        compile_fail: args.f64_or("compile-fail", 0.0),
+        slowdown: args.f64_or("slowdown", 0.0),
+        slowdown_factor: args.f64_or("slowdown-factor", 3.0),
+        nan_latency: 0.0,
+    };
+    let plan = FaultPlan::seeded(args.u64_or("seed", 0xC0FFEE), rates);
+    let n_layers = members.first().map(|m| m.profile.len()).unwrap_or(1);
+    let bound = std::time::Duration::from_secs_f64(env.dense_time(n_layers) * 0.8);
+    let min_speedup = fam
+        .members
+        .iter()
+        .map(|m| m.est_speedup)
+        .fold(1.0f64, f64::max)
+        .min(2.0);
+    let trace = TraceCfg {
+        requests: args.usize_or("requests", 128),
+        seed: args.u64_or("trace-seed", 7),
+        arrival_gap: std::time::Duration::from_micros(args.u64_or("gap-us", 50)),
+        len_range: (4, 32),
+        classes: vec![
+            TraceClass::best_effort(2.0),
+            TraceClass {
+                class: "realtime".into(),
+                weight: 1.0,
+                max_latency: Some(bound),
+                min_speedup: None,
+            },
+            TraceClass {
+                class: "throughput".into(),
+                weight: 1.0,
+                max_latency: None,
+                min_speedup: Some(min_speedup),
+            },
+        ],
+    };
+    let report = chaos::run_chaos(cfg, members, &env, plan, &trace)?;
+    print!("{}", chaos::render_report(&report));
+    if !report.balanced() {
+        return Err(anyhow!(
+            "request accounting does not balance ({} lost)",
+            report.lost
+        ));
+    }
     Ok(())
 }
 

@@ -33,6 +33,17 @@ pub struct FamilyMember {
     pub profile: Vec<(usize, usize)>,
 }
 
+/// Optional fleet topology a family was certified to serve under
+/// (DESIGN.md §10): worker count and per-worker device-latency skews
+/// for `coordinator::fleet`. Absent for single-worker manifests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FleetSpec {
+    /// number of fleet workers (simulated devices)
+    pub workers: usize,
+    /// per-worker latency skew (missing entries default to 1.0)
+    pub skews: Vec<f64>,
+}
+
 /// The full family for one (model, task, latency regime).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct FamilyManifest {
@@ -54,6 +65,9 @@ pub struct FamilyManifest {
     /// and specialized executables with. Empty for manifests written
     /// before shape-specialized serving existed (generic-only).
     pub buckets: Vec<(usize, usize)>,
+    /// fleet topology to serve the family under (`serve-fleet`);
+    /// `None` = classic single-worker serving
+    pub fleet: Option<FleetSpec>,
     /// members ordered by ascending `est_speedup` (dense first)
     pub members: Vec<FamilyMember>,
 }
@@ -67,6 +81,7 @@ impl FamilyManifest {
             regime: regime.to_string(),
             env: None,
             buckets: Vec::new(),
+            fleet: None,
             members: Vec::new(),
         }
     }
@@ -116,6 +131,18 @@ impl FamilyManifest {
                         })
                         .collect(),
                 ),
+            ));
+        }
+        if let Some(fl) = &self.fleet {
+            pairs.push((
+                "fleet",
+                Json::obj(vec![
+                    ("workers", Json::Num(fl.workers as f64)),
+                    (
+                        "skews",
+                        Json::Arr(fl.skews.iter().map(|&s| Json::Num(s)).collect()),
+                    ),
+                ]),
             ));
         }
         pairs.push((
@@ -168,6 +195,16 @@ impl FamilyManifest {
             .iter()
             .filter_map(|e| Some((e.idx(0)?.as_usize()?, e.idx(1)?.as_usize()?)))
             .collect();
+        out.fleet = j.get("fleet").map(|f| FleetSpec {
+            workers: f.get("workers").and_then(Json::as_usize).unwrap_or(1).max(1),
+            skews: f
+                .get("skews")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect(),
+        });
         for m in j.get("members").and_then(Json::as_arr).unwrap_or(&[]) {
             let profile = m
                 .get("profile")
@@ -294,6 +331,26 @@ mod tests {
         )
         .unwrap();
         assert_eq!(f, f3);
+    }
+
+    #[test]
+    fn json_roundtrip_with_fleet_spec() {
+        let mut f = FamilyManifest::new("bert-syn-base", "sst2-syn", "throughput");
+        f.fleet = Some(FleetSpec { workers: 3, skews: vec![1.0, 1.3, 0.9] });
+        f.push(member("dense", 1.0));
+        let j = f.to_json();
+        let f2 = FamilyManifest::from_json(&j).unwrap();
+        assert_eq!(f, f2);
+        // through text too (serve-fleet goes through the parser)
+        let f3 = FamilyManifest::from_json(
+            &crate::util::json::Json::parse(&j.to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f, f3);
+        // no fleet recorded → no key; absent key parses as None
+        let plain = FamilyManifest::new("m", "t", "throughput");
+        assert!(plain.to_json().get("fleet").is_none());
+        assert!(FamilyManifest::from_json(&plain.to_json()).unwrap().fleet.is_none());
     }
 
     #[test]

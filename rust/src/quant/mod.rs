@@ -65,7 +65,7 @@ pub fn unstructured_magnitude(state: &mut ModelState, tinfo: &TaskInfo, sparsity
         }
     }
     let kill = ((idx.len() as f64) * sparsity) as usize;
-    idx.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    idx.sort_by(|a, b| a.1.total_cmp(&b.1));
     for &(i, _) in idx.iter().take(kill) {
         state.params[i] = 0.0;
     }

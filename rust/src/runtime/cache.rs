@@ -30,9 +30,19 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use anyhow::Result;
+
+/// Lock a cache-internal mutex, recovering from poisoning. A builder
+/// closure that panics unwinds *between* map operations (HashMap
+/// lookups/inserts are not left half-applied), so the data under a
+/// poisoned lock is still consistent — and the fleet supervisor
+/// (DESIGN.md §10) requires that one crashed worker can never wedge
+/// the shard a sibling or its own restarted incarnation still probes.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Cache key for a compiled executable: which graph, at which shape.
 ///
@@ -101,29 +111,29 @@ impl<V> CompileCache<V> {
     where
         F: FnOnce() -> Result<V>,
     {
-        if let Some(v) = self.entries.lock().unwrap().get(key) {
+        if let Some(v) = relock(&self.entries).get(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(v));
         }
         let gate = {
-            let mut inflight = self.inflight.lock().unwrap();
+            let mut inflight = relock(&self.inflight);
             Arc::clone(inflight.entry(key.to_string()).or_default())
         };
-        let _building = gate.lock().unwrap();
+        let _building = relock(&gate);
         // re-check under the gate: a racing caller may have finished
-        if let Some(v) = self.entries.lock().unwrap().get(key) {
+        if let Some(v) = relock(&self.entries).get(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(v));
         }
         let v = Arc::new(build()?);
         self.builds.fetch_add(1, Ordering::Relaxed);
-        self.entries.lock().unwrap().insert(key.to_string(), Arc::clone(&v));
+        relock(&self.entries).insert(key.to_string(), Arc::clone(&v));
         Ok(v)
     }
 
     /// Cached value for `key`, if present (counts as a hit).
     pub fn get(&self, key: &str) -> Option<Arc<V>> {
-        let v = self.entries.lock().unwrap().get(key).map(Arc::clone);
+        let v = relock(&self.entries).get(key).map(Arc::clone);
         if v.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -137,18 +147,18 @@ impl<V> CompileCache<V> {
     /// probing must not distort the build/hit counters the serving
     /// stats report.
     pub fn contains(&self, key: &str) -> bool {
-        self.entries.lock().unwrap().contains_key(key)
+        relock(&self.entries).contains_key(key)
     }
 
     /// Drop a cached value (memory control for block sweeps). Returns
     /// whether an entry was removed. Outstanding `Arc`s stay valid.
     pub fn evict(&self, key: &str) -> bool {
-        self.entries.lock().unwrap().remove(key).is_some()
+        relock(&self.entries).remove(key).is_some()
     }
 
     /// Number of cached values.
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        relock(&self.entries).len()
     }
 
     /// Whether the cache holds no values.
@@ -173,7 +183,69 @@ impl<V> Default for CompileCache<V> {
     }
 }
 
+/// Per-worker [`CompileCache`] shards for the serving fleet
+/// (DESIGN.md §10).
+///
+/// Each fleet worker owns one shard: the executables a (simulated)
+/// device process compiled live and die with that process, so a worker
+/// crash retires its shard wholesale — [`CacheShards::replace`] swaps
+/// in a fresh one for the restarted incarnation and returns the
+/// retired shard for post-mortem counter inspection. Shards are
+/// handed to workers as `Arc`s; the supervisor keeps this registry so
+/// fleet-wide build/hit totals stay one call away.
+///
+/// The per-incarnation invariant the fleet tests assert lives here:
+/// a fresh shard's `builds()` equals the number of distinct
+/// (member, bucket) pairs the restarted worker re-serves, because
+/// demand re-warming compiles each pair exactly once.
+pub struct CacheShards<V> {
+    shards: Vec<Arc<CompileCache<V>>>,
+}
+
+impl<V> CacheShards<V> {
+    /// `n` empty shards (at least one).
+    pub fn new(n: usize) -> CacheShards<V> {
+        CacheShards { shards: (0..n.max(1)).map(|_| Arc::new(CompileCache::new())).collect() }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Always false: `new` guarantees ≥ 1 shard.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Shard `i` (indices wrap, so a worker id is always a valid
+    /// shard id and lookup can never panic).
+    pub fn shard(&self, i: usize) -> Arc<CompileCache<V>> {
+        Arc::clone(&self.shards[i % self.shards.len()])
+    }
+
+    /// Retire shard `i` (crashed worker) and install a fresh, empty
+    /// one for the next incarnation. Returns the retired shard;
+    /// outstanding `Arc`s into it stay valid but no new work lands
+    /// there.
+    pub fn replace(&mut self, i: usize) -> Arc<CompileCache<V>> {
+        let n = self.shards.len();
+        std::mem::replace(&mut self.shards[i % n], Arc::new(CompileCache::new()))
+    }
+
+    /// Fleet-wide builder completions (sum over live shards).
+    pub fn builds(&self) -> usize {
+        self.shards.iter().map(|s| s.builds()).sum()
+    }
+
+    /// Fleet-wide cache hits (sum over live shards).
+    pub fn hits(&self) -> usize {
+        self.shards.iter().map(|s| s.hits()).sum()
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 
@@ -294,5 +366,163 @@ mod tests {
         // rebuilt after eviction
         cache.get_or_build("b", || Ok(9)).unwrap();
         assert_eq!(cache.builds(), 4);
+    }
+
+    #[test]
+    fn panicking_builder_does_not_poison_the_cache() {
+        // A worker that dies mid-compile must not wedge the shard for
+        // siblings or its restarted incarnation (DESIGN.md §10): the
+        // next caller recovers the lock and builds normally.
+        let cache = Arc::new(CompileCache::<u32>::new());
+        let c2 = Arc::clone(&cache);
+        let died = std::thread::spawn(move || {
+            let _ = c2.get_or_build("k", || -> Result<u32> { panic!("compile crashed") });
+        })
+        .join();
+        assert!(died.is_err(), "builder panic must surface in its own thread");
+        let v = cache.get_or_build("k", || Ok(5)).unwrap();
+        assert_eq!(*v, 5);
+        assert_eq!(cache.builds(), 1);
+        assert!(cache.contains("k"));
+    }
+
+    // ---- fleet-shard coverage (ISSUE 6 satellite): CompileCache under
+    // injected compile failures, contention across shards, and seeded
+    // FaultPlan replay
+
+    use crate::runtime::fault::{FaultPlan, FaultRates};
+
+    fn faulty_rates() -> FaultRates {
+        FaultRates { compile_fail: 0.5, ..Default::default() }
+    }
+
+    /// Outcome alphabet for the replay test: what one scripted cache
+    /// query did, including the per-pair quarantine the coordinator
+    /// escalates from (PR 5 → DESIGN.md §10).
+    #[derive(Debug, PartialEq, Eq, Clone)]
+    enum Seen {
+        Built,
+        Hit,
+        Failed,
+        Quarantined,
+    }
+
+    /// Drive one shard through a scripted key sequence, compile
+    /// failures injected from a [`FaultPlan`] stream; failed keys are
+    /// quarantined exactly like the coordinator quarantines a
+    /// (member, bucket) pair.
+    fn drive(shard: &CompileCache<u8>, plan: &FaultPlan, keys: &[&str]) -> Vec<Seen> {
+        let mut stream = plan.stream(0, 0);
+        let mut quarantined: std::collections::HashSet<String> = Default::default();
+        let mut out = Vec::new();
+        for &k in keys {
+            if quarantined.contains(k) {
+                out.push(Seen::Quarantined);
+                continue;
+            }
+            let cold = !shard.contains(k);
+            let fail = cold && stream.compile_fault();
+            let r = shard.get_or_build(k, || {
+                if fail {
+                    Err(anyhow::anyhow!("injected compile failure"))
+                } else {
+                    Ok(1u8)
+                }
+            });
+            out.push(match (r.is_ok(), cold) {
+                (true, true) => Seen::Built,
+                (true, false) => Seen::Hit,
+                (false, _) => {
+                    quarantined.insert(k.to_string());
+                    Seen::Failed
+                }
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn seeded_fault_replay_is_bit_identical() {
+        // Same seed, same key script → the exact same outcome sequence,
+        // run after run: the property that makes chaos runs debuggable.
+        let keys =
+            ["a@b1s32", "b@b1s32", "a@b1s32", "c@b8s128", "b@b1s32", "c@b8s128", "d@b4s64"];
+        let plan = FaultPlan::seeded(0xFA17, faulty_rates());
+        let first = drive(&CompileCache::new(), &plan, &keys);
+        for _ in 0..3 {
+            assert_eq!(drive(&CompileCache::new(), &plan, &keys), first);
+        }
+        // a different seed genuinely reschedules the failures
+        let other = drive(&CompileCache::new(), &FaultPlan::seeded(0x5EED, faulty_rates()), &keys);
+        assert_eq!(other.len(), first.len());
+        // and a failed pair is never retried once quarantined
+        for seq in [&first, &other] {
+            let mut dead = false;
+            for (s, k) in seq.iter().zip(keys) {
+                if k == "a@b1s32" {
+                    match s {
+                        Seen::Failed => dead = true,
+                        Seen::Quarantined => assert!(dead),
+                        _ => assert!(!dead),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quarantine_reprobe_after_replace_rebuilds() {
+        // Per-pair quarantine is per-incarnation: replacing a crashed
+        // worker's shard clears it, and the re-probe on the fresh shard
+        // (no injected failure this time) builds exactly once.
+        let mut shards: CacheShards<u8> = CacheShards::new(2);
+        let plan = FaultPlan::seeded(3, FaultRates { compile_fail: 1.0, ..Default::default() });
+        let seq = drive(&shards.shard(1), &plan, &["x@b1s32", "x@b1s32"]);
+        assert_eq!(seq, vec![Seen::Failed, Seen::Quarantined]);
+        assert_eq!(shards.shard(1).builds(), 0);
+        let retired = shards.replace(1);
+        assert_eq!(retired.builds(), 0);
+        // fresh incarnation, fault-free probe: builds == distinct pairs re-served
+        let seq2 = drive(&shards.shard(1), &FaultPlan::none(), &["x@b1s32", "x@b1s32"]);
+        assert_eq!(seq2, vec![Seen::Built, Seen::Hit]);
+        assert_eq!(shards.shard(1).builds(), 1);
+        // the sibling shard never saw any of this
+        assert_eq!(shards.shard(0).builds() + shards.shard(0).hits(), 0);
+    }
+
+    #[test]
+    fn shards_isolate_eviction_contention() {
+        // Readers hammer their own shard while an evictor attacks shard
+        // 0 only: shard 1's counters stay perfectly build-once while
+        // shard 0 absorbs the rebuilds — contention cannot leak across
+        // the shard boundary.
+        let shards: Arc<CacheShards<u64>> = Arc::new(CacheShards::new(2));
+        const ROUNDS: usize = 200;
+        std::thread::scope(|s| {
+            for w in 0..2usize {
+                let shards = Arc::clone(&shards);
+                s.spawn(move || {
+                    let shard = shards.shard(w);
+                    for _ in 0..ROUNDS {
+                        let v = shard.get_or_build("hot", || Ok(w as u64)).unwrap();
+                        assert_eq!(*v, w as u64, "value leaked across shards");
+                    }
+                });
+            }
+            let shards = Arc::clone(&shards);
+            s.spawn(move || {
+                for _ in 0..ROUNDS / 4 {
+                    shards.shard(0).evict("hot");
+                    std::thread::yield_now();
+                }
+            });
+        });
+        let (s0, s1) = (shards.shard(0), shards.shard(1));
+        assert_eq!(s1.builds(), 1, "uncontended shard must build exactly once");
+        assert_eq!(s1.hits(), ROUNDS - 1);
+        assert!(s0.builds() >= 1);
+        assert_eq!(s0.builds() + s0.hits(), ROUNDS);
+        assert_eq!(shards.builds(), s0.builds() + s1.builds());
+        assert_eq!(shards.hits(), s0.hits() + s1.hits());
     }
 }

@@ -1,0 +1,236 @@
+//! Deterministic fault injection for the serving fleet (DESIGN.md §10).
+//!
+//! A [`FaultPlan`] is a *seeded schedule* of faults — worker crashes,
+//! compile failures, exec slowdowns, NaN latency samples — that the
+//! simulated devices behind the fleet coordinator consult instead of
+//! real hardware failing. Two properties make it a test substrate
+//! rather than a chaos monkey:
+//!
+//! * **Replayable.** Every decision comes from a [`FaultStream`] whose
+//!   generator state is a pure function of `(plan seed, worker,
+//!   incarnation)` plus a worker-local draw counter. Thread
+//!   interleaving cannot change what the k-th exec of worker w's n-th
+//!   incarnation does, so a seeded chaos run injects the *same* fault
+//!   schedule on every replay — the bit-identical-replay test in
+//!   `runtime::cache` and the fleet property tests in
+//!   `tests/fleet_chaos.rs` both lean on this.
+//! * **Engine-free.** Nothing here touches PJRT; the plan prices
+//!   nothing and owns nothing. [`FaultPlan::none`] is the production
+//!   value: every query answers "no fault" without consuming entropy,
+//!   so a fault-free fleet run is byte-identical to one built before
+//!   this module existed.
+//!
+//! The draw order inside a stream is part of its contract:
+//! [`FaultStream::exec_fault`] consumes exactly three uniform draws
+//! (crash, slowdown, NaN) and [`FaultStream::compile_fault`] exactly
+//! one, so interleaved exec/compile queries replay identically as long
+//! as the caller issues them in the same worker-local order — which a
+//! single-threaded worker loop does by construction.
+
+use crate::util::rng::Rng;
+
+/// Per-event fault probabilities (all in `[0, 1]`; `0` disables).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultRates {
+    /// P\[the worker crashes while executing a batch\]
+    pub crash: f64,
+    /// P\[a cold compile fails\] (per `compile_fault` query)
+    pub compile_fail: f64,
+    /// P\[a batch execution is slowed by `slowdown_factor`\]
+    pub slowdown: f64,
+    /// multiplier applied to exec time when a slowdown fires (≥ 1.0
+    /// is meaningful; non-finite or < 1.0 values are clamped to 1.0)
+    pub slowdown_factor: f64,
+    /// P\[the reported exec-latency sample is NaN\] (the sample is
+    /// poisoned, the reply itself is still correct — exercises the
+    /// NaN-tolerant stats paths)
+    pub nan_latency: f64,
+}
+
+impl FaultRates {
+    /// Whether every rate is zero (the no-fault fast path).
+    pub fn is_none(&self) -> bool {
+        self.crash == 0.0 && self.compile_fail == 0.0 && self.slowdown == 0.0
+            && self.nan_latency == 0.0
+    }
+}
+
+/// A seeded, replayable schedule of injected faults.
+///
+/// The plan itself is tiny and copyable: streams are derived on demand
+/// with [`FaultPlan::stream`], one per (worker, incarnation), so a
+/// restarted worker draws from a fresh-but-deterministic sequence
+/// instead of replaying its predecessor's.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: FaultRates,
+}
+
+impl FaultPlan {
+    /// The production plan: no faults, ever.
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, rates: FaultRates::default() }
+    }
+
+    /// A seeded plan injecting faults at `rates`.
+    pub fn seeded(seed: u64, rates: FaultRates) -> FaultPlan {
+        FaultPlan { seed, rates }
+    }
+
+    /// The plan's rates.
+    pub fn rates(&self) -> FaultRates {
+        self.rates
+    }
+
+    /// The fault stream for one worker incarnation. Pure in
+    /// `(self.seed, worker, incarnation)` — see the module docs for
+    /// why that makes chaos runs replayable.
+    pub fn stream(&self, worker: usize, incarnation: u32) -> FaultStream {
+        // mix the coordinates through SplitMix-style odd constants so
+        // (w=1, inc=0) and (w=0, inc=1) land on unrelated streams
+        let tag = (worker as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((incarnation as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+        FaultStream { rng: Rng::new(self.seed ^ tag), rates: self.rates }
+    }
+}
+
+/// Outcome of one exec-fault query: at most one crash, plus an exec
+/// time multiplier and whether the latency *sample* is poisoned.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecFault {
+    /// the worker dies mid-batch (no reply is produced)
+    pub crash: bool,
+    /// exec-time multiplier (1.0 = nominal)
+    pub slowdown: f64,
+    /// the recorded latency sample is NaN (reply still correct)
+    pub nan_latency: bool,
+}
+
+impl ExecFault {
+    /// The no-fault value.
+    pub fn nominal() -> ExecFault {
+        ExecFault { crash: false, slowdown: 1.0, nan_latency: false }
+    }
+}
+
+/// One worker incarnation's deterministic fault sequence (derive via
+/// [`FaultPlan::stream`]).
+#[derive(Clone, Debug)]
+pub struct FaultStream {
+    rng: Rng,
+    rates: FaultRates,
+}
+
+impl FaultStream {
+    /// Draw the fault verdict for the next executed batch. Always
+    /// consumes exactly three uniform draws, even when every rate is
+    /// zero, so mixed-rate plans replay identically.
+    pub fn exec_fault(&mut self) -> ExecFault {
+        let (c, s, n) = (self.rng.f64(), self.rng.f64(), self.rng.f64());
+        let factor = if self.rates.slowdown_factor.is_finite() {
+            self.rates.slowdown_factor.max(1.0)
+        } else {
+            1.0
+        };
+        ExecFault {
+            crash: c < self.rates.crash,
+            slowdown: if s < self.rates.slowdown { factor } else { 1.0 },
+            nan_latency: n < self.rates.nan_latency,
+        }
+    }
+
+    /// Draw whether the next cold compile fails (one uniform draw).
+    pub fn compile_fault(&mut self) -> bool {
+        self.rng.f64() < self.rates.compile_fail
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    fn rates() -> FaultRates {
+        FaultRates {
+            crash: 0.3,
+            compile_fail: 0.4,
+            slowdown: 0.5,
+            slowdown_factor: 4.0,
+            nan_latency: 0.2,
+        }
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let plan = FaultPlan::seeded(0xC0FFEE, rates());
+        let (mut a, mut b) = (plan.stream(2, 1), plan.stream(2, 1));
+        for _ in 0..200 {
+            assert_eq!(a.exec_fault(), b.exec_fault());
+            assert_eq!(a.compile_fault(), b.compile_fault());
+        }
+    }
+
+    #[test]
+    fn streams_differ_across_workers_and_incarnations() {
+        let plan = FaultPlan::seeded(7, rates());
+        let seq = |mut s: FaultStream| -> Vec<ExecFault> {
+            (0..64).map(|_| s.exec_fault()).collect()
+        };
+        let base = seq(plan.stream(0, 0));
+        assert_ne!(base, seq(plan.stream(1, 0)), "workers share a stream");
+        assert_ne!(base, seq(plan.stream(0, 1)), "incarnations share a stream");
+        // and the swapped coordinates don't collide either
+        assert_ne!(seq(plan.stream(1, 0)), seq(plan.stream(0, 1)));
+    }
+
+    #[test]
+    fn none_never_faults() {
+        let mut s = FaultPlan::none().stream(3, 9);
+        for _ in 0..100 {
+            assert_eq!(s.exec_fault(), ExecFault::nominal());
+            assert!(!s.compile_fault());
+        }
+        assert!(FaultPlan::none().rates().is_none());
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let mut s = FaultPlan::seeded(42, rates()).stream(0, 0);
+        let n = 20_000;
+        let (mut crashes, mut slows, mut nans, mut cfails) = (0, 0, 0, 0);
+        for _ in 0..n {
+            let f = s.exec_fault();
+            crashes += f.crash as usize;
+            slows += (f.slowdown > 1.0) as usize;
+            nans += f.nan_latency as usize;
+            cfails += s.compile_fault() as usize;
+        }
+        let close = |got: usize, p: f64| {
+            let f = got as f64 / n as f64;
+            assert!((f - p).abs() < 0.02, "rate {f} vs {p}");
+        };
+        close(crashes, 0.3);
+        close(slows, 0.5);
+        close(nans, 0.2);
+        close(cfails, 0.4);
+    }
+
+    #[test]
+    fn slowdown_factor_sanitized() {
+        let mut s = FaultPlan::seeded(
+            1,
+            FaultRates { slowdown: 1.0, slowdown_factor: f64::NAN, ..Default::default() },
+        )
+        .stream(0, 0);
+        let f = s.exec_fault();
+        assert_eq!(f.slowdown, 1.0, "NaN factor must clamp to nominal");
+        let mut s2 = FaultPlan::seeded(
+            1,
+            FaultRates { slowdown: 1.0, slowdown_factor: 0.25, ..Default::default() },
+        )
+        .stream(0, 0);
+        assert_eq!(s2.exec_fault().slowdown, 1.0, "sub-1 factor must clamp up");
+    }
+}

@@ -12,6 +12,7 @@
 //! Executables are compiled once and cached; Python never runs here.
 
 pub mod cache;
+pub mod fault;
 pub mod manifest;
 
 use std::path::{Path, PathBuf};
@@ -20,7 +21,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-pub use cache::{ArtifactKey, CompileCache};
+pub use cache::{ArtifactKey, CacheShards, CompileCache};
+pub use fault::{ExecFault, FaultPlan, FaultRates, FaultStream};
 pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TaskInfo};
 
 /// A host-side tensor paired with its logical shape (row-major f32).

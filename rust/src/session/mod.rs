@@ -804,6 +804,7 @@ fn save_stage_result(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -111,6 +111,14 @@ impl StageStore {
                     self.loaded.fetch_add(1, Ordering::Relaxed);
                     return Ok((v, true));
                 }
+                // a present-but-unloadable checkpoint (truncated blob,
+                // bad magic, fingerprint mismatch) is a cache miss,
+                // never an abort — but losing a resume silently would
+                // hide real corruption, so say why we recompute
+                eprintln!(
+                    "[store] checkpoint `{key}` exists but failed to load \
+                     (corrupt or stale); recomputing"
+                );
             }
             let v = compute()?;
             std::fs::create_dir_all(dir)?;
@@ -154,8 +162,19 @@ pub fn read_blob(path: &Path) -> Result<(Json, Vec<f32>)> {
     }
     let mut len8 = [0u8; 8];
     f.read_exact(&mut len8)?;
-    let hlen = u64::from_le_bytes(len8) as usize;
-    let mut hbuf = vec![0u8; hlen];
+    let hlen = u64::from_le_bytes(len8);
+    // the header length is untrusted input: a truncated or scribbled
+    // blob can declare terabytes here, and `vec![0u8; hlen]` would
+    // abort the process before read_exact ever fails. Bound it by what
+    // the file can actually hold past the 12-byte preamble.
+    let file_len = f.metadata()?.len();
+    let avail = file_len.saturating_sub(MAGIC.len() as u64 + 8);
+    if hlen > avail {
+        return Err(anyhow!(
+            "stage blob header claims {hlen} bytes but only {avail} remain (truncated?)"
+        ));
+    }
+    let mut hbuf = vec![0u8; hlen as usize];
     f.read_exact(&mut hbuf)?;
     let header = Json::parse(std::str::from_utf8(&hbuf)?).map_err(|e| anyhow!(e))?;
     let mut raw = Vec::new();
@@ -320,6 +339,7 @@ pub fn load_profile(path: &Path, fp: &str, target: f64) -> Option<(Vec<usize>, f
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
@@ -415,6 +435,100 @@ mod tests {
         let again = StageStore::new(Some(dir.clone()));
         let (_, loaded) = again
             .load_or_compute("bad.json", load_vec, save_vec, || panic!("recomputed"))
+            .unwrap();
+        assert!(loaded);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Satellite regression: a truncated or corrupted ZLS1 blob must
+    /// read as an error (→ cache miss upstream), never panic or abort.
+    #[test]
+    fn truncated_or_corrupt_blob_is_a_miss_not_a_panic() {
+        let dir = temp_dir("trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.bin");
+        let header = Json::obj(vec![("kind", Json::Str("hessians".into()))]);
+        write_blob(&path, &header, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let whole = std::fs::read(&path).unwrap();
+
+        // every proper prefix must fail cleanly (mid-magic, mid-length,
+        // mid-header, mid-payload) — sweep them all. A cut inside the
+        // payload at a 4-byte boundary parses as a SHORTER payload by
+        // design; the typed loaders catch that via their size checks.
+        let payload_start = whole.len() - 16; // 4 f32s
+        for cut in 0..whole.len() {
+            std::fs::write(&path, &whole[..cut]).unwrap();
+            match read_blob(&path) {
+                Err(_) => {}
+                Ok((_, p)) => {
+                    assert!(
+                        cut >= payload_start && (cut - payload_start) % 4 == 0,
+                        "prefix of {cut} bytes parsed but should not have"
+                    );
+                    assert!(p.len() < 4, "short read returned a whole payload");
+                }
+            }
+            // and through the typed loader: miss, not panic
+            assert!(load_hessians(&path, "fp").is_none());
+        }
+
+        // a scribbled header length claiming more than the file holds
+        // must error out instead of attempting a giant allocation
+        let mut huge = whole.clone();
+        huge[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &huge).unwrap();
+        let err = read_blob(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+
+        // bad magic
+        let mut bad = whole.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_blob(&path).is_err());
+
+        // intact blob still reads after all that
+        std::fs::write(&path, &whole).unwrap();
+        let (h, p) = read_blob(&path).unwrap();
+        assert_eq!(h.get("kind").and_then(Json::as_str), Some("hessians"));
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 4.0]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// A truncated blob behind the store is a recompute, not a crash.
+    #[test]
+    fn truncated_blob_checkpoint_recomputes() {
+        let dir = temp_dir("trunc_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let hs = Hessians {
+            attn: vec![Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0])],
+            ffn: vec![Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0])],
+        };
+        let key = "hess.bin";
+        save_hessians(&dir.join(key), "fp", &hs).unwrap();
+        // truncate the checkpoint mid-payload
+        let whole = std::fs::read(dir.join(key)).unwrap();
+        std::fs::write(dir.join(key), &whole[..whole.len() - 6]).unwrap();
+        let store = StageStore::new(Some(dir.clone()));
+        let (back, loaded) = store
+            .load_or_compute(
+                key,
+                |p| load_hessians(p, "fp"),
+                |p, v| save_hessians(p, "fp", v),
+                || Ok(hs.clone()),
+            )
+            .unwrap();
+        assert!(!loaded, "truncated blob must be a miss");
+        assert_eq!(back.attn[0].data, hs.attn[0].data);
+        assert_eq!(store.counters(), (1, 0));
+        // the recompute rewrote it whole: a fresh store now loads
+        let again = StageStore::new(Some(dir.clone()));
+        let (_, loaded) = again
+            .load_or_compute(
+                key,
+                |p| load_hessians(p, "fp"),
+                |p, v| save_hessians(p, "fp", v),
+                || panic!("recomputed after repair"),
+            )
             .unwrap();
         assert!(loaded);
         let _ = std::fs::remove_dir_all(dir);

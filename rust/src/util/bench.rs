@@ -102,13 +102,13 @@ impl Bench {
 
 fn stats_from(name: &str, samples: &mut [f64]) -> Stats {
     assert!(!samples.is_empty());
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len();
     let median = samples[n / 2];
     let mean = samples.iter().sum::<f64>() / n as f64;
     let p95 = samples[(n as f64 * 0.95) as usize % n];
     let mut dev: Vec<f64> = samples.iter().map(|x| (x - median).abs()).collect();
-    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dev.sort_by(|a, b| a.total_cmp(b));
     Stats {
         name: name.to_string(),
         iters: n,

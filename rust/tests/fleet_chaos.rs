@@ -1,0 +1,458 @@
+//! Fleet serving acceptance tests (DESIGN.md §10) — fully engine-free.
+//!
+//! The contract under test, per ISSUE acceptance:
+//!   1. under arbitrary seeded FaultPlans, every submitted request
+//!      terminates in exactly one of {Replied, Shed, Abandoned};
+//!   2. no panic crosses a worker boundary (a poison-pill batch panics
+//!      the simulated backend; the caller must see `Abandoned`, not a
+//!      propagated panic);
+//!   3. a crashed worker's in-flight work is re-dispatched or
+//!      abandoned, never silently dropped (that IS property 1 plus the
+//!      crash counters);
+//!   4. after a supervisor restart, the re-warmed cache shard's
+//!      `builds()` equals the distinct (member, bucket) executables it
+//!      re-served.
+
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use ziplm::coordinator::chaos::{gen_trace, run_chaos, TraceCfg, TraceClass};
+use ziplm::coordinator::family::{BucketLadder, Sla};
+use ziplm::coordinator::fleet::{
+    self, admit, sim_logits, FleetCfg, FleetMember, Outcome, RetryPolicy, ShedReason, WorkerView,
+    SIM_WIDTH,
+};
+use ziplm::env::{CostModel, InferenceEnv};
+use ziplm::latency::LatencyTable;
+use ziplm::runtime::{FaultPlan, FaultRates};
+use ziplm::util::prop::Prop;
+use ziplm::util::rng::Rng;
+
+fn env() -> InferenceEnv {
+    let table = LatencyTable {
+        model: "m".into(),
+        device: "sim".into(),
+        regime: "throughput".into(),
+        attn: vec![0.0, 1.0e-3, 1.8e-3, 2.5e-3, 3.1e-3],
+        mlp: vec![(512, 8e-3), (256, 4.2e-3), (64, 1.5e-3), (0, 0.0)],
+        overhead: 1e-3,
+    };
+    InferenceEnv::measured(table)
+        .unwrap()
+        .with_batch_shape(8, 64)
+        .with_seq_sweep(vec![(16, 0.4), (32, 0.7), (64, 1.0)])
+}
+
+fn members() -> Vec<FleetMember> {
+    vec![
+        FleetMember { tag: "dense".into(), profile: vec![(4, 512); 2] },
+        FleetMember { tag: "2x".into(), profile: vec![(2, 256); 2] },
+        FleetMember { tag: "4x".into(), profile: vec![(1, 64); 2] },
+    ]
+}
+
+fn cfg(workers: usize) -> FleetCfg {
+    FleetCfg {
+        workers,
+        skews: vec![1.0, 1.2, 0.9],
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64,
+        retry: RetryPolicy { max_retries: 3, base: Duration::from_micros(150), factor: 2.0 },
+        quarantine_after: 50,
+        restart_delay: Duration::from_micros(400),
+        buckets: BucketLadder::new(env().bucket_ladder()),
+        time_scale: 0.0,
+    }
+}
+
+// ------------------------------------------------------------------
+// 1. exactly-one-outcome under arbitrary seeded fault plans
+// ------------------------------------------------------------------
+
+#[test]
+fn every_request_terminates_exactly_once_under_arbitrary_faults() {
+    let env = env();
+    Prop::new(6).check_msg(
+        "fleet-exactly-one-outcome",
+        |rng: &mut Rng| {
+            (
+                rng.next_u64(),
+                rng.f64() * 0.3,        // crash
+                rng.f64() * 0.4,        // compile_fail
+                rng.f64() * 0.5,        // slowdown
+                1.0 + rng.f64() * 4.0,  // slowdown_factor
+                rng.f64() * 0.1,        // nan_latency
+            )
+        },
+        |&(seed, crash, compile_fail, slowdown, slowdown_factor, nan_latency)| {
+            let rates =
+                FaultRates { crash, compile_fail, slowdown, slowdown_factor, nan_latency };
+            let trace = TraceCfg {
+                requests: 48,
+                seed: seed ^ 0x51,
+                arrival_gap: Duration::ZERO,
+                len_range: (4, 64),
+                classes: vec![
+                    TraceClass::best_effort(2.0),
+                    TraceClass {
+                        class: "rt".into(),
+                        weight: 1.0,
+                        max_latency: Some(Duration::from_millis(40)),
+                        min_speedup: None,
+                    },
+                ],
+            };
+            let report = run_chaos(
+                cfg(3),
+                members(),
+                &env,
+                FaultPlan::seeded(seed, rates),
+                &trace,
+            )
+            .map_err(|e| e.to_string())?;
+            if !report.balanced() {
+                return Err(format!(
+                    "unbalanced: submitted {} replied {} shed {} abandoned {} lost {}",
+                    report.submitted, report.replied, report.shed, report.abandoned, report.lost
+                ));
+            }
+            // the fleet's own ledger must agree with the client's view
+            if report.stats.replied != report.replied
+                || report.stats.shed != report.shed
+                || report.stats.abandoned != report.abandoned
+            {
+                return Err(format!(
+                    "ledger mismatch: stats ({}, {}, {}) vs client ({}, {}, {})",
+                    report.stats.replied,
+                    report.stats.shed,
+                    report.stats.abandoned,
+                    report.replied,
+                    report.shed,
+                    report.abandoned
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn crash_free_plans_reply_to_every_request() {
+    // slowdowns and NaN latency samples degrade but never lose work
+    let rates = FaultRates {
+        crash: 0.0,
+        compile_fail: 0.0,
+        slowdown: 0.4,
+        slowdown_factor: 5.0,
+        nan_latency: 0.5,
+    };
+    let trace = TraceCfg {
+        requests: 64,
+        seed: 9,
+        arrival_gap: Duration::ZERO,
+        len_range: (4, 64),
+        classes: Vec::new(), // best-effort only: nothing can shed on SLA
+    };
+    let report =
+        run_chaos(cfg(2), members(), &env(), FaultPlan::seeded(3, rates), &trace).unwrap();
+    assert!(report.balanced());
+    assert_eq!(report.replied, report.submitted, "no crash → nothing may be dropped");
+    assert_eq!(report.stats.crashes, 0);
+    assert!(report.stats.nan_samples > 0, "nan rate 0.5 over 16+ batches must fire");
+}
+
+// ------------------------------------------------------------------
+// 2. a real panic stays inside the worker boundary
+// ------------------------------------------------------------------
+
+#[test]
+fn worker_panic_never_crosses_the_boundary() {
+    let fleet = fleet::start(cfg(2), members(), &env(), FaultPlan::none()).unwrap();
+    // the poison pill panics the simulated backend on every attempt;
+    // retries exhaust and the caller sees Abandoned — never a panic
+    let poisoned = fleet.submit(vec![1, i32::MIN, 3], None).unwrap();
+    let out = poisoned.recv_timeout(Duration::from_secs(30)).unwrap();
+    match out {
+        Outcome::Abandoned { attempts, .. } => {
+            assert!(attempts >= 1, "the pill was dispatched at least once")
+        }
+        other => panic!("poison pill must end Abandoned, got {other:?}"),
+    }
+    // the fleet survives and keeps serving normal traffic
+    let ok = fleet.infer(vec![5, 6, 7], None).unwrap();
+    match ok {
+        Outcome::Replied(r) => assert_eq!(r.logits, sim_logits(&r.member, &[5, 6, 7], SIM_WIDTH)),
+        other => panic!("fleet must still serve after a panic, got {other:?}"),
+    }
+    let stats = fleet.shutdown().unwrap();
+    assert!(stats.crashes >= 1, "each panic counts as a crash");
+    assert_eq!(stats.accounted(), stats.submitted);
+}
+
+// ------------------------------------------------------------------
+// 3. crashed in-flight work is re-dispatched (retried replies exist)
+// ------------------------------------------------------------------
+
+#[test]
+fn crashed_inflight_work_is_redispatched_not_dropped() {
+    // moderate crash rate: plenty of crashes, but retries usually land
+    let rates = FaultRates { crash: 0.3, ..FaultRates::default() };
+    let trace = TraceCfg {
+        requests: 96,
+        seed: 21,
+        arrival_gap: Duration::from_micros(30),
+        len_range: (4, 48),
+        classes: Vec::new(),
+    };
+    let report =
+        run_chaos(cfg(3), members(), &env(), FaultPlan::seeded(77, rates), &trace).unwrap();
+    assert!(report.balanced());
+    assert!(report.stats.crashes > 0, "crash rate 0.3 must crash someone");
+    assert!(
+        report.retried_replies > 0,
+        "some replies must have survived a crash via re-dispatch (retries {})",
+        report.stats.retries
+    );
+    assert!(report.replied > 0);
+    // abandoned requests are allowed (retry exhaustion) but every one
+    // of them is accounted — that is exactly `balanced()` above
+}
+
+// ------------------------------------------------------------------
+// 4. restart re-warms the shard: builds() == distinct pairs re-served
+// ------------------------------------------------------------------
+
+#[test]
+fn rewarmed_shard_builds_equal_distinct_served_pairs() {
+    let env = env();
+    let anchor = env.batch_shape();
+    let rates = FaultRates { crash: 0.25, compile_fail: 0.1, ..FaultRates::default() };
+    let fleet = fleet::start(cfg(3), members(), &env, FaultPlan::seeded(41, rates)).unwrap();
+    let mut rng = Rng::new(0xF1EE7);
+    let mut rxs = Vec::new();
+    for _ in 0..150 {
+        let len = 4 + rng.below(60);
+        let ids: Vec<i32> = (0..len).map(|_| rng.below(1000) as i32).collect();
+        rxs.push(fleet.submit(ids, None).unwrap());
+    }
+    // collect the replies: which executable key did each one exercise?
+    // specialized replies used (member, bucket); generic ones used the
+    // member's anchor graph. builds() counts only successful compiles,
+    // so per (worker, incarnation) the distinct key set IS the build
+    // count of the shard serving that incarnation.
+    // (worker, incarnation) → distinct executable keys its replies used
+    type ServedKeys = std::collections::HashMap<(usize, u32), HashSet<(String, (usize, usize), bool)>>;
+    let mut keys_by_worker_inc: ServedKeys = Default::default();
+    for rx in rxs {
+        if let Outcome::Replied(r) = rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            let key = if r.specialized {
+                (r.member.clone(), r.bucket, true)
+            } else {
+                (r.member.clone(), anchor, false)
+            };
+            keys_by_worker_inc.entry((r.worker, r.incarnation)).or_default().insert(key);
+        }
+    }
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.accounted(), stats.submitted);
+    assert!(stats.restarts > 0, "crash rate 0.25 over ~40 batches must restart someone");
+    for w in &stats.per_worker {
+        let served_keys = keys_by_worker_inc
+            .get(&(w.worker, w.incarnation))
+            .map(|s| s.len())
+            .unwrap_or(0);
+        assert_eq!(
+            w.builds, served_keys,
+            "worker {} incarnation {}: shard builds {} != distinct (member, bucket) pairs {}",
+            w.worker, w.incarnation, w.builds, served_keys
+        );
+    }
+}
+
+// ------------------------------------------------------------------
+// admission policy + backoff properties (pure, no threads)
+// ------------------------------------------------------------------
+
+#[test]
+fn admit_never_picks_a_dead_or_full_worker() {
+    let envv = env();
+    let mems = members();
+    let mut order: Vec<usize> = (0..mems.len()).collect();
+    let base: Vec<f64> = mems.iter().map(|m| envv.speedup(&m.profile)).collect();
+    order.sort_by(|&a, &b| base[a].total_cmp(&base[b]));
+    let routes: Vec<ziplm::coordinator::family::MemberRoute> = order
+        .iter()
+        .map(|&i| ziplm::coordinator::family::MemberRoute {
+            tag: mems[i].tag.clone(),
+            est_speedup: envv.speedup(&mems[i].profile),
+            est_batch_time: envv.model_time(&mems[i].profile),
+            bucket_times: Vec::new(),
+        })
+        .collect();
+    Prop::new(200).check(
+        "admit-respects-liveness-and-capacity",
+        |rng: &mut Rng| {
+            let n = 1 + rng.below(4);
+            let views: Vec<(bool, usize, f64)> = (0..n)
+                .map(|_| (rng.below(4) > 0, rng.below(10), rng.f64() * 0.2))
+                .collect();
+            let sla = if rng.below(2) == 0 {
+                None
+            } else {
+                Some((rng.below(80) as u64 + 5, rng.f64() * 3.0))
+            };
+            (views, sla)
+        },
+        |(views, sla)| {
+            let wv: Vec<WorkerView> = views
+                .iter()
+                .map(|&(alive, depth, queued_time)| WorkerView {
+                    alive,
+                    depth,
+                    queue_cap: 8,
+                    queued_time,
+                    routes: &routes,
+                })
+                .collect();
+            let sla_v = sla.map(|(ms, min_s)| Sla {
+                class: "p".into(),
+                max_latency: Some(Duration::from_millis(ms)),
+                min_speedup: Some(min_s),
+            });
+            match admit(sla_v.as_ref(), &wv) {
+                Ok((w, m)) => {
+                    let v = &wv[w];
+                    // never a dead or full worker, always a real member
+                    v.alive
+                        && v.depth < v.queue_cap
+                        && m < routes.len()
+                        // and the member satisfies the SLA bounds
+                        && sla_v.as_ref().is_none_or(|s| {
+                            s.min_speedup
+                                .is_none_or(|ms| routes[m].est_speedup + 1e-9 >= ms)
+                                && s.max_latency.is_none_or(|ml| {
+                                    v.queued_time + routes[m].est_batch_time
+                                        <= ml.as_secs_f64()
+                                })
+                        })
+                }
+                Err(ShedReason::NoCapacity) => !wv.iter().any(|v| v.alive),
+                Err(ShedReason::QueueFull) => {
+                    wv.iter().any(|v| v.alive)
+                        && wv.iter().all(|v| !v.alive || v.depth >= v.queue_cap)
+                }
+                Err(ShedReason::DeadlineUnmeetable) => {
+                    wv.iter().any(|v| v.alive && v.depth < v.queue_cap)
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn backoff_is_monotone_and_bounded() {
+    Prop::new(100).check(
+        "retry-backoff-monotone-bounded",
+        |rng: &mut Rng| {
+            (
+                1 + rng.below(50) as u64, // base ms
+                1.0 + rng.f64() * 3.0,    // factor
+                1 + rng.below(30) as u32, // attempt
+            )
+        },
+        |&(base_ms, factor, attempt)| {
+            let r = RetryPolicy {
+                max_retries: 5,
+                base: Duration::from_millis(base_ms),
+                factor,
+            };
+            let cur = r.backoff(attempt);
+            let next = r.backoff(attempt + 1);
+            next >= cur && next <= Duration::from_secs(1) && cur >= Duration::ZERO
+        },
+    );
+}
+
+// ------------------------------------------------------------------
+// trace generator + reply-integrity cross-checks
+// ------------------------------------------------------------------
+
+#[test]
+fn replies_are_genuine_member_outputs_under_faults() {
+    // under compile failures and slowdowns, whatever DOES reply must
+    // carry the claimed member's deterministic logits — re-dispatch
+    // may change which member serves, never fabricate an answer
+    let rates = FaultRates {
+        crash: 0.15,
+        compile_fail: 0.3,
+        slowdown: 0.2,
+        slowdown_factor: 2.0,
+        nan_latency: 0.0,
+    };
+    let fleet = fleet::start(cfg(2), members(), &env(), FaultPlan::seeded(99, rates)).unwrap();
+    let mut pending = Vec::new();
+    for i in 0..60i32 {
+        let ids = vec![i, i + 1, i + 2];
+        pending.push((ids.clone(), fleet.submit(ids, None).unwrap()));
+    }
+    let mut replied = 0;
+    for (ids, rx) in pending {
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Outcome::Replied(r) => {
+                replied += 1;
+                assert_eq!(
+                    r.logits,
+                    sim_logits(&r.member, &ids, SIM_WIDTH),
+                    "reply logits must be member `{}`'s genuine output",
+                    r.member
+                );
+            }
+            // Abandoned (retry exhaustion) and Shed (both workers may be
+            // transiently down mid-restart → NoCapacity) are legitimate
+            // terminal outcomes here; integrity only binds replies.
+            Outcome::Abandoned { .. } | Outcome::Shed(_) => {}
+        }
+    }
+    assert!(replied > 0);
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.accounted(), stats.submitted);
+}
+
+#[test]
+fn trace_replay_is_bit_identical_and_weighted() {
+    let tcfg = TraceCfg {
+        requests: 400,
+        seed: 1234,
+        arrival_gap: Duration::ZERO,
+        len_range: (1, 8),
+        classes: vec![
+            TraceClass::best_effort(3.0),
+            TraceClass {
+                class: "rt".into(),
+                weight: 1.0,
+                max_latency: Some(Duration::from_millis(5)),
+                min_speedup: None,
+            },
+        ],
+    };
+    let a = gen_trace(&tcfg);
+    let b = gen_trace(&tcfg);
+    assert_eq!(a.len(), b.len());
+    let mut rt = 0usize;
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.ids, y.ids);
+        let (cx, cy) = (
+            x.sla.as_ref().map(|s| s.class.as_str()),
+            y.sla.as_ref().map(|s| s.class.as_str()),
+        );
+        assert_eq!(cx, cy);
+        if cx == Some("rt") {
+            rt += 1;
+        }
+    }
+    // 1-in-4 weight → roughly a quarter of 400 (generous tolerance)
+    assert!((40..=180).contains(&rt), "rt class drew {rt} of 400");
+}

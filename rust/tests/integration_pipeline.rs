@@ -2,6 +2,8 @@
 //! SPDY → apply → evaluate, and the serving coordinator. Skipped when
 //! artifacts/ is absent.
 
+#![allow(clippy::disallowed_methods)] // test code: unwrap-on-failure IS the assertion
+
 mod support;
 
 use std::path::Path;
@@ -170,7 +172,8 @@ fn serving_coordinator_batches_and_replies() {
             max_wait: std::time::Duration::from_millis(3),
         },
         st,
-    );
+    )
+    .unwrap();
     // concurrent submissions to exercise the batcher
     let mut receivers = Vec::new();
     for i in 0..20 {

@@ -4,6 +4,8 @@
 //! skipped gracefully when it is absent so `cargo test` stays green on
 //! a fresh clone.
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 use std::path::Path;
 
 use ziplm::models::ModelState;

@@ -5,6 +5,8 @@
 //! mechanics are covered by `session::store` unit tests and
 //! tests/proptests.rs.
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 mod support;
 
 use std::path::PathBuf;

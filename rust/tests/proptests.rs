@@ -1,6 +1,8 @@
 //! Property tests on coordinator invariants (hand-rolled harness —
 //! proptest is unavailable offline; see util::prop).
 
+#![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
+
 use std::time::Duration;
 
 use ziplm::coordinator::family::{route, route_batch, BatchReq, BucketLadder, MemberRoute, Sla};
@@ -958,7 +960,7 @@ fn prop_artifact_key_encoding_injective() {
 fn random_routing(r: &mut Rng) -> (Vec<MemberRoute>, BucketLadder, Vec<usize>) {
     let n = 1 + r.below(4);
     let mut speeds: Vec<f64> = (0..n).map(|_| 1.0 + r.f64() * 9.0).collect();
-    speeds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    speeds.sort_by(|a, b| a.total_cmp(b));
     let ladder = BucketLadder::new(
         (0..r.below(4)).map(|_| (1 + r.below(16), 8 * (1 + r.below(64)))).collect(),
     );

@@ -213,6 +213,7 @@ impl PjRtBuffer {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 
