@@ -26,11 +26,15 @@
 //! N-worker fleet with an explicit Replied/Shed/Abandoned request
 //! lifecycle, bounded retry of work lost to worker crashes, and
 //! supervisor-driven restart + cache-shard re-warm (DESIGN.md §10);
-//! [`chaos`] is its deterministic fault-injection harness.
+//! [`chaos`] is its deterministic fault-injection harness, and
+//! [`replay`] re-runs generated traces through the same routing layer
+//! with a synthetic clock so the repro harness can golden-test realized
+//! per-bucket stats (DESIGN.md §11).
 
 pub mod chaos;
 pub mod family;
 pub mod fleet;
+pub mod replay;
 
 use std::path::PathBuf;
 use std::sync::mpsc;

@@ -1,0 +1,196 @@
+//! Deterministic single-process serving replay (DESIGN.md §11).
+//!
+//! The repro harness needs realized per-bucket p50/p99 numbers that are
+//! bit-identical across runs and machines, which rules out the threaded
+//! fleet: wall-clock scheduling jitter would leak into every percentile.
+//! `replay` re-runs a generated trace through the SAME pure routing layer
+//! the live coordinator uses ([`route_batch`] with a [`route`] fallback),
+//! prices every executed batch with the member's own bucket-priced
+//! estimate, and perturbs it with a seeded multiplicative jitter drawn
+//! from the deterministic [`Rng`] stream. The result folds through
+//! [`aggregate_buckets`] exactly like live worker samples do, so the
+//! certified-vs-realized table in the repro report exercises the real
+//! stats path — only the clock is synthetic.
+
+use std::time::Duration;
+
+use crate::coordinator::chaos::TraceItem;
+use crate::coordinator::family::{
+    aggregate_buckets, route, route_batch, BatchReq, BucketLadder, BucketSample, BucketStats,
+    MemberRoute,
+};
+use crate::util::rng::Rng;
+
+/// Configuration for one deterministic replay.
+#[derive(Clone, Debug)]
+pub struct ReplayCfg {
+    /// Largest merged batch handed to [`route_batch`].
+    pub max_batch: usize,
+    /// Relative half-width of the seeded execution jitter: an executed
+    /// batch realizes `certified * f` with `f` uniform in
+    /// `[1 - jitter, 1 + jitter]`.
+    pub jitter: f64,
+    /// Seed for the jitter stream. The replay is pure in
+    /// `(trace, members, ladder, cfg)` — same inputs, same stats.
+    pub seed: u64,
+    /// Executed shape recorded for batches the ladder does not cover
+    /// (the generic-graph path); normally the env's anchor batch shape.
+    pub fallback_shape: (usize, usize),
+}
+
+/// Replay `trace` through the routing layer and fold the executed
+/// batches into per-bucket realized stats.
+///
+/// Requests are taken in arrival order and greedily chunked to
+/// `max_batch`; every chunk is offered to [`route_batch`] first, and a
+/// refused merge falls back to per-request [`route`] exactly like the
+/// live coordinator. Queue depths stay zero throughout — the replay
+/// models a drained single worker, so admission decisions depend only
+/// on SLAs and bucket-priced execution estimates, never on timing.
+pub fn replay(
+    trace: &[TraceItem],
+    members: &[MemberRoute],
+    ladder: &BucketLadder,
+    cfg: &ReplayCfg,
+) -> Vec<BucketStats> {
+    if members.is_empty() {
+        return Vec::new();
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0x71);
+    let depths = vec![0usize; members.len()];
+    let mut samples: Vec<BucketSample> = Vec::new();
+    for chunk in trace.chunks(cfg.max_batch.max(1)) {
+        let reqs: Vec<BatchReq> = chunk
+            .iter()
+            .map(|it| BatchReq { sla: it.sla.as_ref(), len: it.ids.len(), waited: Duration::ZERO })
+            .collect();
+        match route_batch(&reqs, members, &depths, ladder, cfg.max_batch, 0) {
+            Some(r) => {
+                samples.push(sample(&members[r.member], r.bucket, chunk.len(), cfg, &mut rng));
+            }
+            None => {
+                // refused merge: serve each request on its own member
+                for it in chunk {
+                    let m = route(it.sla.as_ref(), members, &depths, cfg.max_batch, 0);
+                    let bucket = ladder.bucket_for(1, it.ids.len());
+                    samples.push(sample(&members[m], bucket, 1, cfg, &mut rng));
+                }
+            }
+        }
+    }
+    aggregate_buckets(&samples)
+}
+
+/// Price one executed batch: certified estimate at its bucket, jittered.
+fn sample(
+    member: &MemberRoute,
+    bucket: Option<(usize, usize)>,
+    requests: usize,
+    cfg: &ReplayCfg,
+    rng: &mut Rng,
+) -> BucketSample {
+    let certified = member.time_at(bucket);
+    let factor = 1.0 - cfg.jitter + 2.0 * cfg.jitter * rng.f64();
+    let (batch, seq) = bucket.unwrap_or(cfg.fallback_shape);
+    BucketSample {
+        member: member.tag.clone(),
+        batch,
+        seq,
+        specialized: bucket.is_some(),
+        exec: Duration::from_secs_f64(certified * factor),
+        requests,
+        certified,
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::coordinator::family::Sla;
+
+    fn members() -> Vec<MemberRoute> {
+        vec![
+            MemberRoute {
+                tag: "dense".into(),
+                est_speedup: 1.0,
+                est_batch_time: 8e-3,
+                bucket_times: vec![((4, 32), 8e-3), ((4, 64), 12e-3)],
+            },
+            MemberRoute {
+                tag: "2x".into(),
+                est_speedup: 2.0,
+                est_batch_time: 4e-3,
+                bucket_times: vec![((4, 32), 4e-3), ((4, 64), 6e-3)],
+            },
+        ]
+    }
+
+    fn item(len: usize, sla: Option<Sla>) -> TraceItem {
+        TraceItem { ids: vec![1; len], sla }
+    }
+
+    fn cfg() -> ReplayCfg {
+        ReplayCfg { max_batch: 4, jitter: 0.1, seed: 9, fallback_shape: (4, 64) }
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let ladder = BucketLadder::new(vec![(4, 32), (4, 64)]);
+        let trace: Vec<TraceItem> =
+            (0..13).map(|i| item(8 + (i % 3) * 20, None)).collect();
+        let a = replay(&trace, &members(), &ladder, &cfg());
+        let b = replay(&trace, &members(), &ladder, &cfg());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.member, y.member);
+            assert_eq!((x.batch, x.seq, x.specialized), (y.batch, y.seq, y.specialized));
+            assert_eq!(x.realized_p50, y.realized_p50);
+            assert_eq!(x.realized_p99, y.realized_p99);
+        }
+        let total: usize = a.iter().map(|s| s.requests).sum();
+        assert_eq!(total, trace.len(), "every request accounted");
+    }
+
+    #[test]
+    fn jitter_stays_inside_band() {
+        let ladder = BucketLadder::new(vec![(4, 32), (4, 64)]);
+        let trace: Vec<TraceItem> = (0..32).map(|_| item(16, None)).collect();
+        for s in replay(&trace, &members(), &ladder, &cfg()) {
+            let cert = s.certified.as_secs_f64();
+            let p99 = s.realized_p99.as_secs_f64();
+            let p50 = s.realized_p50.as_secs_f64();
+            assert!(p99 <= cert * 1.1 + 1e-12, "p99 {p99} vs cert {cert}");
+            assert!(p50 >= cert * 0.9 - 1e-12, "p50 {p50} vs cert {cert}");
+        }
+    }
+
+    #[test]
+    fn uncovered_shapes_take_generic_path() {
+        // ladder covers nothing → every chunk routes generic, recorded
+        // at the fallback shape with specialized = false
+        let ladder = BucketLadder::new(vec![]);
+        let trace: Vec<TraceItem> = (0..8).map(|_| item(16, None)).collect();
+        let stats = replay(&trace, &members(), &ladder, &cfg());
+        assert!(!stats.is_empty());
+        for s in &stats {
+            assert!(!s.specialized);
+            assert_eq!((s.batch, s.seq), (4, 64));
+        }
+    }
+
+    #[test]
+    fn min_speedup_sla_respected() {
+        let ladder = BucketLadder::new(vec![(4, 32), (4, 64)]);
+        let sla = Sla {
+            class: "throughput".into(),
+            max_latency: None,
+            min_speedup: Some(2.0),
+        };
+        let trace: Vec<TraceItem> = (0..8).map(|_| item(16, Some(sla.clone()))).collect();
+        let stats = replay(&trace, &members(), &ladder, &cfg());
+        for s in &stats {
+            assert_eq!(s.member, "2x", "floor of 2.0 must skip dense");
+        }
+    }
+}

@@ -24,6 +24,8 @@ use crate::session::CompressionSession;
 use crate::train::{TrainCfg, Trainer};
 use crate::util::json::Json;
 
+pub mod repro;
+
 pub struct ExpCtx {
     pub engine: Engine,
     pub runs: PathBuf,

@@ -10,6 +10,7 @@
 //!   serve-family   --family runs/family_M_T/family.json [--requests N] [--pressure P]
 //!   serve-fleet    --family runs/family_M_T/family.json [--workers N] [--crash P] [--seed S]
 //!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|multienv|chaos|all> [--fast]
+//!   repro          [--kick-tires] [--seed S] [--out DIR] [--precomputed DIR]
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --fast.
 //!
@@ -52,7 +53,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "ziplm — inference-aware structured pruning (NeurIPS'23 reproduction)\n\
-         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|serve-fleet|experiment> [flags]\n\
+         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|serve-fleet|experiment|repro> [flags]\n\
          see README.md for the full flag reference"
     );
 }
@@ -72,6 +73,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "serve-family" => serve_family(args),
         "serve-fleet" => serve_fleet(args),
         "experiment" => experiment(args),
+        "repro" => repro(args),
         _ => {
             usage();
             Err(anyhow!("unknown command `{cmd}`"))
@@ -436,4 +438,38 @@ fn experiment(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: ziplm experiment <id> [--fast]"))?;
     let ctx = ctx(args)?;
     exp::run(&ctx, &id)
+}
+
+/// `ziplm repro [--kick-tires] [--seed S] [--out DIR] [--precomputed DIR]`
+///
+/// Run the scenario-matrix reproduction harness (DESIGN.md §11).
+/// `--kick-tires` is the engine-free deterministic subset golden-tested
+/// in CI; without it the full matrix runs through the live session API
+/// against `--artifacts`.
+fn repro(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", exp::repro::DEFAULT_SEED);
+    let out = PathBuf::from(args.str_or("out", "runs/repro"));
+    let precomputed = PathBuf::from(args.str_or("precomputed", "tools/repro/precomputed"));
+    let report = if args.bool("kick-tires") {
+        exp::repro::run_kick_tires(seed, &precomputed)?
+    } else {
+        let ctx = ctx(args)?;
+        exp::repro::run_full(&ctx, seed, &precomputed)?
+    };
+    let (ran, cached, errors) = report.cells.iter().fold((0, 0, 0), |(r, c, e), cell| {
+        match cell.status {
+            exp::repro::CellStatus::Ran => (r + 1, c, e),
+            exp::repro::CellStatus::Cached => (r, c + 1, e),
+            exp::repro::CellStatus::Error => (r, c, e + 1),
+        }
+    });
+    println!(
+        "repro ({}): {} cells — {ran} ran, {cached} cached, {errors} error; {} families",
+        report.mode,
+        report.cells.len(),
+        report.families.len()
+    );
+    let (json_path, md_path) = exp::repro::write_report(&report, &out)?;
+    println!("wrote {} and {}", json_path.display(), md_path.display());
+    Ok(())
 }

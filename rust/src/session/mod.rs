@@ -492,7 +492,9 @@ impl<'e> CompressionSession<'e> {
     /// parallel on the global pool. Families land under
     /// `base/<env_slug>/family.json`, each manifest embedding the env
     /// it was certified against. Post-training mode: members are
-    /// one-shot variants of `state`, not fine-tuned.
+    /// one-shot variants of `state`, not fine-tuned. The repro harness
+    /// (`ziplm repro`, DESIGN.md §11) drives its full-mode scenario
+    /// matrix through this entry point — one capture, every env axis.
     pub fn emit_families(
         &self,
         state: &ModelState,

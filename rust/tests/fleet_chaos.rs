@@ -15,58 +15,21 @@
 
 #![allow(clippy::disallowed_methods)]
 
+mod support;
+
 use std::collections::HashSet;
 use std::time::Duration;
 
+use support::{fleet_cfg as cfg, fleet_env as env, fleet_members as members};
 use ziplm::coordinator::chaos::{gen_trace, run_chaos, TraceCfg, TraceClass};
-use ziplm::coordinator::family::{BucketLadder, Sla};
+use ziplm::coordinator::family::Sla;
 use ziplm::coordinator::fleet::{
-    self, admit, sim_logits, FleetCfg, FleetMember, Outcome, RetryPolicy, ShedReason, WorkerView,
-    SIM_WIDTH,
+    self, admit, sim_logits, Outcome, RetryPolicy, ShedReason, WorkerView, SIM_WIDTH,
 };
-use ziplm::env::{CostModel, InferenceEnv};
-use ziplm::latency::LatencyTable;
+use ziplm::env::CostModel;
 use ziplm::runtime::{FaultPlan, FaultRates};
 use ziplm::util::prop::Prop;
 use ziplm::util::rng::Rng;
-
-fn env() -> InferenceEnv {
-    let table = LatencyTable {
-        model: "m".into(),
-        device: "sim".into(),
-        regime: "throughput".into(),
-        attn: vec![0.0, 1.0e-3, 1.8e-3, 2.5e-3, 3.1e-3],
-        mlp: vec![(512, 8e-3), (256, 4.2e-3), (64, 1.5e-3), (0, 0.0)],
-        overhead: 1e-3,
-    };
-    InferenceEnv::measured(table)
-        .unwrap()
-        .with_batch_shape(8, 64)
-        .with_seq_sweep(vec![(16, 0.4), (32, 0.7), (64, 1.0)])
-}
-
-fn members() -> Vec<FleetMember> {
-    vec![
-        FleetMember { tag: "dense".into(), profile: vec![(4, 512); 2] },
-        FleetMember { tag: "2x".into(), profile: vec![(2, 256); 2] },
-        FleetMember { tag: "4x".into(), profile: vec![(1, 64); 2] },
-    ]
-}
-
-fn cfg(workers: usize) -> FleetCfg {
-    FleetCfg {
-        workers,
-        skews: vec![1.0, 1.2, 0.9],
-        max_batch: 4,
-        max_wait: Duration::from_micros(200),
-        queue_cap: 64,
-        retry: RetryPolicy { max_retries: 3, base: Duration::from_micros(150), factor: 2.0 },
-        quarantine_after: 50,
-        restart_delay: Duration::from_micros(400),
-        buckets: BucketLadder::new(env().bucket_ladder()),
-        time_scale: 0.0,
-    }
-}
 
 // ------------------------------------------------------------------
 // 1. exactly-one-outcome under arbitrary seeded fault plans

@@ -6,23 +6,15 @@
 
 #![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
 
-use std::path::Path;
+mod support;
 
+use support::engine;
 use ziplm::models::ModelState;
-use ziplm::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine};
+use ziplm::runtime::{lit_f32_shaped, lit_i32, lit_to_f32};
 use ziplm::tensor::{linalg, Tensor};
 use ziplm::util::prop::gen;
 use ziplm::util::rng::Rng;
 use ziplm::ziplm::{HloBackend, NativeBackend, ObsOps};
-
-fn engine() -> Option<Engine> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts/ not built");
-        return None;
-    }
-    Some(Engine::open(&dir).expect("engine"))
-}
 
 #[test]
 fn fwd_artifact_runs_and_shapes_match() {

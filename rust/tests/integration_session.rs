@@ -9,49 +9,11 @@
 
 mod support;
 
-use std::path::PathBuf;
-
-use support::{engine, toy_env};
+use support::{cfg, engine, other_env, tcfg, temp_dir, toy_env};
 use ziplm::data;
 use ziplm::env::InferenceEnv;
 use ziplm::models::ModelState;
-use ziplm::pruner::{PruneCfg, SpdyCfgLite};
 use ziplm::session::{env_slug, CompressionSession};
-use ziplm::train::TrainCfg;
-
-fn temp_dir(tag: &str) -> PathBuf {
-    let d = std::env::temp_dir().join(format!("ziplm_itest_{tag}"));
-    let _ = std::fs::remove_dir_all(&d);
-    d
-}
-
-fn cfg() -> PruneCfg {
-    PruneCfg { calib_samples: 16, spdy: SpdyCfgLite { iters: 4, seed: 5 }, ..Default::default() }
-}
-
-fn tcfg() -> TrainCfg {
-    TrainCfg {
-        lr: 5e-4,
-        epochs: 0.25,
-        lambdas: [1.0, 0.0, 0.0],
-        weight_decay: 0.0,
-        seed: 0,
-        log_every: 0,
-    }
-}
-
-/// A second, differently-priced environment derived from `env`: same
-/// ladder shape, uniformly different block times — enough to change
-/// SPDY's cost trade-offs without breaking table monotonicity.
-fn other_env(env: &InferenceEnv) -> InferenceEnv {
-    let mut t = env.table().clone();
-    for v in t.attn.iter_mut() {
-        *v *= 3.0;
-    }
-    t.overhead *= 0.25;
-    t.device = "toy-b".into();
-    InferenceEnv::measured(t).unwrap()
-}
 
 /// Acceptance: a small seeded model driven through BOTH the
 /// straight-line free-function pipeline (`session::pipeline`) and the

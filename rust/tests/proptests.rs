@@ -3,10 +3,15 @@
 
 #![allow(clippy::disallowed_methods)] // test/bench/example code: unwrap-on-failure is fine
 
+use std::path::Path;
 use std::time::Duration;
 
 use ziplm::coordinator::family::{route, route_batch, BatchReq, BucketLadder, MemberRoute, Sla};
 use ziplm::env::InferenceEnv;
+use ziplm::exp::repro::{
+    matrix_keys, scenario_cells, BucketRow, CellStatus, ChaosSummary, FamilyBlock, MemberSummary,
+    ReproReport, ScenarioCell,
+};
 use ziplm::latency::LatencyTable;
 use ziplm::models::family::{FamilyManifest, FamilyMember};
 use ziplm::runtime::ArtifactKey;
@@ -1091,6 +1096,152 @@ fn prop_route_batch_merge_honors_every_constituent() {
                 if bb < breqs.len() || bs < max_len {
                     return Err(format!("bucket ({bb},{bs}) does not cover the batch"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// reproduction matrix (exp::repro, DESIGN.md §11)
+// ---------------------------------------------------------------------
+
+/// Totality + injectivity of the scenario-matrix enumeration: for any
+/// seed, the engine-free cell sweep visits every {model, regime, env,
+/// target} key exactly once. The precomputed dir is deliberately
+/// nonexistent, so every cpu-measured cell FAILS — those cells must
+/// appear with a recorded error, never be dropped from the matrix.
+#[test]
+fn prop_repro_matrix_total_and_injective() {
+    Prop::new(8).check_msg(
+        "repro matrix total+injective, errors recorded",
+        |r| r.next_u64() >> 12,
+        |&seed| {
+            let cells = scenario_cells(seed, Path::new("/nonexistent/ziplm_proptest"));
+            let want = matrix_keys();
+            if cells.len() != want.len() {
+                return Err(format!("{} cells, want {}", cells.len(), want.len()));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for c in &cells {
+                let key =
+                    (c.model.clone(), c.regime.clone(), c.env.clone(), c.target.to_bits());
+                if !seen.insert(key) {
+                    return Err(format!(
+                        "duplicate cell {}/{}/{}/{}",
+                        c.model, c.regime, c.env, c.target
+                    ));
+                }
+            }
+            for (m, regime, env, t) in &want {
+                if !seen.contains(&(m.clone(), regime.clone(), env.clone(), t.to_bits())) {
+                    return Err(format!("missing cell {m}/{regime}/{env}/{t}"));
+                }
+            }
+            let errs: Vec<&ScenarioCell> =
+                cells.iter().filter(|c| c.status == CellStatus::Error).collect();
+            let want_errs = want.iter().filter(|(_, _, env, _)| env == "cpu-measured").count();
+            if errs.len() != want_errs {
+                return Err(format!("{} error cells, want {want_errs}", errs.len()));
+            }
+            for c in &errs {
+                if c.env != "cpu-measured" {
+                    return Err(format!("unexpected error on env {}", c.env));
+                }
+                if c.error.is_empty() {
+                    return Err("error cell with empty reason".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_scenario_cell(r: &mut Rng) -> ScenarioCell {
+    let status = match r.below(3) {
+        0 => CellStatus::Ran,
+        1 => CellStatus::Cached,
+        _ => CellStatus::Error,
+    };
+    ScenarioCell {
+        model: tricky_string(r),
+        regime: if r.below(2) == 0 { "oneshot".into() } else { "gradual".into() },
+        env: tricky_string(r),
+        target: 1.0 + r.f64() * 4.0,
+        status,
+        certified: r.f64() * 5.0,
+        proxy_error: r.f64() * 3.0,
+        profile: (0..r.below(5)).map(|_| (r.below(12), r.below(4096))).collect(),
+        error: if status == CellStatus::Error { tricky_string(r) } else { String::new() },
+    }
+}
+
+fn random_family_block(r: &mut Rng) -> FamilyBlock {
+    FamilyBlock {
+        model: tricky_string(r),
+        env: tricky_string(r),
+        members: (0..r.below(4))
+            .map(|_| MemberSummary {
+                tag: tricky_string(r),
+                est_speedup: r.f64() * 4.0,
+                est_batch_time_ms: r.f64() * 50.0,
+            })
+            .collect(),
+        buckets: (0..r.below(4)).map(|_| (1 + r.below(64), 1 + r.below(512))).collect(),
+        per_bucket: (0..r.below(4))
+            .map(|_| BucketRow {
+                member: tricky_string(r),
+                batch: r.below(64),
+                seq: r.below(512),
+                specialized: r.below(2) == 0,
+                batches: r.below(40),
+                requests: r.below(200),
+                certified_ms: r.f64() * 50.0,
+                realized_p50_ms: r.f64() * 50.0,
+                realized_p99_ms: r.f64() * 80.0,
+                gap: r.f64() * 2.0,
+            })
+            .collect(),
+        chaos: ChaosSummary {
+            submitted: r.below(200),
+            lost: r.below(3),
+            balanced: r.below(2) == 0,
+        },
+    }
+}
+
+/// ReproReport text round-trip: serialize → parse → deserialize →
+/// serialize must reproduce the bytes. f64 Display is shortest
+/// round-trip and the parser is correctly rounded, so exact equality
+/// must hold on arbitrary (not just q4'd) values; the report schema's
+/// error/success field exclusivity also normalizes on the first
+/// serialize, so the second pass can't differ.
+#[test]
+fn prop_repro_report_json_roundtrip_identity() {
+    Prop::new(40).check_msg(
+        "ReproReport JSON text round-trip",
+        |r| ReproReport {
+            mode: if r.below(2) == 0 { "kick-tires".into() } else { "full".into() },
+            seed: r.below(1 << 31) as u64,
+            cells: (0..r.below(6)).map(|_| random_scenario_cell(r)).collect(),
+            families: (0..r.below(4)).map(|_| random_family_block(r)).collect(),
+        },
+        |rep| {
+            let text = rep.to_json().to_pretty();
+            let parsed = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+            let back = ReproReport::from_json(&parsed).map_err(|e| e.to_string())?;
+            let text2 = back.to_json().to_pretty();
+            if text != text2 {
+                let line = text
+                    .lines()
+                    .zip(text2.lines())
+                    .position(|(a, b)| a != b)
+                    .map(|i| i + 1)
+                    .unwrap_or(0);
+                return Err(format!("round-trip drifted at line {line}"));
+            }
+            if back.seed != rep.seed || back.cells.len() != rep.cells.len() {
+                return Err("structural fields drifted".into());
             }
             Ok(())
         },

@@ -1,0 +1,155 @@
+//! Golden-file suite for the kick-tires reproduction report
+//! (DESIGN.md §11) — fully engine-free.
+//!
+//! Two layers of guarantee:
+//!   1. determinism: two seeded `run_kick_tires` invocations produce
+//!      bit-identical report JSON and rendered markdown;
+//!   2. pinned claims: the rendered tables match the goldens committed
+//!      under `tests/golden/` byte-for-byte, so any change to solver,
+//!      pricing, routing, replay, or formatting shows up as a reviewed
+//!      golden diff, never as silent drift.
+//!
+//! Refresh after an intentional harness change with
+//! `UPDATE_GOLDEN=1 cargo test --test repro_golden` (or
+//! `tools/repro/gen_golden.py`, which must agree — CI checks both).
+
+#![allow(clippy::disallowed_methods)] // test code: unwrap-on-failure is fine
+
+use std::path::PathBuf;
+
+use ziplm::exp::repro::{render_markdown, run_kick_tires, ReproReport, DEFAULT_SEED};
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn precomputed_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("tools")
+        .join("repro")
+        .join("precomputed")
+}
+
+/// First differing line rendered with context, so a golden mismatch in
+/// CI reads as "this claim changed", not as a wall of bytes.
+fn diff_lines(name: &str, want: &str, got: &str) -> Option<String> {
+    if want == got {
+        return None;
+    }
+    let (w, g): (Vec<&str>, Vec<&str>) = (want.lines().collect(), got.lines().collect());
+    for i in 0..w.len().max(g.len()) {
+        let a = w.get(i).copied();
+        let b = g.get(i).copied();
+        if a != b {
+            return Some(format!(
+                "{name}: first difference at line {}:\n  golden: {}\n  actual: {}",
+                i + 1,
+                a.unwrap_or("<absent>"),
+                b.unwrap_or("<absent>"),
+            ));
+        }
+    }
+    Some(format!("{name}: differs in trailing whitespace or length"))
+}
+
+#[test]
+fn kick_tires_is_bit_identical_across_runs() {
+    let pre = precomputed_dir();
+    let a = run_kick_tires(DEFAULT_SEED, &pre).unwrap();
+    let b = run_kick_tires(DEFAULT_SEED, &pre).unwrap();
+    let (ja, jb) = (a.to_json().to_pretty(), b.to_json().to_pretty());
+    assert_eq!(ja, jb, "two seeded runs must serialize identically");
+    assert_eq!(
+        render_markdown(&a),
+        render_markdown(&b),
+        "two seeded runs must render identically"
+    );
+    // and a different seed really is a different report (the seed is
+    // load-bearing, not decorative)
+    let c = run_kick_tires(DEFAULT_SEED ^ 0xDEAD, &pre).unwrap();
+    assert_ne!(ja, c.to_json().to_pretty(), "seed change must change the report");
+}
+
+#[test]
+fn report_round_trips_through_json() {
+    let report = run_kick_tires(DEFAULT_SEED, &precomputed_dir()).unwrap();
+    let text = report.to_json().to_pretty();
+    let parsed = ziplm::util::json::Json::parse(&text).unwrap();
+    let back = ReproReport::from_json(&parsed).unwrap();
+    assert_eq!(text, back.to_json().to_pretty(), "JSON round-trip must be lossless");
+}
+
+#[test]
+fn kick_tires_matches_committed_goldens() {
+    let report = run_kick_tires(DEFAULT_SEED, &precomputed_dir()).unwrap();
+    let json = report.to_json().to_pretty() + "\n";
+    let md = render_markdown(&report);
+
+    let dir = golden_dir();
+    let json_path = dir.join("repro_kick_tires.json");
+    let md_path = dir.join("REPORT.md");
+
+    if std::env::var_os("UPDATE_GOLDEN").is_some() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&json_path, &json).unwrap();
+        std::fs::write(&md_path, &md).unwrap();
+        eprintln!("updated goldens under {}", dir.display());
+        return;
+    }
+
+    let missing = |p: &std::path::Path, e: std::io::Error| -> String {
+        panic!("missing golden {} ({e}); run with UPDATE_GOLDEN=1", p.display())
+    };
+    let want_json = std::fs::read_to_string(&json_path).unwrap_or_else(|e| missing(&json_path, e));
+    let want_md = std::fs::read_to_string(&md_path).unwrap_or_else(|e| missing(&md_path, e));
+
+    let mut problems = Vec::new();
+    problems.extend(diff_lines("repro_kick_tires.json", &want_json, &json));
+    problems.extend(diff_lines("REPORT.md", &want_md, &md));
+    assert!(
+        problems.is_empty(),
+        "report drifted from committed goldens (UPDATE_GOLDEN=1 refreshes after an intentional \
+         change):\n{}",
+        problems.join("\n")
+    );
+}
+
+#[test]
+fn kick_tires_covers_every_cell_without_an_engine() {
+    let report = run_kick_tires(DEFAULT_SEED, &precomputed_dir()).unwrap();
+    assert_eq!(report.mode, "kick-tires");
+    assert_eq!(report.cells.len(), 36, "2 models x 2 regimes x 3 envs x 3 targets");
+    assert_eq!(report.families.len(), 6, "one family per (model, env)");
+    // the measured-CPU axis has no engine here, so it must degrade to
+    // the precomputed artifact (`cached`) — never to a dropped cell
+    let cached = report.cells.iter().filter(|c| c.status.name() == "cached").count();
+    let ran = report.cells.iter().filter(|c| c.status.name() == "ran").count();
+    assert_eq!(cached, 12, "all cpu-measured cells ride the precomputed tables");
+    assert_eq!(ran, 24, "analytic envs run live");
+    // every family ledger is balanced and lossless by construction
+    for fam in &report.families {
+        assert_eq!(fam.chaos.submitted, 48);
+        assert_eq!(fam.chaos.lost, 0);
+        assert!(fam.chaos.balanced);
+    }
+}
+
+#[test]
+fn missing_precomputed_tables_record_errors_not_absences() {
+    let report = run_kick_tires(DEFAULT_SEED, &PathBuf::from("/nonexistent/ziplm")).unwrap();
+    assert_eq!(report.cells.len(), 36, "failed cells must still appear");
+    let errors: Vec<_> =
+        report.cells.iter().filter(|c| c.status.name() == "error").collect();
+    assert_eq!(errors.len(), 12, "exactly the cpu-measured cells fail");
+    for c in &errors {
+        assert_eq!(c.env, "cpu-measured");
+        assert!(
+            c.error.contains("precomputed latency table"),
+            "error must say why: {}",
+            c.error
+        );
+    }
+    // the analytic axes are unaffected
+    assert_eq!(report.families.len(), 4, "one family per (model, analytic env)");
+}

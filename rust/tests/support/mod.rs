@@ -1,14 +1,19 @@
 //! Shared integration-test support (cargo compiles `tests/*.rs` as
-//! separate crates; both the pipeline and session suites include this
-//! via `mod support;` so the synthetic environment they drive is ONE
-//! definition, not a drifting copy).
+//! separate crates; the pipeline, session, runtime, and fleet suites
+//! include this via `mod support;` so the synthetic environments and
+//! configs they drive are ONE definition each, not drifting copies).
 #![allow(dead_code)] // each test crate uses a subset
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
+use ziplm::coordinator::family::BucketLadder;
+use ziplm::coordinator::fleet::{FleetCfg, FleetMember, RetryPolicy};
 use ziplm::env::InferenceEnv;
 use ziplm::latency::LatencyTable;
+use ziplm::pruner::{PruneCfg, SpdyCfgLite};
 use ziplm::runtime::Engine;
+use ziplm::train::TrainCfg;
 
 /// Open the artifact-backed engine, or `None` (skip the test) when
 /// `artifacts/` has not been built in this checkout.
@@ -42,4 +47,87 @@ pub fn toy_env(engine: &Engine, model: &str) -> InferenceEnv {
         overhead: 1e-3,
     })
     .unwrap()
+}
+
+/// A second, differently-priced environment derived from `env`: same
+/// ladder shape, uniformly different block times — enough to change
+/// SPDY's cost trade-offs without breaking table monotonicity.
+pub fn other_env(env: &InferenceEnv) -> InferenceEnv {
+    let mut t = env.table().clone();
+    for v in t.attn.iter_mut() {
+        *v *= 3.0;
+    }
+    t.overhead *= 0.25;
+    t.device = "toy-b".into();
+    InferenceEnv::measured(t).unwrap()
+}
+
+/// Fresh per-test scratch directory under the OS temp dir; any
+/// leftover from a previous (crashed) run is removed first.
+pub fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ziplm_itest_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Small-but-real pruning config for integration runs: enough calib
+/// samples and SPDY iterations to exercise the whole path, fast enough
+/// for CI.
+pub fn cfg() -> PruneCfg {
+    PruneCfg { calib_samples: 16, spdy: SpdyCfgLite { iters: 4, seed: 5 }, ..Default::default() }
+}
+
+/// Quarter-epoch distillation config matching `cfg()` above.
+pub fn tcfg() -> TrainCfg {
+    TrainCfg {
+        lr: 5e-4,
+        epochs: 0.25,
+        lambdas: [1.0, 0.0, 0.0],
+        weight_decay: 0.0,
+        seed: 0,
+        log_every: 0,
+    }
+}
+
+/// Engine-free measured environment for the fleet/chaos suites:
+/// hand-written table, batch shape (8, 64), three-point seq sweep.
+pub fn fleet_env() -> InferenceEnv {
+    let table = LatencyTable {
+        model: "m".into(),
+        device: "sim".into(),
+        regime: "throughput".into(),
+        attn: vec![0.0, 1.0e-3, 1.8e-3, 2.5e-3, 3.1e-3],
+        mlp: vec![(512, 8e-3), (256, 4.2e-3), (64, 1.5e-3), (0, 0.0)],
+        overhead: 1e-3,
+    };
+    InferenceEnv::measured(table)
+        .unwrap()
+        .with_batch_shape(8, 64)
+        .with_seq_sweep(vec![(16, 0.4), (32, 0.7), (64, 1.0)])
+}
+
+/// Three-member speedup ladder served by the simulated fleet.
+pub fn fleet_members() -> Vec<FleetMember> {
+    vec![
+        FleetMember { tag: "dense".into(), profile: vec![(4, 512); 2] },
+        FleetMember { tag: "2x".into(), profile: vec![(2, 256); 2] },
+        FleetMember { tag: "4x".into(), profile: vec![(1, 64); 2] },
+    ]
+}
+
+/// Fleet config shared by the chaos acceptance tests: tight timings
+/// (time_scale 0.0) so campaigns run in milliseconds.
+pub fn fleet_cfg(workers: usize) -> FleetCfg {
+    FleetCfg {
+        workers,
+        skews: vec![1.0, 1.2, 0.9],
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64,
+        retry: RetryPolicy { max_retries: 3, base: Duration::from_micros(150), factor: 2.0 },
+        quarantine_after: 50,
+        restart_delay: Duration::from_micros(400),
+        buckets: BucketLadder::new(fleet_env().bucket_ladder()),
+        time_scale: 0.0,
+    }
 }

@@ -16,6 +16,10 @@ rustdoc comments under rust/src + examples:
    actually has, so doc comments can't cite sections that were never
    written (or got renumbered away).
 
+Extra markdown files (e.g. generated reports like
+rust/tests/golden/REPORT.md) can be passed as argv paths; they get the
+same link/anchor/§N checks as the core set.
+
 Exit code 0 = clean, 1 = problems (each printed as `file: problem`).
 """
 
@@ -78,11 +82,17 @@ def strip_code(md_text: str) -> str:
     return "\n".join(out)
 
 
-def check_markdown(problems: list) -> None:
+def check_markdown(problems: list, extra: list) -> None:
     sections = design_sections()
-    for name in MARKDOWN:
-        path = REPO / name
+    # core files may legitimately be absent (fresh checkout); an extra
+    # path was requested explicitly, so a missing one is a failure
+    paths = [(REPO / name, False) for name in MARKDOWN]
+    paths += [(Path(e).resolve(), True) for e in extra]
+    for path, required in paths:
+        name = str(path.relative_to(REPO)) if path.is_relative_to(REPO) else str(path)
         if not path.exists():
+            if required:
+                problems.append(f"{name}: file does not exist")
             continue
         text = strip_code(path.read_text(encoding="utf-8"))
         for target in LINK_RE.findall(text):
@@ -125,7 +135,7 @@ def check_rustdoc(problems: list) -> None:
 
 def main() -> int:
     problems: list = []
-    check_markdown(problems)
+    check_markdown(problems, sys.argv[1:])
     check_rustdoc(problems)
     if problems:
         for p in problems:

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Full reproduction run: the complete scenario matrix through the real
+# CompressionSession engine (train → capture → prune → emit families),
+# not just the engine-free kick-tires subset.
+#
+# This is NOT deterministic across machines the way kick-tires is —
+# measured latency tables depend on the host — so its report is an
+# artifact to read, not a golden to diff. Expect minutes, not seconds.
+#
+# Usage: tools/repro/full.sh [OUT_DIR] [SEED]
+# See DESIGN.md §11 for the matrix axes and report schema.
+set -euo pipefail
+cd "$(dirname "$0")/../.."
+
+out="${1:-runs/repro-full}"
+seed="${2:-7}"
+
+cargo run --release --locked --manifest-path rust/Cargo.toml -- \
+  repro --seed "$seed" --out "$out" --precomputed tools/repro/precomputed
+
+python3 tools/repro/render_report.py "$out/repro_report.json" --check-md "$out/REPORT.md"
+
+echo "Done! full reproduction report at $out/REPORT.md"

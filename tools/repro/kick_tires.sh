@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Engine-free kick-tires gate: run the reproduction matrix subset and
+# fail if its report drifts from the committed goldens by a single byte.
+#
+# Three independent checks, strongest first:
+#   1. gen_golden.py --check — the Python transliteration still
+#      reproduces the committed rust/tests/golden/ files (catches a
+#      golden edited by hand, or a stale golden after a harness change).
+#   2. `ziplm repro --kick-tires` — the real binary over the same
+#      matrix, byte-diffed against the same goldens (catches Rust-side
+#      drift: the whole point of the gate).
+#   3. render_report.py lint + --check-md — schema totality (every
+#      matrix cell present exactly once, never silently dropped) and an
+#      independent re-render of REPORT.md from the JSON.
+#
+# No engine, no network, no GPU: every cell is either computed from the
+# analytic roofline or loaded from tools/repro/precomputed (`cached`).
+# See DESIGN.md §11.
+set -euo pipefail
+cd "$(dirname "$0")/../.."
+
+out="${1:-runs/repro-kick-tires}"
+
+echo "== [1/3] transliteration self-check =="
+python3 tools/repro/gen_golden.py --check
+
+echo "== [2/3] ziplm repro --kick-tires =="
+cargo run --release --locked --manifest-path rust/Cargo.toml -- \
+  repro --kick-tires --out "$out" --precomputed tools/repro/precomputed
+diff -u rust/tests/golden/repro_kick_tires.json "$out/repro_report.json"
+diff -u rust/tests/golden/REPORT.md "$out/REPORT.md"
+echo "binary output matches committed goldens byte-for-byte"
+
+echo "== [3/3] report lint + independent re-render =="
+python3 tools/repro/render_report.py "$out/repro_report.json" --check-md "$out/REPORT.md"
+
+echo "Done! kick-tires report verified against goldens ($out/REPORT.md)"
