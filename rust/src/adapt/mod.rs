@@ -1,0 +1,709 @@
+//! Traffic-adaptive retargeting: close the loop from serving back to
+//! pruning (DESIGN.md §12).
+//!
+//! A family is certified against ONE [`InferenceEnv`] — the anchor
+//! batch shape, seq sweep, and absolute block times admission prices
+//! with. The moment real traffic drifts (seq-length mix, batch regime,
+//! device slowdowns), that certification goes stale: realized latency
+//! and the certified estimate diverge, and the speedup ladder solves
+//! for a workload nobody is sending anymore. This module turns the
+//! realized [`BucketSample`] stream every serving surface already
+//! records into pruning decisions:
+//!
+//! * [`detect_drift`] — pure statistics over recorded samples: a
+//!   request-mass-weighted latency-ratio test (realized / certified),
+//!   a traffic-mass shape test against the certifying anchor, and an
+//!   overrun rate. No wall clock, no threads: same samples, same
+//!   report, bit for bit.
+//! * [`fit_env`] — constructs a new env from the observed
+//!   distribution: anchor re-pointed at the traffic-mass mean shape,
+//!   seq sweep re-anchored onto the observed seq support, and the
+//!   whole table skewed by the mean realized/certified ratio (via
+//!   [`InferenceEnv::with_device_skew`]), so the fitted env certifies
+//!   at what the device actually delivered.
+//! * [`frontier_points`] / [`propose_targets`] — fit the
+//!   loss-vs-certified-speedup frontier from emitted
+//!   [`FamilyManifest`]s (the *Compression Laws* framing) and propose
+//!   the next target ladder: the knee of the frontier plus
+//!   equal-loss-spaced points, deterministic.
+//! * [`AdaptController`] — wires the three into
+//!   [`CompressionSession::retarget`]: one capture, a living family
+//!   whose members track the workload. Zero Hessian recomputation —
+//!   capture-side artifacts are env-free, only the SPDY solve re-runs.
+//!
+//! Everything decision-making here is a pure function over recorded
+//! samples, in the same engine-free, property-testable style as
+//! `coordinator::family::route` and `coordinator::fleet::admit`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::family::BucketSample;
+use crate::env::InferenceEnv;
+use crate::models::family::FamilyManifest;
+use crate::session::CompressionSession;
+use crate::util::json::Json;
+
+// ------------------------------------------------------------ drift
+
+/// Thresholds for [`detect_drift`]. A report flags `drifted` only when
+/// the sample stream carries at least `min_requests` requests AND one
+/// of the two statistics exceeds its tolerance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftCfg {
+    /// tolerated request-weighted mean |realized/certified − 1|
+    pub latency_ratio_tol: f64,
+    /// tolerated traffic-mass-weighted relative shape deviation from
+    /// the certifying anchor
+    pub mass_shift_tol: f64,
+    /// minimum requests before a stream counts as evidence
+    pub min_requests: usize,
+}
+
+impl Default for DriftCfg {
+    fn default() -> DriftCfg {
+        DriftCfg { latency_ratio_tol: 0.1, mass_shift_tol: 0.25, min_requests: 16 }
+    }
+}
+
+/// Per-(batch, seq) drift row: where the traffic mass sits and how the
+/// realized latency compares to the certified estimate there.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketDrift {
+    /// executed batch dimension
+    pub batch: usize,
+    /// executed padded seq
+    pub seq: usize,
+    /// requests served at this shape
+    pub requests: usize,
+    /// fraction of all requests served at this shape (traffic mass)
+    pub share: f64,
+    /// request-weighted mean realized/certified latency ratio
+    pub latency_ratio: f64,
+}
+
+/// Outcome of [`detect_drift`]: the three drift statistics, the anchor
+/// they were measured against, and the per-shape mass breakdown.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftReport {
+    /// total requests in the sample stream
+    pub requests: usize,
+    /// certifying anchor `(batch, seq)` the shape test compared against
+    pub anchor: (usize, usize),
+    /// request-weighted mean |realized/certified − 1|
+    pub latency_drift: f64,
+    /// traffic-mass-weighted mean relative `(batch, seq)` deviation
+    /// from the anchor (0 = every batch executed at the anchor shape)
+    pub mass_shift: f64,
+    /// fraction of requests whose batch ran over its certified estimate
+    pub overrun_rate: f64,
+    /// per-(batch, seq) mass + latency-ratio rows, shape ascending
+    pub per_bucket: Vec<BucketDrift>,
+    /// whether the thresholds in the driving [`DriftCfg`] were crossed
+    pub drifted: bool,
+}
+
+impl DriftReport {
+    /// Serialize (stable schema; floats unrounded).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("anchor_batch", Json::Num(self.anchor.0 as f64)),
+            ("anchor_seq", Json::Num(self.anchor.1 as f64)),
+            ("latency_drift", Json::Num(self.latency_drift)),
+            ("mass_shift", Json::Num(self.mass_shift)),
+            ("overrun_rate", Json::Num(self.overrun_rate)),
+            (
+                "per_bucket",
+                Json::Arr(
+                    self.per_bucket
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("batch", Json::Num(b.batch as f64)),
+                                ("seq", Json::Num(b.seq as f64)),
+                                ("requests", Json::Num(b.requests as f64)),
+                                ("share", Json::Num(b.share)),
+                                ("latency_ratio", Json::Num(b.latency_ratio)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("drifted", Json::Bool(self.drifted)),
+        ])
+    }
+
+    /// Parse the [`DriftReport::to_json`] form.
+    pub fn from_json(j: &Json) -> Result<DriftReport> {
+        let num = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("drift report: no `{k}`"))
+        };
+        let per_bucket = j
+            .get("per_bucket")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|b| {
+                Some(BucketDrift {
+                    batch: b.get("batch")?.as_usize()?,
+                    seq: b.get("seq")?.as_usize()?,
+                    requests: b.get("requests")?.as_usize()?,
+                    share: b.get("share")?.as_f64()?,
+                    latency_ratio: b.get("latency_ratio")?.as_f64()?,
+                })
+            })
+            .collect();
+        Ok(DriftReport {
+            requests: num("requests")? as usize,
+            anchor: (num("anchor_batch")? as usize, num("anchor_seq")? as usize),
+            latency_drift: num("latency_drift")?,
+            mass_shift: num("mass_shift")?,
+            overrun_rate: num("overrun_rate")?,
+            per_bucket,
+            drifted: j.get("drifted").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// Realized/certified latency ratio of one sample (1.0 when the sample
+/// carries no usable certified estimate).
+fn sample_ratio(s: &BucketSample) -> f64 {
+    if s.certified > 0.0 {
+        s.exec.as_secs_f64() / s.certified
+    } else {
+        1.0
+    }
+}
+
+/// Pure drift detector: compare the realized `(batch, seq, latency)`
+/// distribution in `samples` against the certifying `env`.
+///
+/// Three statistics, all request-mass weighted so busy shapes dominate
+/// idle ones and the result is invariant to how batches were chunked:
+///
+/// * `latency_drift` — mean |realized/certified − 1| per batch;
+/// * `mass_shift` — mean relative `(batch, seq)` deviation from the
+///   env's anchor shape (each axis normalized by the anchor, averaged);
+/// * `overrun_rate` — fraction of requests whose batch exceeded its
+///   certified estimate.
+///
+/// No wall-clock dependence: the function of `(samples, env, cfg)` is
+/// total and deterministic, so it proptests like `route()` does.
+pub fn detect_drift(samples: &[BucketSample], env: &InferenceEnv, cfg: &DriftCfg) -> DriftReport {
+    let anchor = env.batch_shape();
+    let total: usize = samples.iter().map(|s| s.requests).sum();
+    if total == 0 {
+        return DriftReport {
+            requests: 0,
+            anchor,
+            latency_drift: 0.0,
+            mass_shift: 0.0,
+            overrun_rate: 0.0,
+            per_bucket: Vec::new(),
+            drifted: false,
+        };
+    }
+    let (ab, aseq) = anchor;
+    let mut latency_drift = 0.0;
+    let mut mass_shift = 0.0;
+    let mut overrun_rate = 0.0;
+    // (batch, seq) → (requests, Σ requests·ratio)
+    let mut by: std::collections::BTreeMap<(usize, usize), (usize, f64)> =
+        std::collections::BTreeMap::new();
+    for s in samples {
+        let w = s.requests as f64 / total as f64;
+        let ratio = sample_ratio(s);
+        latency_drift += w * (ratio - 1.0).abs();
+        if s.exec.as_secs_f64() > s.certified {
+            overrun_rate += w;
+        }
+        let ds = if aseq > 0 { (s.seq as f64 - aseq as f64).abs() / aseq as f64 } else { 0.0 };
+        let db = if ab > 0 { (s.batch as f64 - ab as f64).abs() / ab as f64 } else { 0.0 };
+        mass_shift += w * 0.5 * (ds + db);
+        let e = by.entry((s.batch, s.seq)).or_insert((0, 0.0));
+        e.0 += s.requests;
+        e.1 += s.requests as f64 * ratio;
+    }
+    let per_bucket = by
+        .into_iter()
+        .map(|((batch, seq), (requests, ratio_sum))| BucketDrift {
+            batch,
+            seq,
+            requests,
+            share: requests as f64 / total as f64,
+            latency_ratio: ratio_sum / requests as f64,
+        })
+        .collect();
+    let drifted = total >= cfg.min_requests
+        && (latency_drift > cfg.latency_ratio_tol || mass_shift > cfg.mass_shift_tol);
+    DriftReport { requests: total, anchor, latency_drift, mass_shift, overrun_rate, per_bucket, drifted }
+}
+
+// ------------------------------------------------------------ fitting
+
+/// Fit a new [`InferenceEnv`] to the observed traffic distribution.
+///
+/// The fitted env is `base` re-anchored and re-priced:
+///
+/// * anchor `(batch, seq)` moves to the request-mass-weighted mean
+///   observed shape (rounded);
+/// * the seq sweep is rebuilt on the OBSERVED seq support, each row's
+///   scale re-normalized so the new anchor seq prices at 1.0 (reusing
+///   the base sweep's interpolation — the `regime_sweep` /
+///   `analytic_seq_sweep` machinery the base env was built from);
+/// * every absolute time is skewed by the mean realized/certified
+///   ratio times the relative cost of the new anchor under the base
+///   env, so that at the new anchor shape the fitted env certifies
+///   exactly what serving realized.
+///
+/// Pure in `(samples, base)` — bit-deterministic, engine-free.
+pub fn fit_env(samples: &[BucketSample], base: &InferenceEnv) -> Result<InferenceEnv> {
+    let total: usize = samples.iter().map(|s| s.requests).sum();
+    if total == 0 {
+        return Err(anyhow!("fit_env needs at least one recorded request"));
+    }
+    let mut mean_b = 0.0;
+    let mut mean_s = 0.0;
+    let mut ratio = 0.0;
+    for s in samples {
+        let w = s.requests as f64 / total as f64;
+        mean_b += w * s.batch as f64;
+        mean_s += w * s.seq as f64;
+        ratio += w * sample_ratio(s);
+    }
+    let b_star = (mean_b.round() as usize).max(1);
+    let s_star = (mean_s.round() as usize).max(1);
+    let (b0, _) = base.batch_shape();
+    let batch_factor = if b0 > 0 { b_star as f64 / b0 as f64 } else { 1.0 };
+    let anchor_scale = base.seq_scale(s_star);
+    let skew = ratio * batch_factor * anchor_scale;
+    let mut seqs: Vec<usize> = samples.iter().map(|s| s.seq).filter(|&s| s > 0).collect();
+    seqs.sort_unstable();
+    seqs.dedup();
+    let sweep: Vec<(usize, f64)> =
+        seqs.into_iter().map(|s| (s, base.seq_scale(s) / anchor_scale)).collect();
+    Ok(base
+        .with_device_skew(skew)
+        .with_batch_shape(b_star, s_star)
+        .with_seq_sweep(sweep))
+}
+
+// ----------------------------------------------------------- frontier
+
+/// One point on the loss-vs-certified-speedup frontier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// certified speedup (x axis)
+    pub speedup: f64,
+    /// calibration loss, or the `1 − 1/speedup` proxy for members that
+    /// recorded none (y axis; lower is better)
+    pub loss: f64,
+    /// member tag the point came from (diagnostics)
+    pub tag: String,
+}
+
+/// Deterministic loss proxy for family members emitted before
+/// calibration losses were recorded: monotone in speedup, 0 at dense.
+pub fn loss_proxy(est_speedup: f64) -> f64 {
+    if est_speedup > 0.0 {
+        1.0 - 1.0 / est_speedup
+    } else {
+        0.0
+    }
+}
+
+/// Collect every member of every manifest as a candidate point and
+/// keep the Pareto frontier: no kept point is dominated by another
+/// with ≥ speedup and ≤ loss. Result is ascending in speedup AND in
+/// loss — the usable accuracy-vs-speedup trade-off curve.
+pub fn frontier_points(manifests: &[FamilyManifest]) -> Vec<FrontierPoint> {
+    let mut pts: Vec<FrontierPoint> = Vec::new();
+    for fam in manifests {
+        for m in &fam.members {
+            let loss = match m.calib_loss {
+                Some(l) if l.is_finite() => l,
+                _ => loss_proxy(m.est_speedup),
+            };
+            if m.est_speedup.is_finite() && loss.is_finite() {
+                pts.push(FrontierPoint { speedup: m.est_speedup, loss, tag: m.tag.clone() });
+            }
+        }
+    }
+    pts.sort_by(|a, b| {
+        a.speedup.total_cmp(&b.speedup).then(a.loss.total_cmp(&b.loss)).then(a.tag.cmp(&b.tag))
+    });
+    // sweep from the fastest point down: keep strictly-improving losses
+    let mut kept: Vec<FrontierPoint> = Vec::new();
+    let mut best = f64::INFINITY;
+    for p in pts.into_iter().rev() {
+        if p.loss < best {
+            best = p.loss;
+            kept.push(p);
+        }
+    }
+    kept.reverse();
+    kept
+}
+
+/// Knee of the frontier: the point farthest from the chord between the
+/// endpoints, axes normalized to [0, 1] so the pick is scale-free.
+/// Deterministic (first strict maximum wins); `None` below 3 points.
+pub fn knee_point(frontier: &[FrontierPoint]) -> Option<f64> {
+    if frontier.len() < 3 {
+        return None;
+    }
+    let (a, b) = (&frontier[0], &frontier[frontier.len() - 1]);
+    let dx = b.speedup - a.speedup;
+    let dy = b.loss - a.loss;
+    if dx <= 0.0 {
+        return None;
+    }
+    let sy = if dy != 0.0 { dy } else { 1.0 };
+    let mut best = 0.0;
+    let mut at: Option<f64> = None;
+    for p in &frontier[1..frontier.len() - 1] {
+        let px = (p.speedup - a.speedup) / dx;
+        let py = (p.loss - a.loss) / sy;
+        // |cross product| of (1, dy/sy) × (px, py) in normalized axes
+        let d = (px * (dy / sy) - py).abs();
+        if d > best {
+            best = d;
+            at = Some(p.speedup);
+        }
+    }
+    at.or(Some(frontier[frontier.len() / 2].speedup))
+}
+
+/// Propose the next `n` speedup targets from the frontier: the knee
+/// point plus `n` equal-loss-spaced picks (for each evenly spaced loss
+/// level, the fastest frontier point whose loss does not exceed it),
+/// deduplicated and ascending. Empty frontier → empty proposal.
+pub fn propose_targets(frontier: &[FrontierPoint], n: usize) -> Vec<f64> {
+    if frontier.is_empty() || n == 0 {
+        return Vec::new();
+    }
+    let y0 = frontier[0].loss;
+    let y1 = frontier[frontier.len() - 1].loss;
+    let mut out: Vec<f64> = Vec::new();
+    if let Some(k) = knee_point(frontier) {
+        out.push(k);
+    }
+    for k in 1..=n {
+        let want = y0 + (y1 - y0) * k as f64 / n as f64;
+        let mut pick = frontier[0].speedup;
+        for p in frontier {
+            if p.loss <= want + 1e-12 {
+                pick = p.speedup;
+            }
+        }
+        out.push(pick);
+    }
+    out.sort_by(|a, b| a.total_cmp(b));
+    out.dedup();
+    out
+}
+
+// --------------------------------------------------------- controller
+
+/// The full adaptation decision: what drifted, what env fits the
+/// observed traffic, and which targets the frontier recommends.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptPlan {
+    /// the drift report that triggered (or held) the plan
+    pub drift: DriftReport,
+    /// env fitted to the observed distribution (present iff drifted)
+    pub fitted: Option<InferenceEnv>,
+    /// recommended speedup targets (knee + equal-loss-spaced)
+    pub targets: Vec<f64>,
+    /// the frontier knee, when one exists
+    pub knee: Option<f64>,
+}
+
+impl AdaptPlan {
+    /// What the controller will do with this plan.
+    pub fn action(&self) -> &'static str {
+        if self.drift.drifted && self.fitted.is_some() {
+            "retarget"
+        } else {
+            "hold"
+        }
+    }
+
+    /// Serialize (the fitted env embeds in full, so a plan file is
+    /// self-contained input for `prune-gradual --retarget`).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("drift", self.drift.to_json())];
+        if let Some(env) = &self.fitted {
+            pairs.push(("fitted_env", env.to_json()));
+        }
+        if let Some(k) = self.knee {
+            pairs.push(("knee", Json::Num(k)));
+        }
+        pairs.push(("targets", Json::arr_f64(&self.targets)));
+        pairs.push(("action", Json::Str(self.action().to_string())));
+        Json::obj(pairs)
+    }
+
+    /// Parse the [`AdaptPlan::to_json`] form (the `action` key is
+    /// derived state and ignored on read).
+    pub fn from_json(j: &Json) -> Result<AdaptPlan> {
+        let drift = DriftReport::from_json(
+            j.get("drift").ok_or_else(|| anyhow!("adapt plan: no `drift`"))?,
+        )?;
+        let fitted = j.get("fitted_env").map(InferenceEnv::from_json).transpose()?;
+        let targets = j
+            .get("targets")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        Ok(AdaptPlan { drift, fitted, targets, knee: j.get("knee").and_then(Json::as_f64) })
+    }
+}
+
+/// Policy knobs + the one-call entry points gluing detector, fitter,
+/// and frontier to a [`CompressionSession`].
+#[derive(Clone, Debug)]
+pub struct AdaptController {
+    /// drift thresholds
+    pub cfg: DriftCfg,
+    /// how many equal-loss-spaced targets to propose
+    pub n_targets: usize,
+}
+
+impl Default for AdaptController {
+    fn default() -> AdaptController {
+        AdaptController { cfg: DriftCfg::default(), n_targets: 3 }
+    }
+}
+
+impl AdaptController {
+    /// Build the full [`AdaptPlan`] for one sample stream: detect
+    /// drift against `env`, fit a replacement env when drifted, and
+    /// propose targets from the manifests' frontier. Pure.
+    pub fn plan(
+        &self,
+        samples: &[BucketSample],
+        env: &InferenceEnv,
+        manifests: &[FamilyManifest],
+    ) -> Result<AdaptPlan> {
+        let drift = detect_drift(samples, env, &self.cfg);
+        let fitted = if drift.drifted { Some(fit_env(samples, env)?) } else { None };
+        let frontier = frontier_points(manifests);
+        let targets = propose_targets(&frontier, self.n_targets);
+        let knee = knee_point(&frontier);
+        Ok(AdaptPlan { drift, fitted, targets, knee })
+    }
+
+    /// Apply a plan to a live session: when it says retarget, swap the
+    /// session onto the fitted env ([`CompressionSession::retarget`] —
+    /// zero Hessian recomputation; the next solve re-prices the same
+    /// checkpointed databases). Returns whether a retarget happened.
+    pub fn apply(&self, plan: &AdaptPlan, sess: &mut CompressionSession) -> Result<bool> {
+        match (&plan.fitted, plan.drift.drifted) {
+            (Some(env), true) => {
+                sess.retarget(env.clone())?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::latency::LatencyTable;
+    use crate::models::family::FamilyMember;
+    use std::time::Duration;
+
+    fn env() -> InferenceEnv {
+        InferenceEnv::measured(LatencyTable {
+            model: "m".into(),
+            device: "sim".into(),
+            regime: "throughput".into(),
+            attn: vec![0.0, 1.0e-3, 1.8e-3, 2.5e-3, 3.1e-3],
+            mlp: vec![(512, 8e-3), (256, 4.2e-3), (64, 1.5e-3), (0, 0.0)],
+            overhead: 1e-3,
+        })
+        .unwrap()
+        .with_batch_shape(8, 64)
+        .with_seq_sweep(vec![(16, 0.4), (32, 0.7), (64, 1.0)])
+    }
+
+    fn sample(batch: usize, seq: usize, ratio: f64, requests: usize) -> BucketSample {
+        let certified = 4e-3;
+        BucketSample {
+            member: "2x".into(),
+            batch,
+            seq,
+            specialized: true,
+            exec: Duration::from_secs_f64(certified * ratio),
+            requests,
+            certified,
+        }
+    }
+
+    #[test]
+    fn anchor_traffic_at_certified_latency_never_drifts() {
+        let samples: Vec<BucketSample> = (0..10).map(|_| sample(8, 64, 1.0, 8)).collect();
+        let r = detect_drift(&samples, &env(), &DriftCfg::default());
+        assert_eq!(r.requests, 80);
+        assert_eq!(r.latency_drift, 0.0);
+        assert_eq!(r.mass_shift, 0.0);
+        assert_eq!(r.overrun_rate, 0.0);
+        assert!(!r.drifted);
+        assert_eq!(r.per_bucket.len(), 1);
+        assert_eq!(r.per_bucket[0].share, 1.0);
+    }
+
+    #[test]
+    fn empty_stream_and_thin_evidence_hold() {
+        let r = detect_drift(&[], &env(), &DriftCfg::default());
+        assert!(!r.drifted);
+        assert_eq!(r.requests, 0);
+        // massive drift but below min_requests → still hold
+        let samples = vec![sample(8, 16, 3.0, 4)];
+        let r = detect_drift(&samples, &env(), &DriftCfg::default());
+        assert!(r.latency_drift > 1.0);
+        assert!(!r.drifted, "4 requests are not evidence at min_requests=16");
+    }
+
+    #[test]
+    fn latency_and_mass_drift_flag_and_scale_monotonically() {
+        let e = env();
+        let cfg = DriftCfg::default();
+        let mut last = 0.0;
+        for shift in [1.05, 1.2, 1.5, 2.0] {
+            let samples: Vec<BucketSample> = (0..8).map(|_| sample(8, 64, shift, 8)).collect();
+            let r = detect_drift(&samples, &e, &cfg);
+            assert!(r.latency_drift > last, "monotone in injected shift");
+            last = r.latency_drift;
+        }
+        assert!(last > cfg.latency_ratio_tol);
+        // seq mass moving off the anchor flags the mass test
+        let short: Vec<BucketSample> = (0..8).map(|_| sample(8, 16, 1.0, 8)).collect();
+        let r = detect_drift(&short, &e, &cfg);
+        assert!((r.mass_shift - 0.375).abs() < 1e-12, "{}", r.mass_shift);
+        assert!(r.drifted);
+    }
+
+    #[test]
+    fn drift_report_json_round_trips() {
+        let samples: Vec<BucketSample> =
+            (0..6).map(|i| sample(8, if i % 2 == 0 { 16 } else { 64 }, 1.3, 5)).collect();
+        let r = detect_drift(&samples, &env(), &DriftCfg::default());
+        let back = DriftReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        let back2 = DriftReport::from_json(
+            &crate::util::json::Json::parse(&r.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r, back2);
+    }
+
+    #[test]
+    fn fitted_env_tracks_the_observed_distribution() {
+        let e = env();
+        // all traffic at (8, 16), running 1.5x over certified
+        let samples: Vec<BucketSample> = (0..8).map(|_| sample(8, 16, 1.5, 8)).collect();
+        let f = fit_env(&samples, &e).unwrap();
+        assert_eq!(f.batch_shape(), (8, 16));
+        // observed support only, re-anchored to scale 1.0
+        assert_eq!(f.seq_sweep(), &[(16, 1.0)]);
+        // at the new anchor the fitted env certifies what was realized:
+        // base price at (8,16) is model_time * 0.4; realized 1.5x that
+        let profile = vec![(2usize, 256usize); 2];
+        let want = e.batch_time(&profile, 8, 16) * 1.5;
+        let got = f.batch_time(&profile, 8, 16);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // deterministic
+        assert_eq!(f, fit_env(&samples, &e).unwrap());
+        assert!(fit_env(&[], &e).is_err());
+    }
+
+    fn member(tag: &str, est: f64, loss: Option<f64>) -> FamilyMember {
+        FamilyMember {
+            tag: tag.into(),
+            ckpt: format!("{tag}.zlm"),
+            target: est,
+            est_speedup: est,
+            profile: vec![(2, 8)],
+            calib_loss: loss,
+        }
+    }
+
+    fn manifest(members: Vec<FamilyMember>) -> FamilyManifest {
+        let mut f = FamilyManifest::new("m", "t", "throughput");
+        for m in members {
+            f.push(m);
+        }
+        f
+    }
+
+    #[test]
+    fn frontier_is_pareto_and_deterministic() {
+        let fam = manifest(vec![
+            member("dense", 1.0, Some(0.0)),
+            member("2x", 2.0, Some(0.1)),
+            member("2x-bad", 1.9, Some(0.5)), // dominated by 2x
+            member("3x", 3.0, Some(0.3)),
+            member("4x", 4.1, None), // proxy loss 1 − 1/4.1 ≈ 0.756
+        ]);
+        let f = frontier_points(&[fam.clone()]);
+        let tags: Vec<&str> = f.iter().map(|p| p.tag.as_str()).collect();
+        assert_eq!(tags, vec!["dense", "2x", "3x", "4x"]);
+        for w in f.windows(2) {
+            assert!(w[0].speedup < w[1].speedup && w[0].loss <= w[1].loss);
+        }
+        assert_eq!(f, frontier_points(&[fam]));
+    }
+
+    #[test]
+    fn targets_span_the_frontier_and_include_the_knee() {
+        let fam = manifest(vec![
+            member("dense", 1.0, Some(0.0)),
+            member("2x", 2.0, Some(0.02)),
+            member("3x", 3.0, Some(0.05)),
+            member("6x", 6.0, Some(0.60)),
+        ]);
+        let f = frontier_points(&[fam]);
+        let knee = knee_point(&f).unwrap();
+        // 3x is the sharp corner of this curve
+        assert_eq!(knee, 3.0);
+        let t = propose_targets(&f, 3);
+        assert!(t.contains(&knee));
+        assert!(t.windows(2).all(|w| w[0] < w[1]), "{t:?}");
+        assert_eq!(*t.last().unwrap(), 6.0, "the fastest point is always proposed");
+        assert!(propose_targets(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn plan_round_trips_and_holds_without_drift() {
+        let e = env();
+        let ctl = AdaptController::default();
+        let fams = [manifest(vec![
+            member("dense", 1.0, Some(0.0)),
+            member("2x", 2.0, Some(0.1)),
+            member("3x", 3.0, Some(0.4)),
+        ])];
+        // calm traffic → hold, no fitted env
+        let calm: Vec<BucketSample> = (0..8).map(|_| sample(8, 64, 1.0, 8)).collect();
+        let plan = ctl.plan(&calm, &e, &fams).unwrap();
+        assert_eq!(plan.action(), "hold");
+        assert!(plan.fitted.is_none());
+        assert!(!plan.targets.is_empty());
+        // drifted traffic → retarget with an embedded fitted env
+        let hot: Vec<BucketSample> = (0..8).map(|_| sample(8, 16, 1.6, 8)).collect();
+        let plan = ctl.plan(&hot, &e, &fams).unwrap();
+        assert_eq!(plan.action(), "retarget");
+        let back = AdaptPlan::from_json(
+            &crate::util::json::Json::parse(&plan.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(plan, back);
+        assert_eq!(back.fitted.as_ref().unwrap().batch_shape(), (8, 16));
+    }
+}

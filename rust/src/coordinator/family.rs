@@ -77,6 +77,7 @@ use crate::env::{CostModel, InferenceEnv};
 use crate::eval::mask_literals;
 use crate::models::{gather_specialized, ModelState};
 use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, ArtifactKey, Engine};
+use crate::util::json::Json;
 
 /// Per-request service-level agreement. All bounds are optional; an
 /// absent bound never excludes a member.
@@ -397,7 +398,7 @@ pub fn route_batch(
 
 /// Realized-vs-certified serving record for one (member, bucket,
 /// specialized?) cell (DESIGN.md §9 "certified vs realized").
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BucketStats {
     /// member tag
     pub member: String,
@@ -411,6 +412,9 @@ pub struct BucketStats {
     pub batches: usize,
     /// real requests served in this cell
     pub requests: usize,
+    /// fraction of ALL aggregated requests that landed in this cell —
+    /// the traffic mass the drift detector weighs latency ratios by
+    pub share: f64,
     /// median realized execution time of one batch
     pub realized_p50: Duration,
     /// 99th-percentile realized execution time
@@ -422,8 +426,8 @@ pub struct BucketStats {
 }
 
 /// One executed batch, as the worker records it (input to
-/// [`aggregate_buckets`]).
-#[derive(Clone, Debug)]
+/// [`aggregate_buckets`] and to `adapt::detect_drift`).
+#[derive(Clone, Debug, PartialEq)]
 pub struct BucketSample {
     /// member tag that served the batch
     pub member: String,
@@ -441,10 +445,66 @@ pub struct BucketSample {
     pub certified: f64,
 }
 
+impl BucketSample {
+    /// Serialize one sample (stable schema: `--samples-out` files are
+    /// the offline interchange format `ziplm adapt` reads back).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("member", Json::Str(self.member.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("specialized", Json::Bool(self.specialized)),
+            ("exec_secs", Json::Num(self.exec.as_secs_f64())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("certified", Json::Num(self.certified)),
+        ])
+    }
+
+    /// Parse the [`BucketSample::to_json`] form.
+    pub fn from_json(j: &Json) -> Result<BucketSample> {
+        let num = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("bucket sample: no `{k}`"))
+        };
+        Ok(BucketSample {
+            member: j
+                .get("member")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("bucket sample: no `member`"))?
+                .to_string(),
+            batch: num("batch")? as usize,
+            seq: num("seq")? as usize,
+            specialized: j.get("specialized").and_then(Json::as_bool).unwrap_or(false),
+            exec: Duration::from_secs_f64(num("exec_secs")?.max(0.0)),
+            requests: num("requests")? as usize,
+            certified: num("certified")?,
+        })
+    }
+}
+
+/// Serialize a recorded sample stream (the `--samples-out` payload).
+pub fn samples_to_json(samples: &[BucketSample]) -> Json {
+    Json::obj(vec![(
+        "samples",
+        Json::Arr(samples.iter().map(BucketSample::to_json).collect()),
+    )])
+}
+
+/// Parse a `--samples-out` file back into the sample stream. Accepts
+/// either the `{"samples": [...]}` wrapper or a bare array.
+pub fn samples_from_json(j: &Json) -> Result<Vec<BucketSample>> {
+    let arr = j
+        .get("samples")
+        .and_then(Json::as_arr)
+        .or_else(|| j.as_arr())
+        .ok_or_else(|| anyhow!("samples file: expected `samples` array"))?;
+    arr.iter().map(BucketSample::from_json).collect()
+}
+
 /// Fold per-batch [`BucketSample`]s into per-(member, bucket,
 /// specialized?) [`BucketStats`] rows, sorted deterministically. Pure,
 /// so the realized-vs-certified reporting is testable without PJRT.
 pub fn aggregate_buckets(samples: &[BucketSample]) -> Vec<BucketStats> {
+    let total: usize = samples.iter().map(|s| s.requests).sum();
     // (member, batch, seq, specialized) → (exec secs, requests, certified)
     let mut by = BTreeMap::new();
     for s in samples {
@@ -466,6 +526,7 @@ pub fn aggregate_buckets(samples: &[BucketSample]) -> Vec<BucketStats> {
                 specialized,
                 batches: execs.len(),
                 requests,
+                share: if total > 0 { requests as f64 / total as f64 } else { 0.0 },
                 realized_p50: Duration::from_secs_f64(percentile(&execs, 0.50)),
                 realized_p99: Duration::from_secs_f64(percentile(&execs, 0.99)),
                 certified: Duration::from_secs_f64(certified),
@@ -492,6 +553,10 @@ pub struct FamilyStats {
     pub coalesced_batches: usize,
     /// realized-vs-certified per-bucket serving rows (DESIGN.md §9)
     pub per_bucket: Vec<BucketStats>,
+    /// the raw executed-batch stream behind `per_bucket`, in execution
+    /// order — exportable via `--samples-out` and consumable by
+    /// `adapt::detect_drift` (DESIGN.md §12)
+    pub samples: Vec<BucketSample>,
     /// executable-cache builds: one for the shared masked graph plus
     /// one per (member, bucket) specialization that warmed up
     pub cache_builds: usize,
@@ -891,6 +956,7 @@ fn serve_family_loop(
     stats.cache_builds = builds;
     stats.cache_hits = hits;
     stats.per_bucket = aggregate_buckets(&samples);
+    stats.samples = samples;
     stats.per_member =
         specs.iter().zip(&served).map(|(s, &n)| (s.tag.clone(), n)).collect();
     Ok(stats)
@@ -1394,6 +1460,42 @@ mod tests {
         let generic = rows.iter().find(|r| r.member == "2x" && !r.specialized).unwrap();
         assert_eq!(generic.batches, 1);
         assert!(aggregate_buckets(&[]).is_empty());
+        // traffic-mass shares: 4 samples × 3 requests, spec row holds 6
+        assert!((spec.share - 0.5).abs() < 1e-12);
+        assert!((generic.share - 0.25).abs() < 1e-12);
+        let mass: f64 = rows.iter().map(|r| r.share).sum();
+        assert!((mass - 1.0).abs() < 1e-12, "shares partition the traffic");
+    }
+
+    #[test]
+    fn bucket_samples_round_trip_through_json() {
+        let samples = vec![
+            BucketSample {
+                member: "2x".into(),
+                batch: 8,
+                seq: 32,
+                specialized: true,
+                exec: Duration::from_secs_f64(12e-3),
+                requests: 6,
+                certified: 10e-3,
+            },
+            BucketSample {
+                member: "dense".into(),
+                batch: 1,
+                seq: 128,
+                specialized: false,
+                exec: Duration::from_secs_f64(80e-3),
+                requests: 1,
+                certified: 75e-3,
+            },
+        ];
+        let j = samples_to_json(&samples);
+        let back = samples_from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(samples, back);
+        // bare-array form parses too (hand-written sample files)
+        let bare = Json::Arr(samples.iter().map(BucketSample::to_json).collect());
+        assert_eq!(samples, samples_from_json(&bare).unwrap());
+        assert!(samples_from_json(&Json::Num(3.0)).is_err());
     }
 
     #[test]

@@ -53,7 +53,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::family::{percentile, BucketLadder, MemberRoute, Sla};
+use super::family::{percentile, BucketLadder, BucketSample, MemberRoute, Sla};
 use crate::env::{CostModel, InferenceEnv};
 use crate::runtime::{CacheShards, CompileCache, FaultPlan, FaultStream};
 use crate::util::rng::Rng;
@@ -452,6 +452,11 @@ pub struct FleetStats {
     pub cache_hits: usize,
     /// injected-NaN latency samples (excluded from [`TailStats`])
     pub nan_samples: usize,
+    /// the raw executed-batch stream, in completion order — same
+    /// telemetry shape the family worker records, exportable via
+    /// `--samples-out` and consumable by `adapt::detect_drift`
+    /// (NaN-latency batches are excluded, counted in `nan_samples`)
+    pub samples: Vec<BucketSample>,
 }
 
 impl FleetStats {
@@ -459,6 +464,18 @@ impl FleetStats {
     /// at shutdown — the exactly-one-outcome invariant as a number.
     pub fn accounted(&self) -> usize {
         self.replied + self.shed + self.abandoned
+    }
+
+    /// Drift-test the fleet's recorded sample stream against the env
+    /// that certified the family it served (DESIGN.md §12). A pure
+    /// pass over already-recorded telemetry — it never touches the
+    /// supervisor, so surfacing drift cannot block serving.
+    pub fn drift_report(
+        &self,
+        env: &InferenceEnv,
+        cfg: &crate::adapt::DriftCfg,
+    ) -> crate::adapt::DriftReport {
+        crate::adapt::detect_drift(&self.samples, env, cfg)
     }
 }
 
@@ -607,6 +624,7 @@ pub fn start(
         normal: Vec::new(),
         degraded_samples: Vec::new(),
         nan_samples: 0,
+        samples: Vec::new(),
     };
     let join = std::thread::Builder::new()
         .name("ziplm-fleet-supervisor".into())
@@ -856,6 +874,7 @@ struct Supervisor {
     normal: Vec<f64>,
     degraded_samples: Vec<f64>,
     nan_samples: usize,
+    samples: Vec<BucketSample>,
 }
 
 impl Supervisor {
@@ -999,6 +1018,17 @@ impl Supervisor {
                 let (tag, speedup) = (route.tag.clone(), route.est_speedup);
                 let incarnation = self.workers[worker].incarnation;
                 let n = inflight.reqs.len();
+                if !exec.is_nan() {
+                    self.samples.push(BucketSample {
+                        member: tag.clone(),
+                        batch: bucket.0,
+                        seq: bucket.1,
+                        specialized,
+                        exec: Duration::from_secs_f64(exec.max(0.0)),
+                        requests: n,
+                        certified: route.time_at(specialized.then_some(bucket)),
+                    });
+                }
                 for (k, p) in inflight.reqs.into_iter().enumerate() {
                     self.replied += 1;
                     self.workers[worker].served += 1;
@@ -1327,6 +1357,7 @@ impl Supervisor {
             cache_builds: self.shards.builds() + self.retired_builds,
             cache_hits: self.shards.hits() + self.retired_hits,
             nan_samples: self.nan_samples,
+            samples: self.samples,
         }
     }
 }

@@ -53,6 +53,20 @@ pub fn replay(
     ladder: &BucketLadder,
     cfg: &ReplayCfg,
 ) -> Vec<BucketStats> {
+    aggregate_buckets(&replay_samples(trace, members, ladder, cfg))
+}
+
+/// The raw executed-batch stream behind [`replay`]: one
+/// [`BucketSample`] per executed batch, in execution order, before any
+/// aggregation. This is the exact input shape the drift detector
+/// (`adapt::detect_drift`) and env fitter consume, so a seeded replay
+/// doubles as an engine-free telemetry source.
+pub fn replay_samples(
+    trace: &[TraceItem],
+    members: &[MemberRoute],
+    ladder: &BucketLadder,
+    cfg: &ReplayCfg,
+) -> Vec<BucketSample> {
     if members.is_empty() {
         return Vec::new();
     }
@@ -78,7 +92,7 @@ pub fn replay(
             }
         }
     }
-    aggregate_buckets(&samples)
+    samples
 }
 
 /// Price one executed batch: certified estimate at its bucket, jittered.
@@ -150,6 +164,22 @@ mod tests {
         }
         let total: usize = a.iter().map(|s| s.requests).sum();
         assert_eq!(total, trace.len(), "every request accounted");
+    }
+
+    #[test]
+    fn samples_fold_to_the_replay_stats() {
+        let ladder = BucketLadder::new(vec![(4, 32), (4, 64)]);
+        let trace: Vec<TraceItem> =
+            (0..13).map(|i| item(8 + (i % 3) * 20, None)).collect();
+        let samples = replay_samples(&trace, &members(), &ladder, &cfg());
+        assert_eq!(
+            aggregate_buckets(&samples),
+            replay(&trace, &members(), &ladder, &cfg()),
+            "replay() must be exactly aggregate_buckets over replay_samples()"
+        );
+        let total: usize = samples.iter().map(|s| s.requests).sum();
+        assert_eq!(total, trace.len(), "every request lands in some sample");
+        assert_eq!(samples, replay_samples(&trace, &members(), &ladder, &cfg()));
     }
 
     #[test]

@@ -906,11 +906,23 @@ pub fn family(ctx: &ExpCtx) -> Result<()> {
             ("specialized", Json::Bool(bkt.specialized)),
             ("batches", Json::Num(bkt.batches as f64)),
             ("requests", Json::Num(bkt.requests as f64)),
+            ("share", Json::Num(bkt.share)),
             ("realized_p50_ms", Json::Num(p50 * 1e3)),
             ("realized_p99_ms", Json::Num(bkt.realized_p99.as_secs_f64() * 1e3)),
             ("certified_ms", Json::Num(cert * 1e3)),
         ]));
     }
+    // realized sample stream: the offline input `ziplm adapt` consumes
+    let samples_path = ctx.results.join("family_samples.json");
+    std::fs::write(
+        &samples_path,
+        famserve::samples_to_json(&stats.samples).to_pretty() + "\n",
+    )?;
+    println!(
+        "  family wrote {} realized sample(s) to {}",
+        stats.samples.len(),
+        samples_path.display()
+    );
     println!(
         "  family served {} reqs / {} batches ({} coalesced), {} compile(s), {} cache hit(s), per-member {:?}",
         stats.requests,

@@ -31,12 +31,14 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::adapt::{detect_drift, fit_env, frontier_points, knee_point, propose_targets, DriftCfg};
 use crate::coordinator::chaos::{gen_trace, run_chaos, TraceCfg, TraceClass};
 use crate::coordinator::family::{BucketLadder, MemberRoute};
 use crate::coordinator::fleet::{FleetCfg, FleetMember, RetryPolicy};
-use crate::coordinator::replay::{replay, ReplayCfg};
+use crate::coordinator::replay::{replay, replay_samples, ReplayCfg};
 use crate::env::{CostModel, InferenceEnv, Regime};
 use crate::latency::{ArchDims, Device, LatencyTable};
+use crate::models::family::{FamilyManifest, FamilyMember};
 use crate::runtime::{FaultPlan, FaultRates};
 use crate::spdy::{solve_dp, LevelOpt, ModuleLevels, SpdyProblem};
 use crate::util::json::Json;
@@ -493,6 +495,124 @@ impl FamilyBlock {
     }
 }
 
+/// One adapt-loop section (DESIGN.md §12): a seeded DRIFTED trace is
+/// replayed against the family's serving routes, and the pure `adapt`
+/// pipeline (`detect_drift` → `fit_env` → frontier proposal) runs on
+/// the realized samples. Engine-free end to end — no weights, no
+/// Hessian recomputes — so every number here is bit-stable under the
+/// pinned seed, exactly like the matrix cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptBlock {
+    /// model-axis name
+    pub model: String,
+    /// env-axis name the family was certified against
+    pub env: String,
+    /// requests replayed in the drifted trace
+    pub requests: usize,
+    /// request-weighted mean |realized/certified − 1| (q4)
+    pub latency_drift: f64,
+    /// request-weighted mean relative shape deviation from the anchor (q4)
+    pub mass_shift: f64,
+    /// fraction of requests whose batch overran its certified estimate (q4)
+    pub overrun_rate: f64,
+    /// detector verdict under the default thresholds
+    pub drifted: bool,
+    /// fitted env anchor batch
+    pub fitted_batch: usize,
+    /// fitted env anchor seq
+    pub fitted_seq: usize,
+    /// fitted-over-certified dense-time ratio (q4) — the device skew
+    /// the fitted env applies so its anchor prices at the realized rate
+    pub fitted_skew: f64,
+    /// fitted seq sweep on the observed support, `(seq, scale q4)` rows
+    pub fitted_sweep: Vec<(usize, f64)>,
+    /// frontier knee speedup (q4; 0 when the frontier is too small)
+    pub knee: f64,
+    /// recommended next targets (q4, ascending, deduplicated)
+    pub targets: Vec<f64>,
+}
+
+impl AdaptBlock {
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("env", Json::Str(self.env.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("latency_drift", Json::Num(self.latency_drift)),
+            ("mass_shift", Json::Num(self.mass_shift)),
+            ("overrun_rate", Json::Num(self.overrun_rate)),
+            ("drifted", Json::Bool(self.drifted)),
+            (
+                "fitted",
+                Json::obj(vec![
+                    ("batch", Json::Num(self.fitted_batch as f64)),
+                    ("seq", Json::Num(self.fitted_seq as f64)),
+                    ("skew", Json::Num(self.fitted_skew)),
+                    (
+                        "sweep",
+                        Json::Arr(
+                            self.fitted_sweep
+                                .iter()
+                                .map(|&(s, sc)| {
+                                    Json::Arr(vec![Json::Num(s as f64), Json::Num(sc)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("knee", Json::Num(self.knee)),
+            ("targets", Json::arr_f64(&self.targets)),
+        ])
+    }
+
+    /// Parse the JSON form back.
+    pub fn from_json(j: &Json) -> Result<AdaptBlock> {
+        let field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("adapt: missing `{k}`"))
+        };
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let fitted = j.get("fitted").ok_or_else(|| anyhow!("adapt: missing `fitted`"))?;
+        let fitted_sweep = fitted
+            .get("sweep")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .map(|e| {
+                        (
+                            e.idx(0).and_then(Json::as_usize).unwrap_or(0),
+                            e.idx(1).and_then(Json::as_f64).unwrap_or(0.0),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(AdaptBlock {
+            model: field("model")?,
+            env: field("env")?,
+            requests: j.get("requests").and_then(Json::as_usize).unwrap_or(0),
+            latency_drift: num("latency_drift"),
+            mass_shift: num("mass_shift"),
+            overrun_rate: num("overrun_rate"),
+            drifted: j.get("drifted").and_then(Json::as_bool).unwrap_or(false),
+            fitted_batch: fitted.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            fitted_seq: fitted.get("seq").and_then(Json::as_usize).unwrap_or(0),
+            fitted_skew: fitted.get("skew").and_then(Json::as_f64).unwrap_or(0.0),
+            fitted_sweep,
+            knee: num("knee"),
+            targets: j
+                .get("targets")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
 /// The structured reproduction report: every matrix cell plus the
 /// per-(model, env) family sections.
 #[derive(Clone, Debug)]
@@ -506,10 +626,13 @@ pub struct ReproReport {
     pub cells: Vec<ScenarioCell>,
     /// family sections for every (model, env) whose env constructed
     pub families: Vec<FamilyBlock>,
+    /// adapt-loop sections (one per `gpu-sweep` family; DESIGN.md §12)
+    pub adapt: Vec<AdaptBlock>,
 }
 
 impl ReproReport {
-    /// JSON form (schema version 1).
+    /// JSON form (schema version 1; `adapt` is additive — readers of
+    /// pre-adapt reports see an absent key, not a version bump).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::Num(1.0)),
@@ -517,6 +640,7 @@ impl ReproReport {
             ("seed", Json::Num(self.seed as f64)),
             ("cells", Json::Arr(self.cells.iter().map(ScenarioCell::to_json).collect())),
             ("families", Json::Arr(self.families.iter().map(FamilyBlock::to_json).collect())),
+            ("adapt", Json::Arr(self.adapt.iter().map(AdaptBlock::to_json).collect())),
         ])
     }
 
@@ -536,11 +660,16 @@ impl ReproReport {
             .iter()
             .map(FamilyBlock::from_json)
             .collect::<Result<Vec<_>>>()?;
+        let adapt = match j.get("adapt").and_then(Json::as_arr) {
+            Some(a) => a.iter().map(AdaptBlock::from_json).collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(ReproReport {
             mode: j.req_str("mode").to_string(),
             seed: j.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
             cells,
             families,
+            adapt,
         })
     }
 }
@@ -812,6 +941,34 @@ struct BuiltMember {
     profile: Vec<(usize, usize)>,
 }
 
+/// Serving-side artifacts of one family build, reused by the adapt
+/// loop: the routing table and the bucket ladder the replay ran under.
+struct FamilyServing {
+    routes: Vec<MemberRoute>,
+    ladder: BucketLadder,
+}
+
+/// The three-class SLA mix every replayed trace draws from:
+/// best-effort, realtime under 0.8× dense, throughput at the fastest
+/// member (capped at 2×).
+fn trace_classes(m: &ReproModel, env: &InferenceEnv, fastest: f64) -> Vec<TraceClass> {
+    vec![
+        TraceClass::best_effort(2.0),
+        TraceClass {
+            class: "realtime".to_string(),
+            weight: 1.0,
+            max_latency: Some(Duration::from_secs_f64(env.dense_time(m.n_layers) * 0.8)),
+            min_speedup: None,
+        },
+        TraceClass {
+            class: "throughput".to_string(),
+            weight: 1.0,
+            max_latency: None,
+            min_speedup: Some(fastest.min(2.0)),
+        },
+    ]
+}
+
 /// Build one (model, env) family section: members from the gradual
 /// stages, realized per-bucket stats from the deterministic replay
 /// (`coordinator::replay`), and a real fault-injection campaign for
@@ -823,7 +980,7 @@ fn family_block(
     env: &InferenceEnv,
     gradual: &[Option<Vec<(usize, usize)>>],
     seed: u64,
-) -> Result<FamilyBlock> {
+) -> Result<(FamilyBlock, FamilyServing)> {
     let dense_profile = vec![(m.n_heads, m.d_ff); m.n_layers];
     let mut built = vec![BuiltMember {
         tag: "dense".to_string(),
@@ -858,27 +1015,12 @@ fn family_block(
 
     let block_seed = sub_seed(seed, 0x100 + block_idx as u64);
     let fastest = built.iter().fold(1.0f64, |a, mb| a.max(mb.est_speedup));
-    let classes = vec![
-        TraceClass::best_effort(2.0),
-        TraceClass {
-            class: "realtime".to_string(),
-            weight: 1.0,
-            max_latency: Some(Duration::from_secs_f64(env.dense_time(m.n_layers) * 0.8)),
-            min_speedup: None,
-        },
-        TraceClass {
-            class: "throughput".to_string(),
-            weight: 1.0,
-            max_latency: None,
-            min_speedup: Some(fastest.min(2.0)),
-        },
-    ];
     let tcfg = TraceCfg {
         requests: 48,
         seed: block_seed,
         arrival_gap: Duration::ZERO,
         len_range: (4, 32),
-        classes,
+        classes: trace_classes(m, env, fastest),
     };
     let trace = gen_trace(&tcfg);
     let stats = replay(
@@ -944,24 +1086,133 @@ fn family_block(
         &tcfg,
     )?;
 
-    Ok(FamilyBlock {
+    Ok((
+        FamilyBlock {
+            model: m.name.to_string(),
+            env: env_name.to_string(),
+            members: built
+                .iter()
+                .map(|mb| MemberSummary {
+                    tag: mb.tag.clone(),
+                    est_speedup: q4(mb.est_speedup),
+                    est_batch_time_ms: q4(env.model_time(&mb.profile) * 1e3),
+                })
+                .collect(),
+            buckets: bucket_list,
+            per_bucket,
+            chaos: ChaosSummary {
+                submitted: chaos_rep.submitted,
+                lost: chaos_rep.lost,
+                balanced: chaos_rep.balanced(),
+            },
+        },
+        FamilyServing { routes, ladder },
+    ))
+}
+
+// -------------------------------------------------------- adapt loop
+
+/// Frontier input for one kick-tires family: the serving routes paired
+/// with the gradual cells' proxy errors as calibration losses (the
+/// dense member anchors at zero, like `session::pipeline` records).
+fn kick_manifest(
+    m: &ReproModel,
+    env: &InferenceEnv,
+    routes: &[MemberRoute],
+    cells: &[ScenarioCell],
+) -> FamilyManifest {
+    let members = routes
+        .iter()
+        .map(|r| FamilyMember {
+            tag: r.tag.clone(),
+            ckpt: String::new(),
+            target: 1.0,
+            est_speedup: r.est_speedup,
+            profile: Vec::new(),
+            calib_loss: if r.tag == "dense" {
+                Some(0.0)
+            } else {
+                cells
+                    .iter()
+                    .find(|c| {
+                        c.regime == "gradual"
+                            && c.status != CellStatus::Error
+                            && format!("{}x", fmt_num(c.target)) == r.tag
+                    })
+                    .map(|c| c.proxy_error)
+            },
+        })
+        .collect();
+    FamilyManifest {
+        model: m.name.to_string(),
+        task: m.task.to_string(),
+        regime: env.table().regime.clone(),
+        env: Some(env.clone()),
+        buckets: Vec::new(),
+        fleet: None,
+        members,
+    }
+}
+
+/// Build one adapt-loop section: replay a seeded DRIFTED trace — all
+/// sequences at or under a quarter of the certified anchor — against
+/// the family's routes, then run the pure `adapt` pipeline on the
+/// realized samples. The knee and target proposals come from the
+/// family's own loss-vs-certified-speedup frontier.
+fn adapt_block(
+    m: &ReproModel,
+    block_idx: usize,
+    env_name: &str,
+    env: &InferenceEnv,
+    serving: &FamilyServing,
+    manifest: &FamilyManifest,
+    seed: u64,
+) -> Result<AdaptBlock> {
+    let drift_seed = sub_seed(seed, 0x300 + block_idx as u64);
+    let fastest = serving.routes.iter().fold(1.0f64, |a, r| a.max(r.est_speedup));
+    let tcfg = TraceCfg {
+        requests: 48,
+        seed: drift_seed,
+        arrival_gap: Duration::ZERO,
+        len_range: (4, (m.seq / 4).max(5)),
+        classes: trace_classes(m, env, fastest),
+    };
+    let trace = gen_trace(&tcfg);
+    let samples = replay_samples(
+        &trace,
+        &serving.routes,
+        &serving.ladder,
+        &ReplayCfg {
+            max_batch: 4,
+            jitter: 0.1,
+            seed: drift_seed,
+            fallback_shape: env.batch_shape(),
+        },
+    );
+    let drift = detect_drift(&samples, env, &DriftCfg::default());
+    let fitted = fit_env(&samples, env)?;
+    let (fitted_batch, fitted_seq) = fitted.batch_shape();
+    let base_dense = env.dense_time(m.n_layers);
+    let skew = if base_dense > 0.0 { fitted.dense_time(m.n_layers) / base_dense } else { 0.0 };
+    let frontier = frontier_points(std::slice::from_ref(manifest));
+    let knee = knee_point(&frontier).unwrap_or(0.0);
+    let mut targets: Vec<f64> =
+        propose_targets(&frontier, TARGETS.len()).into_iter().map(q4).collect();
+    targets.dedup();
+    Ok(AdaptBlock {
         model: m.name.to_string(),
         env: env_name.to_string(),
-        members: built
-            .iter()
-            .map(|mb| MemberSummary {
-                tag: mb.tag.clone(),
-                est_speedup: q4(mb.est_speedup),
-                est_batch_time_ms: q4(env.model_time(&mb.profile) * 1e3),
-            })
-            .collect(),
-        buckets: bucket_list,
-        per_bucket,
-        chaos: ChaosSummary {
-            submitted: chaos_rep.submitted,
-            lost: chaos_rep.lost,
-            balanced: chaos_rep.balanced(),
-        },
+        requests: drift.requests,
+        latency_drift: q4(drift.latency_drift),
+        mass_shift: q4(drift.mass_shift),
+        overrun_rate: q4(drift.overrun_rate),
+        drifted: drift.drifted,
+        fitted_batch,
+        fitted_seq,
+        fitted_skew: q4(skew),
+        fitted_sweep: fitted.seq_sweep().iter().map(|&(s, sc)| (s, q4(sc))).collect(),
+        knee: q4(knee),
+        targets,
     })
 }
 
@@ -973,6 +1224,7 @@ fn family_block(
 pub fn run_kick_tires(seed: u64, precomputed: &Path) -> Result<ReproReport> {
     let mut cells = Vec::new();
     let mut families = Vec::new();
+    let mut adapt = Vec::new();
     for (mi, m) in models().iter().enumerate() {
         let weights = sensitivity_weights(seed, mi, m.n_layers * 2);
         for (ei, env_name) in ENVS.iter().enumerate() {
@@ -981,14 +1233,20 @@ pub fn run_kick_tires(seed: u64, precomputed: &Path) -> Result<ReproReport> {
                 Ok((env, status)) => {
                     let problem = build_problem(m, &env, &weights);
                     let solved = solve_env(m, env_name, status, &problem);
-                    cells.extend(solved.cells);
                     let fi = mi * ENVS.len() + ei;
-                    families.push(family_block(m, fi, env_name, &env, &solved.gradual, seed)?);
+                    let (fam, serving) =
+                        family_block(m, fi, env_name, &env, &solved.gradual, seed)?;
+                    if *env_name == "gpu-sweep" {
+                        let manifest = kick_manifest(m, &env, &serving.routes, &solved.cells);
+                        adapt.push(adapt_block(m, fi, env_name, &env, &serving, &manifest, seed)?);
+                    }
+                    cells.extend(solved.cells);
+                    families.push(fam);
                 }
             }
         }
     }
-    Ok(ReproReport { mode: "kick-tires".to_string(), seed, cells, families })
+    Ok(ReproReport { mode: "kick-tires".to_string(), seed, cells, families, adapt })
 }
 
 /// The full engine-backed run: the same matrix driven through the real
@@ -1002,6 +1260,7 @@ pub fn run_kick_tires(seed: u64, precomputed: &Path) -> Result<ReproReport> {
 pub fn run_full(ctx: &ExpCtx, seed: u64, precomputed: &Path) -> Result<ReproReport> {
     let mut cells = Vec::new();
     let mut families = Vec::new();
+    let mut adapt = Vec::new();
     for (mi, m) in models().iter().enumerate() {
         let data = ctx.dataset(m.name, m.task);
         let teacher = ctx.teacher(m.name, m.task, &data)?;
@@ -1049,10 +1308,16 @@ pub fn run_full(ctx: &ExpCtx, seed: u64, precomputed: &Path) -> Result<ReproRepo
                         .map(|mb| mb.profile.clone())
                 })
                 .collect();
-            families.push(family_block(m, *block_idx, env_name, env, &stages, seed)?);
+            let (block, serving) = family_block(m, *block_idx, env_name, env, &stages, seed)?;
+            if env_name.as_str() == "gpu-sweep" {
+                // the real manifest carries recorded calibration losses,
+                // so the frontier here is the genuine article
+                adapt.push(adapt_block(m, *block_idx, env_name, env, &serving, fam, seed)?);
+            }
+            families.push(block);
         }
     }
-    Ok(ReproReport { mode: "full".to_string(), seed, cells, families })
+    Ok(ReproReport { mode: "full".to_string(), seed, cells, families, adapt })
 }
 
 /// Solve the full-mode cells of one (model, env) through the session
@@ -1280,6 +1545,49 @@ pub fn render_markdown(report: &ReproReport) -> String {
             ],
         );
     }
+
+    if !report.adapt.is_empty() {
+        out.push_str("\n## Adapt loop\n\n");
+        out.push_str(
+            "Each `gpu-sweep` family replays a seeded DRIFTED trace (sequences at \
+             or under a quarter of the certified anchor), then runs the pure \
+             drift → fit → frontier pipeline (DESIGN.md §12). Engine-free: the \
+             verdict, the fitted anchor and the recommended targets are \
+             bit-stable under the pinned seed.\n\n",
+        );
+        push_row(
+            &mut out,
+            &[
+                "family", "requests", "latency drift", "mass shift", "overrun", "drifted",
+                "fitted anchor", "skew", "knee", "targets",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>(),
+        );
+        push_row(&mut out, &vec!["---".to_string(); 10]);
+        for a in &report.adapt {
+            push_row(
+                &mut out,
+                &[
+                    format!("{} · {}", a.model, a.env),
+                    a.requests.to_string(),
+                    fmt_num(a.latency_drift),
+                    fmt_num(a.mass_shift),
+                    fmt_num(a.overrun_rate),
+                    yesno(a.drifted).to_string(),
+                    format!("{}x{}", a.fitted_batch, a.fitted_seq),
+                    fmt_num(a.fitted_skew),
+                    fmt_num(a.knee),
+                    a.targets
+                        .iter()
+                        .map(|&t| format!("{}x", fmt_num(t)))
+                        .collect::<Vec<_>>()
+                        .join(" "),
+                ],
+            );
+        }
+    }
     out
 }
 
@@ -1378,16 +1686,53 @@ mod tests {
     #[test]
     fn report_json_roundtrip() {
         let cells = scenario_cells(11, Path::new("/nonexistent/repro"));
-        let report = ReproReport { mode: "kick-tires".into(), seed: 11, cells, families: vec![] };
+        let report = ReproReport {
+            mode: "kick-tires".into(),
+            seed: 11,
+            cells,
+            families: vec![],
+            adapt: vec![],
+        };
         let j = report.to_json();
         let back = ReproReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.to_json().to_string(), j.to_string());
     }
 
     #[test]
+    fn adapt_block_flags_drift_and_is_deterministic() {
+        let m = models()[0];
+        let weights = sensitivity_weights(DEFAULT_SEED, 0, m.n_layers * 2);
+        let (env, _) = kick_env(&m, "gpu-sweep", Path::new("/nonexistent")).unwrap();
+        let problem = build_problem(&m, &env, &weights);
+        let solved = solve_env(&m, "gpu-sweep", CellStatus::Ran, &problem);
+        let build = || {
+            let (_, serving) =
+                family_block(&m, 1, "gpu-sweep", &env, &solved.gradual, DEFAULT_SEED).unwrap();
+            let manifest = kick_manifest(&m, &env, &serving.routes, &solved.cells);
+            adapt_block(&m, 1, "gpu-sweep", &env, &serving, &manifest, DEFAULT_SEED).unwrap()
+        };
+        let a = build();
+        assert_eq!(a.requests, 48);
+        assert!(a.mass_shift > 0.25, "short-seq traffic must shift mass: {a:?}");
+        assert!(a.drifted, "detector must flag the drifted trace");
+        assert!(a.fitted_seq < m.seq, "fitted anchor follows the observed traffic");
+        assert!(a.knee > 0.0 && !a.targets.is_empty(), "frontier must recommend");
+        assert_eq!(a, build(), "bit-deterministic under the pinned seed");
+        let j = a.to_json();
+        let back = AdaptBlock::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, a, "adapt block JSON round-trips");
+    }
+
+    #[test]
     fn markdown_covers_every_cell_and_family() {
         let cells = scenario_cells(DEFAULT_SEED, Path::new("/nonexistent/repro"));
-        let report = ReproReport { mode: "kick-tires".into(), seed: 7, cells, families: vec![] };
+        let report = ReproReport {
+            mode: "kick-tires".into(),
+            seed: 7,
+            cells,
+            families: vec![],
+            adapt: vec![],
+        };
         let md = render_markdown(&report);
         assert!(!md.contains("MISSING"), "every cell must render");
         for m in models() {

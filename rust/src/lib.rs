@@ -24,6 +24,7 @@
 // path unnoticed (DESIGN.md §10). Modules outside that core opt out
 // here; their test mods and the test/bench/example crates opt out at
 // their own roots.
+pub mod adapt;
 #[allow(clippy::disallowed_methods)]
 pub mod baselines;
 pub mod coordinator;

@@ -7,8 +7,9 @@
 //!   prune-gradual  --model M --task T --speedups 2,3,4 [--epochs E] [--session-dir D]
 //!   eval           --ckpt path [--split dev|test]
 //!   serve          --ckpt path [--batch B] [--wait-ms W]
-//!   serve-family   --family runs/family_M_T/family.json [--requests N] [--pressure P]
-//!   serve-fleet    --family runs/family_M_T/family.json [--workers N] [--crash P] [--seed S]
+//!   serve-family   --family runs/family_M_T/family.json [--requests N] [--pressure P] [--samples-out F]
+//!   serve-fleet    --family runs/family_M_T/family.json [--workers N] [--crash P] [--seed S] [--samples-out F]
+//!   adapt          --samples F (--env E|--family M) [--out plan.json] [--retarget-out env.json]
 //!   experiment     <fig2|fig3|fig4|fig5|fig6|fig8|table1..table8|family|multienv|chaos|all> [--fast]
 //!   repro          [--kick-tires] [--seed S] [--out DIR] [--precomputed DIR]
 //!
@@ -17,7 +18,15 @@
 //! The pruning subcommands drive [`ziplm::session::CompressionSession`];
 //! `prune-gradual` checkpoints every stage under `--session-dir`
 //! (default `runs/session_M_T`), so re-running the same command after a
-//! crash resumes from the completed stages instead of recomputing.
+//! crash resumes from the completed stages instead of recomputing;
+//! `--retarget <env.json|slug>` re-certifies the same capture against
+//! another environment (slugs resolve through the `--registry` dir,
+//! default `envs/`) with zero Hessian recomputation. The serving
+//! subcommands export their realized `BucketSample` telemetry with
+//! `--samples-out`; `adapt` closes the loop offline (DESIGN.md §12):
+//! drift-test the samples against the certifying env, fit a new env to
+//! the observed traffic, and propose the next speedup targets from the
+//! family frontier.
 
 use std::path::{Path, PathBuf};
 
@@ -53,7 +62,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "ziplm — inference-aware structured pruning (NeurIPS'23 reproduction)\n\
-         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|serve-fleet|experiment|repro> [flags]\n\
+         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|serve-fleet|adapt|experiment|repro> [flags]\n\
          see README.md for the full flag reference"
     );
 }
@@ -72,6 +81,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "serve" => serve(args),
         "serve-family" => serve_family(args),
         "serve-fleet" => serve_fleet(args),
+        "adapt" => adapt_cmd(args),
         "experiment" => experiment(args),
         "repro" => repro(args),
         _ => {
@@ -158,7 +168,7 @@ fn prune_gradual(args: &Args) -> Result<()> {
     let session_dir =
         args.str_or("session-dir", &format!("runs/session_{model}_{task}"));
     let mut b = CompressionSession::for_model(&ctx.engine, &model, &task)
-        .with_env(env)
+        .with_env(env.clone())
         .with_targets(&targets)
         .with_prune_cfg(cfg)
         .with_train_cfg(tcfg)
@@ -167,7 +177,20 @@ fn prune_gradual(args: &Args) -> Result<()> {
     if kd {
         b = b.with_teacher(teacher.params.clone());
     }
-    let sess = b.open()?;
+    let mut sess = b.open()?;
+    // `--retarget <env.json|slug>`: re-certify this capture against
+    // another environment — capture/database checkpoints are env-free,
+    // so only the SPDY solve re-runs (zero Hessian recomputation)
+    let registry =
+        ziplm::session::registry::EnvRegistry::new(args.str_or("registry", "envs"));
+    let cert_env = if let Some(name) = args.get("retarget") {
+        let env2 = registry.resolve(name)?;
+        println!("[session] retargeting onto {}", env2.describe());
+        sess.retarget(env2.clone())?;
+        env2
+    } else {
+        env
+    };
     let stages = sess.run(teacher.clone(), &ds)?;
     let (computed, loaded) = sess.counters();
     println!("[session] {computed} artifact(s) computed, {loaded} resumed from {session_dir}");
@@ -181,6 +204,10 @@ fn prune_gradual(args: &Args) -> Result<()> {
     }
     // record the whole certified family for `serve-family` (App. F)
     sess.emit_family(&teacher, &stages, &PathBuf::from(format!("runs/family_{model}_{task}")))?;
+    // register the certifying env so the next run can `--retarget` it
+    // by slug instead of a JSON path
+    let slug = registry.register(&cert_env)?;
+    println!("[registry] certifying env is `{slug}` in {}", registry.dir().display());
     Ok(())
 }
 
@@ -328,6 +355,25 @@ fn serve_family(args: &Args) -> Result<()> {
         stats.cache_hits,
         stats.per_member
     );
+    write_samples(args, &stats.samples)?;
+    Ok(())
+}
+
+/// `--samples-out <path>`: export a serving run's realized
+/// [`ziplm::coordinator::family::BucketSample`] stream as JSON — the
+/// offline input `ziplm adapt` drift-tests (DESIGN.md §12).
+fn write_samples(
+    args: &Args,
+    samples: &[ziplm::coordinator::family::BucketSample],
+) -> Result<()> {
+    let Some(path) = args.get("samples-out") else { return Ok(()) };
+    let path = Path::new(path);
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let json = ziplm::coordinator::family::samples_to_json(samples);
+    std::fs::write(path, json.to_pretty() + "\n")?;
+    println!("wrote {} realized sample(s) to {}", samples.len(), path.display());
     Ok(())
 }
 
@@ -421,11 +467,110 @@ fn serve_fleet(args: &Args) -> Result<()> {
     };
     let report = chaos::run_chaos(cfg, members, &env, plan, &trace)?;
     print!("{}", chaos::render_report(&report));
+    // non-blocking drift surface: pure statistics over the samples the
+    // supervisor already recorded, printed after the books balance
+    let drift = report.stats.drift_report(&env, &ziplm::adapt::DriftCfg::default());
+    println!(
+        "  drift vs certifying env: latency {:.3} mass {:.3} overrun {:.0}% → {}",
+        drift.latency_drift,
+        drift.mass_shift,
+        drift.overrun_rate * 100.0,
+        if drift.drifted { "DRIFTED (run `ziplm adapt`)" } else { "within tolerance" }
+    );
+    write_samples(args, &report.stats.samples)?;
     if !report.balanced() {
         return Err(anyhow!(
             "request accounting does not balance ({} lost)",
             report.lost
         ));
+    }
+    Ok(())
+}
+
+/// `ziplm adapt` — offline traffic-adaptive retargeting (DESIGN.md
+/// §12). Reads a recorded `--samples` stream (from any serving
+/// surface's `--samples-out`), drift-tests it against the certifying
+/// env (`--env <file|slug>`, or the env embedded in `--family`), fits
+/// an env to the observed distribution when drifted, and proposes the
+/// next speedup targets from the family frontier. Pure and engine-free:
+/// same inputs, same plan, bit for bit.
+fn adapt_cmd(args: &Args) -> Result<()> {
+    use ziplm::adapt::{AdaptController, DriftCfg};
+    use ziplm::coordinator::family::samples_from_json;
+    use ziplm::models::family::FamilyManifest;
+    use ziplm::session::registry::EnvRegistry;
+    use ziplm::util::json::Json;
+
+    let samples_path =
+        args.get("samples").ok_or_else(|| anyhow!("--samples <file> required"))?;
+    let text = std::fs::read_to_string(samples_path)?;
+    let samples =
+        samples_from_json(&Json::parse(&text).map_err(|e| anyhow!("{samples_path}: {e}"))?)?;
+
+    // frontier evidence: every `--family` manifest (comma-separated)
+    let mut manifests: Vec<FamilyManifest> = Vec::new();
+    if let Some(list) = args.get("family") {
+        for p in list.split(',').filter(|p| !p.trim().is_empty()) {
+            manifests.push(FamilyManifest::load(Path::new(p.trim()))?);
+        }
+    }
+    // certifying env: explicit --env wins; else the first manifest env
+    let registry = EnvRegistry::new(args.str_or("registry", "envs"));
+    let env = match args.get("env") {
+        Some(name) => registry.resolve(name)?,
+        None => manifests
+            .iter()
+            .find_map(|f| f.env.clone())
+            .ok_or_else(|| anyhow!("--env <file|slug> or --family with an embedded env required"))?,
+    };
+
+    let ctl = AdaptController {
+        cfg: DriftCfg {
+            latency_ratio_tol: args.f64_or("latency-tol", 0.1),
+            mass_shift_tol: args.f64_or("mass-tol", 0.25),
+            min_requests: args.usize_or("min-requests", 16),
+        },
+        n_targets: args.usize_or("targets-n", 3),
+    };
+    let plan = ctl.plan(&samples, &env, &manifests)?;
+    println!(
+        "adapt: {} request(s) vs {} → latency drift {:.3} (tol {:.3}), mass shift {:.3} (tol {:.3}), overrun {:.0}%",
+        plan.drift.requests,
+        env.describe(),
+        plan.drift.latency_drift,
+        ctl.cfg.latency_ratio_tol,
+        plan.drift.mass_shift,
+        ctl.cfg.mass_shift_tol,
+        plan.drift.overrun_rate * 100.0
+    );
+    for b in &plan.drift.per_bucket {
+        println!(
+            "  [{:>3}x{:<4}] share {:>5.1}%  realized/certified {:.3}",
+            b.batch,
+            b.seq,
+            b.share * 100.0,
+            b.latency_ratio
+        );
+    }
+    match plan.knee {
+        Some(k) => println!("frontier knee: {k:.2}x; proposed targets {:?}", plan.targets),
+        None => println!("frontier too thin for a knee; proposed targets {:?}", plan.targets),
+    }
+    println!("action: {}", plan.action());
+    if let Some(fitted) = &plan.fitted {
+        println!("fitted env: {}", fitted.describe());
+        if let Some(out) = args.get("retarget-out") {
+            fitted.save(Path::new(out))?;
+            let slug = registry.register(fitted)?;
+            println!(
+                "wrote {out}; registered as `{slug}` — run `ziplm prune-gradual --retarget {slug}` \
+                 (or --retarget {out}) to re-certify with zero Hessian recomputation"
+            );
+        }
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, plan.to_json().to_pretty() + "\n")?;
+        println!("wrote adapt plan to {out}");
     }
     Ok(())
 }

@@ -31,6 +31,11 @@ pub struct FamilyMember {
     pub est_speedup: f64,
     /// per-layer (heads alive, FFN columns alive) profile
     pub profile: Vec<(usize, usize)>,
+    /// calibration loss recorded when the member was solved — the y
+    /// axis of the adapt frontier (`adapt::frontier_points`). `None`
+    /// for manifests written before losses were recorded; the frontier
+    /// substitutes a deterministic speedup-based proxy.
+    pub calib_loss: Option<f64>,
 }
 
 /// Optional fleet topology a family was certified to serve under
@@ -151,12 +156,18 @@ impl FamilyManifest {
                     self.members
                         .iter()
                         .map(|m| {
-                            Json::obj(vec![
+                            let mut mp = vec![
                                 ("tag", Json::Str(m.tag.clone())),
                                 ("ckpt", Json::Str(m.ckpt.clone())),
                                 ("target", Json::Num(m.target)),
                                 ("est_speedup", Json::Num(m.est_speedup)),
-                                (
+                            ];
+                            if let Some(l) = m.calib_loss {
+                                if l.is_finite() {
+                                    mp.push(("calib_loss", Json::Num(l)));
+                                }
+                            }
+                            mp.push((
                                     "profile",
                                     Json::Arr(
                                         m.profile
@@ -169,8 +180,8 @@ impl FamilyManifest {
                                             })
                                             .collect(),
                                     ),
-                                ),
-                            ])
+                            ));
+                            Json::obj(mp)
                         })
                         .collect(),
                 ),
@@ -224,6 +235,7 @@ impl FamilyManifest {
                 target: m.get("target").and_then(Json::as_f64).unwrap_or(1.0),
                 est_speedup: m.get("est_speedup").and_then(Json::as_f64).unwrap_or(1.0),
                 profile,
+                calib_loss: m.get("calib_loss").and_then(Json::as_f64),
             });
         }
         Ok(out)
@@ -278,6 +290,7 @@ mod tests {
             target: est,
             est_speedup: est,
             profile: vec![(2, 8), (1, 4)],
+            calib_loss: if est > 1.0 { Some(0.01 * est) } else { None },
         }
     }
 

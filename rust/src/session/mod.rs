@@ -44,6 +44,7 @@
 //! the CLI and experiment drivers render them.
 
 pub mod pipeline;
+pub mod registry;
 pub mod store;
 
 use std::path::{Path, PathBuf};
@@ -510,6 +511,12 @@ impl<'e> CompressionSession<'e> {
         }
         for env in envs {
             self.record_env(env)?;
+        }
+        // register every certifying env under `base/envs/` so later
+        // runs can `--retarget <slug>` without digging into manifests
+        let reg = registry::EnvRegistry::new(base.join("envs"));
+        for env in envs {
+            reg.register(env)?;
         }
         let dbs_stage = self.capture(state, data)?.build_dbs()?;
         let stage_fp = dbs_stage.fp.clone();

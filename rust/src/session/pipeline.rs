@@ -419,6 +419,9 @@ pub fn emit_family(
         target: 1.0,
         est_speedup: env.speedup(&dense_profile),
         profile: dense_profile,
+        // per-layer SPDY losses are scored relative to dense, so the
+        // dense member anchors the adapt frontier at zero
+        calib_loss: Some(0.0),
     });
     for s in stages {
         let tag = format!("{:.1}x", s.report.target);
@@ -430,6 +433,7 @@ pub fn emit_family(
             target: s.report.target,
             est_speedup: s.report.est_speedup,
             profile: s.report.layer_profile.clone(),
+            calib_loss: Some(s.report.calib_loss),
         });
     }
     let path = dir.join("family.json");

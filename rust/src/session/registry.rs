@@ -1,0 +1,171 @@
+//! On-disk environment registry: `envs/<slug>.json`, fingerprint-
+//! checked (DESIGN.md §12).
+//!
+//! Every certified family names the [`InferenceEnv`] it was solved
+//! against, but until now that env lived only inside the manifest.
+//! The registry gives each env a stable, human-usable address — the
+//! same `{device}_{regime}_{fp8}` slug the multi-env session uses for
+//! its per-env output directories ([`super::env_slug`]) — so CLI flows
+//! can say `prune-gradual --retarget gpu-sim_throughput_1a2b3c4d`
+//! instead of shipping JSON paths around. Registration is idempotent
+//! and tamper-evident: re-registering the same env is a no-op, while a
+//! slug collision with DIFFERENT env content (a hand-edited file, a
+//! fingerprint truncation collision) is an error rather than a silent
+//! overwrite — the fingerprint covers the full serialized env, exactly
+//! like the session's `env_<fp>.json` pinning.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{env_slug, store::env_fingerprint};
+use crate::env::InferenceEnv;
+
+/// A directory of `<slug>.json` environment files.
+#[derive(Clone, Debug)]
+pub struct EnvRegistry {
+    dir: PathBuf,
+}
+
+impl EnvRegistry {
+    /// Registry rooted at `dir` (created lazily on first register).
+    pub fn new(dir: impl Into<PathBuf>) -> EnvRegistry {
+        EnvRegistry { dir: dir.into() }
+    }
+
+    /// Registry root.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Register `env` under its slug and return the slug.
+    ///
+    /// Idempotent: an existing file with the same fingerprint is left
+    /// untouched; an existing file with DIFFERENT content is an error.
+    pub fn register(&self, env: &InferenceEnv) -> Result<String> {
+        let slug = env_slug(env);
+        let path = self.dir.join(format!("{slug}.json"));
+        if path.exists() {
+            let have = InferenceEnv::load(&path)
+                .with_context(|| format!("registry: unreadable {}", path.display()))?;
+            if env_fingerprint(&have) != env_fingerprint(env) {
+                return Err(anyhow!(
+                    "registry: slug `{slug}` already maps to a different env ({})",
+                    path.display()
+                ));
+            }
+            return Ok(slug);
+        }
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("registry: create {}", self.dir.display()))?;
+        env.save(&path)?;
+        Ok(slug)
+    }
+
+    /// Resolve `name` to an env: a path to a JSON file (absolute or
+    /// relative, detected by existence or a `.json` suffix), or a
+    /// registered slug looked up under the registry root. A slug hit
+    /// is verified against the loaded env's own slug, so a renamed
+    /// file cannot impersonate another env.
+    pub fn resolve(&self, name: &str) -> Result<InferenceEnv> {
+        let direct = Path::new(name);
+        if direct.exists() || name.ends_with(".json") {
+            return InferenceEnv::load(direct)
+                .with_context(|| format!("registry: load env file {name}"));
+        }
+        let path = self.dir.join(format!("{name}.json"));
+        let env = InferenceEnv::load(&path).with_context(|| {
+            format!(
+                "registry: `{name}` is neither an env file nor a slug under {}",
+                self.dir.display()
+            )
+        })?;
+        let slug = env_slug(&env);
+        if slug != name {
+            return Err(anyhow!(
+                "registry: {} claims slug `{name}` but its content fingerprints to `{slug}`",
+                path.display()
+            ));
+        }
+        Ok(env)
+    }
+
+    /// All registered slugs, sorted (for `ziplm adapt` listings).
+    pub fn slugs(&self) -> Vec<String> {
+        let mut out: Vec<String> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let name = e.file_name().to_string_lossy().into_owned();
+                        name.strip_suffix(".json").map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::latency::LatencyTable;
+
+    fn env(overhead: f64) -> InferenceEnv {
+        InferenceEnv::measured(LatencyTable {
+            model: "m".into(),
+            device: "reg sim!".into(),
+            regime: "throughput".into(),
+            attn: vec![0.0, 1e-3, 2e-3],
+            mlp: vec![(8, 4e-3), (0, 0.0)],
+            overhead,
+        })
+        .unwrap()
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ziplm-registry-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn register_resolve_roundtrip_and_idempotence() {
+        let dir = tmp("rt");
+        let reg = EnvRegistry::new(&dir);
+        let e = env(1e-3);
+        let slug = reg.register(&e).unwrap();
+        assert!(slug.starts_with("reg-sim-_throughput_"), "{slug}");
+        // second registration of the identical env is a no-op
+        assert_eq!(reg.register(&e).unwrap(), slug);
+        let back = reg.resolve(&slug).unwrap();
+        assert_eq!(env_fingerprint(&back), env_fingerprint(&e));
+        assert_eq!(reg.slugs(), vec![slug.clone()]);
+        // path form resolves too
+        let by_path = reg.resolve(dir.join(format!("{slug}.json")).to_str().unwrap()).unwrap();
+        assert_eq!(env_fingerprint(&by_path), env_fingerprint(&e));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn collisions_and_imposters_are_errors() {
+        let dir = tmp("col");
+        let reg = EnvRegistry::new(&dir);
+        let slug = reg.register(&env(1e-3)).unwrap();
+        // different env forced under the same slug file → error
+        env(9e-3).save(&dir.join(format!("{slug}.json"))).unwrap();
+        assert!(reg.register(&env(1e-3)).is_err(), "tampered file must not pass");
+        // a renamed env file cannot impersonate a slug
+        env(9e-3).save(&dir.join("stolen-name.json")).unwrap();
+        let err = reg.resolve("stolen-name").unwrap_err().to_string();
+        assert!(err.contains("fingerprints to"), "{err}");
+        // unknown slug → a helpful error
+        assert!(reg.resolve("no-such-slug").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

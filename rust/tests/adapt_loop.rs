@@ -1,0 +1,199 @@
+//! End-to-end adapt loop (DESIGN.md §12): seeded replay telemetry →
+//! drift verdict → fitted env → frontier targets — fully engine-free —
+//! plus an engine-gated retarget leg proving the fitted env re-prices
+//! the session's CHECKPOINTED databases (zero Hessian recomputation,
+//! asserted through the session's computed/loaded counters).
+
+#![allow(clippy::disallowed_methods)] // test code: unwrap-on-failure is fine
+
+mod support;
+
+use std::time::Duration;
+
+use support::{cfg, engine, fleet_env, temp_dir, toy_env};
+use ziplm::adapt::{AdaptController, AdaptPlan, DriftCfg};
+use ziplm::coordinator::chaos::TraceItem;
+use ziplm::coordinator::family::{BucketLadder, BucketSample, MemberRoute};
+use ziplm::coordinator::replay::{replay_samples, ReplayCfg};
+use ziplm::data;
+use ziplm::env::{CostModel, InferenceEnv};
+use ziplm::models::family::{FamilyManifest, FamilyMember};
+use ziplm::models::ModelState;
+use ziplm::session::CompressionSession;
+use ziplm::util::json::Json;
+
+/// Price a three-member ladder against `env` exactly like the serving
+/// path does at startup (`est_speedup` from the table, per-bucket
+/// batch estimates from [`InferenceEnv::batch_time`]).
+fn member_routes(env: &InferenceEnv, n_layers: usize) -> Vec<MemberRoute> {
+    let profiles: [(&str, Vec<(usize, usize)>); 3] = [
+        ("dense", vec![(4, 512); n_layers]),
+        ("2x", vec![(2, 256); n_layers]),
+        ("4x", vec![(1, 64); n_layers]),
+    ];
+    let dense = env.model_time(&profiles[0].1);
+    let ladder = env.bucket_ladder();
+    let mut routes: Vec<MemberRoute> = profiles
+        .iter()
+        .map(|(tag, p)| MemberRoute {
+            tag: (*tag).into(),
+            est_speedup: dense / env.model_time(p),
+            est_batch_time: env.model_time(p),
+            bucket_times: ladder.iter().map(|&(b, s)| ((b, s), env.batch_time(p, b, s))).collect(),
+        })
+        .collect();
+    routes.sort_by(|a, b| a.est_speedup.total_cmp(&b.est_speedup));
+    routes
+}
+
+/// A certified manifest over `routes` with a monotone loss ladder —
+/// the frontier input `emit_families` would have written.
+fn manifest(env: &InferenceEnv, routes: &[MemberRoute]) -> FamilyManifest {
+    let mut fam = FamilyManifest::new("m", "t", "throughput");
+    fam.env = Some(env.clone());
+    fam.members = routes
+        .iter()
+        .map(|r| FamilyMember {
+            tag: r.tag.clone(),
+            ckpt: String::new(),
+            target: 1.0,
+            est_speedup: r.est_speedup,
+            profile: vec![],
+            calib_loss: Some(0.3 * (r.est_speedup - 1.0).max(0.0)),
+        })
+        .collect();
+    fam
+}
+
+/// Tentpole acceptance, engine-free: replaying short-sequence traffic
+/// through a certified family must flag mass-driven drift, fit an env
+/// anchored on the observed shape, and recommend frontier targets —
+/// bit-identically across runs.
+#[test]
+fn replayed_drift_fits_env_and_recommends_targets() {
+    let env = fleet_env(); // anchor (8, 64), seq sweep 16/32/64
+    let n_layers = 2;
+    let routes = member_routes(&env, n_layers);
+    let ladder = BucketLadder::new(env.bucket_ladder());
+    let fam = manifest(&env, &routes);
+
+    // 48 requests, every one at a quarter of the certified anchor seq
+    let trace: Vec<TraceItem> =
+        (0..48).map(|_| TraceItem { ids: vec![1; 12], sla: None }).collect();
+    let rcfg = ReplayCfg { max_batch: 4, jitter: 0.1, seed: 7, fallback_shape: env.batch_shape() };
+
+    let run = || {
+        let samples = replay_samples(&trace, &routes, &ladder, &rcfg);
+        let plan =
+            AdaptController::default().plan(&samples, &env, std::slice::from_ref(&fam)).unwrap();
+        (samples, plan)
+    };
+    let (samples, plan) = run();
+
+    assert!(!samples.is_empty());
+    assert!(samples.iter().all(|s| s.seq == 16), "short traffic must bucket at (8, 16)");
+    let tol = DriftCfg::default();
+    let drift = &plan.drift;
+    assert_eq!(drift.requests, 48);
+    assert!(drift.mass_shift > tol.mass_shift_tol, "mass shift: {}", drift.mass_shift);
+    assert!(
+        drift.latency_drift < tol.latency_ratio_tol,
+        "jitter alone must not flag latency: {}",
+        drift.latency_drift
+    );
+    assert!(drift.drifted);
+
+    let fitted = plan.fitted.as_ref().expect("drifted plan fits an env");
+    assert_eq!(fitted.batch_shape(), (8, 16), "fitted anchor must follow the observed mass");
+    assert!(
+        fitted.dense_time(n_layers) < env.dense_time(n_layers),
+        "a quarter-seq anchor must price cheaper than the certified one"
+    );
+
+    assert_eq!(plan.action(), "retarget");
+    assert!(plan.knee.is_some(), "a 3-member frontier has a knee");
+    assert!(!plan.targets.is_empty());
+    assert!(plan.targets.windows(2).all(|w| w[0] < w[1]), "targets sorted + deduped");
+
+    // pure: a second run from the same inputs is bit-identical
+    let (samples2, plan2) = run();
+    assert_eq!(samples, samples2);
+    assert_eq!(plan, plan2);
+
+    // and the full plan round-trips through its JSON form (the file
+    // `ziplm adapt` hands to `prune-gradual --retarget`)
+    let text = plan.to_json().to_pretty();
+    let back = AdaptPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, plan);
+}
+
+/// Engine-gated acceptance: applying an [`AdaptPlan`] to a
+/// checkpointed session swaps it onto the fitted env and the next
+/// solve computes exactly ONE artifact (the new profile) — the
+/// capture and Hessian databases are LOADED, never recomputed.
+#[test]
+fn adapt_plan_retargets_session_without_hessian_recompute() {
+    let Some(engine) = engine() else { return };
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let minfo = engine.manifest.model(model).clone();
+    let tinfo = engine.manifest.task(model, task).clone();
+    let ds = data::load_sized(&minfo, task, 64, 32);
+    let teacher = ModelState::init(&minfo, task, &tinfo, 31);
+    let env1 = toy_env(&engine, model);
+    let target = 1.5;
+    let dir = temp_dir("adapt_loop");
+
+    let open = |env: &InferenceEnv| {
+        CompressionSession::for_model(&engine, model, task)
+            .with_env(env.clone())
+            .with_prune_cfg(cfg())
+            .checkpoint_to(&dir)
+            .open()
+            .unwrap()
+    };
+
+    // 1. certify against env1 (capture + databases land on disk)
+    let sess1 = open(&env1);
+    let mut s1 = teacher.clone();
+    sess1.oneshot(&mut s1, &ds, target).unwrap();
+    drop(sess1);
+
+    // 2. telemetry says the device runs 40% hotter than certified:
+    //    uniform latency drift, no shape shift (the toy env is
+    //    anchorless, so only the ratio test can fire)
+    let certified = 8e-3;
+    let samples: Vec<BucketSample> = (0..8)
+        .map(|_| BucketSample {
+            member: "dense".into(),
+            batch: 4,
+            seq: 32,
+            specialized: false,
+            exec: Duration::from_secs_f64(certified * 1.4),
+            requests: 4,
+            certified,
+        })
+        .collect();
+
+    let mut sess = open(&env1);
+    let ctl = AdaptController::default();
+    let plan = ctl.plan(&samples, sess.env(), &[]).unwrap();
+    assert!(plan.drift.drifted, "a 40% overrun must flag: {:?}", plan.drift);
+    assert!(plan.drift.latency_drift > DriftCfg::default().latency_ratio_tol);
+    assert!(plan.fitted.is_some(), "a drifted plan must carry a fitted env");
+    assert_eq!(plan.action(), "retarget");
+
+    // 3. applying the plan swaps the session onto the fitted env ...
+    assert!(ctl.apply(&plan, &mut sess).unwrap(), "plan must retarget");
+    assert_eq!(Some(sess.env()), plan.fitted.as_ref());
+
+    // 4. ... and the next solve re-prices the checkpointed databases:
+    //    exactly one artifact computed, zero Hessian recomputation
+    let mut s2 = teacher.clone();
+    let rep = sess.oneshot(&mut s2, &ds, target).unwrap();
+    let (computed, loaded) = sess.counters();
+    assert_eq!(computed, 1, "retarget recomputed {computed} artifact(s); want 1 (the profile)");
+    assert_eq!(loaded, 2, "capture + hessian databases must LOAD, loaded {loaded}");
+    assert!(rep.est_speedup > 1.0, "fitted-env solve produced no speedup");
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -6,11 +6,14 @@
 use std::path::Path;
 use std::time::Duration;
 
-use ziplm::coordinator::family::{route, route_batch, BatchReq, BucketLadder, MemberRoute, Sla};
+use ziplm::adapt::{detect_drift, fit_env, DriftCfg, DriftReport};
+use ziplm::coordinator::family::{
+    route, route_batch, BatchReq, BucketLadder, BucketSample, MemberRoute, Sla,
+};
 use ziplm::env::InferenceEnv;
 use ziplm::exp::repro::{
-    matrix_keys, scenario_cells, BucketRow, CellStatus, ChaosSummary, FamilyBlock, MemberSummary,
-    ReproReport, ScenarioCell,
+    matrix_keys, scenario_cells, AdaptBlock, BucketRow, CellStatus, ChaosSummary, FamilyBlock,
+    MemberSummary, ReproReport, ScenarioCell,
 };
 use ziplm::latency::LatencyTable;
 use ziplm::models::family::{FamilyManifest, FamilyMember};
@@ -713,6 +716,7 @@ fn random_manifest(r: &mut Rng) -> FamilyManifest {
             target: 1.0 + r.f64() * 9.0,
             est_speedup: est,
             profile,
+            calib_loss: if r.below(2) == 0 { Some(r.f64()) } else { None },
         });
     }
     fam
@@ -1210,6 +1214,24 @@ fn random_family_block(r: &mut Rng) -> FamilyBlock {
     }
 }
 
+fn random_adapt_block(r: &mut Rng) -> AdaptBlock {
+    AdaptBlock {
+        model: tricky_string(r),
+        env: tricky_string(r),
+        requests: r.below(200),
+        latency_drift: r.f64(),
+        mass_shift: r.f64(),
+        overrun_rate: r.f64(),
+        drifted: r.below(2) == 0,
+        fitted_batch: 1 + r.below(64),
+        fitted_seq: 1 + r.below(512),
+        fitted_skew: r.f64() * 2.0,
+        fitted_sweep: (0..r.below(4)).map(|_| (1 + r.below(512), r.f64() * 2.0)).collect(),
+        knee: r.f64() * 4.0,
+        targets: (0..r.below(5)).map(|_| 1.0 + r.f64() * 4.0).collect(),
+    }
+}
+
 /// ReproReport text round-trip: serialize → parse → deserialize →
 /// serialize must reproduce the bytes. f64 Display is shortest
 /// round-trip and the parser is correctly rounded, so exact equality
@@ -1225,6 +1247,7 @@ fn prop_repro_report_json_roundtrip_identity() {
             seed: r.below(1 << 31) as u64,
             cells: (0..r.below(6)).map(|_| random_scenario_cell(r)).collect(),
             families: (0..r.below(4)).map(|_| random_family_block(r)).collect(),
+            adapt: (0..r.below(3)).map(|_| random_adapt_block(r)).collect(),
         },
         |rep| {
             let text = rep.to_json().to_pretty();
@@ -1242,6 +1265,170 @@ fn prop_repro_report_json_roundtrip_identity() {
             }
             if back.seed != rep.seed || back.cells.len() != rep.cells.len() {
                 return Err("structural fields drifted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------------------- adapt drift
+
+/// Measured env with a pinned anchor shape for the drift properties.
+fn drift_env(batch: usize, seq: usize) -> InferenceEnv {
+    let table = LatencyTable {
+        model: "m".into(),
+        device: "sim".into(),
+        regime: "throughput".into(),
+        attn: vec![0.0, 1e-3],
+        mlp: vec![(64, 1e-3), (0, 0.0)],
+        overhead: 1e-3,
+    };
+    InferenceEnv::measured(table).unwrap().with_batch_shape(batch, seq)
+}
+
+/// Sample whose realized time EXACTLY equals its certified estimate
+/// (built from integer nanos so `exec.as_secs_f64()` is lossless).
+fn exact_sample(batch: usize, seq: usize, requests: usize, nanos: u64) -> BucketSample {
+    let exec = Duration::from_nanos(nanos);
+    BucketSample {
+        member: "dense".into(),
+        batch,
+        seq,
+        specialized: true,
+        exec,
+        requests,
+        certified: exec.as_secs_f64(),
+    }
+}
+
+#[test]
+fn prop_drift_silent_on_anchor_shaped_traffic() {
+    // traffic shaped exactly like the certified anchor, executing at
+    // exactly the certified price, must never flag — for any volume,
+    // anchor shape, or per-sample pricing
+    Prop::new(60).check_msg(
+        "no drift on anchor-shaped traffic",
+        |r| {
+            let batch = 1 + r.below(64);
+            let seq = 1 + r.below(1024);
+            let samples: Vec<BucketSample> = (0..1 + r.below(40))
+                .map(|_| {
+                    exact_sample(batch, seq, 1 + r.below(8), 1_000 + r.below(1 << 30) as u64)
+                })
+                .collect();
+            (batch, seq, samples)
+        },
+        |(batch, seq, samples)| {
+            let env = drift_env(*batch, *seq);
+            let rep = detect_drift(samples, &env, &DriftCfg::default());
+            if rep.drifted {
+                return Err("flagged anchor-shaped traffic".into());
+            }
+            if rep.latency_drift != 0.0 || rep.mass_shift != 0.0 || rep.overrun_rate != 0.0 {
+                return Err(format!("nonzero drift statistics: {rep:?}"));
+            }
+            if rep.per_bucket.len() != 1 || rep.per_bucket[0].share != 1.0 {
+                return Err(format!("per-bucket accounting broke: {:?}", rep.per_bucket));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_drift_mass_shift_monotone_in_injected_shift() {
+    // displacing MORE requests, or the same requests FARTHER from the
+    // anchor, must strictly grow the mass-shift statistic; and for a
+    // single displaced bucket the statistic matches its closed form
+    // moved/total * 0.5 * d/seq exactly (integer-valued f64 ops)
+    Prop::new(60).check_msg(
+        "mass shift monotone in injected shift",
+        |r| {
+            let batch = 1 + r.below(32);
+            let seq = 64 + r.below(512);
+            let total = 16 + r.below(32);
+            let moved = 1 + r.below(total);
+            let d1 = 1 + r.below(seq / 2);
+            let d2 = d1 + 1 + r.below(seq / 2);
+            (batch, seq, total, moved, d1, d2)
+        },
+        |&(batch, seq, total, moved, d1, d2)| {
+            let env = drift_env(batch, seq);
+            let build = |n_moved: usize, d: usize| -> Vec<BucketSample> {
+                (0..total)
+                    .map(|i| {
+                        let s = if i < n_moved { seq - d } else { seq };
+                        exact_sample(batch, s, 1, 1_000_000)
+                    })
+                    .collect()
+            };
+            let cfg = DriftCfg::default();
+            let near = detect_drift(&build(moved, d1), &env, &cfg);
+            let far = detect_drift(&build(moved, d2), &env, &cfg);
+            if far.mass_shift <= near.mass_shift {
+                return Err(format!(
+                    "farther displacement did not grow mass shift: {} vs {}",
+                    far.mass_shift, near.mass_shift
+                ));
+            }
+            if moved < total {
+                let more = detect_drift(&build(moved + 1, d1), &env, &cfg);
+                if more.mass_shift <= near.mass_shift {
+                    return Err("more displaced requests did not grow mass shift".into());
+                }
+            }
+            let want = moved as f64 / total as f64 * 0.5 * (d1 as f64 / seq as f64);
+            if (near.mass_shift - want).abs() > 1e-9 {
+                return Err(format!("mass shift {} != closed form {want}", near.mass_shift));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_drift_detect_and_fit_pure_with_json_roundtrip() {
+    // same samples in, bit-identical verdict and fitted env out — and
+    // the DriftReport survives its JSON text round-trip exactly
+    Prop::new(60).check_msg(
+        "detect_drift/fit_env purity + DriftReport JSON roundtrip",
+        |r| {
+            let batch = 1 + r.below(32);
+            let seq = 1 + r.below(512);
+            let samples: Vec<BucketSample> = (0..1 + r.below(30))
+                .map(|_| BucketSample {
+                    member: tricky_string(r),
+                    batch: 1 + r.below(64),
+                    seq: 1 + r.below(1024),
+                    specialized: r.below(2) == 0,
+                    exec: Duration::from_nanos(1 + r.below(1 << 30) as u64),
+                    requests: 1 + r.below(8),
+                    certified: 1e-6 + r.f64() * 1e-2,
+                })
+                .collect();
+            (batch, seq, samples)
+        },
+        |(batch, seq, samples)| {
+            let env = drift_env(*batch, *seq);
+            let cfg = DriftCfg::default();
+            let a = detect_drift(samples, &env, &cfg);
+            let b = detect_drift(samples, &env, &cfg);
+            if a != b {
+                return Err("same samples, different drift reports".into());
+            }
+            let f1 = fit_env(samples, &env).map_err(|e| e.to_string())?;
+            let f2 = fit_env(samples, &env).map_err(|e| e.to_string())?;
+            if f1 != f2 {
+                return Err("same samples, different fitted envs".into());
+            }
+            let text = a.to_json().to_pretty();
+            let parsed = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+            let back = DriftReport::from_json(&parsed).map_err(|e| e.to_string())?;
+            if back != a {
+                return Err("DriftReport JSON roundtrip drifted".into());
+            }
+            if back.to_json().to_pretty() != text {
+                return Err("DriftReport re-serialize drifted".into());
             }
             Ok(())
         },

@@ -133,6 +133,16 @@ fn kick_tires_covers_every_cell_without_an_engine() {
         assert_eq!(fam.chaos.lost, 0);
         assert!(fam.chaos.balanced);
     }
+    // the adapt loop runs once per gpu-sweep family, flags the seeded
+    // drifted trace, and recommends targets — all without an engine
+    assert_eq!(report.adapt.len(), 2, "one adapt section per model's gpu-sweep family");
+    for a in &report.adapt {
+        assert_eq!(a.env, "gpu-sweep");
+        assert_eq!(a.requests, 48);
+        assert!(a.drifted, "the short-seq trace must flag: {a:?}");
+        assert!(a.mass_shift > 0.25, "drift is mass-driven: {a:?}");
+        assert!(!a.targets.is_empty() && a.knee > 0.0, "frontier must recommend");
+    }
 }
 
 #[test]

@@ -523,8 +523,9 @@ def _replay_sample(member, bucket, requests, jitter, fallback, rng):
             dur_from_secs(certified * factor), requests, certified)
 
 
-def replay(trace, members, ladder, max_batch, jitter, seed, fallback):
-    """coordinator::replay::replay; trace items are (len, sla)."""
+def replay_samples(trace, members, ladder, max_batch, jitter, seed, fallback):
+    """coordinator::replay::replay_samples; trace items are (len, sla).
+    Samples are (tag, batch, seq, spec, exec_nanos, requests, certified)."""
     if not members:
         return []
     rng = Rng((seed ^ 0x71) & M64)
@@ -542,7 +543,149 @@ def replay(trace, members, ladder, max_batch, jitter, seed, fallback):
                 mi = route(sla, members, depths, max_batch, 0)
                 bucket = ladder.bucket_for(1, ln)
                 samples.append(_replay_sample(members[mi], bucket, 1, jitter, fallback, rng))
-    return aggregate_buckets(samples)
+    return samples
+
+
+def replay(trace, members, ladder, max_batch, jitter, seed, fallback):
+    """coordinator::replay::replay = aggregated replay_samples."""
+    return aggregate_buckets(replay_samples(trace, members, ladder, max_batch, jitter,
+                                            seed, fallback))
+
+
+# --------------------------------------------------- adapt module twins
+
+
+def sample_ratio(s):
+    """adapt::sample_ratio on a replay sample tuple."""
+    return dur_secs(s[4]) / s[6] if s[6] > 0.0 else 1.0
+
+
+def detect_drift(samples, env, latency_tol=0.1, mass_tol=0.25, min_requests=16):
+    """adapt::detect_drift under DriftCfg::default (summary stats only;
+    the per-bucket rows never land in the repro report)."""
+    ab, aseq = env.batch_shape()
+    total = sum(s[5] for s in samples)
+    if total == 0:
+        return {"requests": 0, "latency_drift": 0.0, "mass_shift": 0.0,
+                "overrun_rate": 0.0, "drifted": False}
+    latency_drift = 0.0
+    mass_shift = 0.0
+    overrun = 0.0
+    for s in samples:
+        w = float(s[5]) / float(total)
+        ratio = sample_ratio(s)
+        latency_drift += w * abs(ratio - 1.0)
+        if dur_secs(s[4]) > s[6]:
+            overrun += w
+        ds = abs(float(s[2]) - float(aseq)) / float(aseq) if aseq > 0 else 0.0
+        db = abs(float(s[1]) - float(ab)) / float(ab) if ab > 0 else 0.0
+        mass_shift += w * 0.5 * (ds + db)
+    drifted = total >= min_requests and (latency_drift > latency_tol or mass_shift > mass_tol)
+    return {"requests": total, "latency_drift": latency_drift, "mass_shift": mass_shift,
+            "overrun_rate": overrun, "drifted": drifted}
+
+
+def fit_env(samples, base):
+    """adapt::fit_env: re-anchor and re-price `base` onto the observed
+    traffic (with_device_skew . with_batch_shape . with_seq_sweep)."""
+    total = sum(s[5] for s in samples)
+    if total == 0:
+        raise ValueError("fit_env needs at least one recorded request")
+    mean_b = 0.0
+    mean_s = 0.0
+    ratio = 0.0
+    for s in samples:
+        w = float(s[5]) / float(total)
+        mean_b += w * float(s[1])
+        mean_s += w * float(s[2])
+        ratio += w * sample_ratio(s)
+    b_star = max(int(rust_round(mean_b)), 1)
+    s_star = max(int(rust_round(mean_s)), 1)
+    b0, _seq0 = base.batch_shape()
+    batch_factor = float(b_star) / float(b0) if b0 > 0 else 1.0
+    anchor_scale = base.seq_scale(s_star)
+    skew = ratio * batch_factor * anchor_scale
+    seqs = sorted({s[2] for s in samples if s[2] > 0})
+    sweep = [(s, base.seq_scale(s) / anchor_scale) for s in seqs]
+    t = base.table
+    if math.isfinite(skew) and skew > 0.0 and skew != 1.0:
+        table = Table(t.model, t.device, t.regime,
+                      [a * skew for a in t.attn],
+                      [(w, tt * skew) for (w, tt) in t.mlp],
+                      t.overhead * skew)
+    else:
+        table = Table(t.model, t.device, t.regime, list(t.attn), list(t.mlp), t.overhead)
+    return Env(table, b_star, s_star, sweep)
+
+
+def loss_proxy(est):
+    return 1.0 - 1.0 / est if est > 0.0 else 0.0
+
+
+def frontier_points(members):
+    """adapt::frontier_points on (tag, est_speedup, calib_loss|None)."""
+    pts = []
+    for (tag, est, loss) in members:
+        y = loss if (loss is not None and math.isfinite(loss)) else loss_proxy(est)
+        if math.isfinite(est) and math.isfinite(y):
+            pts.append((est, y, tag))
+    pts.sort(key=lambda p: (p[0], p[1], p[2]))
+    kept = []
+    best = math.inf
+    for p in reversed(pts):
+        if p[1] < best:
+            best = p[1]
+            kept.append(p)
+    kept.reverse()
+    return kept
+
+
+def knee_point(frontier):
+    """adapt::knee_point (speedup, loss, tag) triples -> speedup|None."""
+    if len(frontier) < 3:
+        return None
+    a = frontier[0]
+    b = frontier[-1]
+    dx = b[0] - a[0]
+    dy = b[1] - a[1]
+    if dx <= 0.0:
+        return None
+    sy = dy if dy != 0.0 else 1.0
+    best = 0.0
+    at = None
+    for p in frontier[1:-1]:
+        px = (p[0] - a[0]) / dx
+        py = (p[1] - a[1]) / sy
+        d = abs(px * (dy / sy) - py)
+        if d > best:
+            best = d
+            at = p[0]
+    return at if at is not None else frontier[len(frontier) // 2][0]
+
+
+def propose_targets(frontier, n):
+    """adapt::propose_targets: knee + equal-loss-spaced picks."""
+    if not frontier or n == 0:
+        return []
+    y0 = frontier[0][1]
+    y1 = frontier[-1][1]
+    out = []
+    k = knee_point(frontier)
+    if k is not None:
+        out.append(k)
+    for i in range(1, n + 1):
+        want = y0 + (y1 - y0) * i / n
+        pick = frontier[0][0]
+        for p in frontier:
+            if p[1] <= want + 1e-12:
+                pick = p[0]
+        out.append(pick)
+    out.sort()
+    ded = []
+    for t in out:
+        if not ded or ded[-1] != t:
+            ded.append(t)
+    return ded
 
 
 def gen_trace(requests, seed, len_range, classes):
@@ -667,7 +810,21 @@ def solve_env(m, env_name, status, problem):
     return cells, gradual
 
 
+def trace_classes(m, env, fastest):
+    """repro.rs::trace_classes — the three-class SLA mix."""
+    return [
+        {"class": "best-effort", "weight": 2.0, "max_latency": None, "min_speedup": None},
+        {"class": "realtime", "weight": 1.0,
+         "max_latency": dur_from_secs(env.dense_time(m["n_layers"]) * 0.8),
+         "min_speedup": None},
+        {"class": "throughput", "weight": 1.0, "max_latency": None,
+         "min_speedup": min(fastest, 2.0)},
+    ]
+
+
 def family_block(m, block_idx, env_name, env, gradual, seed):
+    """-> (block dict, serving dict with the routes/ladder reused by
+    the adapt loop), mirroring repro.rs::family_block."""
     dense_profile = [(m["n_heads"], m["d_ff"])] * m["n_layers"]
     built = [{"tag": "dense", "est": env.speedup(dense_profile), "profile": dense_profile}]
     for k, stage in enumerate(gradual):
@@ -688,15 +845,7 @@ def family_block(m, block_idx, env_name, env, gradual, seed):
     fastest = 1.0
     for mb in built:
         fastest = max(fastest, mb["est"])
-    classes = [
-        {"class": "best-effort", "weight": 2.0, "max_latency": None, "min_speedup": None},
-        {"class": "realtime", "weight": 1.0,
-         "max_latency": dur_from_secs(env.dense_time(m["n_layers"]) * 0.8),
-         "min_speedup": None},
-        {"class": "throughput", "weight": 1.0, "max_latency": None,
-         "min_speedup": min(fastest, 2.0)},
-    ]
-    trace = gen_trace(48, block_seed, (4, 32), classes)
+    trace = gen_trace(48, block_seed, (4, 32), trace_classes(m, env, fastest))
     stats = replay(trace, routes, ladder, 4, 0.1, block_seed, env.batch_shape())
 
     per_bucket = []
@@ -720,7 +869,7 @@ def family_block(m, block_idx, env_name, env, gradual, seed):
     # 48 submitted requests gets exactly one terminal outcome.
     chaos = {"submitted": 48, "lost": 0, "balanced": True}
 
-    return {
+    block = {
         "model": m["name"], "env": env_name,
         "members": [{"tag": mb["tag"], "est_speedup": q4(mb["est"]),
                      "est_batch_time_ms": q4(env.model_time(mb["profile"]) * 1e3)}
@@ -729,20 +878,81 @@ def family_block(m, block_idx, env_name, env, gradual, seed):
         "per_bucket": per_bucket,
         "chaos": chaos,
     }
+    return block, {"routes": routes, "ladder": ladder}
+
+
+def kick_members(routes, cells):
+    """repro.rs::kick_manifest's member list: (tag, est, loss|None),
+    losses from the gradual cells' proxy errors, dense anchored at 0."""
+    members = []
+    for r in routes:
+        if r.tag == "dense":
+            loss = 0.0
+        else:
+            loss = None
+            for c in cells:
+                if (c["regime"] == "gradual" and c["status"] != "error"
+                        and fmt_num(c["target"]) + "x" == r.tag):
+                    loss = c["proxy_error"]
+                    break
+        members.append((r.tag, r.est_speedup, loss))
+    return members
+
+
+def adapt_block(m, block_idx, env_name, env, serving, members, seed):
+    """repro.rs::adapt_block: drifted replay -> detect -> fit -> frontier."""
+    drift_seed = sub_seed(seed, 0x300 + block_idx)
+    routes = serving["routes"]
+    fastest = 1.0
+    for r in routes:
+        fastest = max(fastest, r.est_speedup)
+    trace = gen_trace(48, drift_seed, (4, max(m["seq"] // 4, 5)),
+                      trace_classes(m, env, fastest))
+    samples = replay_samples(trace, routes, serving["ladder"], 4, 0.1, drift_seed,
+                             env.batch_shape())
+    drift = detect_drift(samples, env)
+    fitted = fit_env(samples, env)
+    base_dense = env.dense_time(m["n_layers"])
+    skew = fitted.dense_time(m["n_layers"]) / base_dense if base_dense > 0.0 else 0.0
+    frontier = frontier_points(members)
+    knee = knee_point(frontier)
+    targets = [q4(t) for t in propose_targets(frontier, len(TARGETS))]
+    ded = []
+    for t in targets:
+        if not ded or ded[-1] != t:
+            ded.append(t)
+    fb, fs = fitted.batch_shape()
+    return {
+        "model": m["name"], "env": env_name,
+        "requests": drift["requests"],
+        "latency_drift": q4(drift["latency_drift"]),
+        "mass_shift": q4(drift["mass_shift"]),
+        "overrun_rate": q4(drift["overrun_rate"]),
+        "drifted": drift["drifted"],
+        "fitted": {"batch": fb, "seq": fs, "skew": q4(skew),
+                   "sweep": [[s, q4(sc)] for (s, sc) in fitted.sweep]},
+        "knee": q4(knee) if knee is not None else 0.0,
+        "targets": ded,
+    }
 
 
 def run_kick_tires(seed, precomputed):
-    cells, families = [], []
+    cells, families, adapt = [], [], []
     for mi, m in enumerate(MODELS):
         weights = sensitivity_weights(seed, mi, m["n_layers"] * 2)
         for ei, env_name in enumerate(ENVS):
             env, status = kick_env(m, env_name, precomputed)
             problem = build_problem(m, env, weights)
             env_cells, gradual = solve_env(m, env_name, status, problem)
+            fi = mi * len(ENVS) + ei
+            block, serving = family_block(m, fi, env_name, env, gradual, seed)
+            if env_name == "gpu-sweep":
+                members = kick_members(serving["routes"], env_cells)
+                adapt.append(adapt_block(m, fi, env_name, env, serving, members, seed))
             cells.extend(env_cells)
-            families.append(family_block(m, mi * len(ENVS) + ei, env_name, env, gradual, seed))
+            families.append(block)
     return {"version": 1, "mode": "kick-tires", "seed": seed, "cells": cells,
-            "families": families}
+            "families": families, "adapt": adapt}
 
 
 # ----------------------------------------------------------------- main
