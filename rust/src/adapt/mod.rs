@@ -631,6 +631,7 @@ mod tests {
             target: est,
             est_speedup: est,
             profile: vec![(2, 8)],
+            choices: None,
             calib_loss: loss,
         }
     }

@@ -1,0 +1,590 @@
+//! Typed per-layer compression choices — the compound lattice the
+//! inference-aware DP ranges over (DESIGN.md §13).
+//!
+//! ZipLM's SPDY solve originally chose one structured-pruning *level*
+//! per module. This module widens the per-module choice set to int8
+//! quantization and low-rank FFN factorization (plus lawful
+//! compositions like prune-then-quant) behind one typed lattice:
+//!
+//! * [`LayerChoice`] — what is done to one module (the axis + its knob);
+//! * [`Choice`] — a lattice entry: a [`LayerChoice`] with an env-priced
+//!   runtime `cost` and an OBS-style reconstruction `loss`;
+//! * [`ChoiceSet`] — all candidate choices for one module
+//!   (`choices[0]` is always the dense prune level, mirroring
+//!   `ModuleLevels::options[0]`);
+//! * [`ChoiceProblem`] — the whole-model lattice; [`ChoiceProblem::lower`]
+//!   maps it onto the unchanged `spdy::solve_dp`, carrying each
+//!   choice's `(cost, loss)` into a `LevelOpt`'s `(cost, prior)`
+//!   verbatim. A prune-only lattice therefore lowers to the exact
+//!   `SpdyProblem` the legacy path built, so restricting the lattice
+//!   to pruning reproduces the old DP bit-identically
+//!   (equivalence-tested below and in `tests/proptests.rs`);
+//! * [`CompressionProfile`] — a solved assignment, one
+//!   [`ModuleChoice`] per module; the typed replacement for the raw
+//!   `Vec<usize>` / `Vec<(usize, usize)>` profile surfaces that used
+//!   to leak out of `spdy/`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::spdy::{self, LevelOpt, ModuleLevels, SearchCfg, SpdyProblem};
+use crate::util::json::Json;
+
+/// Weight-quantization scheme. One engine is seeded today; the enum
+/// keeps the manifest schema ready for more without a version bump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// symmetric per-row int8 (see `quant::int8_tensor`)
+    Int8,
+}
+
+impl QuantScheme {
+    /// Stable name used in manifests and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantScheme::Int8 => "int8",
+        }
+    }
+
+    /// Inverse of [`QuantScheme::name`].
+    pub fn parse(s: &str) -> Result<QuantScheme> {
+        match s {
+            "int8" => Ok(QuantScheme::Int8),
+            other => Err(anyhow!("unknown quant scheme {other:?} (expected \"int8\")")),
+        }
+    }
+}
+
+/// One module's compression choice: the axis plus its knob. `Prune`
+/// with the dense remaining count is the identity choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerChoice {
+    /// structured pruning to `remaining` heads (attn) / columns (ffn)
+    Prune { remaining: usize },
+    /// weight quantization at dense shape
+    Quant { scheme: QuantScheme },
+    /// rank-`rank` factorization of the FFN pair (FFN modules only)
+    LowRank { rank: usize },
+    /// prune to `remaining`, then quantize the surviving weights
+    PruneQuant { remaining: usize, scheme: QuantScheme },
+}
+
+impl LayerChoice {
+    /// Axis label used in manifests, reports, and mix summaries.
+    pub fn axis(&self) -> &'static str {
+        match self {
+            LayerChoice::Prune { .. } => "prune",
+            LayerChoice::Quant { .. } => "quant",
+            LayerChoice::LowRank { .. } => "lowrank",
+            LayerChoice::PruneQuant { .. } => "prune+quant",
+        }
+    }
+
+    /// Structural remaining units (heads / FFN columns) after this
+    /// choice; quantized and low-rank variants keep the dense shape.
+    pub fn remaining(&self, dense: usize) -> usize {
+        match *self {
+            LayerChoice::Prune { remaining } | LayerChoice::PruneQuant { remaining, .. } => {
+                remaining
+            }
+            LayerChoice::Quant { .. } | LayerChoice::LowRank { .. } => dense,
+        }
+    }
+
+    /// JSON fields describing this choice (merged into the module
+    /// object by [`ModuleChoice::to_json`]).
+    fn json_pairs(&self) -> Vec<(&'static str, Json)> {
+        let mut out = vec![("axis", Json::Str(self.axis().into()))];
+        match *self {
+            LayerChoice::Prune { remaining } => {
+                out.push(("remaining", Json::Num(remaining as f64)));
+            }
+            LayerChoice::Quant { scheme } => {
+                out.push(("scheme", Json::Str(scheme.name().into())));
+            }
+            LayerChoice::LowRank { rank } => out.push(("rank", Json::Num(rank as f64))),
+            LayerChoice::PruneQuant { remaining, scheme } => {
+                out.push(("remaining", Json::Num(remaining as f64)));
+                out.push(("scheme", Json::Str(scheme.name().into())));
+            }
+        }
+        out
+    }
+
+    fn from_json(j: &Json) -> Result<LayerChoice> {
+        let axis = j
+            .get("axis")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("choice missing \"axis\""))?;
+        let remaining = || {
+            j.get("remaining")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{axis} choice missing \"remaining\""))
+        };
+        let scheme = || -> Result<QuantScheme> {
+            QuantScheme::parse(
+                j.get("scheme")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{axis} choice missing \"scheme\""))?,
+            )
+        };
+        match axis {
+            "prune" => Ok(LayerChoice::Prune { remaining: remaining()? }),
+            "quant" => Ok(LayerChoice::Quant { scheme: scheme()? }),
+            "lowrank" => Ok(LayerChoice::LowRank {
+                rank: j
+                    .get("rank")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("lowrank choice missing \"rank\""))?,
+            }),
+            "prune+quant" => {
+                Ok(LayerChoice::PruneQuant { remaining: remaining()?, scheme: scheme()? })
+            }
+            other => Err(anyhow!("unknown choice axis {other:?}")),
+        }
+    }
+}
+
+/// One lattice entry: a choice priced by the environment's cost model
+/// and scored by its calibration-set reconstruction loss.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Choice {
+    /// what the entry does to the module
+    pub choice: LayerChoice,
+    /// env-priced runtime of the module under this choice (same units
+    /// as `CostModel::attn_time`/`mlp_time`)
+    pub cost: f64,
+    /// OBS-style loss score (prune: level prior; quant: calibration
+    /// error of int8; low-rank: truncated-SVD residual) — carried into
+    /// the DP as the `prior`
+    pub loss: f64,
+}
+
+/// All candidate choices for one module. Invariant: `choices[0]` is
+/// the dense `Prune` level (cost of the uncompressed module, loss 0),
+/// mirroring `ModuleLevels::options[0]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChoiceSet {
+    /// transformer layer index
+    pub layer: usize,
+    /// true = attention module, false = FFN module
+    pub is_attn: bool,
+    /// the lattice entries, dense first
+    pub choices: Vec<Choice>,
+}
+
+impl ChoiceSet {
+    /// Structural units of the dense (first) choice.
+    pub fn dense_remaining(&self) -> usize {
+        match self.choices.first() {
+            Some(c) => match c.choice {
+                LayerChoice::Prune { remaining } => remaining,
+                _ => 0,
+            },
+            None => 0,
+        }
+    }
+
+    /// Index of the first choice on `axis`, if any.
+    pub fn find_axis(&self, axis: &str) -> Option<usize> {
+        self.choices.iter().position(|c| c.choice.axis() == axis)
+    }
+}
+
+/// The whole-model choice lattice the widened DP solves over. Same
+/// shape as `SpdyProblem` (one set per module, layer-major with attn
+/// before ffn) so solutions index both identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChoiceProblem {
+    /// per-module choice sets
+    pub modules: Vec<ChoiceSet>,
+    /// profile-independent cost floor (embeddings, head, …)
+    pub overhead: f64,
+}
+
+impl ChoiceProblem {
+    /// Lift a legacy prune-only problem into the lattice: every
+    /// `LevelOpt` becomes a `Prune` choice carrying the same
+    /// `(cost, prior)` f64s, so [`ChoiceProblem::lower`] of the result
+    /// is the identity on the numbers the DP reads.
+    pub fn from_spdy(p: &SpdyProblem) -> ChoiceProblem {
+        ChoiceProblem {
+            modules: p
+                .modules
+                .iter()
+                .map(|m| ChoiceSet {
+                    layer: m.layer,
+                    is_attn: m.is_attn,
+                    choices: m
+                        .options
+                        .iter()
+                        .map(|o| Choice {
+                            choice: LayerChoice::Prune { remaining: o.remaining },
+                            cost: o.cost,
+                            loss: o.prior,
+                        })
+                        .collect(),
+                })
+                .collect(),
+            overhead: p.overhead,
+        }
+    }
+
+    /// Lower the lattice onto the unchanged level-index DP: each
+    /// choice's `(cost, loss)` becomes a `LevelOpt`'s `(cost, prior)`
+    /// verbatim; the `remaining` field records the structural shape
+    /// (dense for quant/low-rank) and is not read by `solve_dp`.
+    pub fn lower(&self) -> SpdyProblem {
+        SpdyProblem {
+            modules: self
+                .modules
+                .iter()
+                .map(|s| ModuleLevels {
+                    layer: s.layer,
+                    is_attn: s.is_attn,
+                    options: s
+                        .choices
+                        .iter()
+                        .map(|c| LevelOpt {
+                            remaining: c.choice.remaining(s.dense_remaining()),
+                            cost: c.cost,
+                            prior: c.loss,
+                        })
+                        .collect(),
+                })
+                .collect(),
+            overhead: self.overhead,
+        }
+    }
+
+    /// Total cost with every module at its dense choice.
+    pub fn dense_cost(&self) -> f64 {
+        self.overhead + self.modules.iter().map(|s| s.choices[0].cost).sum::<f64>()
+    }
+
+    /// Cheapest achievable total cost.
+    pub fn min_cost(&self) -> f64 {
+        self.overhead
+            + self
+                .modules
+                .iter()
+                .map(|s| s.choices.iter().map(|c| c.cost).fold(f64::INFINITY, f64::min))
+                .sum::<f64>()
+    }
+
+    /// Total cost of a choice-index assignment.
+    pub fn profile_cost(&self, profile: &[usize]) -> f64 {
+        self.overhead
+            + self
+                .modules
+                .iter()
+                .zip(profile)
+                .map(|(s, &ci)| s.choices[ci].cost)
+                .sum::<f64>()
+    }
+
+    /// Sum of squared losses of an assignment — the DP's objective at
+    /// unit coefficients (the `proxy_error` convention of `exp::repro`).
+    pub fn loss_sq(&self, profile: &[usize]) -> f64 {
+        self.modules
+            .iter()
+            .zip(profile)
+            .map(|(s, &ci)| s.choices[ci].loss * s.choices[ci].loss)
+            .sum()
+    }
+
+    /// The widened DP: choice indices over the lattice, via
+    /// [`ChoiceProblem::lower`] + the unchanged `spdy::solve_dp`.
+    pub fn solve_dp(&self, coeffs: &[f64], budget: f64) -> Option<Vec<usize>> {
+        spdy::solve_dp(&self.lower(), coeffs, budget)
+    }
+
+    /// The widened SPDY coefficient search (same mechanics as
+    /// `spdy::search`, ranging over choice indices).
+    pub fn search<F: FnMut(&[usize]) -> f64>(
+        &self,
+        budget: f64,
+        cfg: &SearchCfg,
+        eval: F,
+    ) -> Option<(Vec<usize>, f64)> {
+        spdy::search(&self.lower(), budget, cfg, eval)
+    }
+
+    /// Structural per-layer anatomy `(heads, ffn_cols)` of an
+    /// assignment (quant/low-rank keep the dense shape).
+    pub fn as_layer_profile(&self, profile: &[usize]) -> Vec<(usize, usize)> {
+        self.lower().as_layer_profile(profile)
+    }
+
+    /// Typed view of a solved choice-index assignment.
+    pub fn profile_choices(&self, profile: &[usize]) -> CompressionProfile {
+        CompressionProfile {
+            modules: self
+                .modules
+                .iter()
+                .zip(profile)
+                .map(|(s, &ci)| ModuleChoice {
+                    layer: s.layer,
+                    is_attn: s.is_attn,
+                    choice: s.choices[ci].choice,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One module's solved choice inside a [`CompressionProfile`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModuleChoice {
+    /// transformer layer index
+    pub layer: usize,
+    /// true = attention module, false = FFN module
+    pub is_attn: bool,
+    /// the chosen compression
+    pub choice: LayerChoice,
+}
+
+impl ModuleChoice {
+    fn to_json(self) -> Json {
+        let mut pairs = vec![
+            ("layer", Json::Num(self.layer as f64)),
+            ("module", Json::Str(if self.is_attn { "attn" } else { "ffn" }.into())),
+        ];
+        pairs.extend(self.choice.json_pairs());
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<ModuleChoice> {
+        let layer = j
+            .get("layer")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("module choice missing \"layer\""))?;
+        let is_attn = match j.get("module").and_then(Json::as_str) {
+            Some("attn") => true,
+            Some("ffn") => false,
+            other => bail!("module choice has bad \"module\" {other:?}"),
+        };
+        Ok(ModuleChoice { layer, is_attn, choice: LayerChoice::from_json(j)? })
+    }
+}
+
+/// A solved per-module choice assignment — the typed profile that
+/// replaces raw `Vec<usize>` level indices and `Vec<(usize, usize)>`
+/// layer anatomies outside `spdy/` (manifest schema v2 records it).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CompressionProfile {
+    /// one choice per module, layer-major with attn before ffn
+    pub modules: Vec<ModuleChoice>,
+}
+
+impl CompressionProfile {
+    /// Lift a legacy pruning anatomy `(heads, ffn_cols)` per layer:
+    /// every module becomes a `Prune` choice. Backward-compat path for
+    /// v1 manifests and raw layer profiles.
+    pub fn from_layer_profile(lp: &[(usize, usize)]) -> CompressionProfile {
+        let mut modules = Vec::with_capacity(lp.len() * 2);
+        for (layer, &(heads, cols)) in lp.iter().enumerate() {
+            modules.push(ModuleChoice {
+                layer,
+                is_attn: true,
+                choice: LayerChoice::Prune { remaining: heads },
+            });
+            modules.push(ModuleChoice {
+                layer,
+                is_attn: false,
+                choice: LayerChoice::Prune { remaining: cols },
+            });
+        }
+        CompressionProfile { modules }
+    }
+
+    /// Structural anatomy `(heads, ffn_cols)` per layer; modules not
+    /// present (or non-pruning choices) report the dense shape passed
+    /// in.
+    pub fn as_layer_profile(&self, dense_heads: usize, dense_cols: usize) -> Vec<(usize, usize)> {
+        let n_layers = self.modules.iter().map(|m| m.layer).max().map_or(0, |l| l + 1);
+        let mut out = vec![(dense_heads, dense_cols); n_layers];
+        for m in &self.modules {
+            if m.is_attn {
+                out[m.layer].0 = m.choice.remaining(dense_heads);
+            } else {
+                out[m.layer].1 = m.choice.remaining(dense_cols);
+            }
+        }
+        out
+    }
+
+    /// True iff every module's choice is on the prune axis — the
+    /// restriction under which the widened DP must reproduce the
+    /// legacy solve bit-identically.
+    pub fn is_prune_only(&self) -> bool {
+        self.modules.iter().all(|m| matches!(m.choice, LayerChoice::Prune { .. }))
+    }
+
+    /// Module count per axis, sorted by axis name (for mix summaries).
+    pub fn axis_counts(&self) -> Vec<(String, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for m in &self.modules {
+            *counts.entry(m.choice.axis().to_string()).or_insert(0usize) += 1;
+        }
+        counts.into_iter().collect()
+    }
+
+    /// Manifest-v2 JSON form: an array of flat module objects.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.modules.iter().map(|m| m.to_json()).collect())
+    }
+
+    /// Inverse of [`CompressionProfile::to_json`].
+    pub fn from_json(j: &Json) -> Result<CompressionProfile> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("compression profile must be an array"))?;
+        Ok(CompressionProfile {
+            modules: arr.iter().map(ModuleChoice::from_json).collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+
+    fn toy_spdy() -> SpdyProblem {
+        let mk = |layer: usize, is_attn: bool, costs: [f64; 3], priors: [f64; 3]| ModuleLevels {
+            layer,
+            is_attn,
+            options: (0..3)
+                .map(|i| LevelOpt { remaining: 8 - 2 * i, cost: costs[i], prior: priors[i] })
+                .collect(),
+        };
+        SpdyProblem {
+            modules: vec![
+                mk(0, true, [4.0, 2.5, 1.0], [0.0, 0.3, 0.9]),
+                mk(0, false, [6.0, 3.0, 1.5], [0.0, 0.2, 0.7]),
+            ],
+            overhead: 2.0,
+        }
+    }
+
+    #[test]
+    fn prune_only_lowering_is_bit_identical() {
+        let p = toy_spdy();
+        let cp = ChoiceProblem::from_spdy(&p);
+        let lowered = cp.lower();
+        // the lowered problem carries the exact same f64s …
+        assert_eq!(lowered.overhead.to_bits(), p.overhead.to_bits());
+        for (a, b) in lowered.modules.iter().zip(&p.modules) {
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.is_attn, b.is_attn);
+            for (x, y) in a.options.iter().zip(&b.options) {
+                assert_eq!(x.remaining, y.remaining);
+                assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+                assert_eq!(x.prior.to_bits(), y.prior.to_bits());
+            }
+        }
+        // … so every DP answer matches the legacy solve exactly
+        for f in [0.3, 0.5, 0.8, 1.0] {
+            let budget = p.overhead + (p.dense_cost() - p.overhead) * f;
+            assert_eq!(cp.solve_dp(&[], budget), spdy::solve_dp(&p, &[], budget), "f={f}");
+        }
+        assert_eq!(cp.dense_cost().to_bits(), p.dense_cost().to_bits());
+        assert_eq!(cp.min_cost().to_bits(), p.min_cost().to_bits());
+        assert_eq!(cp.profile_cost(&[1, 2]).to_bits(), p.profile_cost(&[1, 2]).to_bits());
+    }
+
+    #[test]
+    fn widened_dp_prefers_cheap_mixed_choices() {
+        let p = toy_spdy();
+        let mut cp = ChoiceProblem::from_spdy(&p);
+        // a quant choice on module 0: much cheaper than dense, tiny loss
+        cp.modules[0].choices.push(Choice {
+            choice: LayerChoice::Quant { scheme: QuantScheme::Int8 },
+            cost: 1.6,
+            loss: 0.05,
+        });
+        // a low-rank choice on the FFN: between prune levels on both axes
+        cp.modules[1].choices.push(Choice {
+            choice: LayerChoice::LowRank { rank: 4 },
+            cost: 2.0,
+            loss: 0.1,
+        });
+        let budget = cp.dense_cost() / 2.0;
+        let prune_sol = ChoiceProblem::from_spdy(&p).solve_dp(&[], budget).expect("prune dp");
+        let mixed_sol = cp.solve_dp(&[], budget).expect("mixed dp");
+        // superset of choices at the same budget → no worse objective
+        let prune_loss = ChoiceProblem::from_spdy(&p).loss_sq(&prune_sol);
+        assert!(cp.loss_sq(&mixed_sol) <= prune_loss + 1e-12);
+        // and on this instance strictly better, by picking quant + lowrank
+        let typed = cp.profile_choices(&mixed_sol);
+        assert!(!typed.is_prune_only());
+        assert!(cp.profile_cost(&mixed_sol) <= budget + 1e-12);
+    }
+
+    #[test]
+    fn layer_profile_lifts_roundtrip() {
+        let lp = vec![(4, 512), (2, 256), (0, 64)];
+        let p = CompressionProfile::from_layer_profile(&lp);
+        assert!(p.is_prune_only());
+        assert_eq!(p.modules.len(), 6);
+        assert_eq!(p.as_layer_profile(4, 512), lp);
+        assert_eq!(p.axis_counts(), vec![("prune".to_string(), 6)]);
+    }
+
+    #[test]
+    fn mixed_profile_json_roundtrip_and_anatomy() {
+        let p = CompressionProfile {
+            modules: vec![
+                ModuleChoice {
+                    layer: 0,
+                    is_attn: true,
+                    choice: LayerChoice::PruneQuant { remaining: 3, scheme: QuantScheme::Int8 },
+                },
+                ModuleChoice {
+                    layer: 0,
+                    is_attn: false,
+                    choice: LayerChoice::LowRank { rank: 64 },
+                },
+                ModuleChoice {
+                    layer: 1,
+                    is_attn: true,
+                    choice: LayerChoice::Quant { scheme: QuantScheme::Int8 },
+                },
+                ModuleChoice {
+                    layer: 1,
+                    is_attn: false,
+                    choice: LayerChoice::Prune { remaining: 128 },
+                },
+            ],
+        };
+        let back = CompressionProfile::from_json(&p.to_json()).expect("roundtrip");
+        assert_eq!(back, p);
+        let text = Json::parse(&p.to_json().to_pretty()).expect("parse");
+        assert_eq!(CompressionProfile::from_json(&text).expect("text"), p);
+        // quant/low-rank keep the dense anatomy; prune records remaining
+        assert_eq!(p.as_layer_profile(4, 512), vec![(3, 512), (4, 128)]);
+        assert!(!p.is_prune_only());
+        let counts = p.axis_counts();
+        assert_eq!(
+            counts,
+            vec![
+                ("lowrank".to_string(), 1),
+                ("prune".to_string(), 1),
+                ("prune+quant".to_string(), 1),
+                ("quant".to_string(), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_json_is_rejected_with_context() {
+        for bad in [
+            r#"{"layer": 0}"#,
+            r#"[{"layer": 0, "module": "attn", "axis": "prune"}]"#,
+            r#"[{"layer": 0, "module": "attn", "axis": "melt"}]"#,
+            r#"[{"layer": 0, "module": "gate", "axis": "prune", "remaining": 2}]"#,
+            r#"[{"layer": 0, "module": "attn", "axis": "quant", "scheme": "int3"}]"#,
+        ] {
+            let j = Json::parse(bad).expect("parse");
+            assert!(CompressionProfile::from_json(&j).is_err(), "accepted {bad}");
+        }
+    }
+}

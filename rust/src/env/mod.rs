@@ -130,6 +130,55 @@ pub trait CostModel {
     fn speedup(&self, profile: &[(usize, usize)]) -> f64 {
         self.dense_time(profile.len()) / self.model_time(profile)
     }
+
+    // ---- compound-compression pricing (DESIGN.md §13) -----------------
+    //
+    // Quantized and low-rank variants are priced through the SAME cost
+    // model the pruner certifies against — the free-standing
+    // `quant::CpuEngineModel` pricer is retired; its engine constants
+    // (int8 factor 2.5×, sub-linear sparsity exponent 0.75) fold in
+    // here so every axis shares one certification surface.
+
+    /// INT8-over-f32 compute speedup factor of the execution engine
+    /// (DeepSparse-like; folded from `quant::CpuEngineModel::int8_factor`).
+    fn quant_factor(&self) -> f64 {
+        2.5
+    }
+
+    /// Attention-block time at `heads` heads with int8 weights.
+    fn attn_time_quant(&self, heads: usize) -> f64 {
+        self.attn_time(heads) / self.quant_factor()
+    }
+
+    /// FFN-block time at `width` intermediate columns with int8 weights.
+    fn mlp_time_quant(&self, width: usize) -> f64 {
+        self.mlp_time(width) / self.quant_factor()
+    }
+
+    /// Whole-model compound-engine time: dense time scaled by the
+    /// structurally-remaining density, the engine's sub-linear
+    /// unstructured-sparsity law `(1 − s)^0.75`, and (optionally) the
+    /// int8 factor. Replaces `quant::CpuEngineModel::latency`.
+    fn compound_time(&self, n_layers: usize, struct_density: f64, sparsity: f64, int8: bool) -> f64 {
+        let mut t = (self.dense_time(n_layers) - self.overhead()) * struct_density;
+        t *= (1.0 - sparsity).powf(0.75);
+        if int8 {
+            t /= self.quant_factor();
+        }
+        self.overhead() + t
+    }
+
+    /// Speedup companion of [`CostModel::compound_time`]. Replaces
+    /// `quant::CpuEngineModel::speedup`.
+    fn compound_speedup(
+        &self,
+        n_layers: usize,
+        struct_density: f64,
+        sparsity: f64,
+        int8: bool,
+    ) -> f64 {
+        self.dense_time(n_layers) / self.compound_time(n_layers, struct_density, sparsity, int8)
+    }
 }
 
 impl CostModel for LatencyTable {

@@ -694,8 +694,6 @@ pub fn fig6(ctx: &ExpCtx) -> Result<()> {
     let env = ctx.env(model, Regime::Throughput)?;
     let minfo = ctx.engine.manifest.model(model).clone();
     let tinfo = ctx.engine.manifest.task(model, task).clone();
-    let engine_model = quant::CpuEngineModel::default();
-    let dense_flops = 1e9; // nominal per-inference budget (ratios matter)
     let targets: Vec<f64> = if ctx.fast { vec![2.0] } else { vec![2.0, 4.0] };
     let mut rows = Vec::new();
     // baseline: layer-drop compound pipeline (paper's comparator, App. A)
@@ -713,7 +711,10 @@ pub fn fig6(ctx: &ExpCtx) -> Result<()> {
             quant::unstructured_magnitude(&mut st, &tinfo, 0.8)?;
             quant::int8_quantize(&mut st, &tinfo)?;
             let ev = eval::evaluate(&ctx.engine, &st, &ds, "dev")?;
-            let sp = engine_model.speedup(dense_flops, st.masks.density(), 0.8, true);
+            // priced through the SAME env the pruner certified against
+            // (DESIGN.md §13) — the free-standing CpuEngineModel pricer
+            // is retired
+            let sp = env.compound_speedup(minfo.n_layers, st.masks.density(), 0.8, true);
             println!("  fig6 {method} struct={t}x → cpu-sim {sp:.1}x EM={:.4}", ev.metric);
             rows.push(Json::obj(vec![
                 ("method", Json::Str(method.into())),
@@ -724,6 +725,154 @@ pub fn fig6(ctx: &ExpCtx) -> Result<()> {
         }
     }
     ctx.write_result("fig6", &Json::obj(vec![("rows", Json::Arr(rows))]))
+}
+
+// ===================================================================
+// compound: one inference-aware DP over pruning × quantization ×
+// low-rank (DESIGN.md §13) — a mixed-axis certified family from ONE
+// lattice, with the prune-only restriction checked against the legacy
+// DP on the way
+// ===================================================================
+
+pub fn compound(ctx: &ExpCtx) -> Result<()> {
+    use crate::compress::ChoiceProblem;
+    use crate::eval::calib_loss;
+    use crate::models::family::{FamilyManifest, FamilyMember};
+    use crate::pruner::CompoundCfg;
+    use crate::session::pipeline;
+    use crate::spdy;
+
+    let model = "bert-syn-base";
+    let task = "sst2-syn";
+    let ds = ctx.dataset(model, task);
+    let teacher = ctx.teacher(model, task, &ds)?;
+    let env = ctx.env(model, Regime::Throughput)?;
+    let minfo = ctx.engine.manifest.model(model).clone();
+    let tinfo = ctx.engine.manifest.task(model, task).clone();
+    let pcfg = ctx.prune_cfg();
+    let ccfg = CompoundCfg::default();
+    let target = 2.0;
+
+    // ONE capture serves every axis: the lattice scores int8 and
+    // low-rank candidates against the same damped calibration Hessians
+    // the pruning priors use
+    let hs = pipeline::capture_hessians(&ctx.engine, &teacher, &ds, pcfg.calib_samples)?;
+    let dbs = pipeline::build_databases(&ctx.engine, &teacher, &hs, &pcfg)?;
+    let problem = pipeline::choice_problem(&dbs, &hs, &env, &minfo, &pcfg, &ccfg)?;
+    let legacy = pipeline::spdy_problem(&dbs, &env, &minfo, TargetMode::Speedup);
+    let dense = pipeline::dense_cost(&env, &minfo, TargetMode::Speedup);
+    let budget = dense / target;
+
+    // acceptance gate: restricting the lattice to the prune axis must
+    // reproduce the legacy DP exactly (same choice indices)
+    let legacy_sol = spdy::solve_dp(&legacy, &[], budget)
+        .ok_or_else(|| anyhow!("legacy DP found no profile at {target}x"))?;
+    let lifted_sol = ChoiceProblem::from_spdy(&legacy)
+        .solve_dp(&[], budget)
+        .ok_or_else(|| anyhow!("lifted prune-only DP found no profile at {target}x"))?;
+    if legacy_sol != lifted_sol {
+        return Err(anyhow!(
+            "prune-only restriction diverged from the legacy DP: {legacy_sol:?} vs {lifted_sol:?}"
+        ));
+    }
+    println!("  compound: prune-only lattice ≡ legacy DP at {target}x");
+
+    // fixed single-axis profiles (the per-axis members), then the full
+    // widened search over the whole lattice (the compound member)
+    let quant_profile: Vec<usize> =
+        problem.modules.iter().map(|s| s.find_axis("quant").unwrap_or(0)).collect();
+    let lowrank_profile: Vec<usize> = problem
+        .modules
+        .iter()
+        .map(|s| {
+            let lr: Vec<usize> = (0..s.choices.len())
+                .filter(|&i| s.choices[i].choice.axis() == "lowrank")
+                .collect();
+            lr.get(lr.len() / 2).copied().unwrap_or(0)
+        })
+        .collect();
+    let search_cfg =
+        spdy::SearchCfg { iters: pcfg.spdy.iters, seed: pcfg.spdy.seed, ..Default::default() };
+    let lowered = problem.lower();
+    let (mixed_sol, _) = spdy::search(&lowered, budget, &search_cfg, |prof| {
+        let mut cand = teacher.clone();
+        if pipeline::apply_choices(&mut cand, &dbs, &problem, prof, &minfo, &tinfo).is_err() {
+            return f64::INFINITY;
+        }
+        calib_loss(&ctx.engine, &cand, &ds, pcfg.calib_samples.min(128)).unwrap_or(f64::INFINITY)
+    })
+    .ok_or_else(|| anyhow!("compound SPDY found no feasible profile at {target}x"))?;
+
+    let dir = ctx.runs.join(format!("compound_{model}_{task}"));
+    std::fs::create_dir_all(&dir)?;
+    let mut fam = FamilyManifest::new(model, task, env.regime().name());
+    fam.env = Some(env.clone());
+    fam.buckets = env.bucket_ladder();
+    let mut rows = Vec::new();
+    let variants: Vec<(&str, Vec<usize>)> = vec![
+        ("dense", vec![0; problem.modules.len()]),
+        ("prune", lifted_sol),
+        ("int8", quant_profile),
+        ("lowrank", lowrank_profile),
+        ("compound", mixed_sol),
+    ];
+    for (tag, prof) in variants {
+        let mut st = teacher.clone();
+        pipeline::apply_choices(&mut st, &dbs, &problem, &prof, &minfo, &tinfo)?;
+        // real calibration loss for EVERY non-dense member — quant and
+        // low-rank members record it too, not just pruned ones
+        let loss = if tag == "dense" {
+            0.0
+        } else {
+            calib_loss(&ctx.engine, &st, &ds, pcfg.calib_samples.min(128))?
+        };
+        let est = dense / problem.profile_cost(&prof);
+        let ev = eval::evaluate(&ctx.engine, &st, &ds, "dev")?;
+        let choices = problem.profile_choices(&prof);
+        let ckpt = format!("{tag}.zlm");
+        st.save(&dir.join(&ckpt))?;
+        println!(
+            "  compound {tag:>8}: est={est:.2}x calib={loss:.4} acc={:.4} mix={:?}",
+            ev.metric,
+            choices.axis_counts()
+        );
+        rows.push(Json::obj(vec![
+            ("tag", Json::Str(tag.into())),
+            ("est_speedup", Json::Num(est)),
+            ("calib_loss", Json::Num(loss)),
+            ("metric", Json::Num(ev.metric)),
+            (
+                "mix",
+                Json::Arr(
+                    choices
+                        .axis_counts()
+                        .into_iter()
+                        .map(|(a, n)| Json::Arr(vec![Json::Str(a), Json::Num(n as f64)]))
+                        .collect(),
+                ),
+            ),
+        ]));
+        fam.push(FamilyMember {
+            tag: tag.into(),
+            ckpt,
+            target: if tag == "dense" { 1.0 } else { target },
+            est_speedup: est,
+            profile: problem.as_layer_profile(&prof),
+            choices: Some(choices),
+            calib_loss: Some(loss),
+        });
+    }
+    let path = dir.join("family.json");
+    fam.save(&path)?;
+    println!("[family] wrote {} ({} members)", path.display(), fam.members.len());
+    ctx.write_result(
+        "compound",
+        &Json::obj(vec![
+            ("target", Json::Num(target)),
+            ("prune_equiv", Json::Bool(true)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )
 }
 
 // ===================================================================
@@ -1204,6 +1353,7 @@ pub const EXPERIMENTS: &[(&str, Driver)] = &[
     ("fig4", fig4),
     ("fig5", fig5),
     ("fig6", fig6),
+    ("compound", compound),
     ("table1", table1),
     ("table8", table8),
     ("fig8", fig8),

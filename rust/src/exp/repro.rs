@@ -32,12 +32,13 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::adapt::{detect_drift, fit_env, frontier_points, knee_point, propose_targets, DriftCfg};
+use crate::compress::{Choice, ChoiceProblem, CompressionProfile, LayerChoice, QuantScheme};
 use crate::coordinator::chaos::{gen_trace, run_chaos, TraceCfg, TraceClass};
 use crate::coordinator::family::{BucketLadder, MemberRoute};
 use crate::coordinator::fleet::{FleetCfg, FleetMember, RetryPolicy};
 use crate::coordinator::replay::{replay, replay_samples, ReplayCfg};
 use crate::env::{CostModel, InferenceEnv, Regime};
-use crate::latency::{ArchDims, Device, LatencyTable};
+use crate::latency::{low_rank_ffn_width, ArchDims, Device, LatencyTable};
 use crate::models::family::{FamilyManifest, FamilyMember};
 use crate::runtime::{FaultPlan, FaultRates};
 use crate::spdy::{solve_dp, LevelOpt, ModuleLevels, SpdyProblem};
@@ -613,6 +614,134 @@ impl AdaptBlock {
     }
 }
 
+/// One member row of a compound-lattice section: a single-axis
+/// restriction (or the full mixed solve) of the widened DP.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompoundMember {
+    /// member tag (`dense`, `prune`, `int8`, `lowrank`, `compound`)
+    pub tag: String,
+    /// per-axis module mix of the member's profile (`axis=n`, space-joined)
+    pub axis: String,
+    /// certified speedup under the env's cost model (q4)
+    pub certified: f64,
+    /// solver objective paid: Σ loss² over chosen lattice entries (q4)
+    pub loss: f64,
+}
+
+/// Per-model compound-compression section (DESIGN.md §13): the typed
+/// choice lattice — pruning levels plus env-priced int8 and low-rank
+/// FFN entries with exact-arithmetic synthetic losses — solved by the
+/// SAME widened DP the session pipeline uses. Engine-free and
+/// transcendental-free, so bit-stable like the matrix cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompoundBlock {
+    /// model-axis name
+    pub model: String,
+    /// env-axis name the lattice was priced against
+    pub env: String,
+    /// speedup target every non-dense member solved for
+    pub target: f64,
+    /// whether the prune-only lattice restriction reproduced the
+    /// legacy DP's exact choice indices (the tentpole invariant)
+    pub prune_equiv: bool,
+    /// member rows, fixed order: dense, prune, int8, lowrank, compound
+    pub members: Vec<CompoundMember>,
+    /// module count per axis in the full-lattice solve, axis-sorted
+    pub axes: Vec<(String, usize)>,
+}
+
+impl CompoundBlock {
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("env", Json::Str(self.env.clone())),
+            ("target", Json::Num(self.target)),
+            ("prune_equiv", Json::Bool(self.prune_equiv)),
+            (
+                "members",
+                Json::Arr(
+                    self.members
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("tag", Json::Str(m.tag.clone())),
+                                ("axis", Json::Str(m.axis.clone())),
+                                ("certified", Json::Num(m.certified)),
+                                ("loss", Json::Num(m.loss)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "axes",
+                Json::Arr(
+                    self.axes
+                        .iter()
+                        .map(|(a, n)| {
+                            Json::Arr(vec![Json::Str(a.clone()), Json::Num(*n as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the JSON form back.
+    pub fn from_json(j: &Json) -> Result<CompoundBlock> {
+        let field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("compound: missing `{k}`"))
+        };
+        let members = j
+            .get("members")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("compound: missing `members`"))?
+            .iter()
+            .map(|m| {
+                Ok(CompoundMember {
+                    tag: m
+                        .get("tag")
+                        .and_then(Json::as_str)
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("compound member: missing `tag`"))?,
+                    axis: m.get("axis").and_then(Json::as_str).unwrap_or("").to_string(),
+                    certified: m.get("certified").and_then(Json::as_f64).unwrap_or(0.0),
+                    loss: m.get("loss").and_then(Json::as_f64).unwrap_or(0.0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let axes = j
+            .get("axes")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .map(|e| {
+                        (
+                            e.idx(0).and_then(Json::as_str).unwrap_or("").to_string(),
+                            e.idx(1).and_then(Json::as_usize).unwrap_or(0),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(CompoundBlock {
+            model: field("model")?,
+            env: field("env")?,
+            target: j
+                .get("target")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("compound: missing `target`"))?,
+            prune_equiv: j.get("prune_equiv").and_then(Json::as_bool).unwrap_or(false),
+            members,
+            axes,
+        })
+    }
+}
+
 /// The structured reproduction report: every matrix cell plus the
 /// per-(model, env) family sections.
 #[derive(Clone, Debug)]
@@ -628,11 +757,14 @@ pub struct ReproReport {
     pub families: Vec<FamilyBlock>,
     /// adapt-loop sections (one per `gpu-sweep` family; DESIGN.md §12)
     pub adapt: Vec<AdaptBlock>,
+    /// compound-lattice sections (one per model; DESIGN.md §13)
+    pub compound: Vec<CompoundBlock>,
 }
 
 impl ReproReport {
-    /// JSON form (schema version 1; `adapt` is additive — readers of
-    /// pre-adapt reports see an absent key, not a version bump).
+    /// JSON form (schema version 1; `adapt` and `compound` are
+    /// additive — readers of older reports see an absent key, not a
+    /// version bump).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::Num(1.0)),
@@ -641,6 +773,7 @@ impl ReproReport {
             ("cells", Json::Arr(self.cells.iter().map(ScenarioCell::to_json).collect())),
             ("families", Json::Arr(self.families.iter().map(FamilyBlock::to_json).collect())),
             ("adapt", Json::Arr(self.adapt.iter().map(AdaptBlock::to_json).collect())),
+            ("compound", Json::Arr(self.compound.iter().map(CompoundBlock::to_json).collect())),
         ])
     }
 
@@ -664,12 +797,17 @@ impl ReproReport {
             Some(a) => a.iter().map(AdaptBlock::from_json).collect::<Result<Vec<_>>>()?,
             None => Vec::new(),
         };
+        let compound = match j.get("compound").and_then(Json::as_arr) {
+            Some(a) => a.iter().map(CompoundBlock::from_json).collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(ReproReport {
             mode: j.req_str("mode").to_string(),
             seed: j.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
             cells,
             families,
             adapt,
+            compound,
         })
     }
 }
@@ -1129,6 +1267,7 @@ fn kick_manifest(
             target: 1.0,
             est_speedup: r.est_speedup,
             profile: Vec::new(),
+            choices: None,
             calib_loss: if r.tag == "dense" {
                 Some(0.0)
             } else {
@@ -1216,6 +1355,157 @@ fn adapt_block(
     })
 }
 
+// -------------------------------------------------- compound lattice
+
+/// Low-rank FFN ranks the kick-tires lattice offers. With d_model 128
+/// and d_ff 512 the equal-GEMM-work widths are exactly 5·rank (480,
+/// 320, 160) — integer arithmetic, no transcendentals.
+const LOWRANK_RANKS: [usize; 3] = [96, 64, 32];
+
+/// Per-axis module mix of a typed profile, `axis=n` space-joined.
+fn mix_string(p: &CompressionProfile) -> String {
+    p.axis_counts()
+        .into_iter()
+        .map(|(a, n)| format!("{a}={n}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Widen one kick-tires SPDY instance into the typed choice lattice
+/// (DESIGN.md §13): the pruning levels verbatim (so the prune-only
+/// restriction lowers bit-identically), plus int8 entries at the
+/// exact-binary `cost/2.5` engine factor and low-rank FFN entries at
+/// equal-GEMM-work widths. Synthetic losses mirror the sensitivity
+/// priors with only exact-binary scalings (`w/64` per quant step,
+/// `(1 − rank/d_model)·w` per low-rank step) — no libm anywhere.
+fn compound_choices(
+    m: &ReproModel,
+    env: &InferenceEnv,
+    base: &SpdyProblem,
+    weights: &[f64],
+) -> ChoiceProblem {
+    let table = env.table();
+    let mut problem = ChoiceProblem::from_spdy(base);
+    for (module, set) in base.modules.iter().zip(&mut problem.modules) {
+        let w = weights[module.layer * 2 + usize::from(!module.is_attn)];
+        let mut extra = Vec::new();
+        for (li, opt) in module.options.iter().enumerate() {
+            if opt.remaining == 0 {
+                continue; // a dropped module has nothing to quantize
+            }
+            let cost = if module.is_attn {
+                table.attn_time(opt.remaining) / 2.5
+            } else {
+                table.mlp_time(opt.remaining) / 2.5
+            };
+            let choice = if li == 0 {
+                LayerChoice::Quant { scheme: QuantScheme::Int8 }
+            } else {
+                LayerChoice::PruneQuant { remaining: opt.remaining, scheme: QuantScheme::Int8 }
+            };
+            extra.push(Choice { choice, cost, loss: opt.prior + w / 64.0 });
+        }
+        if !module.is_attn {
+            for rank in LOWRANK_RANKS {
+                let w_eff = low_rank_ffn_width(m.d_model, m.d_ff, rank);
+                if w_eff >= m.d_ff {
+                    continue; // prices no cheaper than dense
+                }
+                extra.push(Choice {
+                    choice: LayerChoice::LowRank { rank },
+                    cost: table.mlp_time(w_eff),
+                    loss: (1.0 - rank as f64 / m.d_model as f64) * w,
+                });
+            }
+        }
+        set.choices.extend(extra);
+    }
+    problem
+}
+
+/// Build one model's compound section: the widened lattice on the
+/// `gpu-sweep` env, solved at one target as dense / per-axis
+/// restrictions / the full mixed lattice, with the prune-only
+/// restriction checked against the legacy DP's exact indices. Pure in
+/// `(seed, model)` — the analytic env never touches `precomputed`.
+fn compound_block(
+    m: &ReproModel,
+    model_idx: usize,
+    seed: u64,
+    precomputed: &Path,
+) -> Result<CompoundBlock> {
+    let env_name = "gpu-sweep";
+    let (env, _) = kick_env(m, env_name, precomputed)?;
+    let weights = sensitivity_weights(seed, model_idx, m.n_layers * 2);
+    let base = build_problem(m, &env, &weights);
+    let problem = compound_choices(m, &env, &base, &weights);
+    // 2.5x sits past the all-int8 point (compute/2.5 still pays the
+    // dense overhead), so the solver is forced to genuinely mix axes
+    let target = 2.5;
+    let dense = base.dense_cost();
+    let budget = dense / target;
+
+    // the tentpole invariant, checked live on every run: restricting
+    // the lattice to the prune axis reproduces the legacy DP exactly
+    let legacy_sol = solve_dp(&base, &[], budget)
+        .ok_or_else(|| anyhow!("legacy DP infeasible at {target}x"))?;
+    let lifted_sol = ChoiceProblem::from_spdy(&base)
+        .solve_dp(&[], budget)
+        .ok_or_else(|| anyhow!("lifted prune-only DP infeasible at {target}x"))?;
+    let prune_equiv = legacy_sol == lifted_sol;
+
+    // single-axis restrictions, then the full-lattice mixed solve
+    let dense_prof = vec![0usize; problem.modules.len()];
+    let quant_prof: Vec<usize> =
+        problem.modules.iter().map(|s| s.find_axis("quant").unwrap_or(0)).collect();
+    let lowrank_prof: Vec<usize> = problem
+        .modules
+        .iter()
+        .map(|s| {
+            let lr: Vec<usize> = (0..s.choices.len())
+                .filter(|&i| s.choices[i].choice.axis() == "lowrank")
+                .collect();
+            lr.get(lr.len() / 2).copied().unwrap_or(0)
+        })
+        .collect();
+    let mixed_sol = problem
+        .solve_dp(&[], budget)
+        .ok_or_else(|| anyhow!("widened DP infeasible at {target}x"))?;
+
+    let member = |tag: &str, prof: &[usize]| CompoundMember {
+        tag: tag.to_string(),
+        axis: mix_string(&problem.profile_choices(prof)),
+        certified: q4(dense / problem.profile_cost(prof)),
+        loss: q4(problem.loss_sq(prof)),
+    };
+    let members = vec![
+        member("dense", &dense_prof),
+        member("prune", &lifted_sol),
+        member("int8", &quant_prof),
+        member("lowrank", &lowrank_prof),
+        member("compound", &mixed_sol),
+    ];
+    let axes = problem.profile_choices(&mixed_sol).axis_counts();
+    Ok(CompoundBlock {
+        model: m.name.to_string(),
+        env: env_name.to_string(),
+        target,
+        prune_equiv,
+        members,
+        axes,
+    })
+}
+
+/// One compound section per model — the engine-free sections both
+/// entrypoints append.
+fn compound_blocks(seed: u64, precomputed: &Path) -> Result<Vec<CompoundBlock>> {
+    models()
+        .iter()
+        .enumerate()
+        .map(|(mi, m)| compound_block(m, mi, seed, precomputed))
+        .collect()
+}
+
 // --------------------------------------------------------- entrypoints
 
 /// The engine-free kick-tires run: every matrix cell plus a family
@@ -1246,7 +1536,8 @@ pub fn run_kick_tires(seed: u64, precomputed: &Path) -> Result<ReproReport> {
             }
         }
     }
-    Ok(ReproReport { mode: "kick-tires".to_string(), seed, cells, families, adapt })
+    let compound = compound_blocks(seed, precomputed)?;
+    Ok(ReproReport { mode: "kick-tires".to_string(), seed, cells, families, adapt, compound })
 }
 
 /// The full engine-backed run: the same matrix driven through the real
@@ -1317,7 +1608,10 @@ pub fn run_full(ctx: &ExpCtx, seed: u64, precomputed: &Path) -> Result<ReproRepo
             families.push(block);
         }
     }
-    Ok(ReproReport { mode: "full".to_string(), seed, cells, families, adapt })
+    // the compound lattice sections are engine-free by design; the
+    // engine-backed compound family lives in `ziplm compound`
+    let compound = compound_blocks(seed, precomputed)?;
+    Ok(ReproReport { mode: "full".to_string(), seed, cells, families, adapt, compound })
 }
 
 /// Solve the full-mode cells of one (model, env) through the session
@@ -1588,6 +1882,53 @@ pub fn render_markdown(report: &ReproReport) -> String {
             );
         }
     }
+
+    if !report.compound.is_empty() {
+        out.push_str("\n## Compound compression\n\n");
+        out.push_str(
+            "One inference-aware DP over pruning × int8 × low-rank (DESIGN.md §13): \
+             per model, each single-axis restriction and the full-lattice `compound` \
+             solve at one target, all priced by the `gpu-sweep` cost model. \
+             Engine-free and bit-stable like the matrix cells; `mix` counts modules \
+             per axis.\n",
+        );
+        for b in &report.compound {
+            out.push_str(&format!(
+                "\n### {} · {} · target {}x\n\n",
+                b.model,
+                b.env,
+                fmt_num(b.target)
+            ));
+            push_row(
+                &mut out,
+                &["member", "mix", "certified", "loss"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect::<Vec<_>>(),
+            );
+            push_row(&mut out, &vec!["---".to_string(); 4]);
+            for mb in &b.members {
+                push_row(
+                    &mut out,
+                    &[
+                        mb.tag.clone(),
+                        mb.axis.clone(),
+                        format!("{}x", fmt_num(mb.certified)),
+                        fmt_num(mb.loss),
+                    ],
+                );
+            }
+            out.push_str(&format!(
+                "\nCompound mix: {} · prune-only DP ≡ legacy DP: {}\n",
+                b.axes
+                    .iter()
+                    .map(|(a, n)| format!("{a}={n}"))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                yesno(b.prune_equiv)
+            ));
+        }
+    }
     out
 }
 
@@ -1692,6 +2033,7 @@ mod tests {
             cells,
             families: vec![],
             adapt: vec![],
+            compound: compound_blocks(11, Path::new("/nonexistent/repro")).unwrap(),
         };
         let j = report.to_json();
         let back = ReproReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
@@ -1732,6 +2074,7 @@ mod tests {
             cells,
             families: vec![],
             adapt: vec![],
+            compound: compound_blocks(DEFAULT_SEED, Path::new("/nonexistent/repro")).unwrap(),
         };
         let md = render_markdown(&report);
         assert!(!md.contains("MISSING"), "every cell must render");
@@ -1741,5 +2084,61 @@ mod tests {
             }
         }
         assert!(md.contains("## Chaos ledger"));
+        assert!(md.contains("## Compound compression"));
+        for m in models() {
+            assert!(md.contains(&format!("### {} · gpu-sweep · target 2.5x", m.name)));
+        }
+    }
+
+    #[test]
+    fn compound_blocks_mix_axes_and_match_legacy_dp() {
+        // the compound sections never touch `precomputed` (analytic
+        // gpu-sweep env only), so the error-path report carries them too
+        let blocks = compound_blocks(DEFAULT_SEED, Path::new("/nonexistent/repro")).unwrap();
+        assert_eq!(blocks.len(), models().len());
+        for b in &blocks {
+            assert_eq!(b.env, "gpu-sweep");
+            assert!(b.prune_equiv, "{}: prune-only lattice must equal the legacy DP", b.model);
+            let tags: Vec<&str> = b.members.iter().map(|m| m.tag.as_str()).collect();
+            assert_eq!(tags, ["dense", "prune", "int8", "lowrank", "compound"]);
+            let by_tag = |t: &str| {
+                b.members
+                    .iter()
+                    .find(|m| m.tag == t)
+                    .unwrap_or_else(|| panic!("missing member {t}"))
+            };
+            assert_eq!(by_tag("dense").certified, 1.0);
+            assert_eq!(by_tag("dense").loss, 0.0);
+            // single-axis members actually live on their axis
+            assert!(by_tag("int8").axis.contains("quant="), "{:?}", by_tag("int8"));
+            assert!(by_tag("lowrank").axis.contains("lowrank="), "{:?}", by_tag("lowrank"));
+            // prune and compound both certify the target…
+            for t in ["prune", "compound"] {
+                assert!(
+                    by_tag(t).certified + 1e-9 >= b.target,
+                    "{}: {t} certified {} < target {}",
+                    b.model,
+                    by_tag(t).certified,
+                    b.target
+                );
+            }
+            // …and the wider lattice never pays MORE loss than pruning
+            assert!(
+                by_tag("compound").loss <= by_tag("prune").loss + 1e-12,
+                "{}: compound {} > prune {}",
+                b.model,
+                by_tag("compound").loss,
+                by_tag("prune").loss
+            );
+            // the mixed solve uses ≥ 2 axes (it is genuinely compound)
+            assert!(b.axes.len() >= 2, "{}: mixed solve stayed single-axis: {:?}", b.model, b.axes);
+        }
+        // bit-deterministic, and JSON round-trips value-exactly
+        assert_eq!(blocks, compound_blocks(DEFAULT_SEED, Path::new("/nonexistent/repro")).unwrap());
+        for b in &blocks {
+            let j = b.to_json();
+            let back = CompoundBlock::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(&back, b);
+        }
     }
 }

@@ -467,6 +467,21 @@ pub fn analytic_seq_sweep(dev: Device, dims: &ArchDims, seqs: &[usize]) -> Vec<(
     out
 }
 
+/// Dense FFN width whose GEMM work matches a rank-`rank` factorization
+/// of the `d_model`×`width` FFN pair: both projections drop from
+/// `O(d_model·width)` to `O(rank·(d_model + width))` multiply-adds, so
+/// the factorized pair prices like a dense pair of width
+/// `⌈rank·(d_model + width)/d_model⌉`. This is how low-rank choices
+/// reuse the SAME `CostModel::mlp_time` ladder the pruner is certified
+/// against (DESIGN.md §13) — integer-only, clamped to the dense width
+/// so a non-compressing rank never prices below dense.
+pub fn low_rank_ffn_width(d_model: usize, width: usize, rank: usize) -> usize {
+    if d_model == 0 {
+        return width;
+    }
+    (rank * (d_model + width)).div_ceil(d_model).min(width)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -558,5 +573,21 @@ mod tests {
         assert!(at(512) > 4.0, "seq² term missing: {}", at(512));
         // and shorter-than-anchor seqs cost less than proportionally
         assert!(at(32) > 32.0 / 128.0 * 0.5, "sub-anchor scale collapsed: {}", at(32));
+    }
+
+    #[test]
+    fn low_rank_width_matches_gemm_work_and_clamps() {
+        // kick-tires dims: d_model 128, d_ff 512 → d_model + d_ff is
+        // 5·d_model, so the equivalent width is exactly 5·rank
+        for (rank, want) in [(96, 480), (64, 320), (32, 160)] {
+            assert_eq!(low_rank_ffn_width(128, 512, rank), want);
+        }
+        // a non-compressing rank clamps to dense, never above
+        assert_eq!(low_rank_ffn_width(128, 512, 128), 512);
+        assert_eq!(low_rank_ffn_width(128, 512, 4096), 512);
+        // ceil on non-divisible shapes, zero-rank prices as dropped
+        assert_eq!(low_rank_ffn_width(100, 300, 7), 28);
+        assert_eq!(low_rank_ffn_width(128, 512, 0), 0);
+        assert_eq!(low_rank_ffn_width(0, 512, 3), 512);
     }
 }

@@ -27,6 +27,8 @@
 pub mod adapt;
 #[allow(clippy::disallowed_methods)]
 pub mod baselines;
+#[allow(clippy::disallowed_methods)]
+pub mod compress;
 pub mod coordinator;
 #[allow(clippy::disallowed_methods)]
 pub mod data;

@@ -62,7 +62,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "ziplm — inference-aware structured pruning (NeurIPS'23 reproduction)\n\
-         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|eval|serve|serve-family|serve-fleet|adapt|experiment|repro> [flags]\n\
+         usage: ziplm <train-teacher|latency-table|prune-oneshot|prune-gradual|compound|eval|serve|serve-family|serve-fleet|adapt|experiment|repro> [flags]\n\
          see README.md for the full flag reference"
     );
 }
@@ -82,6 +82,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "serve-family" => serve_family(args),
         "serve-fleet" => serve_fleet(args),
         "adapt" => adapt_cmd(args),
+        "compound" => exp::run(&ctx(args)?, "compound"),
         "experiment" => experiment(args),
         "repro" => repro(args),
         _ => {

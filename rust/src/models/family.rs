@@ -15,6 +15,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use super::ModelState;
+use crate::compress::CompressionProfile;
 use crate::env::InferenceEnv;
 use crate::util::json::Json;
 
@@ -29,12 +30,21 @@ pub struct FamilyMember {
     pub target: f64,
     /// latency-table speedup estimate the SPDY search certified
     pub est_speedup: f64,
-    /// per-layer (heads alive, FFN columns alive) profile
+    /// per-layer (heads alive, FFN columns alive) structural profile
     pub profile: Vec<(usize, usize)>,
+    /// typed per-module compression choices (manifest schema v2,
+    /// DESIGN.md §13) — records which axis produced each module
+    /// (prune level / int8 / low-rank rank / compositions). `None` for
+    /// v1 pruning-only manifests, which load unchanged; readers that
+    /// need choices lift `profile` via
+    /// [`CompressionProfile::from_layer_profile`].
+    pub choices: Option<CompressionProfile>,
     /// calibration loss recorded when the member was solved — the y
     /// axis of the adapt frontier (`adapt::frontier_points`). `None`
     /// for manifests written before losses were recorded; the frontier
-    /// substitutes a deterministic speedup-based proxy.
+    /// substitutes a deterministic speedup-based proxy. Quant and
+    /// low-rank members record their axis's calibration loss here so
+    /// the frontier sees the full mixed-axis family.
     pub calib_loss: Option<f64>,
 }
 
@@ -167,6 +177,9 @@ impl FamilyManifest {
                                     mp.push(("calib_loss", Json::Num(l)));
                                 }
                             }
+                            if let Some(c) = &m.choices {
+                                mp.push(("choices", c.to_json()));
+                            }
                             mp.push((
                                     "profile",
                                     Json::Arr(
@@ -235,6 +248,8 @@ impl FamilyManifest {
                 target: m.get("target").and_then(Json::as_f64).unwrap_or(1.0),
                 est_speedup: m.get("est_speedup").and_then(Json::as_f64).unwrap_or(1.0),
                 profile,
+                // schema v2: absent on v1 pruning-only manifests → None
+                choices: m.get("choices").map(CompressionProfile::from_json).transpose()?,
                 calib_loss: m.get("calib_loss").and_then(Json::as_f64),
             });
         }
@@ -290,6 +305,7 @@ mod tests {
             target: est,
             est_speedup: est,
             profile: vec![(2, 8), (1, 4)],
+            choices: None,
             calib_loss: if est > 1.0 { Some(0.01 * est) } else { None },
         }
     }

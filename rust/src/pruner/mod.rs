@@ -10,6 +10,7 @@
 //! the *types* both layers speak: [`PruneCfg`], [`PruneReport`],
 //! [`Hessians`], [`StageResult`].
 
+use crate::compress::CompressionProfile;
 use crate::models::ModelState;
 use crate::tensor::Tensor;
 
@@ -54,9 +55,33 @@ impl Default for PruneCfg {
 pub struct PruneReport {
     pub target: f64,
     pub est_speedup: f64,
+    /// legacy structural anatomy `(heads, ffn_cols)` per layer —
+    /// derivable from `choices`; kept for the raw-profile shims and
+    /// the on-disk stage checkpoints
     pub layer_profile: Vec<(usize, usize)>,
+    /// typed per-module choices (prune-only for the classic pipeline;
+    /// mixed-axis for [`crate::session::pipeline::compound_to_target`])
+    pub choices: CompressionProfile,
     pub calib_loss: f64,
     pub obs_dispatches: usize,
+}
+
+/// Configuration of the compound choice lattice (DESIGN.md §13): which
+/// non-pruning axes [`crate::session::pipeline::choice_problem`] adds
+/// on top of the OBS pruning levels.
+#[derive(Clone, Debug)]
+pub struct CompoundCfg {
+    /// add int8 choices (dense-quant plus prune-then-quant per level)
+    pub quant: bool,
+    /// low-rank FFN ranks to offer; empty = derive `[3d/4, d/2, d/4]`
+    /// from the module's row count
+    pub ranks: Vec<usize>,
+}
+
+impl Default for CompoundCfg {
+    fn default() -> Self {
+        CompoundCfg { quant: true, ranks: Vec::new() }
+    }
 }
 
 /// Accumulated calibration Hessians: one XX^T per prunable module.

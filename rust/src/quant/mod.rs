@@ -16,6 +16,28 @@ use anyhow::Result;
 
 use crate::models::ModelState;
 use crate::runtime::TaskInfo;
+use crate::tensor::Tensor;
+
+/// Symmetric per-row INT8 quantize→dequantize of one weight matrix —
+/// the pure tensor-level core of [`int8_quantize`], used by the
+/// compound choice lattice to score and apply the quant axis on a
+/// module snapshot without touching model state (DESIGN.md §13).
+pub fn int8_tensor(w: &Tensor) -> Tensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut out = w.clone();
+    for r in 0..rows {
+        let row = &mut out.data[r * cols..(r + 1) * cols];
+        let maxabs = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if maxabs == 0.0 {
+            continue;
+        }
+        let scale = maxabs / 127.0;
+        for x in row.iter_mut() {
+            *x = (*x / scale).round().clamp(-127.0, 127.0) * scale;
+        }
+    }
+    out
+}
 
 /// Symmetric per-row INT8 quantize→dequantize of all 2-D weights.
 /// Returns mean absolute quantization error (diagnostic).
@@ -95,6 +117,11 @@ impl CpuEngineModel {
     /// Latency for a model with `dense_flops` per inference, structural
     /// density `struct_density` (fraction of dense compute left after
     /// structured pruning), unstructured sparsity `s`, INT8 on/off.
+    #[deprecated(
+        note = "free-standing pricer retired: quantized variants are priced through the \
+                same cost model the pruner certifies against — use \
+                `env::CostModel::compound_time` (DESIGN.md §13)"
+    )]
     pub fn latency(&self, dense_flops: f64, struct_density: f64, s: f64, int8: bool) -> f64 {
         let mut compute = dense_flops * struct_density / (self.dense_gflops * 1e9);
         compute *= (1.0 - s).powf(self.sparse_alpha);
@@ -104,6 +131,12 @@ impl CpuEngineModel {
         self.overhead + compute
     }
 
+    #[deprecated(
+        note = "free-standing pricer retired: quantized variants are priced through the \
+                same cost model the pruner certifies against — use \
+                `env::CostModel::compound_speedup` (DESIGN.md §13)"
+    )]
+    #[allow(deprecated)]
     pub fn speedup(&self, dense_flops: f64, struct_density: f64, s: f64, int8: bool) -> f64 {
         self.latency(dense_flops, 1.0, 0.0, false)
             / self.latency(dense_flops, struct_density, s, int8)
@@ -140,6 +173,30 @@ mod tests {
     }
 
     #[test]
+    fn int8_tensor_matches_statewise_quantizer() {
+        // the pure tensor helper must apply the exact rule
+        // int8_quantize applies to each 2-D weight row
+        let (_mi, ti, mut st) = mini_state();
+        let e = ti
+            .layout
+            .iter()
+            .find(|e| e.shape.len() == 2 && !e.name.contains("emb"))
+            .cloned()
+            .unwrap();
+        let w = Tensor::from_vec(
+            &[e.shape[0], e.shape[1]],
+            st.params[e.offset..e.offset + e.numel()].to_vec(),
+        );
+        let q = int8_tensor(&w);
+        int8_quantize(&mut st, &ti).unwrap();
+        let after = &st.params[e.offset..e.offset + e.numel()];
+        assert_eq!(q.data, after, "tensor path diverged from state path");
+        // idempotent: re-quantizing a quantized matrix is a no-op
+        assert_eq!(int8_tensor(&q).data, q.data);
+    }
+
+    #[test]
+    #[allow(deprecated)] // exercising the retired pricer's shim until removal
     fn engine_model_monotone() {
         let m = CpuEngineModel::default();
         let f = 1e9;
@@ -151,5 +208,45 @@ mod tests {
         // overhead caps speedup
         let extreme = m.speedup(f, 0.01, 0.99, true);
         assert!(extreme < 1000.0);
+    }
+
+    #[test]
+    #[allow(deprecated)] // comparing the retired pricer against its replacement
+    fn env_cost_model_subsumes_cpu_engine_pricer() {
+        // An env whose dense blocks carry the engine's compute budget
+        // must price compound variants like the retired CpuEngineModel:
+        // the 2.5× int8 factor and (1−s)^0.75 law now live on the SAME
+        // CostModel surface the pruner certifies against.
+        use crate::env::CostModel;
+        use crate::latency::LatencyTable;
+        let m = CpuEngineModel::default();
+        let dense_flops = 1e9;
+        let compute = dense_flops / (m.dense_gflops * 1e9);
+        let table = LatencyTable {
+            model: "m".into(),
+            device: "cpu".into(),
+            regime: "throughput".into(),
+            attn: vec![0.0, compute * 0.4],
+            mlp: vec![(64, compute * 0.6), (0, 0.0)],
+            overhead: m.overhead,
+        };
+        for &(sd, s, int8) in &[
+            (1.0, 0.0, false),
+            (0.5, 0.0, false),
+            (0.5, 0.8, false),
+            (0.5, 0.8, true),
+            (0.25, 0.9, true),
+        ] {
+            let legacy = m.latency(dense_flops, sd, s, int8);
+            let new = table.compound_time(1, sd, s, int8);
+            assert!((legacy - new).abs() <= 1e-12 * legacy, "time {legacy} vs {new}");
+            let ls = m.speedup(dense_flops, sd, s, int8);
+            let ns = table.compound_speedup(1, sd, s, int8);
+            assert!((ls - ns).abs() <= 1e-9 * ls, "speedup {ls} vs {ns}");
+        }
+        // and the per-block quant pricing divides by the same factor
+        assert_eq!(table.quant_factor(), m.int8_factor);
+        assert_eq!(table.attn_time_quant(1), table.attn_time(1) / 2.5);
+        assert_eq!(table.mlp_time_quant(64), table.mlp_time(64) / 2.5);
     }
 }

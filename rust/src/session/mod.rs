@@ -51,6 +51,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
+use crate::compress::{ChoiceProblem, CompressionProfile};
 use crate::data::Dataset;
 use crate::env::InferenceEnv;
 use crate::models::family::FamilyManifest;
@@ -571,7 +572,8 @@ impl<'e> CompressionSession<'e> {
             )?;
             self.emit(Stage::Solve, k, Some(target), loaded);
             let mut st = state0.clone();
-            pipeline::apply_profile(&mut st, dbs, &sol.0, &self.minfo, &self.tinfo)?;
+            let choice_problem = ChoiceProblem::from_spdy(&problem);
+            pipeline::apply_choices(&mut st, dbs, &choice_problem, &sol.0, &self.minfo, &self.tinfo)?;
             let layer_profile = problem.as_layer_profile(&sol.0);
             let est = pipeline::certified_est(
                 env,
@@ -588,6 +590,7 @@ impl<'e> CompressionSession<'e> {
                     target,
                     est_speedup: est,
                     layer_profile,
+                    choices: choice_problem.profile_choices(&sol.0),
                     calib_loss: sol.1,
                     obs_dispatches: 0,
                 },
@@ -717,7 +720,15 @@ impl Solved<'_, '_> {
     pub fn apply(self) -> Result<Variant> {
         let sess = self.sess;
         let mut state = self.state;
-        pipeline::apply_profile(&mut state, &self.dbs, &self.profile, &sess.minfo, &sess.tinfo)?;
+        let choice_problem = ChoiceProblem::from_spdy(&self.problem);
+        pipeline::apply_choices(
+            &mut state,
+            &self.dbs,
+            &choice_problem,
+            &self.profile,
+            &sess.minfo,
+            &sess.tinfo,
+        )?;
         let layer_profile = self.problem.as_layer_profile(&self.profile);
         let est = pipeline::certified_est(
             &sess.env,
@@ -732,6 +743,7 @@ impl Solved<'_, '_> {
             target: self.target,
             est_speedup: est,
             layer_profile,
+            choices: choice_problem.profile_choices(&self.profile),
             calib_loss: self.best_loss,
             obs_dispatches: 0,
         };
@@ -773,6 +785,7 @@ fn load_stage_result(
     let report = PruneReport {
         target,
         est_speedup: j.get("est_speedup")?.as_f64()?,
+        choices: CompressionProfile::from_layer_profile(&layer_profile),
         layer_profile,
         calib_loss: j.get("calib_loss").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
         obs_dispatches: 0,
@@ -827,6 +840,7 @@ mod tests {
             target: 2.0,
             est_speedup: 2.13,
             layer_profile: vec![(2, 6), (1, 4)],
+            choices: CompressionProfile::from_layer_profile(&[(2, 6), (1, 4)]),
             calib_loss: 0.5,
             obs_dispatches: 0,
         };
@@ -854,6 +868,7 @@ mod tests {
             target: 1.5,
             est_speedup: 1.5,
             layer_profile: vec![(2, 8)],
+            choices: CompressionProfile::from_layer_profile(&[(2, 8)]),
             calib_loss: f64::INFINITY,
             obs_dispatches: 0,
         };

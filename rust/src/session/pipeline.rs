@@ -17,20 +17,23 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::compress::{Choice, ChoiceProblem, CompressionProfile, LayerChoice, QuantScheme};
 use crate::data::Dataset;
 use crate::env::{CostModel, InferenceEnv};
 use crate::eval::{calib_loss, mask_literals};
+use crate::latency::low_rank_ffn_width;
 use crate::models::family::{FamilyManifest, FamilyMember};
 use crate::models::ModelState;
-use crate::pruner::{Hessians, PruneCfg, PruneReport, StageResult, TargetMode};
+use crate::pruner::{CompoundCfg, Hessians, PruneCfg, PruneReport, StageResult, TargetMode};
+use crate::quant;
 use crate::runtime::{lit_f32_shaped, lit_i32, lit_to_f32, Engine, ModelInfo, TaskInfo};
 use crate::spdy::{self, LevelOpt, ModuleLevels, SearchCfg, SpdyProblem};
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor};
 use crate::train::{TrainCfg, Trainer};
 use crate::util::threadpool::parallel_tasks;
 use crate::ziplm::{
-    assemble_hessian, build_module_db, build_module_db_masked, HloBackend, ModuleDb,
-    NativeBackend, ObsOps,
+    assemble_hessian, build_module_db, build_module_db_masked, damped_hessian, relative_error,
+    HloBackend, ModuleDb, NativeBackend, ObsOps,
 };
 
 /// Run the calib artifact over `n_samples` and accumulate XX^T.
@@ -254,8 +257,26 @@ pub fn spdy_problem(
     }
 }
 
-/// Apply a chosen profile: write snapshot weights + kill masks.
+/// Apply a chosen raw level-index profile: write snapshot weights +
+/// kill masks.
+#[deprecated(
+    note = "raw `Vec<usize>` profile surface: use `apply_choices` with a typed \
+            `compress::ChoiceProblem` (a prune-only lattice applies bit-identically; \
+            DESIGN.md §13)"
+)]
 pub fn apply_profile(
+    state: &mut ModelState,
+    dbs: &[ModuleDb],
+    profile: &[usize],
+    minfo: &ModelInfo,
+    tinfo: &TaskInfo,
+) -> Result<()> {
+    apply_level_indices(state, dbs, profile, minfo, tinfo)
+}
+
+/// Level-index application body shared by the deprecated raw shim and
+/// the prune arm of [`apply_choices`]'s search loop.
+fn apply_level_indices(
     state: &mut ModelState,
     dbs: &[ModuleDb],
     profile: &[usize],
@@ -264,15 +285,165 @@ pub fn apply_profile(
 ) -> Result<()> {
     for (db, &li) in dbs.iter().zip(profile) {
         let lvl = &db.levels[li];
-        if db.is_attn {
-            state.set_attn_w_paper(tinfo, db.layer, &lvl.w, &lvl.dead, minfo.d_head)?;
-            for &h in &lvl.dead {
-                state.masks.kill_head(db.layer, h);
+        write_module(state, db, &lvl.w, &lvl.dead, minfo, tinfo)?;
+    }
+    Ok(())
+}
+
+/// Write one module's weights + kill masks (the single state-mutation
+/// path every apply goes through).
+fn write_module(
+    state: &mut ModelState,
+    db: &ModuleDb,
+    w: &Tensor,
+    dead: &[usize],
+    minfo: &ModelInfo,
+    tinfo: &TaskInfo,
+) -> Result<()> {
+    if db.is_attn {
+        state.set_attn_w_paper(tinfo, db.layer, w, dead, minfo.d_head)?;
+        for &h in dead {
+            state.masks.kill_head(db.layer, h);
+        }
+    } else {
+        state.set_fc_w_paper(tinfo, db.layer, w, dead)?;
+        for &c in dead {
+            state.masks.kill_ffn_col(db.layer, c);
+        }
+    }
+    Ok(())
+}
+
+/// Assemble the compound choice lattice (DESIGN.md §13): the SPDY
+/// pruning options verbatim (so a prune-only lattice lowers to the
+/// exact `spdy_problem` numbers), plus env-priced int8 and low-rank
+/// FFN choices scored by OBS-style reconstruction error against the
+/// SAME damped calibration Hessian the pruning priors used. Speedup
+/// mode only — quant and low-rank don't change parameter counts, so a
+/// sparsity budget has nothing to trade them against.
+pub fn choice_problem(
+    dbs: &[ModuleDb],
+    hs: &Hessians,
+    env: &InferenceEnv,
+    minfo: &ModelInfo,
+    cfg: &PruneCfg,
+    ccfg: &CompoundCfg,
+) -> Result<ChoiceProblem> {
+    if cfg.target_mode != TargetMode::Speedup {
+        return Err(anyhow!("compound lattice requires speedup target mode"));
+    }
+    let base = spdy_problem(dbs, env, minfo, cfg.target_mode);
+    let mut problem = ChoiceProblem::from_spdy(&base);
+    for (db, set) in dbs.iter().zip(&mut problem.modules) {
+        let acc = if db.is_attn { &hs.attn[db.layer] } else { &hs.ffn[db.layer] };
+        let h = damped_hessian(acc, cfg.damp_frac);
+        let w0 = &db.levels[0].w;
+        let dense_rem = set.dense_remaining();
+        let mut extra = Vec::new();
+        if ccfg.quant {
+            // int8 on every prune level: the dense level becomes the
+            // plain quant choice, pruned levels compose prune-then-quant
+            for (li, lvl) in db.levels.iter().enumerate() {
+                if lvl.remaining == 0 {
+                    continue; // a dropped module has nothing to quantize
+                }
+                let cost = if db.is_attn {
+                    env.attn_time_quant(lvl.remaining)
+                } else {
+                    env.mlp_time_quant(lvl.remaining)
+                };
+                let choice = if li == 0 {
+                    LayerChoice::Quant { scheme: QuantScheme::Int8 }
+                } else {
+                    LayerChoice::PruneQuant { remaining: lvl.remaining, scheme: QuantScheme::Int8 }
+                };
+                let loss = relative_error(w0, &quant::int8_tensor(&lvl.w), &h);
+                extra.push(Choice { choice, cost, loss });
             }
-        } else {
-            state.set_fc_w_paper(tinfo, db.layer, &lvl.w, &lvl.dead)?;
-            for &c in &lvl.dead {
-                state.masks.kill_ffn_col(db.layer, c);
+        }
+        if !db.is_attn {
+            // low-rank factorization of the stacked FFN pair: priced as
+            // the dense width with equal GEMM work, scored by the
+            // truncated-SVD residual's output error
+            let d = w0.rows();
+            let ranks = if ccfg.ranks.is_empty() {
+                vec![d * 3 / 4, d / 2, d / 4]
+            } else {
+                ccfg.ranks.clone()
+            };
+            for rank in ranks {
+                if rank == 0 || rank >= d {
+                    continue;
+                }
+                let w_eff = low_rank_ffn_width(d, dense_rem, rank);
+                if w_eff >= dense_rem {
+                    continue; // prices no cheaper than dense
+                }
+                let wr = linalg::low_rank_approx(w0, rank)
+                    .map_err(|e| anyhow!("low-rank score (layer {}): {e}", db.layer))?;
+                extra.push(Choice {
+                    choice: LayerChoice::LowRank { rank },
+                    cost: env.mlp_time(w_eff),
+                    loss: relative_error(w0, &wr, &h),
+                });
+            }
+        }
+        set.choices.extend(extra);
+    }
+    Ok(problem)
+}
+
+/// Apply a typed choice assignment: prune choices write their OBS
+/// snapshot + kill masks exactly like the legacy path; quant choices
+/// write the int8-requantized snapshot; low-rank choices write the
+/// truncated-SVD reconstruction. The typed replacement for
+/// [`apply_profile`].
+pub fn apply_choices(
+    state: &mut ModelState,
+    dbs: &[ModuleDb],
+    problem: &ChoiceProblem,
+    profile: &[usize],
+    minfo: &ModelInfo,
+    tinfo: &TaskInfo,
+) -> Result<()> {
+    for ((db, set), &ci) in dbs.iter().zip(&problem.modules).zip(profile) {
+        let chosen = set
+            .choices
+            .get(ci)
+            .ok_or_else(|| anyhow!("choice index {ci} out of range (layer {})", db.layer))?;
+        let level = |remaining: usize| {
+            db.level(remaining).ok_or_else(|| {
+                anyhow!(
+                    "no snapshot at remaining {remaining} for layer {} {}",
+                    db.layer,
+                    if db.is_attn { "attn" } else { "ffn" }
+                )
+            })
+        };
+        match chosen.choice {
+            LayerChoice::Prune { remaining } => {
+                let lvl = level(remaining)?;
+                write_module(state, db, &lvl.w, &lvl.dead, minfo, tinfo)?;
+            }
+            LayerChoice::Quant { .. } => {
+                let lvl = &db.levels[0];
+                write_module(state, db, &quant::int8_tensor(&lvl.w), &lvl.dead, minfo, tinfo)?;
+            }
+            LayerChoice::PruneQuant { remaining, .. } => {
+                let lvl = level(remaining)?;
+                write_module(state, db, &quant::int8_tensor(&lvl.w), &lvl.dead, minfo, tinfo)?;
+            }
+            LayerChoice::LowRank { rank } => {
+                if db.is_attn {
+                    return Err(anyhow!(
+                        "low-rank choice on attention module (layer {})",
+                        db.layer
+                    ));
+                }
+                let lvl = &db.levels[0];
+                let wr = linalg::low_rank_approx(&lvl.w, rank)
+                    .map_err(|e| anyhow!("low-rank apply (layer {}): {e}", db.layer))?;
+                write_module(state, db, &wr, &lvl.dead, minfo, tinfo)?;
             }
         }
     }
@@ -309,7 +480,7 @@ pub fn solve_profile(
     let (profile, best_loss) = spdy::search(problem, budget, &search_cfg, |prof| {
         evals += 1;
         let mut cand = base.clone();
-        if apply_profile(&mut cand, dbs, prof, minfo, tinfo).is_err() {
+        if apply_level_indices(&mut cand, dbs, prof, minfo, tinfo).is_err() {
             return f64::INFINITY;
         }
         calib_loss(engine, &cand, data, cfg.calib_samples.min(128)).unwrap_or(f64::INFINITY)
@@ -337,7 +508,7 @@ pub fn prune_to_target(
     let budget = dense_cost / target;
     check_budget(&problem, target, budget)?;
     let sol = solve_profile(engine, state, data, &dbs, &problem, budget, cfg, &minfo, &tinfo)?;
-    apply_profile(state, &dbs, &sol.profile, &minfo, &tinfo)?;
+    apply_level_indices(state, &dbs, &sol.profile, &minfo, &tinfo)?;
     let layer_profile = problem.as_layer_profile(&sol.profile);
     let est = certified_est(
         env,
@@ -357,7 +528,63 @@ pub fn prune_to_target(
         target,
         est_speedup: est,
         layer_profile,
+        choices: ChoiceProblem::from_spdy(&problem).profile_choices(&sol.profile),
         calib_loss: sol.best_loss,
+        obs_dispatches: 0,
+    })
+}
+
+/// One compound-compression stage: Hessians → databases → choice
+/// lattice → widened SPDY over choice indices → apply (DESIGN.md §13).
+/// The compound sibling of [`prune_to_target`]: with the lattice
+/// restricted to the prune axis it lowers to the exact same
+/// `SpdyProblem`, so this degenerates to the legacy solve
+/// bit-identically.
+#[allow(clippy::too_many_arguments)]
+pub fn compound_to_target(
+    engine: &Engine,
+    state: &mut ModelState,
+    data: &Dataset,
+    env: &InferenceEnv,
+    dense_cost: f64,
+    target: f64,
+    cfg: &PruneCfg,
+    ccfg: &CompoundCfg,
+) -> Result<PruneReport> {
+    let minfo = engine.manifest.model(&state.model).clone();
+    let tinfo = engine.manifest.task(&state.model, &state.task).clone();
+    let hs = capture_hessians(engine, state, data, cfg.calib_samples)?;
+    let dbs = build_databases(engine, state, &hs, cfg)?;
+    let problem = choice_problem(&dbs, &hs, env, &minfo, cfg, ccfg)?;
+    let lowered = problem.lower();
+    let budget = dense_cost / target;
+    check_budget(&lowered, target, budget)?;
+    let mut evals = 0usize;
+    let search_cfg = SearchCfg { iters: cfg.spdy.iters, seed: cfg.spdy.seed, ..Default::default() };
+    let (profile, best_loss) = spdy::search(&lowered, budget, &search_cfg, |prof| {
+        evals += 1;
+        let mut cand = state.clone();
+        if apply_choices(&mut cand, &dbs, &problem, prof, &minfo, &tinfo).is_err() {
+            return f64::INFINITY;
+        }
+        calib_loss(engine, &cand, data, cfg.calib_samples.min(128)).unwrap_or(f64::INFINITY)
+    })
+    .ok_or_else(|| anyhow!("compound SPDY found no feasible profile inside budget {budget:.3e}"))?;
+    apply_choices(state, &dbs, &problem, &profile, &minfo, &tinfo)?;
+    let layer_profile = problem.as_layer_profile(&profile);
+    let est = dense_cost / problem.profile_cost(&profile);
+    let choices = problem.profile_choices(&profile);
+    crate::zlog!(
+        "info",
+        "compound to {target}x: est_speedup={est:.2} mix={:?} candidates={evals}",
+        choices.axis_counts()
+    );
+    Ok(PruneReport {
+        target,
+        est_speedup: est,
+        layer_profile,
+        choices,
+        calib_loss: best_loss,
         obs_dispatches: 0,
     })
 }
@@ -418,6 +645,7 @@ pub fn emit_family(
         ckpt: "dense.zlm".into(),
         target: 1.0,
         est_speedup: env.speedup(&dense_profile),
+        choices: Some(CompressionProfile::from_layer_profile(&dense_profile)),
         profile: dense_profile,
         // per-layer SPDY losses are scored relative to dense, so the
         // dense member anchors the adapt frontier at zero
@@ -433,6 +661,7 @@ pub fn emit_family(
             target: s.report.target,
             est_speedup: s.report.est_speedup,
             profile: s.report.layer_profile.clone(),
+            choices: Some(s.report.choices.clone()),
             calib_loss: Some(s.report.calib_loss),
         });
     }

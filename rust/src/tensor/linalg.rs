@@ -255,6 +255,119 @@ pub fn trace_whwt(w: &Tensor, h: &Tensor) -> f64 {
     total
 }
 
+/// Symmetric eigendecomposition by cyclic Jacobi rotations, f64
+/// accumulation throughout. Returns the eigenvalues in descending
+/// order and the matching eigenvectors as COLUMNS of the returned
+/// tensor. Sized for the small Gram matrices of the low-rank choice
+/// axis (d_model × d_model); O(n³) per sweep, a handful of sweeps to
+/// converge on symmetric input.
+pub fn sym_eig(a: &Tensor) -> Result<(Vec<f32>, Tensor), String> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(format!("sym_eig: non-square {}x{}", a.rows(), a.cols()));
+    }
+    if n == 0 {
+        return Err("sym_eig: empty matrix".into());
+    }
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let scale: f64 = m.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-30);
+    for _sweep in 0..60 {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p * n + q] * m[p * n + q];
+            }
+        }
+        if off.sqrt() <= 1e-12 * scale {
+            break;
+        }
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rows/cols p and q of the (symmetric) working matrix
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akq = m[k * n + q];
+                    m[k * n + p] = c * akp - s * akq;
+                    m[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let aqk = m[q * n + k];
+                    m[p * n + k] = c * apk - s * aqk;
+                    m[q * n + k] = s * apk + c * aqk;
+                }
+                // accumulate the rotation into the eigenvector columns
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| {
+        let (a, b) = (m[i * n + i], m[j * n + j]);
+        b.partial_cmp(&a).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let vals: Vec<f32> = order.iter().map(|&i| m[i * n + i] as f32).collect();
+    let mut vecs = Tensor::zeros(&[n, n]);
+    for (col, &i) in order.iter().enumerate() {
+        for k in 0..n {
+            vecs.set2(k, col, v[k * n + i] as f32);
+        }
+    }
+    Ok((vals, vecs))
+}
+
+/// Best rank-`rank` approximation of `w` (Eckart–Young in the row
+/// space): W_r = U_r U_rᵀ W, where U_r spans the top eigenvectors of
+/// the Gram matrix G = W Wᵀ — equivalent to truncated SVD without
+/// forming the (much larger) column-space factor. The Frobenius
+/// residual ||W − W_r||²_F = Σ_{i>r} λ_i(G) is the loss score of the
+/// low-rank choice axis (DESIGN.md §13).
+pub fn low_rank_approx(w: &Tensor, rank: usize) -> Result<Tensor, String> {
+    let m = w.rows();
+    if m == 0 || w.cols() == 0 {
+        return Err(format!("low_rank_approx: degenerate {}x{}", w.rows(), w.cols()));
+    }
+    if rank >= m {
+        return Ok(w.clone());
+    }
+    if rank == 0 {
+        return Ok(Tensor::zeros(&[m, w.cols()]));
+    }
+    let g = w.matmul(&w.transpose2());
+    let (_vals, u) = sym_eig(&g)?;
+    // projector P = U_r U_rᵀ onto the top-rank eigenspace, in f64
+    let mut proj = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0f64;
+            for r in 0..rank {
+                s += (u.at2(i, r) as f64) * (u.at2(j, r) as f64);
+            }
+            proj.set2(i, j, s as f32);
+        }
+    }
+    Ok(proj.matmul(w))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -399,5 +512,75 @@ mod tests {
         let direct = wx.frob_sq();
         let via_trace = trace_whwt(&w, &h);
         assert!((direct - via_trace).abs() / direct < 1e-4);
+    }
+
+    #[test]
+    fn sym_eig_reconstructs_and_orders() {
+        Prop::new(12).check_msg(
+            "V diag(λ) Vᵀ = A, λ descending, V orthonormal",
+            |r| {
+                let n = 2 + r.below(16);
+                spd_t(r, n)
+            },
+            |a| {
+                let n = a.rows();
+                let (vals, v) = sym_eig(a)?;
+                for w in vals.windows(2) {
+                    if w[0] < w[1] - 1e-4 {
+                        return Err(format!("eigvals not descending: {vals:?}"));
+                    }
+                }
+                // orthonormal columns
+                let vtv = v.transpose2().matmul(&v);
+                let d = vtv.max_abs_diff(&Tensor::eye(n));
+                if d > 1e-3 {
+                    return Err(format!("VᵀV residual {d}"));
+                }
+                // reconstruction
+                let mut vl = v.clone();
+                for i in 0..n {
+                    for j in 0..n {
+                        vl.set2(i, j, v.at2(i, j) * vals[j]);
+                    }
+                }
+                let rec = vl.matmul(&v.transpose2());
+                let d = rec.max_abs_diff(a);
+                if d < 1e-2 * n as f32 {
+                    Ok(())
+                } else {
+                    Err(format!("reconstruction diff {d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn low_rank_approx_is_eckart_young_on_known_instance() {
+        // rank-2 matrix: rows 2 and 3 are multiples of rows 0 and 1
+        let w = Tensor::from_vec(
+            &[4, 3],
+            vec![1.0, 0.0, 2.0, 0.0, 3.0, 1.0, 2.0, 0.0, 4.0, 0.0, 6.0, 2.0],
+        );
+        let r2 = low_rank_approx(&w, 2).unwrap();
+        assert!(r2.max_abs_diff(&w) < 1e-4, "rank-2 must be exact: {}", r2.max_abs_diff(&w));
+        // rank-1 residual equals the discarded Gram eigenvalue
+        let g = w.matmul(&w.transpose2());
+        let (vals, _) = sym_eig(&g).unwrap();
+        let r1 = low_rank_approx(&w, 1).unwrap();
+        let mut diff = r1.clone();
+        for i in 0..w.rows() {
+            for j in 0..w.cols() {
+                diff.set2(i, j, r1.at2(i, j) - w.at2(i, j));
+            }
+        }
+        let resid = diff.frob_sq();
+        assert!(
+            (resid - vals[1] as f64).abs() < 1e-3 * vals[0] as f64,
+            "residual {resid} vs λ₂ {}",
+            vals[1]
+        );
+        // boundary ranks
+        assert!(low_rank_approx(&w, 4).unwrap().max_abs_diff(&w) == 0.0);
+        assert_eq!(low_rank_approx(&w, 0).unwrap().frob_sq(), 0.0);
     }
 }

@@ -37,15 +37,24 @@ use crate::util::threadpool::parallel_for_slices_mut;
 
 pub const BIG: f32 = 1e30;
 
-/// Assemble H = 2·XX^T + λI and H^{-1} from an accumulated XX^T.
+/// The damped Hessian H = 2·XX^T + λI from an accumulated XX^T.
 /// `damp_frac` follows the OBC convention: λ = damp_frac · mean(diag).
-pub fn assemble_hessian(acc_xxt: &Tensor, damp_frac: f32) -> Result<(Tensor, Tensor)> {
+/// Split out of [`assemble_hessian`] for callers that only score
+/// reconstruction errors (the compound choice lattice) and can skip
+/// the O(n³) inversion.
+pub fn damped_hessian(acc_xxt: &Tensor, damp_frac: f32) -> Tensor {
     let n = acc_xxt.rows();
     let mut h = acc_xxt.clone();
     h.scale(2.0);
     let mean_diag = (0..n).map(|i| h.at2(i, i) as f64).sum::<f64>() / n as f64;
     let lambda = (damp_frac as f64 * mean_diag).max(1e-8) as f32;
     h.add_diag(lambda);
+    h
+}
+
+/// Assemble H = 2·XX^T + λI and H^{-1} from an accumulated XX^T.
+pub fn assemble_hessian(acc_xxt: &Tensor, damp_frac: f32) -> Result<(Tensor, Tensor)> {
+    let h = damped_hessian(acc_xxt, damp_frac);
     let hinv = linalg::spd_inverse(&h).map_err(|e| anyhow!("hessian inverse: {e}"))?;
     Ok((h, hinv))
 }

@@ -59,6 +59,7 @@ fn manifest(env: &InferenceEnv, routes: &[MemberRoute]) -> FamilyManifest {
             target: 1.0,
             est_speedup: r.est_speedup,
             profile: vec![],
+            choices: None,
             calib_loss: Some(0.3 * (r.est_speedup - 1.0).max(0.0)),
         })
         .collect();

@@ -7,13 +7,16 @@ use std::path::Path;
 use std::time::Duration;
 
 use ziplm::adapt::{detect_drift, fit_env, DriftCfg, DriftReport};
+use ziplm::compress::{
+    Choice, ChoiceProblem, ChoiceSet, CompressionProfile, LayerChoice, ModuleChoice, QuantScheme,
+};
 use ziplm::coordinator::family::{
     route, route_batch, BatchReq, BucketLadder, BucketSample, MemberRoute, Sla,
 };
 use ziplm::env::InferenceEnv;
 use ziplm::exp::repro::{
-    matrix_keys, scenario_cells, AdaptBlock, BucketRow, CellStatus, ChaosSummary, FamilyBlock,
-    MemberSummary, ReproReport, ScenarioCell,
+    matrix_keys, scenario_cells, AdaptBlock, BucketRow, CellStatus, ChaosSummary, CompoundBlock,
+    CompoundMember, FamilyBlock, MemberSummary, ReproReport, ScenarioCell,
 };
 use ziplm::latency::LatencyTable;
 use ziplm::models::family::{FamilyManifest, FamilyMember};
@@ -213,6 +216,158 @@ fn prop_spdy_dp_matches_bruteforce_on_small_instances() {
                         return Err(format!(
                             "dp {prof:?} obj {obj} vs brute {best_prof:?} obj {best_obj}"
                         ));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_choice_dp_prune_only_bit_identical_to_legacy() {
+    // Satellite 3 / tentpole acceptance: lifting a legacy prune-only
+    // problem into the choice lattice and solving the widened DP must
+    // reproduce the legacy DP bit-identically — same Option, same
+    // indices, and the lowered numbers the DP reads are the SAME f64s.
+    Prop::new(60).check_msg(
+        "prune-only lattice ≡ legacy DP",
+        |r| {
+            let p = random_problem(r);
+            let dense = p.dense_cost();
+            let budget = p.overhead + (dense - p.overhead) * (0.1 + 0.9 * r.f64());
+            let coeffs: Vec<f64> = (0..p.modules.len()).map(|_| 0.1 + 2.0 * r.f64()).collect();
+            (p, coeffs, budget)
+        },
+        |(p, coeffs, budget)| {
+            let lifted = ChoiceProblem::from_spdy(p);
+            let lowered = lifted.lower();
+            for (a, b) in p.modules.iter().zip(&lowered.modules) {
+                for (oa, ob) in a.options.iter().zip(&b.options) {
+                    if oa.cost.to_bits() != ob.cost.to_bits()
+                        || oa.prior.to_bits() != ob.prior.to_bits()
+                        || oa.remaining != ob.remaining
+                    {
+                        return Err("lift/lower mutated a LevelOpt".into());
+                    }
+                }
+            }
+            if lifted.solve_dp(coeffs, *budget) != spdy::solve_dp(p, coeffs, *budget) {
+                return Err("widened DP diverged from legacy DP on prune-only input".into());
+            }
+            let typed = lifted.profile_choices(&vec![0; p.modules.len()]);
+            if !typed.is_prune_only() {
+                return Err("lifted profile must report prune-only".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A random mixed-axis lattice: a prune ladder per module plus quant
+/// (dense-shape, cheaper, small loss) and — on FFN modules — low-rank
+/// entries, with costs/losses deliberately NOT proportional so the DP
+/// has real trade-offs to rank.
+fn random_choice_problem(r: &mut Rng) -> ChoiceProblem {
+    let nm = 1 + r.below(4);
+    let mut modules = Vec::new();
+    for l in 0..nm {
+        let is_attn = l % 2 == 0;
+        let n_levels = 2 + r.below(2); // 2..=3 prune levels
+        let dense_cost = 0.5 + r.f64() * 9.5;
+        let mut choices = Vec::new();
+        for k in 0..n_levels {
+            let frac = 1.0 - k as f64 / (n_levels - 1) as f64;
+            choices.push(Choice {
+                choice: LayerChoice::Prune { remaining: (frac * 8.0) as usize },
+                cost: if k == 0 { dense_cost } else { dense_cost * frac * (0.5 + r.f64()) },
+                loss: if k == 0 { 0.0 } else { (1.0 - frac) * (0.5 + r.f64()) },
+            });
+        }
+        choices.push(Choice {
+            choice: LayerChoice::Quant { scheme: QuantScheme::Int8 },
+            cost: dense_cost * (0.3 + 0.2 * r.f64()),
+            loss: 0.05 + 0.2 * r.f64(),
+        });
+        if r.below(2) == 0 {
+            choices.push(Choice {
+                choice: LayerChoice::PruneQuant {
+                    remaining: 4,
+                    scheme: QuantScheme::Int8,
+                },
+                cost: dense_cost * (0.15 + 0.15 * r.f64()),
+                loss: 0.3 + 0.5 * r.f64(),
+            });
+        }
+        if !is_attn {
+            choices.push(Choice {
+                choice: LayerChoice::LowRank { rank: 1 + r.below(8) },
+                cost: dense_cost * (0.2 + 0.5 * r.f64()),
+                loss: 0.1 + 0.6 * r.f64(),
+            });
+        }
+        modules.push(ChoiceSet { layer: l, is_attn, choices });
+    }
+    ChoiceProblem { modules, overhead: r.f64() }
+}
+
+#[test]
+fn prop_choice_dp_matches_bruteforce_on_mixed_instances() {
+    // Satellite 3: the widened DP must stay bucket-space exact on
+    // mixed prune × quant × low-rank instances (≤4 modules × ≤5
+    // choices), exactly like the legacy prop above — the lattice adds
+    // axes, not approximation. Also: the typed view of the solution
+    // must agree with the raw indices module-by-module.
+    const BUCKETS: f64 = 768.0;
+    Prop::new(50).check_msg(
+        "mixed-lattice dp == bucket-space brute force",
+        |r| {
+            let p = random_choice_problem(r);
+            let budget = p.overhead + (p.dense_cost() - p.overhead) * (0.1 + 0.9 * r.f64());
+            let coeffs: Vec<f64> = (0..p.modules.len()).map(|_| 0.1 + 2.0 * r.f64()).collect();
+            (p, coeffs, budget)
+        },
+        |(p, coeffs, budget)| {
+            let lowered = p.lower();
+            let unit = (budget - p.overhead) / BUCKETS;
+            let mut best: Option<(f64, Vec<usize>)> = None;
+            for prof in all_profiles(&lowered) {
+                let w: f64 = prof
+                    .iter()
+                    .zip(&lowered.modules)
+                    .map(|(&ci, m)| (m.options[ci].cost / unit).ceil())
+                    .sum();
+                if w > BUCKETS {
+                    continue;
+                }
+                let obj = spdy_objective(&lowered, coeffs, &prof);
+                if best.as_ref().is_none_or(|(b, _)| obj < *b) {
+                    best = Some((obj, prof));
+                }
+            }
+            match (p.solve_dp(coeffs, *budget), best) {
+                (None, None) => Ok(()),
+                (None, Some((_, prof))) => {
+                    Err(format!("dp returned None though {prof:?} is bucket-feasible"))
+                }
+                (Some(prof), None) => Err(format!("dp returned {prof:?} on infeasible instance")),
+                (Some(prof), Some((best_obj, best_prof))) => {
+                    let real = p.profile_cost(&prof);
+                    if real > *budget + 1e-9 {
+                        return Err(format!("dp profile {prof:?} cost {real} > budget {budget}"));
+                    }
+                    let obj = spdy_objective(&lowered, coeffs, &prof);
+                    let tol = 1e-9 * best_obj.abs().max(1.0);
+                    if obj > best_obj + tol {
+                        return Err(format!(
+                            "dp {prof:?} obj {obj} vs brute {best_prof:?} obj {best_obj}"
+                        ));
+                    }
+                    let typed = p.profile_choices(&prof);
+                    for ((mc, set), &ci) in typed.modules.iter().zip(&p.modules).zip(&prof) {
+                        if mc.choice != set.choices[ci].choice {
+                            return Err("typed view disagrees with raw choice index".into());
+                        }
                     }
                     Ok(())
                 }
@@ -710,16 +865,40 @@ fn random_manifest(r: &mut Rng) -> FamilyManifest {
         let profile: Vec<(usize, usize)> =
             (0..n_layers).map(|_| (r.below(16), r.below(3072))).collect();
         let est = 1.0 + r.f64() * 9.0;
+        // a third of the members record manifest-v2 typed choices
+        // (mixed-axis); the rest stay v1 (choices absent → None)
+        let choices = if r.below(3) == 0 { Some(random_choices(r, &profile)) } else { None };
         fam.push(FamilyMember {
             tag: format!("member-{i}-{}", tricky_string(r)),
             ckpt: format!("{i}.zlm"),
             target: 1.0 + r.f64() * 9.0,
             est_speedup: est,
             profile,
+            choices,
             calib_loss: if r.below(2) == 0 { Some(r.f64()) } else { None },
         });
     }
     fam
+}
+
+/// A random mixed-axis typed profile consistent with a layer anatomy:
+/// prune modules record their remaining units; quant/low-rank modules
+/// keep the dense shape.
+fn random_choices(r: &mut Rng, profile: &[(usize, usize)]) -> CompressionProfile {
+    let mut modules = Vec::new();
+    for (layer, &(heads, cols)) in profile.iter().enumerate() {
+        for is_attn in [true, false] {
+            let remaining = if is_attn { heads } else { cols };
+            let choice = match r.below(if is_attn { 3 } else { 4 }) {
+                0 => LayerChoice::Prune { remaining },
+                1 => LayerChoice::Quant { scheme: QuantScheme::Int8 },
+                2 => LayerChoice::PruneQuant { remaining, scheme: QuantScheme::Int8 },
+                _ => LayerChoice::LowRank { rank: 1 + r.below(256) },
+            };
+            modules.push(ModuleChoice { layer, is_attn, choice });
+        }
+    }
+    CompressionProfile { modules }
 }
 
 #[test]
@@ -1214,6 +1393,24 @@ fn random_family_block(r: &mut Rng) -> FamilyBlock {
     }
 }
 
+fn random_compound_block(r: &mut Rng) -> CompoundBlock {
+    CompoundBlock {
+        model: tricky_string(r),
+        env: tricky_string(r),
+        target: 1.0 + r.f64() * 4.0,
+        prune_equiv: r.below(2) == 0,
+        members: (0..r.below(6))
+            .map(|_| CompoundMember {
+                tag: tricky_string(r),
+                axis: tricky_string(r),
+                certified: r.f64() * 5.0,
+                loss: r.f64() * 3.0,
+            })
+            .collect(),
+        axes: (0..r.below(4)).map(|_| (tricky_string(r), r.below(16))).collect(),
+    }
+}
+
 fn random_adapt_block(r: &mut Rng) -> AdaptBlock {
     AdaptBlock {
         model: tricky_string(r),
@@ -1248,6 +1445,7 @@ fn prop_repro_report_json_roundtrip_identity() {
             cells: (0..r.below(6)).map(|_| random_scenario_cell(r)).collect(),
             families: (0..r.below(4)).map(|_| random_family_block(r)).collect(),
             adapt: (0..r.below(3)).map(|_| random_adapt_block(r)).collect(),
+            compound: (0..r.below(3)).map(|_| random_compound_block(r)).collect(),
         },
         |rep| {
             let text = rep.to_json().to_pretty();

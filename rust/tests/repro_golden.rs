@@ -143,6 +143,28 @@ fn kick_tires_covers_every_cell_without_an_engine() {
         assert!(a.mass_shift > 0.25, "drift is mass-driven: {a:?}");
         assert!(!a.targets.is_empty() && a.knee > 0.0, "frontier must recommend");
     }
+    // the compound lattice runs once per model against the analytic
+    // gpu-sweep env — engine-free like everything above (DESIGN.md §13)
+    assert_eq!(report.compound.len(), 2, "one compound section per model");
+    for b in &report.compound {
+        assert_eq!(b.env, "gpu-sweep");
+        assert!(b.prune_equiv, "prune-only lattice must reproduce the legacy DP: {b:?}");
+        let tags: Vec<&str> = b.members.iter().map(|m| m.tag.as_str()).collect();
+        assert_eq!(tags, ["dense", "prune", "int8", "lowrank", "compound"]);
+        let get = |t: &str| b.members.iter().find(|m| m.tag == t).unwrap();
+        assert_eq!(get("dense").certified, 1.0);
+        assert_eq!(get("dense").loss, 0.0);
+        assert!(get("int8").axis.contains("quant="), "int8 member: {b:?}");
+        assert!(get("lowrank").axis.contains("lowrank="), "lowrank member: {b:?}");
+        for t in ["prune", "compound"] {
+            assert!(get(t).certified >= b.target - 1e-9, "{t} must certify {b:?}");
+        }
+        assert!(
+            get("compound").loss <= get("prune").loss + 1e-9,
+            "widening the lattice must never cost loss: {b:?}"
+        );
+        assert!(b.axes.len() >= 2, "the mixed solve must actually mix axes: {b:?}");
+    }
 }
 
 #[test]
@@ -162,4 +184,8 @@ fn missing_precomputed_tables_record_errors_not_absences() {
     }
     // the analytic axes are unaffected
     assert_eq!(report.families.len(), 4, "one family per (model, analytic env)");
+    // ... and so is the compound lattice (priced by the analytic
+    // gpu-sweep model, it never reads the precomputed tables)
+    assert_eq!(report.compound.len(), 2, "compound sections survive missing tables");
+    assert!(report.compound.iter().all(|b| b.prune_equiv));
 }

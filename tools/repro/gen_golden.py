@@ -936,6 +936,119 @@ def adapt_block(m, block_idx, env_name, env, serving, members, seed):
     }
 
 
+# --------------------------------------------- compound lattice twins
+
+LOWRANK_RANKS = [96, 64, 32]
+
+
+def low_rank_ffn_width(d_model, width, rank):
+    """latency::low_rank_ffn_width: equal-GEMM-work width of a rank-r
+    FFN factorization (integer ceil-div, clamped at dense)."""
+    return min(-(-(rank * (d_model + width)) // d_model), width)
+
+
+def axis_counts(axes_seq):
+    """compress::CompressionProfile::axis_counts (BTreeMap order)."""
+    counts = {}
+    for a in axes_seq:
+        counts[a] = counts.get(a, 0) + 1
+    return sorted(counts.items())
+
+
+def mix_string(axes_seq):
+    return " ".join("%s=%d" % (a, n) for (a, n) in axis_counts(axes_seq))
+
+
+def compound_choices(m, env, base, weights):
+    """repro.rs::compound_choices: widen the SPDY instance into the
+    typed lattice.  Returns (layer, is_attn, choices) triples with
+    choices = [(axis, cost, loss), ...] — the prune prefix carries the
+    base (cost, prior) f64s verbatim, then int8 entries at the
+    exact-binary cost/2.5 engine factor (loss = prior + w/64), then
+    low-rank FFN entries at equal-GEMM-work widths
+    (loss = (1 − rank/d_model)·w).  Positional layout matches Problem
+    options ([1] = cost, [2] = loss) so solve_dp runs unchanged."""
+    table = env.table
+    out = []
+    for (layer, is_attn, options) in base.modules:
+        w = weights[layer * 2 + (0 if is_attn else 1)]
+        choices = [("prune", cost, prior) for (_rem, cost, prior) in options]
+        for li, (rem, _cost, prior) in enumerate(options):
+            if rem == 0:
+                continue  # a dropped module has nothing to quantize
+            cost = (table.attn_time(rem) if is_attn else table.mlp_time(rem)) / 2.5
+            choices.append(("quant" if li == 0 else "prune+quant", cost, prior + w / 64.0))
+        if not is_attn:
+            for rank in LOWRANK_RANKS:
+                w_eff = low_rank_ffn_width(m["d_model"], m["d_ff"], rank)
+                if w_eff >= m["d_ff"]:
+                    continue  # prices no cheaper than dense
+                choices.append(("lowrank", table.mlp_time(w_eff),
+                                (1.0 - rank / m["d_model"]) * w))
+        out.append((layer, is_attn, choices))
+    return out
+
+
+def compound_block(m, model_idx, seed, precomputed):
+    """repro.rs::compound_block: the widened lattice on the gpu-sweep
+    env at one 2x target — dense / per-axis restrictions / the full
+    mixed solve, with the prune-only restriction checked against the
+    legacy DP (lift + lower reproduce the base numbers verbatim, so
+    the lifted solve is literally a second identical solve here)."""
+    env_name = "gpu-sweep"
+    env, _status = kick_env(m, env_name, precomputed)
+    weights = sensitivity_weights(seed, model_idx, m["n_layers"] * 2)
+    base = build_problem(m, env, weights)
+    choice_sets = compound_choices(m, env, base, weights)
+    problem = Problem(choice_sets, base.overhead)
+    # 2.5x sits past the all-int8 point (compute/2.5 still pays the
+    # dense overhead), so the solver is forced to genuinely mix axes
+    target = 2.5
+    dense = base.dense_cost()
+    budget = dense / target
+
+    legacy_sol = solve_dp(base, budget)
+    if legacy_sol is None:
+        raise ValueError("legacy DP infeasible at %sx" % target)
+    lifted_sol = solve_dp(base, budget)
+    if lifted_sol is None:
+        raise ValueError("lifted prune-only DP infeasible at %sx" % target)
+    prune_equiv = legacy_sol == lifted_sol
+
+    dense_prof = [0] * len(choice_sets)
+    quant_prof = []
+    lowrank_prof = []
+    for (_layer, _is_attn, ch) in choice_sets:
+        quant_prof.append(next((i for i, c in enumerate(ch) if c[0] == "quant"), 0))
+        lr = [i for i, c in enumerate(ch) if c[0] == "lowrank"]
+        lowrank_prof.append(lr[len(lr) // 2] if lr else 0)
+    mixed_sol = solve_dp(problem, budget)
+    if mixed_sol is None:
+        raise ValueError("widened DP infeasible at %sx" % target)
+
+    def member(tag, prof):
+        ax = [choice_sets[mi][2][ci][0] for mi, ci in enumerate(prof)]
+        return {"tag": tag, "axis": mix_string(ax),
+                "certified": q4(dense / problem.profile_cost(prof)),
+                "loss": q4(proxy_error(problem, prof))}
+
+    members = [
+        member("dense", dense_prof),
+        member("prune", lifted_sol),
+        member("int8", quant_prof),
+        member("lowrank", lowrank_prof),
+        member("compound", mixed_sol),
+    ]
+    mixed_axes = [choice_sets[mi][2][ci][0] for mi, ci in enumerate(mixed_sol)]
+    return {"model": m["name"], "env": env_name, "target": target,
+            "prune_equiv": prune_equiv, "members": members,
+            "axes": [[a, n] for (a, n) in axis_counts(mixed_axes)]}
+
+
+def compound_blocks(seed, precomputed):
+    return [compound_block(m, mi, seed, precomputed) for mi, m in enumerate(MODELS)]
+
+
 def run_kick_tires(seed, precomputed):
     cells, families, adapt = [], [], []
     for mi, m in enumerate(MODELS):
@@ -952,7 +1065,8 @@ def run_kick_tires(seed, precomputed):
             cells.extend(env_cells)
             families.append(block)
     return {"version": 1, "mode": "kick-tires", "seed": seed, "cells": cells,
-            "families": families, "adapt": adapt}
+            "families": families, "adapt": adapt,
+            "compound": compound_blocks(seed, precomputed)}
 
 
 # ----------------------------------------------------------------- main
@@ -977,9 +1091,11 @@ def main(argv=None):
         return 1
 
     statuses = [c["status"] for c in report["cells"]]
-    print("gen_golden: %d cells (%d ran, %d cached, %d error), %d families"
+    print("gen_golden: %d cells (%d ran, %d cached, %d error), %d families, "
+          "%d compound sections"
           % (len(statuses), statuses.count("ran"), statuses.count("cached"),
-             statuses.count("error"), len(report["families"])))
+             statuses.count("error"), len(report["families"]),
+             len(report["compound"])))
 
     json_text = jdump(report) + "\n"
     md_text = render_markdown(report)
