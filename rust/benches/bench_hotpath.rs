@@ -14,12 +14,14 @@
 
 use std::path::Path;
 
+use ziplm::kernel::{with_level, Level};
 use ziplm::runtime::{lit_f32_shaped, lit_scalar_i32, Engine};
 use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
 use ziplm::tensor::{linalg, Tensor};
 use ziplm::util::bench::{header, Bench, JsonReport};
 use ziplm::util::prop::gen;
 use ziplm::util::rng::Rng;
+use ziplm::util::threadpool::with_thread_budget;
 use ziplm::ziplm::{NativeBackend, ObsOps};
 
 fn main() {
@@ -29,17 +31,29 @@ fn main() {
     let mut rep = JsonReport::new();
     let mut rng = Rng::new(0);
 
+    // Baseline keys are pinned to the Scalar dispatch level and a
+    // thread budget of 1 so they stay comparable with the committed
+    // single-threaded scalar C-mirror numbers; the ` simd`/
+    // `native_simd` siblings run at the detected level (DESIGN.md
+    // §14). Bits are identical either way — only throughput moves.
+    let lvl = Level::detect();
+    rep.note("dispatch", &format!("detected level {lvl:?}"));
+
     // native GEMM + transpose (coordinator-side math)
     let a = Tensor::from_vec(&[256, 256], gen::vec_f32(&mut rng, 256 * 256, 1.0));
     let c = Tensor::from_vec(&[256, 256], gen::vec_f32(&mut rng, 256 * 256, 1.0));
-    rep.record(b.run("tensor::matmul 256x256x256", || a.matmul(&c)));
+    rep.record(b.run("tensor::matmul 256x256x256", || {
+        with_level(Level::Scalar, || with_thread_budget(1, || a.matmul(&c)))
+    }));
     let t512 = Tensor::from_vec(&[512, 512], gen::vec_f32(&mut rng, 512 * 512, 1.0));
     rep.record(b.run("tensor::transpose2 512x512", || t512.transpose2()));
 
     // SPD inverse (per-layer Hessian inversion, d_ff=512 realistic):
     // fast (column-sparsity + symmetry) vs reference (two full solves)
     let h512 = Tensor::from_vec(&[512, 512], gen::spd(&mut rng, 512, 0.3));
-    rep.record(bq.run_n("linalg::spd_inverse 512", 5, || linalg::spd_inverse(&h512).unwrap()));
+    rep.record(bq.run_n("linalg::spd_inverse 512", 5, || {
+        with_level(Level::Scalar, || with_thread_budget(1, || linalg::spd_inverse(&h512).unwrap()))
+    }));
     rep.record(bq.run_n("linalg::spd_inverse_ref 512", 3, || linalg::spd_inverse_ref(&h512).unwrap()));
 
     // native OBS score + update at model scale (d=128, F=512)
@@ -47,11 +61,15 @@ fn main() {
     let hinv = linalg::spd_inverse(&h512).unwrap();
     let act = vec![1.0f32; 512];
     let mut nb = NativeBackend::new(1);
-    rep.record(bq.run_n("obs::scores native fc(128x512)", 10, || nb.scores(&w, &hinv, &act).unwrap()));
+    rep.record(bq.run_n("obs::scores native fc(128x512)", 10, || {
+        with_level(Level::Scalar, || nb.scores(&w, &hinv, &act).unwrap())
+    }));
     rep.record(bq.run_n("obs::scores native_ref fc(128x512)", 3, || {
         nb.scores_ref(&w, &hinv, &act).unwrap()
     }));
-    rep.record(bq.run_n("obs::update native fc(128x512)", 10, || nb.update(&w, &hinv, 3).unwrap()));
+    rep.record(bq.run_n("obs::update native fc(128x512)", 10, || {
+        with_level(Level::Scalar, || nb.update(&w, &hinv, 3).unwrap())
+    }));
     rep.record(bq.run_n("obs::update native_ref fc(128x512)", 10, || {
         nb.update_ref(&w, &hinv, 3).unwrap()
     }));
@@ -59,11 +77,41 @@ fn main() {
     // fused multi-step pruning: 45 one-at-a-time removals (the ladder
     // step the database build actually takes), in-place vs clone-based
     rep.record(bq.run_n("obs::multi_update native fc(128x512) n=45", 5, || {
-        nb.multi_update(&w, &hinv, &act, 45).unwrap()
+        with_level(Level::Scalar, || nb.multi_update(&w, &hinv, &act, 45).unwrap())
     }));
     rep.record(bq.run_n("obs::multi_update native_ref fc(128x512) n=45", 2, || {
         nb.multi_update_ref(&w, &hinv, &act, 45).unwrap()
     }));
+
+    // deep removal ladder (460 of 512): the alive-set compact passes
+    // only engage once fewer than half the columns survive
+    rep.record(bq.run_n("obs::multi_update native fc(128x512) deep n=460", 3, || {
+        with_level(Level::Scalar, || nb.multi_update(&w, &hinv, &act, 460).unwrap())
+    }));
+
+    // SIMD siblings at the detected dispatch level (omitted when only
+    // the scalar fallback is compiled in, e.g. --features no-simd, so
+    // the keys never carry scalar numbers under a simd name)
+    if lvl != Level::Scalar {
+        rep.record(b.run("tensor::matmul 256x256x256 simd", || {
+            with_level(lvl, || with_thread_budget(1, || a.matmul(&c)))
+        }));
+        rep.record(bq.run_n("linalg::spd_inverse 512 simd", 5, || {
+            with_level(lvl, || with_thread_budget(1, || linalg::spd_inverse(&h512).unwrap()))
+        }));
+        rep.record(bq.run_n("obs::scores native_simd fc(128x512)", 10, || {
+            with_level(lvl, || nb.scores(&w, &hinv, &act).unwrap())
+        }));
+        rep.record(bq.run_n("obs::update native_simd fc(128x512)", 10, || {
+            with_level(lvl, || nb.update(&w, &hinv, 3).unwrap())
+        }));
+        rep.record(bq.run_n("obs::multi_update native_simd fc(128x512) n=45", 5, || {
+            with_level(lvl, || nb.multi_update(&w, &hinv, &act, 45).unwrap())
+        }));
+        rep.record(bq.run_n("obs::multi_update native_simd fc(128x512) deep n=460", 3, || {
+            with_level(lvl, || nb.multi_update(&w, &hinv, &act, 460).unwrap())
+        }));
+    }
 
     // grouped scoring (attention heads): batched block path, g=64
     let wg = Tensor::from_vec(&[128, 512], gen::vec_f32(&mut rng, 128 * 512, 1.0));

@@ -9,6 +9,10 @@
 #include <string.h>
 #include <math.h>
 #include <time.h>
+#if defined(__x86_64__)
+#include <immintrin.h>
+#define HAVE_SIMD_MIRROR 1
+#endif
 
 static double now_ns(void) {
     struct timespec ts;
@@ -348,7 +352,8 @@ static void multi_update_ref(const float *w0, const float *h0, const float *act0
 }
 
 /* fast single update (g=1): clone once + in-place rank-1 downdate */
-static void update_fast_g1(const float *w0, const float *h0, int idx, int d_row, int d) {
+static void update_fast_g1(const float *w0, const float *h0, int idx, int d_row, int d,
+                           float *out_w, float *out_h) {
     float *w = malloc(sizeof(float) * d_row * d);
     float *h = malloc(sizeof(float) * d * d);
     memcpy(w, w0, sizeof(float) * d_row * d);
@@ -374,13 +379,19 @@ static void update_fast_g1(const float *w0, const float *h0, int idx, int d_row,
     for (int k = 0; k < d; k++) { h[idx * d + k] = 0.0f; h[k * d + idx] = 0.0f; }
     h[idx * d + idx] = 1.0f;
     SINK = w[1] + h[1];
+    if (out_w) memcpy(out_w, w, sizeof(float) * d_row * d);
+    if (out_h) memcpy(out_h, h, sizeof(float) * d * d);
     free(w); free(h); free(p); free(cbuf);
 }
 
-/* PR-1 fast multi_update: one clone, in-place downdates, alive list,
- * fresh colsq recompute per step (kept as the PR-4 "before" entry) */
-static void multi_update_fast(const float *w0, const float *h0, const float *act0,
-                              int d_row, int d, int nrm) {
+/* PR-10 fast multi_update: incremental colsq + the alive-set hybrid.
+ * While more than half the columns are alive the dense per-step passes
+ * (identical to fast_incr above) win on stride-1 bandwidth; once
+ * n_alive*2 < d every pass walks only the compacted alive-index list,
+ * turning the O(d^2) Hinv downdate into O(n_alive^2). Mirrors
+ * NativeBackend::multi_update's compact/dense split 1:1. */
+static void multi_update_alive(const float *w0, const float *h0, const float *act0,
+                               int d_row, int d, int nrm, float *out_w, float *out_h) {
     float *w = malloc(sizeof(float) * d_row * d);
     float *h = malloc(sizeof(float) * d * d);
     float *act = malloc(sizeof(float) * d);
@@ -393,43 +404,80 @@ static void multi_update_fast(const float *w0, const float *h0, const float *act
     double *colsq = malloc(sizeof(double) * d);
     float *p = malloc(sizeof(float) * d);
     float *cbuf = malloc(sizeof(float) * d);
+    for (int j = 0; j < d; j++) colsq[j] = 0.0;
+    for (int i = 0; i < d_row; i++) {
+        const float *row = &w[i * d];
+        for (int j = 0; j < d; j++) colsq[j] += (double)row[j] * (double)row[j];
+    }
     for (int s = 0; s < nrm; s++) {
-        for (int j = 0; j < d; j++) colsq[j] = 0.0;
-        for (int i = 0; i < d_row; i++) {
-            const float *row = &w[i * d];
-            for (int j = 0; j < d; j++) colsq[j] += (double)row[j] * (double)row[j];
-        }
         int best = alive[0];
         float best_s = INFINITY;
         for (int t = 0; t < n_alive; t++) {
             int j = alive[t];
-            float sc = (float)(colsq[j] / (double)h[j * d + j]);
+            double cs = colsq[j] > 0.0 ? colsq[j] : 0.0;
+            float sc = (float)(cs / (double)h[j * d + j]);
             if (sc < best_s) { best_s = sc; best = j; }
         }
         int j = best;
         float hjj_inv = 1.0f / h[j * d + j];
-        for (int k = 0; k < d; k++) p[k] = h[j * d + k] * hjj_inv;
-        for (int i = 0; i < d_row; i++) {
-            float *row = &w[i * d];
-            float wij = row[j];
-            if (wij != 0.0f)
-                for (int k = 0; k < d; k++) row[k] -= wij * p[k];
-            row[j] = 0.0f;
+        if (n_alive * 2 < d) {
+            /* compact passes: p gathered at alive positions only */
+            for (int t = 0; t < n_alive; t++) p[t] = h[j * d + alive[t]] * hjj_inv;
+            for (int i = 0; i < d_row; i++) {
+                float *row = &w[i * d];
+                float wij = row[j];
+                if (wij != 0.0f) {
+                    for (int t = 0; t < n_alive; t++) {
+                        int c = alive[t];
+                        double old = (double)row[c];
+                        row[c] -= wij * p[t];
+                        colsq[c] += (double)row[c] * (double)row[c] - old * old;
+                    }
+                }
+                row[j] = 0.0f;
+            }
+            colsq[j] = 0.0;
+            for (int t = 0; t < n_alive; t++) {
+                int r = alive[t];
+                float c = h[r * d + j];
+                if (c == 0.0f) continue;
+                float *hrow = &h[r * d];
+                for (int tt = 0; tt < n_alive; tt++) hrow[alive[tt]] -= c * p[tt];
+            }
+            for (int t = 0; t < n_alive; t++) { h[j * d + alive[t]] = 0.0f; h[alive[t] * d + j] = 0.0f; }
+            h[j * d + j] = 1.0f;
+        } else {
+            for (int k = 0; k < d; k++) p[k] = h[j * d + k] * hjj_inv;
+            for (int i = 0; i < d_row; i++) {
+                float *row = &w[i * d];
+                float wij = row[j];
+                if (wij != 0.0f) {
+                    for (int k = 0; k < d; k++) {
+                        double old = (double)row[k];
+                        row[k] -= wij * p[k];
+                        colsq[k] += (double)row[k] * (double)row[k] - old * old;
+                    }
+                }
+                row[j] = 0.0f;
+            }
+            colsq[j] = 0.0;
+            for (int r = 0; r < d; r++) cbuf[r] = h[r * d + j];
+            for (int r = 0; r < d; r++) {
+                float c = cbuf[r];
+                if (c == 0.0f) continue;
+                float *hrow = &h[r * d];
+                for (int k = 0; k < d; k++) hrow[k] -= c * p[k];
+            }
+            for (int k = 0; k < d; k++) { h[j * d + k] = 0.0f; h[k * d + j] = 0.0f; }
+            h[j * d + j] = 1.0f;
         }
-        for (int r = 0; r < d; r++) cbuf[r] = h[r * d + j];
-        for (int r = 0; r < d; r++) {
-            float c = cbuf[r];
-            if (c == 0.0f) continue;
-            float *hrow = &h[r * d];
-            for (int k = 0; k < d; k++) hrow[k] -= c * p[k];
-        }
-        for (int k = 0; k < d; k++) { h[j * d + k] = 0.0f; h[k * d + j] = 0.0f; }
-        h[j * d + j] = 1.0f;
         act[j] = 0.0f;
         for (int t = 0; t < n_alive; t++)
             if (alive[t] == j) { memmove(&alive[t], &alive[t + 1], sizeof(int) * (n_alive - t - 1)); n_alive--; break; }
     }
     SINK = w[0] + h[0];
+    if (out_w) memcpy(out_w, w, sizeof(float) * d_row * d);
+    if (out_h) memcpy(out_h, h, sizeof(float) * d * d);
     free(w); free(h); free(act); free(alive); free(colsq); free(p); free(cbuf);
 }
 
@@ -497,6 +545,392 @@ static void multi_update_fast_incr(const float *w0, const float *h0, const float
     free(w); free(h); free(act); free(alive); free(colsq); free(p); free(cbuf);
 }
 
+/* ----------------------------------------------------- simd variants */
+/* Mirrors of kernel/x86.rs's AVX2 fast paths (packed mul+add/sub, no
+ * FMA, XOR negate, per-128-lane f32->f64 widening — the exact idioms
+ * the Rust dispatch layer uses to stay bit-identical to scalar).
+ * Compiled for AVX2 via function-level target attributes so the
+ * baseline -O2 scalar codegen of everything above is undisturbed;
+ * main() only runs them behind __builtin_cpu_supports("avx2"). */
+#ifdef HAVE_SIMD_MIRROR
+
+__attribute__((target("avx2")))
+static void axpy_avx2(float *dst, float a, const float *x, int n) {
+    __m256 va = _mm256_set1_ps(a);
+    int j = 0;
+    for (; j + 8 <= n; j += 8)
+        _mm256_storeu_ps(dst + j,
+                         _mm256_add_ps(_mm256_loadu_ps(dst + j),
+                                       _mm256_mul_ps(va, _mm256_loadu_ps(x + j))));
+    for (; j < n; j++) dst[j] += a * x[j];
+}
+
+__attribute__((target("avx2")))
+static void axpy_minus_avx2(float *dst, float a, const float *x, int n) {
+    __m256 va = _mm256_set1_ps(a);
+    int j = 0;
+    for (; j + 8 <= n; j += 8)
+        _mm256_storeu_ps(dst + j,
+                         _mm256_sub_ps(_mm256_loadu_ps(dst + j),
+                                       _mm256_mul_ps(va, _mm256_loadu_ps(x + j))));
+    for (; j < n; j++) dst[j] -= a * x[j];
+}
+
+__attribute__((target("avx2")))
+static void quad_axpy_avx2(float *dst, const float a[4], const float *b0, const float *b1,
+                           const float *b2, const float *b3, int n) {
+    __m256 a0 = _mm256_set1_ps(a[0]), a1 = _mm256_set1_ps(a[1]);
+    __m256 a2 = _mm256_set1_ps(a[2]), a3 = _mm256_set1_ps(a[3]);
+    int j = 0;
+    for (; j + 8 <= n; j += 8) {
+        __m256 t = _mm256_add_ps(
+            _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(a0, _mm256_loadu_ps(b0 + j)),
+                                        _mm256_mul_ps(a1, _mm256_loadu_ps(b1 + j))),
+                          _mm256_mul_ps(a2, _mm256_loadu_ps(b2 + j))),
+            _mm256_mul_ps(a3, _mm256_loadu_ps(b3 + j)));
+        _mm256_storeu_ps(dst + j, _mm256_add_ps(_mm256_loadu_ps(dst + j), t));
+    }
+    for (; j < n; j++)
+        dst[j] += a[0] * b0[j] + a[1] * b1[j] + a[2] * b2[j] + a[3] * b3[j];
+}
+
+__attribute__((target("avx2")))
+static void colsq_accum_avx2(double *colsq, const float *row, int n) {
+    int j = 0;
+    for (; j + 8 <= n; j += 8) {
+        __m256 v = _mm256_loadu_ps(row + j);
+        __m256d lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        __m256d hi = _mm256_cvtps_pd(_mm256_extractf128_ps(v, 1));
+        _mm256_storeu_pd(colsq + j, _mm256_add_pd(_mm256_loadu_pd(colsq + j),
+                                                  _mm256_mul_pd(lo, lo)));
+        _mm256_storeu_pd(colsq + j + 4, _mm256_add_pd(_mm256_loadu_pd(colsq + j + 4),
+                                                      _mm256_mul_pd(hi, hi)));
+    }
+    for (; j < n; j++) colsq[j] += (double)row[j] * (double)row[j];
+}
+
+__attribute__((target("avx2")))
+static void axpy_minus_colsq_avx2(float *dst, float a, const float *x, double *colsq, int n) {
+    __m256 va = _mm256_set1_ps(a);
+    int j = 0;
+    for (; j + 8 <= n; j += 8) {
+        __m256 old = _mm256_loadu_ps(dst + j);
+        __m256 nw = _mm256_sub_ps(old, _mm256_mul_ps(va, _mm256_loadu_ps(x + j)));
+        _mm256_storeu_ps(dst + j, nw);
+        __m256d olo = _mm256_cvtps_pd(_mm256_castps256_ps128(old));
+        __m256d ohi = _mm256_cvtps_pd(_mm256_extractf128_ps(old, 1));
+        __m256d nlo = _mm256_cvtps_pd(_mm256_castps256_ps128(nw));
+        __m256d nhi = _mm256_cvtps_pd(_mm256_extractf128_ps(nw, 1));
+        _mm256_storeu_pd(colsq + j,
+                         _mm256_add_pd(_mm256_loadu_pd(colsq + j),
+                                       _mm256_sub_pd(_mm256_mul_pd(nlo, nlo),
+                                                     _mm256_mul_pd(olo, olo))));
+        _mm256_storeu_pd(colsq + j + 4,
+                         _mm256_add_pd(_mm256_loadu_pd(colsq + j + 4),
+                                       _mm256_sub_pd(_mm256_mul_pd(nhi, nhi),
+                                                     _mm256_mul_pd(ohi, ohi))));
+    }
+    for (; j < n; j++) {
+        double old = (double)dst[j];
+        dst[j] -= a * x[j];
+        colsq[j] += (double)dst[j] * (double)dst[j] - old * old;
+    }
+}
+
+/* matmul: same KC/NC tiling + quad-row skip as matmul_new, inner loops
+ * through the AVX2 primitives */
+__attribute__((target("avx2")))
+static void matmul_simd(const float *a, const float *b, float *c, int m, int k, int n) {
+    const int KC = 64, NC = 256;
+    memset(c, 0, sizeof(float) * m * n);
+    for (int jb = 0; jb < n; jb += NC) {
+        int jend = jb + NC < n ? jb + NC : n;
+        int jl = jend - jb;
+        for (int kb = 0; kb < k; kb += KC) {
+            int kend = kb + KC < k ? kb + KC : k;
+            int kc = kend - kb, kq = kc - kc % 4;
+            for (int i = 0; i < m; i++) {
+                const float *arow = &a[i * k + kb];
+                float *crow = &c[i * n + jb];
+                int kk = 0;
+                for (; kk < kq; kk += 4) {
+                    float aq[4] = { arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3] };
+                    if (aq[0] != 0.0f || aq[1] != 0.0f || aq[2] != 0.0f || aq[3] != 0.0f) {
+                        int r = kb + kk;
+                        quad_axpy_avx2(crow, aq, &b[r * n + jb], &b[(r + 1) * n + jb],
+                                       &b[(r + 2) * n + jb], &b[(r + 3) * n + jb], jl);
+                    }
+                }
+                for (; kk < kc; kk++) {
+                    float aik = arow[kk];
+                    if (aik != 0.0f) axpy_avx2(crow, aik, &b[(kb + kk) * n + jb], jl);
+                }
+            }
+        }
+    }
+}
+
+/* lane-block spd_inverse: 8 unit columns j0..j0+7 share one forward +
+ * backward triangular sweep, one __m256 per row (linalg.rs lane path) */
+__attribute__((target("avx2")))
+static void spd_inverse_simd(const float *a, float *inv, int n) {
+    float *l = malloc(sizeof(float) * n * n);
+    float *lt = malloc(sizeof(float) * n * n);
+    float *y = malloc(sizeof(float) * n * 8);
+    float *x = malloc(sizeof(float) * n * 8);
+    cholesky(a, l, n);
+    for (int i = 0; i < n; i++)
+        for (int j = 0; j < n; j++) lt[j * n + i] = l[i * n + j];
+    for (int j0 = 0; j0 < n; j0 += 8) {
+        int lanes = n - j0 < 8 ? n - j0 : 8;
+        for (int i = j0; i < n; i++) {
+            __m256 acc = _mm256_setzero_ps();
+            for (int k = j0; k < i; k++)
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(l[i * n + k]),
+                                                       _mm256_loadu_ps(y + k * 8)));
+            __m256 neg = _mm256_xor_ps(acc, _mm256_set1_ps(-0.0f));
+            _mm256_storeu_ps(y + i * 8, _mm256_div_ps(neg, _mm256_set1_ps(l[i * n + i])));
+            if (i - j0 < 8) y[i * 8 + (i - j0)] = 1.0f / l[i * n + i];
+        }
+        for (int i = n - 1; i >= j0; i--) {
+            __m256 s = _mm256_loadu_ps(y + i * 8);
+            for (int k = i + 1; k < n; k++)
+                s = _mm256_sub_ps(s, _mm256_mul_ps(_mm256_set1_ps(lt[i * n + k]),
+                                                   _mm256_loadu_ps(x + k * 8)));
+            _mm256_storeu_ps(x + i * 8, _mm256_div_ps(s, _mm256_set1_ps(l[i * n + i])));
+        }
+        for (int t = 0; t < lanes; t++) {
+            int j = j0 + t;
+            for (int i = j; i < n; i++) { inv[i * n + j] = x[i * 8 + t]; inv[j * n + i] = x[i * 8 + t]; }
+        }
+    }
+    free(l); free(lt); free(y); free(x);
+}
+
+__attribute__((target("avx2")))
+static void scores_simd_g1(const float *w, const float *hinv, const float *act,
+                           int d_row, int d, float *out, double *colsq) {
+    for (int j = 0; j < d; j++) colsq[j] = 0.0;
+    for (int i = 0; i < d_row; i++) colsq_accum_avx2(colsq, &w[i * d], d);
+    for (int j = 0; j < d; j++)
+        out[j] = act[j] > 0.0f ? (float)(colsq[j] / (double)hinv[j * d + j]) : 1e30f;
+}
+
+__attribute__((target("avx2")))
+static void update_simd_g1(const float *w0, const float *h0, int idx, int d_row, int d,
+                           float *out_w, float *out_h) {
+    float *w = malloc(sizeof(float) * d_row * d);
+    float *h = malloc(sizeof(float) * d * d);
+    memcpy(w, w0, sizeof(float) * d_row * d);
+    memcpy(h, h0, sizeof(float) * d * d);
+    float *p = malloc(sizeof(float) * d);
+    float *cbuf = malloc(sizeof(float) * d);
+    float binv = 1.0f / h[idx * d + idx];
+    for (int k = 0; k < d; k++) p[k] = binv * h[idx * d + k];
+    for (int i = 0; i < d_row; i++) {
+        float *row = &w[i * d];
+        float wij = row[idx];
+        if (wij != 0.0f) axpy_minus_avx2(row, wij, p, d);
+        row[idx] = 0.0f;
+    }
+    for (int r = 0; r < d; r++) cbuf[r] = h[r * d + idx];
+    for (int r = 0; r < d; r++) {
+        float c = cbuf[r];
+        if (c == 0.0f) continue;
+        axpy_minus_avx2(&h[r * d], c, p, d);
+    }
+    for (int k = 0; k < d; k++) { h[idx * d + k] = 0.0f; h[k * d + idx] = 0.0f; }
+    h[idx * d + idx] = 1.0f;
+    SINK = w[1] + h[1];
+    if (out_w) memcpy(out_w, w, sizeof(float) * d_row * d);
+    if (out_h) memcpy(out_h, h, sizeof(float) * d * d);
+    free(w); free(h); free(p); free(cbuf);
+}
+
+/* alive-hybrid multi_update with the dense block routed through the
+ * AVX2 primitives (the compact block is index-gather work and stays
+ * scalar, exactly as in the Rust dispatch layer) */
+__attribute__((target("avx2")))
+static void multi_update_alive_simd(const float *w0, const float *h0, const float *act0,
+                                    int d_row, int d, int nrm, float *out_w, float *out_h) {
+    float *w = malloc(sizeof(float) * d_row * d);
+    float *h = malloc(sizeof(float) * d * d);
+    float *act = malloc(sizeof(float) * d);
+    memcpy(w, w0, sizeof(float) * d_row * d);
+    memcpy(h, h0, sizeof(float) * d * d);
+    memcpy(act, act0, sizeof(float) * d);
+    int *alive = malloc(sizeof(int) * d);
+    int n_alive = 0;
+    for (int j = 0; j < d; j++) if (act[j] > 0.0f) alive[n_alive++] = j;
+    double *colsq = malloc(sizeof(double) * d);
+    float *p = malloc(sizeof(float) * d);
+    float *cbuf = malloc(sizeof(float) * d);
+    for (int j = 0; j < d; j++) colsq[j] = 0.0;
+    for (int i = 0; i < d_row; i++) colsq_accum_avx2(colsq, &w[i * d], d);
+    for (int s = 0; s < nrm; s++) {
+        int best = alive[0];
+        float best_s = INFINITY;
+        for (int t = 0; t < n_alive; t++) {
+            int j = alive[t];
+            double cs = colsq[j] > 0.0 ? colsq[j] : 0.0;
+            float sc = (float)(cs / (double)h[j * d + j]);
+            if (sc < best_s) { best_s = sc; best = j; }
+        }
+        int j = best;
+        float hjj_inv = 1.0f / h[j * d + j];
+        if (n_alive * 2 < d) {
+            for (int t = 0; t < n_alive; t++) p[t] = h[j * d + alive[t]] * hjj_inv;
+            for (int i = 0; i < d_row; i++) {
+                float *row = &w[i * d];
+                float wij = row[j];
+                if (wij != 0.0f) {
+                    for (int t = 0; t < n_alive; t++) {
+                        int c = alive[t];
+                        double old = (double)row[c];
+                        row[c] -= wij * p[t];
+                        colsq[c] += (double)row[c] * (double)row[c] - old * old;
+                    }
+                }
+                row[j] = 0.0f;
+            }
+            colsq[j] = 0.0;
+            for (int t = 0; t < n_alive; t++) {
+                int r = alive[t];
+                float c = h[r * d + j];
+                if (c == 0.0f) continue;
+                float *hrow = &h[r * d];
+                for (int tt = 0; tt < n_alive; tt++) hrow[alive[tt]] -= c * p[tt];
+            }
+            for (int t = 0; t < n_alive; t++) { h[j * d + alive[t]] = 0.0f; h[alive[t] * d + j] = 0.0f; }
+            h[j * d + j] = 1.0f;
+        } else {
+            for (int k = 0; k < d; k++) p[k] = h[j * d + k] * hjj_inv;
+            for (int i = 0; i < d_row; i++) {
+                float *row = &w[i * d];
+                float wij = row[j];
+                if (wij != 0.0f) axpy_minus_colsq_avx2(row, wij, p, colsq, d);
+                row[j] = 0.0f;
+            }
+            colsq[j] = 0.0;
+            for (int r = 0; r < d; r++) cbuf[r] = h[r * d + j];
+            for (int r = 0; r < d; r++) {
+                float c = cbuf[r];
+                if (c == 0.0f) continue;
+                axpy_minus_avx2(&h[r * d], c, p, d);
+            }
+            for (int k = 0; k < d; k++) { h[j * d + k] = 0.0f; h[k * d + j] = 0.0f; }
+            h[j * d + j] = 1.0f;
+        }
+        act[j] = 0.0f;
+        for (int t = 0; t < n_alive; t++)
+            if (alive[t] == j) { memmove(&alive[t], &alive[t + 1], sizeof(int) * (n_alive - t - 1)); n_alive--; break; }
+    }
+    SINK = w[0] + h[0];
+    if (out_w) memcpy(out_w, w, sizeof(float) * d_row * d);
+    if (out_h) memcpy(out_h, h, sizeof(float) * d * d);
+    free(w); free(h); free(act); free(alive); free(colsq); free(p); free(cbuf);
+}
+
+#endif /* HAVE_SIMD_MIRROR */
+
+#ifdef HAVE_SIMD_MIRROR
+/* -------------------------------------------------------- selfcheck
+ * `./bench_mirror --selfcheck`: differential BIT-IDENTITY check of
+ * every AVX2 variant against its scalar twin, over remainder-heavy
+ * shapes (the same sweep the Rust wall in tests/kernel_equiv.rs
+ * runs). CI runs this before timing anything, so the mirror's SIMD
+ * numbers are only ever produced by code proven bit-equal to the
+ * scalar baseline it is compared against. */
+static int bits_differ(const char *what, const float *a, const float *b, size_t n) {
+    for (size_t i = 0; i < n; i++) {
+        unsigned ua, ub;
+        memcpy(&ua, &a[i], 4);
+        memcpy(&ub, &b[i], 4);
+        if (ua != ub) {
+            printf("SELFCHECK FAIL %s: first diff at %zu (0x%08x vs 0x%08x)\n", what, i, ua, ub);
+            return 1;
+        }
+    }
+    return 0;
+}
+
+static int selfcheck(void) {
+    int fails = 0;
+    char what[96];
+
+    /* tiled GEMM vs AVX2 tiles, incl. the quad-skip zero path */
+    static const int MS[][3] = {{1, 1, 1}, {3, 5, 7}, {9, 17, 23}, {33, 12, 65}, {64, 70, 66}};
+    for (size_t t = 0; t < sizeof(MS) / sizeof(MS[0]); t++) {
+        int m = MS[t][0], k = MS[t][1], n = MS[t][2];
+        float *a = malloc(sizeof(float) * m * k), *b = malloc(sizeof(float) * k * n);
+        float *c0 = malloc(sizeof(float) * m * n), *c1 = malloc(sizeof(float) * m * n);
+        for (int i = 0; i < m * k; i++) a[i] = (i % 7 == 0) ? 0.0f : frand();
+        for (int i = 0; i < k * n; i++) b[i] = frand();
+        matmul_new(a, b, c0, m, k, n);
+        matmul_simd(a, b, c1, m, k, n);
+        snprintf(what, sizeof(what), "matmul %dx%dx%d", m, k, n);
+        fails += bits_differ(what, c0, c1, (size_t)m * n);
+        free(a); free(b); free(c0); free(c1);
+    }
+
+    /* lane-block spd_inverse at every remainder dim class */
+    static const int NS[] = {1, 2, 3, 4, 5, 6, 7, 8, 9, 12, 15, 16, 17, 25, 33, 40, 114};
+    for (size_t t = 0; t < sizeof(NS) / sizeof(NS[0]); t++) {
+        int n = NS[t];
+        float *h = malloc(sizeof(float) * n * n);
+        float *i0 = malloc(sizeof(float) * n * n), *i1 = malloc(sizeof(float) * n * n);
+        make_spd(h, n, 0.4f);
+        spd_inverse_fast(h, i0, n);
+        spd_inverse_simd(h, i1, n);
+        snprintf(what, sizeof(what), "spd_inverse %d", n);
+        fails += bits_differ(what, i0, i1, (size_t)n * n);
+        free(h); free(i0); free(i1);
+    }
+
+    /* scores / update / multi_update on one remainder-width problem
+     * with dead columns (d=100: 100%8 lanes, every 7th column dead) */
+    {
+        const int dr = 13, d = 100;
+        float *h = malloc(sizeof(float) * d * d), *hi = malloc(sizeof(float) * d * d);
+        float *wv = malloc(sizeof(float) * dr * d), *a = malloc(sizeof(float) * d);
+        make_spd(h, d, 0.4f);
+        spd_inverse_fast(h, hi, d);
+        for (int i = 0; i < dr * d; i++) wv[i] = frand();
+        for (int j = 0; j < d; j++) a[j] = (j % 7 == 3) ? 0.0f : 1.0f;
+
+        float *s0 = malloc(sizeof(float) * d), *s1 = malloc(sizeof(float) * d);
+        double *cq = malloc(sizeof(double) * d);
+        scores_fast_g1(wv, hi, a, dr, d, s0, cq);
+        scores_simd_g1(wv, hi, a, dr, d, s1, cq);
+        fails += bits_differ("scores g=1 d=100", s0, s1, d);
+
+        float *w0 = malloc(sizeof(float) * dr * d), *h0 = malloc(sizeof(float) * d * d);
+        float *w1 = malloc(sizeof(float) * dr * d), *h1 = malloc(sizeof(float) * d * d);
+        update_fast_g1(wv, hi, 4, dr, d, w0, h0);
+        update_simd_g1(wv, hi, 4, dr, d, w1, h1);
+        fails += bits_differ("update g=1 W", w0, w1, (size_t)dr * d);
+        fails += bits_differ("update g=1 Hinv", h0, h1, (size_t)d * d);
+
+        /* shallow stays dense; deep crosses into the compact passes */
+        static const int NRM[] = {6, 78};
+        for (size_t t = 0; t < sizeof(NRM) / sizeof(NRM[0]); t++) {
+            multi_update_alive(wv, hi, a, dr, d, NRM[t], w0, h0);
+            multi_update_alive_simd(wv, hi, a, dr, d, NRM[t], w1, h1);
+            snprintf(what, sizeof(what), "multi_update n=%d W", NRM[t]);
+            fails += bits_differ(what, w0, w1, (size_t)dr * d);
+            snprintf(what, sizeof(what), "multi_update n=%d Hinv", NRM[t]);
+            fails += bits_differ(what, h0, h1, (size_t)d * d);
+        }
+        free(h); free(hi); free(wv); free(a); free(s0); free(s1); free(cq);
+        free(w0); free(h0); free(w1); free(h1);
+    }
+
+    if (fails == 0)
+        printf("SELFCHECK ok: every avx2 variant bit-identical to its scalar twin\n");
+    return fails;
+}
+#endif /* HAVE_SIMD_MIRROR */
+
 /* ----------------------------------------------------------- harness */
 static int cmp_d(const void *a, const void *b) {
     double x = *(const double *)a, y = *(const double *)b;
@@ -519,7 +953,17 @@ static int cmp_d(const void *a, const void *b) {
     printf("BENCH %s | min %.0f | median %.0f | n %d\n", name, samples[0], samples[nn / 2], nn); \
 } while (0)
 
-int main(void) {
+int main(int argc, char **argv) {
+    if (argc > 1 && strcmp(argv[1], "--selfcheck") == 0) {
+#ifdef HAVE_SIMD_MIRROR
+        if (__builtin_cpu_supports("avx2")) return selfcheck() == 0 ? 0 : 1;
+        printf("SELFCHECK skipped: cpu lacks avx2\n");
+        return 0;
+#else
+        printf("SELFCHECK skipped: non-x86 build\n");
+        return 0;
+#endif
+    }
     const int D = 512, DR = 128;
     float *h512 = malloc(sizeof(float) * D * D);
     make_spd(h512, D, 0.3f * D > 1 ? 0.3f : 0.3f); /* damp*n applied inside */
@@ -557,13 +1001,39 @@ int main(void) {
     /* single update g=1 */
     { float *w2, *h2;
       TIME("obs::update native_ref fc(128x512)", 40, { update_ref_g1(w, hinv, 3, DR, D, &w2, &h2); SINK = w2[9] + h2[9]; free(w2); free(h2); }); }
-    TIME("obs::update native fc(128x512)", 40, { update_fast_g1(w, hinv, 3, DR, D); });
+    TIME("obs::update native fc(128x512)", 40, { update_fast_g1(w, hinv, 3, DR, D, NULL, NULL); });
 
-    /* multi_update n=45: ref (clone per step) vs PR-1 fast (fresh
-     * colsq per step) vs PR-4 fast (incremental colsq) */
+    /* multi_update n=45: ref (clone per step) vs PR-4 fast
+     * (incremental colsq, always-dense passes — now the "prev" entry)
+     * vs PR-10 alive-set hybrid (the current NativeBackend path) */
     TIME("obs::multi_update native_ref fc(128x512) n=45", 12, { multi_update_ref(w, hinv, act, DR, D, 45); });
-    TIME("obs::multi_update native_prev fc(128x512) n=45", 20, { multi_update_fast(w, hinv, act, DR, D, 45); });
-    TIME("obs::multi_update native fc(128x512) n=45", 20, { multi_update_fast_incr(w, hinv, act, DR, D, 45); });
+    TIME("obs::multi_update native_prev fc(128x512) n=45", 20, { multi_update_fast_incr(w, hinv, act, DR, D, 45); });
+    TIME("obs::multi_update native fc(128x512) n=45", 20, { multi_update_alive(w, hinv, act, DR, D, 45, NULL, NULL); });
+
+    /* deep removal ladder (460 of 512 structures): the alive-set
+     * hybrid's O(n_alive^2) late steps vs always-dense O(d^2). The
+     * ref (clone + fresh scores per step) is omitted — at this depth
+     * it measures minutes, not a ratio. */
+    TIME("obs::multi_update native_prev fc(128x512) deep n=460", 8, { multi_update_fast_incr(w, hinv, act, DR, D, 460); });
+    TIME("obs::multi_update native fc(128x512) deep n=460", 8, { multi_update_alive(w, hinv, act, DR, D, 460, NULL, NULL); });
+
+#ifdef HAVE_SIMD_MIRROR
+    if (__builtin_cpu_supports("avx2")) {
+        /* per-variant SIMD entries, keyed "simd"/"native_simd": the
+         * check_regression.py gate treats them as informational when
+         * absent (non-x86 runner or the no-simd feature leg) */
+        TIME("tensor::matmul 256x256x256 simd", 30, { matmul_simd(ma, mb, mc, M, M, M); SINK = mc[7]; });
+        TIME("linalg::spd_inverse 512 simd", 12, { spd_inverse_simd(h512, inv, D); SINK = inv[3]; });
+        TIME("obs::scores native_simd fc(128x512)", 60, { scores_simd_g1(w, hinv, act, DR, D, out, colsq); SINK = out[5]; });
+        TIME("obs::update native_simd fc(128x512)", 40, { update_simd_g1(w, hinv, 3, DR, D, NULL, NULL); });
+        TIME("obs::multi_update native_simd fc(128x512) n=45", 20, { multi_update_alive_simd(w, hinv, act, DR, D, 45, NULL, NULL); });
+        TIME("obs::multi_update native_simd fc(128x512) deep n=460", 8, { multi_update_alive_simd(w, hinv, act, DR, D, 460, NULL, NULL); });
+    } else {
+        printf("(simd benches skipped: cpu lacks avx2)\n");
+    }
+#else
+    printf("(simd benches skipped: non-x86 build)\n");
+#endif
 
     return 0;
 }

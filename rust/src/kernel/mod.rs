@@ -1,0 +1,431 @@
+//! Runtime-dispatched SIMD kernel layer (DESIGN.md §14).
+//!
+//! The five hot kernels — OBS `scores`/`update`/`multi_update`
+//! (ziplm/), the SPD inverse (tensor/linalg) and the tiled GEMM
+//! (tensor/) — route their inner loops through [`Dispatch`]: a small
+//! set of slice primitives with explicitly vectorized x86-64
+//! implementations (AVX2 and SSE2, picked once at runtime via CPUID)
+//! and the original scalar loops as the mandatory fallback. The scalar
+//! level is also the only one compiled on non-x86 targets or under
+//! `--features no-simd`, which CI builds and tests so the fallback can
+//! never rot.
+//!
+//! **Determinism contract.** Every primitive is restricted to
+//! element-wise lane arithmetic in the scalar code's exact evaluation
+//! order: packed multiply then packed add/sub — never FMA, which skips
+//! the intermediate rounding and changes bits — sign flips via XOR
+//! (bitwise, like Rust `-x`), and per-lane f32→f64 widening for the
+//! column-sum-of-squares accumulators. Cross-lane reductions are
+//! banned. The SPD inverse vectorizes ACROSS columns instead of within
+//! its dot products ([`Dispatch::spd_solve_lanes`]: each SIMD lane
+//! owns one column's triangular solves, so every lane reproduces the
+//! scalar per-column accumulation order term by term). Consequently
+//! the dispatch level changes throughput, never bits:
+//! `tests/kernel_equiv.rs` asserts exact `to_bits` equality between
+//! every available level and scalar on every primitive (including
+//! remainder-lane lengths), and the certified `repro --kick-tires`
+//! goldens are insensitive to the level by construction.
+//!
+//! [`AliveSet`] carries the compacted alive-column bookkeeping that
+//! lets `multi_update`'s per-step O(d²) passes skip removed columns
+//! instead of multiplying by their exact zeros (DESIGN.md §14).
+
+#[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+mod x86;
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// One vector width the dispatcher can run a primitive at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// The original scalar loops — the mandatory fallback.
+    Scalar,
+    /// 128-bit SSE2 (4 f32 lanes) — baseline on every x86-64 CPU.
+    Sse2,
+    /// 256-bit AVX2 (8 f32 lanes), detected at runtime.
+    Avx2,
+}
+
+impl Level {
+    /// f32 lanes per vector op at this level.
+    pub fn lanes(self) -> usize {
+        match self {
+            Level::Scalar => 1,
+            Level::Sse2 => 4,
+            Level::Avx2 => 8,
+        }
+    }
+
+    /// Best level this machine supports, probed once and cached.
+    pub fn detect() -> Level {
+        static DETECTED: OnceLock<Level> = OnceLock::new();
+        *DETECTED.get_or_init(probe)
+    }
+
+    /// Every level available on this machine, scalar first. Tests
+    /// iterate this to force each level through [`with_level`].
+    pub fn available() -> Vec<Level> {
+        match Level::detect() {
+            Level::Scalar => vec![Level::Scalar],
+            Level::Sse2 => vec![Level::Scalar, Level::Sse2],
+            Level::Avx2 => vec![Level::Scalar, Level::Sse2, Level::Avx2],
+        }
+    }
+
+    fn is_available(self) -> bool {
+        Level::available().contains(&self)
+    }
+}
+
+fn probe() -> Level {
+    #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Level::Avx2
+        } else {
+            // SSE2 is part of the x86-64 baseline: always present.
+            Level::Sse2
+        }
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(feature = "no-simd"))))]
+    {
+        Level::Scalar
+    }
+}
+
+thread_local! {
+    /// Per-thread level override installed by [`with_level`] (tests).
+    static FORCED: Cell<Option<Level>> = const { Cell::new(None) };
+}
+
+/// Run `f` with the dispatch level pinned to `level` on this thread,
+/// restoring the previous override afterwards (also on panic). Panics
+/// if the machine does not support `level` — iterate
+/// [`Level::available`] instead of hardcoding levels.
+///
+/// Kernels capture their [`Dispatch`] once per call *before* fanning
+/// out to worker threads, so a forced level propagates into threaded
+/// sweeps even though the override itself is thread-local.
+pub fn with_level<T>(level: Level, f: impl FnOnce() -> T) -> T {
+    assert!(level.is_available(), "kernel level {level:?} not available on this machine");
+    struct Restore(Option<Level>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCED.with(|c| c.set(self.0));
+        }
+    }
+    let prev = FORCED.with(|c| c.get());
+    let _guard = Restore(prev);
+    FORCED.with(|c| c.set(Some(level)));
+    f()
+}
+
+/// The dispatch handle: resolves the active level once, then routes
+/// each primitive to that level's implementation. `Copy`, so kernels
+/// grab one per call and pass it into their inner loops (and into
+/// scoped worker threads) without re-probing.
+#[derive(Clone, Copy, Debug)]
+pub struct Dispatch {
+    level: Level,
+}
+
+impl Dispatch {
+    /// The active level: a [`with_level`] override if installed on
+    /// this thread, the detected machine level otherwise.
+    pub fn get() -> Dispatch {
+        let level = FORCED.with(|c| c.get()).unwrap_or_else(Level::detect);
+        Dispatch { level }
+    }
+
+    /// A handle pinned to an explicit level (test support). Panics if
+    /// the machine does not support `level`.
+    pub fn at(level: Level) -> Dispatch {
+        assert!(level.is_available(), "kernel level {level:?} not available on this machine");
+        Dispatch { level }
+    }
+
+    pub fn level(self) -> Level {
+        self.level
+    }
+
+    /// f32 lanes per vector op; callers that block work by lane width
+    /// (the SPD column-block solves) size their groups with this.
+    pub fn lanes(self) -> usize {
+        self.level.lanes()
+    }
+
+    /// `dst[i] += a * x[i]` — the P-build / GEMM-tail axpy.
+    pub fn axpy(self, dst: &mut [f32], a: f32, x: &[f32]) {
+        match self.level {
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Sse2 => unsafe { x86::axpy_sse2(dst, a, x) },
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Avx2 => unsafe { x86::axpy_avx2(dst, a, x) },
+            _ => scalar::axpy(dst, a, x),
+        }
+    }
+
+    /// `dst[i] -= a * x[i]` — the OBS downdate axpy.
+    pub fn axpy_minus(self, dst: &mut [f32], a: f32, x: &[f32]) {
+        match self.level {
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Sse2 => unsafe { x86::axpy_minus_sse2(dst, a, x) },
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Avx2 => unsafe { x86::axpy_minus_avx2(dst, a, x) },
+            _ => scalar::axpy_minus(dst, a, x),
+        }
+    }
+
+    /// Fused `multi_update` W pass: `dst[i] -= a * x[i]` while
+    /// maintaining `colsq[i] += dst[i]² − old²` in f64 (the
+    /// incremental column-sum-of-squares from PR 4, one pass).
+    pub fn axpy_minus_colsq(self, dst: &mut [f32], a: f32, x: &[f32], colsq: &mut [f64]) {
+        match self.level {
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Sse2 => unsafe { x86::axpy_minus_colsq_sse2(dst, a, x, colsq) },
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Avx2 => unsafe { x86::axpy_minus_colsq_avx2(dst, a, x, colsq) },
+            _ => scalar::axpy_minus_colsq(dst, a, x, colsq),
+        }
+    }
+
+    /// `colsq[i] += row[i]²` in f64 — the g=1 scores column pass.
+    pub fn colsq_accum(self, colsq: &mut [f64], row: &[f32]) {
+        match self.level {
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Sse2 => unsafe { x86::colsq_accum_sse2(colsq, row) },
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Avx2 => unsafe { x86::colsq_accum_avx2(colsq, row) },
+            _ => scalar::colsq_accum(colsq, row),
+        }
+    }
+
+    /// `dst[i] *= s` — the p = Hinv row / Hinv_jj scaling.
+    pub fn scale(self, dst: &mut [f32], s: f32) {
+        match self.level {
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Sse2 => unsafe { x86::scale_sse2(dst, s) },
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Avx2 => unsafe { x86::scale_avx2(dst, s) },
+            _ => scalar::scale(dst, s),
+        }
+    }
+
+    /// GEMM quad-row inner kernel:
+    /// `dst[j] += a[0]·b0[j] + a[1]·b1[j] + a[2]·b2[j] + a[3]·b3[j]`
+    /// with the scalar expression's left-to-right addition tree.
+    pub fn quad_axpy(
+        self,
+        dst: &mut [f32],
+        a: [f32; 4],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) {
+        match self.level {
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Sse2 => unsafe { x86::quad_axpy_sse2(dst, a, b0, b1, b2, b3) },
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Avx2 => unsafe { x86::quad_axpy_avx2(dst, a, b0, b1, b2, b3) },
+            _ => scalar::quad_axpy(dst, a, b0, b1, b2, b3),
+        }
+    }
+
+    /// Column-block triangular solves for the SPD inverse: lane `l`
+    /// solves `L y = e_{j0+l}` then `Lᵀ x = y`, all lanes in lockstep.
+    ///
+    /// `ld`/`ltd` are the row-major Cholesky factor and its transpose,
+    /// `y`/`x` are `[n][lanes]` interleaved buffers. Lanes whose
+    /// column starts after the current row accumulate exact ±0 terms
+    /// until their pivot row, so each lane's arithmetic is the scalar
+    /// column solve's, term for term (DESIGN.md §14). Lanes past
+    /// `n - j0` (remainder groups) compute harmless garbage that the
+    /// caller never scatters. Panics at the `Scalar` level — the
+    /// caller keeps the original per-column loop as its fallback.
+    pub fn spd_solve_lanes(
+        self,
+        ld: &[f32],
+        ltd: &[f32],
+        n: usize,
+        j0: usize,
+        y: &mut [f32],
+        x: &mut [f32],
+    ) {
+        debug_assert!(y.len() >= n * self.lanes() && x.len() >= n * self.lanes());
+        match self.level {
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Sse2 => unsafe { x86::spd_solve_lanes_sse2(ld, ltd, n, j0, y, x) },
+            #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+            Level::Avx2 => unsafe { x86::spd_solve_lanes_avx2(ld, ltd, n, j0, y, x) },
+            _ => unreachable!("spd_solve_lanes has no scalar level; gate on lanes() > 1"),
+        }
+    }
+}
+
+/// Scalar reference implementations — the mandatory fallback level and
+/// the bit-equality oracle for every vector path.
+pub(crate) mod scalar {
+    pub fn axpy(dst: &mut [f32], a: f32, x: &[f32]) {
+        for (d, v) in dst.iter_mut().zip(x) {
+            *d += a * v;
+        }
+    }
+
+    pub fn axpy_minus(dst: &mut [f32], a: f32, x: &[f32]) {
+        for (d, v) in dst.iter_mut().zip(x) {
+            *d -= a * v;
+        }
+    }
+
+    pub fn axpy_minus_colsq(dst: &mut [f32], a: f32, x: &[f32], colsq: &mut [f64]) {
+        for ((d, v), acc) in dst.iter_mut().zip(x).zip(colsq.iter_mut()) {
+            let old = *d as f64;
+            *d -= a * v;
+            *acc += (*d as f64) * (*d as f64) - old * old;
+        }
+    }
+
+    pub fn colsq_accum(colsq: &mut [f64], row: &[f32]) {
+        for (acc, &v) in colsq.iter_mut().zip(row) {
+            *acc += (v as f64) * (v as f64);
+        }
+    }
+
+    pub fn scale(dst: &mut [f32], s: f32) {
+        for d in dst.iter_mut() {
+            *d *= s;
+        }
+    }
+
+    pub fn quad_axpy(dst: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+        for (j, d) in dst.iter_mut().enumerate() {
+            *d += a[0] * b0[j] + a[1] * b1[j] + a[2] * b2[j] + a[3] * b3[j];
+        }
+    }
+}
+
+// ------------------------------------------------------------ alive set
+
+/// Per-step sweeps of `multi_update` go compact (walk the alive index
+/// list) below this alive fraction, and stay dense (full-width SIMD
+/// rows over exact zeros) above it. Half-width is where the C mirror
+/// measured the indexed-access overhead dropping below the skipped
+/// work on the deep FFN ladder; both passes are bit-identical (dead
+/// columns only ever contribute exact ±0), so the threshold is purely
+/// a performance knob.
+pub fn use_compact_pass(alive: usize, d_col: usize) -> bool {
+    alive * 2 < d_col
+}
+
+/// Compacted ascending list of still-alive column indices: the
+/// bookkeeping behind `multi_update`'s alive-restricted per-step
+/// passes. Invariant (property-tested): after any removal sequence the
+/// list equals the ascending set-difference of the initial indices and
+/// the removed ones.
+#[derive(Clone, Debug)]
+pub struct AliveSet {
+    idx: Vec<usize>,
+}
+
+impl AliveSet {
+    /// Alive indices of an activity mask: ascending `j` with
+    /// `active[j] > 0`.
+    pub fn from_active(active: &[f32]) -> AliveSet {
+        AliveSet { idx: (0..active.len()).filter(|&j| active[j] > 0.0).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// The alive indices, ascending.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.idx
+    }
+
+    pub fn contains(&self, j: usize) -> bool {
+        self.idx.binary_search(&j).is_ok()
+    }
+
+    /// Remove `j`, keeping the list compact and ascending. Returns
+    /// whether it was present.
+    pub fn remove(&mut self, j: usize) -> bool {
+        match self.idx.binary_search(&j) {
+            Ok(pos) => {
+                self.idx.remove(pos);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::disallowed_methods)] // test code: unwrap-on-failure is fine
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_stable_and_listed() {
+        let d = Level::detect();
+        assert_eq!(d, Level::detect());
+        assert!(Level::available().contains(&d));
+        assert_eq!(Level::available()[0], Level::Scalar);
+    }
+
+    #[test]
+    fn forced_level_applies_and_restores() {
+        for lvl in Level::available() {
+            with_level(lvl, || assert_eq!(Dispatch::get().level(), lvl));
+        }
+        assert_eq!(Dispatch::get().level(), Level::detect());
+    }
+
+    #[test]
+    fn no_simd_feature_is_scalar_only() {
+        #[cfg(feature = "no-simd")]
+        assert_eq!(Level::available(), vec![Level::Scalar]);
+    }
+
+    #[test]
+    fn alive_set_basic_ops() {
+        let act = [1.0f32, 0.0, 0.5, 1.0, 0.0];
+        let mut a = AliveSet::from_active(&act);
+        assert_eq!(a.as_slice(), &[0, 2, 3]);
+        assert!(a.contains(2) && !a.contains(1));
+        assert!(a.remove(2));
+        assert!(!a.remove(2));
+        assert_eq!(a.as_slice(), &[0, 3]);
+        assert_eq!(a.len(), 2);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn compact_policy_threshold() {
+        assert!(!use_compact_pass(512, 512));
+        assert!(!use_compact_pass(256, 512));
+        assert!(use_compact_pass(255, 512));
+        assert!(use_compact_pass(0, 512));
+    }
+
+    #[test]
+    fn scalar_primitives_match_plain_loops() {
+        let kd = Dispatch::at(Level::Scalar);
+        let mut dst = vec![1.0f32, 2.0, 3.0];
+        kd.axpy(&mut dst, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(dst, vec![3.0, 4.0, 5.0]);
+        kd.axpy_minus(&mut dst, 1.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(dst, vec![2.0, 3.0, 4.0]);
+        kd.scale(&mut dst, 0.5);
+        assert_eq!(dst, vec![1.0, 1.5, 2.0]);
+        let mut colsq = vec![0.0f64; 3];
+        kd.colsq_accum(&mut colsq, &dst);
+        assert_eq!(colsq, vec![1.0, 2.25, 4.0]);
+    }
+}

@@ -1,0 +1,435 @@
+//! x86-64 SSE2/AVX2 implementations of the [`Dispatch`] primitives.
+//!
+//! Every function here is bit-identical to its `scalar` twin by
+//! construction (DESIGN.md §14): main loops process whole vectors of
+//! 4 (SSE2) or 8 (AVX2) f32 lanes with packed multiply-then-add/sub —
+//! never FMA, which would skip the intermediate rounding — and a
+//! scalar remainder loop that is literally the fallback's body. Sign
+//! flips go through XOR with `-0.0` (bitwise, exactly Rust's unary
+//! `-`), and the f64 column-sum-of-squares accumulators widen each
+//! f32 half-vector with `cvtps_pd`, keeping the per-element
+//! `acc + (new² − old²)` evaluation order. No cross-lane reductions
+//! anywhere.
+//!
+//! Safety: all functions are `unsafe` only because of
+//! `#[target_feature]`; callers (the [`Dispatch`] match arms) must
+//! ensure the feature is available, which `Level::detect`/`Level::at`
+//! guarantee. Slice accesses are bounds-derived from `len()` —
+//! `spd_solve_lanes_*` additionally `debug_assert!`s its buffer-size
+//! contract.
+//!
+//! [`Dispatch`]: super::Dispatch
+
+#![allow(clippy::missing_safety_doc)] // module-private; contract above
+
+use std::arch::x86_64::*;
+
+// ------------------------------------------------------------- axpy
+
+/// `dst[i] += a * x[i]`, 8 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_avx2(dst: &mut [f32], a: f32, x: &[f32]) {
+    let n = dst.len().min(x.len());
+    let dp = dst.as_mut_ptr();
+    let xp = x.as_ptr();
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(dp.add(i));
+        let v = _mm256_loadu_ps(xp.add(i));
+        _mm256_storeu_ps(dp.add(i), _mm256_add_ps(d, _mm256_mul_ps(av, v)));
+        i += 8;
+    }
+    while i < n {
+        *dp.add(i) += a * *xp.add(i);
+        i += 1;
+    }
+}
+
+/// `dst[i] += a * x[i]`, 4 lanes at a time.
+#[target_feature(enable = "sse2")]
+pub unsafe fn axpy_sse2(dst: &mut [f32], a: f32, x: &[f32]) {
+    let n = dst.len().min(x.len());
+    let dp = dst.as_mut_ptr();
+    let xp = x.as_ptr();
+    let av = _mm_set1_ps(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let d = _mm_loadu_ps(dp.add(i));
+        let v = _mm_loadu_ps(xp.add(i));
+        _mm_storeu_ps(dp.add(i), _mm_add_ps(d, _mm_mul_ps(av, v)));
+        i += 4;
+    }
+    while i < n {
+        *dp.add(i) += a * *xp.add(i);
+        i += 1;
+    }
+}
+
+/// `dst[i] -= a * x[i]`, 8 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_minus_avx2(dst: &mut [f32], a: f32, x: &[f32]) {
+    let n = dst.len().min(x.len());
+    let dp = dst.as_mut_ptr();
+    let xp = x.as_ptr();
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(dp.add(i));
+        let v = _mm256_loadu_ps(xp.add(i));
+        _mm256_storeu_ps(dp.add(i), _mm256_sub_ps(d, _mm256_mul_ps(av, v)));
+        i += 8;
+    }
+    while i < n {
+        *dp.add(i) -= a * *xp.add(i);
+        i += 1;
+    }
+}
+
+/// `dst[i] -= a * x[i]`, 4 lanes at a time.
+#[target_feature(enable = "sse2")]
+pub unsafe fn axpy_minus_sse2(dst: &mut [f32], a: f32, x: &[f32]) {
+    let n = dst.len().min(x.len());
+    let dp = dst.as_mut_ptr();
+    let xp = x.as_ptr();
+    let av = _mm_set1_ps(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let d = _mm_loadu_ps(dp.add(i));
+        let v = _mm_loadu_ps(xp.add(i));
+        _mm_storeu_ps(dp.add(i), _mm_sub_ps(d, _mm_mul_ps(av, v)));
+        i += 4;
+    }
+    while i < n {
+        *dp.add(i) -= a * *xp.add(i);
+        i += 1;
+    }
+}
+
+// ------------------------------------------- fused axpy_minus + colsq
+
+/// Fused W pass: `dst[i] -= a * x[i]` plus `colsq[i] += new² − old²`
+/// in f64, 8 f32 lanes / two f64 quad-vectors at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_minus_colsq_avx2(dst: &mut [f32], a: f32, x: &[f32], colsq: &mut [f64]) {
+    let n = dst.len().min(x.len()).min(colsq.len());
+    let dp = dst.as_mut_ptr();
+    let xp = x.as_ptr();
+    let cp = colsq.as_mut_ptr();
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i + 8 <= n {
+        let old = _mm256_loadu_ps(dp.add(i));
+        let v = _mm256_loadu_ps(xp.add(i));
+        let new = _mm256_sub_ps(old, _mm256_mul_ps(av, v));
+        _mm256_storeu_ps(dp.add(i), new);
+        let old_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(old));
+        let old_hi = _mm256_cvtps_pd(_mm256_extractf128_ps(old, 1));
+        let new_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(new));
+        let new_hi = _mm256_cvtps_pd(_mm256_extractf128_ps(new, 1));
+        let c_lo = _mm256_loadu_pd(cp.add(i));
+        let c_hi = _mm256_loadu_pd(cp.add(i + 4));
+        let d_lo = _mm256_sub_pd(_mm256_mul_pd(new_lo, new_lo), _mm256_mul_pd(old_lo, old_lo));
+        let d_hi = _mm256_sub_pd(_mm256_mul_pd(new_hi, new_hi), _mm256_mul_pd(old_hi, old_hi));
+        _mm256_storeu_pd(cp.add(i), _mm256_add_pd(c_lo, d_lo));
+        _mm256_storeu_pd(cp.add(i + 4), _mm256_add_pd(c_hi, d_hi));
+        i += 8;
+    }
+    while i < n {
+        let old = *dp.add(i) as f64;
+        *dp.add(i) -= a * *xp.add(i);
+        let new = *dp.add(i) as f64;
+        *cp.add(i) += new * new - old * old;
+        i += 1;
+    }
+}
+
+/// Fused W pass, 4 f32 lanes / two f64 pair-vectors at a time.
+#[target_feature(enable = "sse2")]
+pub unsafe fn axpy_minus_colsq_sse2(dst: &mut [f32], a: f32, x: &[f32], colsq: &mut [f64]) {
+    let n = dst.len().min(x.len()).min(colsq.len());
+    let dp = dst.as_mut_ptr();
+    let xp = x.as_ptr();
+    let cp = colsq.as_mut_ptr();
+    let av = _mm_set1_ps(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let old = _mm_loadu_ps(dp.add(i));
+        let v = _mm_loadu_ps(xp.add(i));
+        let new = _mm_sub_ps(old, _mm_mul_ps(av, v));
+        _mm_storeu_ps(dp.add(i), new);
+        let old_lo = _mm_cvtps_pd(old);
+        let old_hi = _mm_cvtps_pd(_mm_movehl_ps(old, old));
+        let new_lo = _mm_cvtps_pd(new);
+        let new_hi = _mm_cvtps_pd(_mm_movehl_ps(new, new));
+        let c_lo = _mm_loadu_pd(cp.add(i));
+        let c_hi = _mm_loadu_pd(cp.add(i + 2));
+        let d_lo = _mm_sub_pd(_mm_mul_pd(new_lo, new_lo), _mm_mul_pd(old_lo, old_lo));
+        let d_hi = _mm_sub_pd(_mm_mul_pd(new_hi, new_hi), _mm_mul_pd(old_hi, old_hi));
+        _mm_storeu_pd(cp.add(i), _mm_add_pd(c_lo, d_lo));
+        _mm_storeu_pd(cp.add(i + 2), _mm_add_pd(c_hi, d_hi));
+        i += 4;
+    }
+    while i < n {
+        let old = *dp.add(i) as f64;
+        *dp.add(i) -= a * *xp.add(i);
+        let new = *dp.add(i) as f64;
+        *cp.add(i) += new * new - old * old;
+        i += 1;
+    }
+}
+
+// ------------------------------------------------------- colsq accum
+
+/// `colsq[i] += row[i]²` in f64, 8 f32 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn colsq_accum_avx2(colsq: &mut [f64], row: &[f32]) {
+    let n = colsq.len().min(row.len());
+    let cp = colsq.as_mut_ptr();
+    let rp = row.as_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(rp.add(i));
+        let v_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let v_hi = _mm256_cvtps_pd(_mm256_extractf128_ps(v, 1));
+        let c_lo = _mm256_loadu_pd(cp.add(i));
+        let c_hi = _mm256_loadu_pd(cp.add(i + 4));
+        _mm256_storeu_pd(cp.add(i), _mm256_add_pd(c_lo, _mm256_mul_pd(v_lo, v_lo)));
+        _mm256_storeu_pd(cp.add(i + 4), _mm256_add_pd(c_hi, _mm256_mul_pd(v_hi, v_hi)));
+        i += 8;
+    }
+    while i < n {
+        let v = *rp.add(i) as f64;
+        *cp.add(i) += v * v;
+        i += 1;
+    }
+}
+
+/// `colsq[i] += row[i]²` in f64, 4 f32 lanes at a time.
+#[target_feature(enable = "sse2")]
+pub unsafe fn colsq_accum_sse2(colsq: &mut [f64], row: &[f32]) {
+    let n = colsq.len().min(row.len());
+    let cp = colsq.as_mut_ptr();
+    let rp = row.as_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm_loadu_ps(rp.add(i));
+        let v_lo = _mm_cvtps_pd(v);
+        let v_hi = _mm_cvtps_pd(_mm_movehl_ps(v, v));
+        let c_lo = _mm_loadu_pd(cp.add(i));
+        let c_hi = _mm_loadu_pd(cp.add(i + 2));
+        _mm_storeu_pd(cp.add(i), _mm_add_pd(c_lo, _mm_mul_pd(v_lo, v_lo)));
+        _mm_storeu_pd(cp.add(i + 2), _mm_add_pd(c_hi, _mm_mul_pd(v_hi, v_hi)));
+        i += 4;
+    }
+    while i < n {
+        let v = *rp.add(i) as f64;
+        *cp.add(i) += v * v;
+        i += 1;
+    }
+}
+
+// ------------------------------------------------------------- scale
+
+/// `dst[i] *= s`, 8 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale_avx2(dst: &mut [f32], s: f32) {
+    let n = dst.len();
+    let dp = dst.as_mut_ptr();
+    let sv = _mm256_set1_ps(s);
+    let mut i = 0;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(dp.add(i));
+        _mm256_storeu_ps(dp.add(i), _mm256_mul_ps(d, sv));
+        i += 8;
+    }
+    while i < n {
+        *dp.add(i) *= s;
+        i += 1;
+    }
+}
+
+/// `dst[i] *= s`, 4 lanes at a time.
+#[target_feature(enable = "sse2")]
+pub unsafe fn scale_sse2(dst: &mut [f32], s: f32) {
+    let n = dst.len();
+    let dp = dst.as_mut_ptr();
+    let sv = _mm_set1_ps(s);
+    let mut i = 0;
+    while i + 4 <= n {
+        let d = _mm_loadu_ps(dp.add(i));
+        _mm_storeu_ps(dp.add(i), _mm_mul_ps(d, sv));
+        i += 4;
+    }
+    while i < n {
+        *dp.add(i) *= s;
+        i += 1;
+    }
+}
+
+// --------------------------------------------------------- quad axpy
+
+/// GEMM quad-row kernel with the scalar left-to-right addition tree:
+/// `dst[j] += ((a0·b0[j] + a1·b1[j]) + a2·b2[j]) + a3·b3[j]`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn quad_axpy_avx2(
+    dst: &mut [f32],
+    a: [f32; 4],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) {
+    let n = dst.len().min(b0.len()).min(b1.len()).min(b2.len()).min(b3.len());
+    let dp = dst.as_mut_ptr();
+    let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+    let a0 = _mm256_set1_ps(a[0]);
+    let a1 = _mm256_set1_ps(a[1]);
+    let a2 = _mm256_set1_ps(a[2]);
+    let a3 = _mm256_set1_ps(a[3]);
+    let mut j = 0;
+    while j + 8 <= n {
+        let m0 = _mm256_mul_ps(a0, _mm256_loadu_ps(p0.add(j)));
+        let m1 = _mm256_mul_ps(a1, _mm256_loadu_ps(p1.add(j)));
+        let m2 = _mm256_mul_ps(a2, _mm256_loadu_ps(p2.add(j)));
+        let m3 = _mm256_mul_ps(a3, _mm256_loadu_ps(p3.add(j)));
+        let t = _mm256_add_ps(_mm256_add_ps(_mm256_add_ps(m0, m1), m2), m3);
+        let d = _mm256_loadu_ps(dp.add(j));
+        _mm256_storeu_ps(dp.add(j), _mm256_add_ps(d, t));
+        j += 8;
+    }
+    while j < n {
+        *dp.add(j) += a[0] * *p0.add(j) + a[1] * *p1.add(j) + a[2] * *p2.add(j) + a[3] * *p3.add(j);
+        j += 1;
+    }
+}
+
+/// GEMM quad-row kernel, 4 lanes at a time.
+#[target_feature(enable = "sse2")]
+pub unsafe fn quad_axpy_sse2(
+    dst: &mut [f32],
+    a: [f32; 4],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) {
+    let n = dst.len().min(b0.len()).min(b1.len()).min(b2.len()).min(b3.len());
+    let dp = dst.as_mut_ptr();
+    let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+    let a0 = _mm_set1_ps(a[0]);
+    let a1 = _mm_set1_ps(a[1]);
+    let a2 = _mm_set1_ps(a[2]);
+    let a3 = _mm_set1_ps(a[3]);
+    let mut j = 0;
+    while j + 4 <= n {
+        let m0 = _mm_mul_ps(a0, _mm_loadu_ps(p0.add(j)));
+        let m1 = _mm_mul_ps(a1, _mm_loadu_ps(p1.add(j)));
+        let m2 = _mm_mul_ps(a2, _mm_loadu_ps(p2.add(j)));
+        let m3 = _mm_mul_ps(a3, _mm_loadu_ps(p3.add(j)));
+        let t = _mm_add_ps(_mm_add_ps(_mm_add_ps(m0, m1), m2), m3);
+        let d = _mm_loadu_ps(dp.add(j));
+        _mm_storeu_ps(dp.add(j), _mm_add_ps(d, t));
+        j += 4;
+    }
+    while j < n {
+        *dp.add(j) += a[0] * *p0.add(j) + a[1] * *p1.add(j) + a[2] * *p2.add(j) + a[3] * *p3.add(j);
+        j += 1;
+    }
+}
+
+// ---------------------------------------------- SPD column-block solve
+
+/// Column-block triangular solves for the SPD inverse, AVX2 (8 lanes):
+/// lane `l` runs the scalar forward/backward column solve for column
+/// `j0 + l`, all lanes in lockstep over rows. Lanes whose pivot row
+/// lies below the current row accumulate exact `±0` terms until it
+/// (IEEE `+0 + ±0 = +0`), so every lane's accumulation order is the
+/// scalar column solve's, term for term — the bit-identity argument in
+/// DESIGN.md §14. Rows `i < j0 + l` of `x` and lanes `≥ n − j0` are
+/// garbage the caller never scatters.
+#[target_feature(enable = "avx2")]
+pub unsafe fn spd_solve_lanes_avx2(
+    ld: &[f32],
+    ltd: &[f32],
+    n: usize,
+    j0: usize,
+    y: &mut [f32],
+    x: &mut [f32],
+) {
+    const L: usize = 8;
+    debug_assert!(ld.len() >= n * n && ltd.len() >= n * n);
+    debug_assert!(y.len() >= n * L && x.len() >= n * L);
+    let neg = _mm256_set1_ps(-0.0);
+    let lp = ld.as_ptr();
+    let tp = ltd.as_ptr();
+    let yp = y.as_mut_ptr();
+    let xp = x.as_mut_ptr();
+    // Forward: solve L y = e_{j0+l} per lane over rows j0..n.
+    for i in j0..n {
+        let mut acc = _mm256_setzero_ps();
+        for k in j0..i {
+            let c = _mm256_set1_ps(*lp.add(i * n + k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(c, _mm256_loadu_ps(yp.add(k * L))));
+        }
+        let piv = _mm256_set1_ps(*lp.add(i * n + i));
+        _mm256_storeu_ps(yp.add(i * L), _mm256_div_ps(_mm256_xor_ps(acc, neg), piv));
+        if i - j0 < L {
+            // Pivot row for lane i − j0: y[i] = 1 / L[i,i], exactly as
+            // the scalar solve seeds its unit RHS.
+            *yp.add(i * L + (i - j0)) = 1.0 / *lp.add(i * n + i);
+        }
+    }
+    // Backward: solve Lᵀ x = y per lane over rows n−1..=j0.
+    for i in (j0..n).rev() {
+        let mut s = _mm256_loadu_ps(yp.add(i * L));
+        for k in i + 1..n {
+            let c = _mm256_set1_ps(*tp.add(i * n + k));
+            s = _mm256_sub_ps(s, _mm256_mul_ps(c, _mm256_loadu_ps(xp.add(k * L))));
+        }
+        let piv = _mm256_set1_ps(*lp.add(i * n + i));
+        _mm256_storeu_ps(xp.add(i * L), _mm256_div_ps(s, piv));
+    }
+}
+
+/// Column-block triangular solves, SSE2 (4 lanes). Same construction
+/// as [`spd_solve_lanes_avx2`].
+#[target_feature(enable = "sse2")]
+pub unsafe fn spd_solve_lanes_sse2(
+    ld: &[f32],
+    ltd: &[f32],
+    n: usize,
+    j0: usize,
+    y: &mut [f32],
+    x: &mut [f32],
+) {
+    const L: usize = 4;
+    debug_assert!(ld.len() >= n * n && ltd.len() >= n * n);
+    debug_assert!(y.len() >= n * L && x.len() >= n * L);
+    let neg = _mm_set1_ps(-0.0);
+    let lp = ld.as_ptr();
+    let tp = ltd.as_ptr();
+    let yp = y.as_mut_ptr();
+    let xp = x.as_mut_ptr();
+    for i in j0..n {
+        let mut acc = _mm_setzero_ps();
+        for k in j0..i {
+            let c = _mm_set1_ps(*lp.add(i * n + k));
+            acc = _mm_add_ps(acc, _mm_mul_ps(c, _mm_loadu_ps(yp.add(k * L))));
+        }
+        let piv = _mm_set1_ps(*lp.add(i * n + i));
+        _mm_storeu_ps(yp.add(i * L), _mm_div_ps(_mm_xor_ps(acc, neg), piv));
+        if i - j0 < L {
+            *yp.add(i * L + (i - j0)) = 1.0 / *lp.add(i * n + i);
+        }
+    }
+    for i in (j0..n).rev() {
+        let mut s = _mm_loadu_ps(yp.add(i * L));
+        for k in i + 1..n {
+            let c = _mm_set1_ps(*tp.add(i * n + k));
+            s = _mm_sub_ps(s, _mm_mul_ps(c, _mm_loadu_ps(xp.add(k * L))));
+        }
+        let piv = _mm_set1_ps(*lp.add(i * n + i));
+        _mm_storeu_ps(xp.add(i * L), _mm_div_ps(s, piv));
+    }
+}

@@ -38,6 +38,7 @@ pub mod env;
 pub mod eval;
 #[allow(clippy::disallowed_methods)]
 pub mod exp;
+pub mod kernel;
 #[allow(clippy::disallowed_methods)]
 pub mod latency;
 #[allow(clippy::disallowed_methods)]

@@ -18,6 +18,7 @@
 //! "pruning for sparsity".
 
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_for_slices_mut;
 
 /// One choosable level of a module: time (or params) + error prior.
 #[derive(Clone, Debug)]
@@ -99,6 +100,14 @@ const BUCKETS: usize = 768;
 /// Costs are rounded UP to buckets, so any returned profile genuinely
 /// meets the budget. Returns level indices per module, or None if even
 /// the cheapest assignment exceeds the budget.
+///
+/// Per module, every bucket of the next DP row depends only on the
+/// previous row, so the bucket axis fans out across the thread pool
+/// (nesting-aware like every other threaded kernel here). Each bucket
+/// scans the module's levels in declaration order with strict-<
+/// first-wins — exactly the legacy level-outer loop's tie-breaking —
+/// so dp values, choices, and therefore profiles are bit-identical to
+/// the serial formulation at every thread budget.
 pub fn solve_dp(problem: &SpdyProblem, coeffs: &[f64], budget: f64) -> Option<Vec<usize>> {
     let avail = budget - problem.overhead;
     if avail <= 0.0 {
@@ -112,27 +121,46 @@ pub fn solve_dp(problem: &SpdyProblem, coeffs: &[f64], budget: f64) -> Option<Ve
     dp[0] = 0.0;
     // choice[m][b] = level picked at module m to land on bucket b
     let mut choice = vec![vec![usize::MAX; BUCKETS + 1]; nm];
+    // (next dp value, picked level) per bucket, reused across modules;
+    // the sweep overwrites every cell, so no re-init is needed.
+    let mut row: Vec<(f64, usize)> = vec![(INF, usize::MAX); BUCKETS + 1];
     for (mi, m) in problem.modules.iter().enumerate() {
-        let mut next = vec![INF; BUCKETS + 1];
         let c = coeffs.get(mi).copied().unwrap_or(1.0);
+        // (bucket weight, DP cost, level index), declaration order.
+        let mut lvl: Vec<(usize, f64, usize)> = Vec::with_capacity(m.options.len());
         for (li, opt) in m.options.iter().enumerate() {
             let w = (opt.cost / unit).ceil() as usize;
-            let cost = c * opt.prior * opt.prior;
-            if w > BUCKETS {
-                continue;
-            }
-            for b in w..=BUCKETS {
-                let base = dp[b - w];
-                if base.is_finite() && base + cost < next[b] {
-                    next[b] = base + cost;
-                    choice[mi][b] = li;
-                }
+            if w <= BUCKETS {
+                lvl.push((w, c * opt.prior * opt.prior, li));
             }
         }
-        // prefix-min so dp[b] = best using ≤ b (keep bucket position of best)
-        dp = next;
-        // make dp monotone while keeping choice consistent: we track the
-        // actual bucket used during backtracking instead.
+        // ~16k level-scans per chunk; toy problems stay inline.
+        let min_chunk = (16_384 / lvl.len().max(1)).max(1);
+        parallel_for_slices_mut(&mut row, min_chunk, |start, chunk| {
+            for (off, cell) in chunk.iter_mut().enumerate() {
+                let b = start + off;
+                let mut best = INF;
+                let mut pick = usize::MAX;
+                for &(w, cost, li) in &lvl {
+                    if w > b {
+                        continue;
+                    }
+                    let base = dp[b - w];
+                    if base.is_finite() && base + cost < best {
+                        best = base + cost;
+                        pick = li;
+                    }
+                }
+                *cell = (best, pick);
+            }
+        });
+        for (b, &(v, pick)) in row.iter().enumerate() {
+            dp[b] = v;
+            choice[mi][b] = pick;
+        }
+        // prefix-min so dp[b] = best using ≤ b (keep bucket position of
+        // best): make dp monotone while keeping choice consistent — we
+        // track the actual bucket used during backtracking instead.
         for b in 1..=BUCKETS {
             if dp[b - 1] < dp[b] {
                 dp[b] = dp[b - 1];

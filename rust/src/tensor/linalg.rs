@@ -19,6 +19,7 @@
 //!   property tests and before/after benchmarks.
 
 use super::Tensor;
+use crate::kernel::Dispatch;
 use crate::util::threadpool::parallel_for_slices_mut;
 
 /// Cholesky factor L (lower) of SPD `a`, in place semantics: returns L.
@@ -108,17 +109,59 @@ const SPD_PAR_CHUNK_FLOPS: f64 = 250_000.0;
 /// thread budget is 1 and the sweep runs inline, bit-identical to the
 /// serial path. The O(n²) mirror stays serial — noise next to the
 /// O(n³) solves.
+///
+/// When the [`Dispatch`] level is vector (SSE2/AVX2) the sweep
+/// processes `lanes` consecutive columns per step through
+/// [`Dispatch::spd_solve_lanes`]: lane `l` runs column `j0+l`'s
+/// forward/backward solve in the scalar accumulation order, so the
+/// result is bit-identical to the scalar sweep (DESIGN.md §14) — only
+/// the grouping of the interleaved work order changes.
 pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
     let n = a.rows();
     let l = cholesky(a)?;
     let lt = l.transpose2(); // row-contiguous access for the backward solve
     let ld = &l.data;
     let ltd = &lt.data;
-    // element k ↔ column: front half on even k, back half on odd k
-    let col_of = |k: usize| if k % 2 == 0 { k / 2 } else { n - 1 - k / 2 };
+    let kd = Dispatch::get();
+    let mut inv = Tensor::zeros(&[n, n]);
     // per-column work ≈ (n-j)² MACs, averaging n²/3 over the sweep
     let per_col = (n as f64) * (n as f64) / 3.0;
     let min_cols = ((SPD_PAR_CHUNK_FLOPS / per_col.max(1.0)).ceil() as usize).max(1);
+    if kd.lanes() > 1 {
+        // Vector path: one lane-block of `lanes` consecutive columns
+        // per sweep element; groups interleave front/back for balance.
+        let lanes = kd.lanes();
+        let ngroups = n.div_ceil(lanes);
+        let grp_of = |k: usize| if k % 2 == 0 { k / 2 } else { ngroups - 1 - k / 2 };
+        let min_groups = min_cols.div_ceil(lanes).max(1);
+        let mut groups: Vec<Vec<f32>> = vec![Vec::new(); ngroups];
+        parallel_for_slices_mut(&mut groups, min_groups, |start, chunk| {
+            // Reused across groups without re-zeroing: the solves write
+            // every row ≥ j0 before reading it and never touch rows
+            // < j0, which the scatter below never reads either.
+            let mut y = vec![0f32; n * lanes];
+            let mut x = vec![0f32; n * lanes];
+            for (ci, xbuf) in chunk.iter_mut().enumerate() {
+                let j0 = grp_of(start + ci) * lanes;
+                kd.spd_solve_lanes(ld, ltd, n, j0, &mut y, &mut x);
+                *xbuf = x[j0 * lanes..n * lanes].to_vec();
+            }
+        });
+        for (k, xbuf) in groups.iter().enumerate() {
+            let j0 = grp_of(k) * lanes;
+            for l in 0..lanes.min(n - j0) {
+                let j = j0 + l;
+                for i in j..n {
+                    let v = xbuf[(i - j0) * lanes + l];
+                    inv.data[i * n + j] = v;
+                    inv.data[j * n + i] = v;
+                }
+            }
+        }
+        return Ok(inv);
+    }
+    // element k ↔ column: front half on even k, back half on odd k
+    let col_of = |k: usize| if k % 2 == 0 { k / 2 } else { n - 1 - k / 2 };
     let mut cols: Vec<Vec<f32>> = vec![Vec::new(); n];
     parallel_for_slices_mut(&mut cols, min_cols, |start, chunk| {
         let mut y = vec![0f32; n];
@@ -149,7 +192,6 @@ pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
         }
     });
     // column col_of(k) of the inverse, mirrored across the diagonal.
-    let mut inv = Tensor::zeros(&[n, n]);
     for (k, col) in cols.iter().enumerate() {
         let j = col_of(k);
         for (o, &v) in col.iter().enumerate() {

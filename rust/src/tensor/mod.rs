@@ -10,11 +10,12 @@
 //! Kernel notes (the coordinator-side OBS loop lives or dies on these):
 //!
 //! * [`Tensor::matmul`] tiles over `KC`×`NC` blocks of B so the active
-//!   panel stays cache-resident, with a quad-row FMA inner kernel
-//!   (four broadcast multiply-adds over contiguous B rows — the
-//!   auto-vectorizer turns this into packed FMAs). Rows of C are split
-//!   across scoped threads for large problems. Zero rows of A are
-//!   skipped, which matters once pruning has zeroed whole columns.
+//!   panel stays cache-resident, with a quad-row inner kernel (four
+//!   broadcast multiply-adds over contiguous B rows) routed through
+//!   the explicit SIMD dispatch layer (`kernel::Dispatch::quad_axpy`,
+//!   bit-identical across dispatch levels — DESIGN.md §14). Rows of C
+//!   are split across scoped threads for large problems. Zero rows of
+//!   A are skipped, which matters once pruning has zeroed columns.
 //! * [`Tensor::transpose2`] is cache-blocked (32×32 tiles) so both the
 //!   read and write sides stay within a few cache lines per tile.
 //! * [`Tensor::matvec`] parallelizes over disjoint `&mut` output
@@ -22,6 +23,7 @@
 
 pub mod linalg;
 
+use crate::kernel::Dispatch;
 use crate::util::threadpool::{enter_leaf_region, parallel_for_slices_mut, thread_budget};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -138,10 +140,11 @@ impl Tensor {
     ///
     /// The kernel walks B in `KC`×`NC` tiles so the active panel stays
     /// cache-resident across every row of A that a thread owns, and
-    /// consumes A four scalars at a time (quad-row inner kernel: four
-    /// broadcast FMAs over contiguous B row segments). All-zero A
-    /// quads are skipped — after pruning, whole columns of W are zero
-    /// and this turns into a cheap structural sparsity win.
+    /// consumes A four scalars at a time (quad-row inner kernel:
+    /// four broadcast multiply-adds over contiguous B row segments,
+    /// dispatched to explicit SIMD — `kernel::Dispatch::quad_axpy`).
+    /// All-zero A quads are skipped — after pruning, whole columns of
+    /// W are zero and this turns into a cheap structural sparsity win.
     pub fn matmul(&self, b: &Tensor) -> Tensor {
         const KC: usize = 64; // B-tile rows: 64×NC f32 panel ≈ 64 KiB
         const NC: usize = 256; // B-tile cols: C row segment ≈ 1 KiB
@@ -152,6 +155,9 @@ impl Tensor {
         let a = &self.data;
         let bb = &b.data;
         let cdata = &mut out.data;
+        // Captured BEFORE the scoped spawn below so a with_level
+        // override on the calling thread reaches every worker.
+        let kd = Dispatch::get();
         // `c` holds rows [rows.start, rows.end) of C, row-major.
         let work = |rows: std::ops::Range<usize>, c: &mut [f32]| {
             for jb in (0..n).step_by(NC) {
@@ -174,9 +180,7 @@ impl Tensor {
                                 let b1 = &bb[(r + 1) * n + jb..(r + 1) * n + jend];
                                 let b2 = &bb[(r + 2) * n + jb..(r + 2) * n + jend];
                                 let b3 = &bb[(r + 3) * n + jb..(r + 3) * n + jend];
-                                for j in 0..crow.len() {
-                                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                                }
+                                kd.quad_axpy(crow, [a0, a1, a2, a3], b0, b1, b2, b3);
                             }
                             kk += 4;
                         }
@@ -187,9 +191,7 @@ impl Tensor {
                             }
                             let r = kb + kk;
                             let brow = &bb[r * n + jb..r * n + jend];
-                            for j in 0..crow.len() {
-                                crow[j] += aik * brow[j];
-                            }
+                            kd.axpy(crow, aik, brow);
                         }
                     }
                 }

@@ -60,6 +60,25 @@ pub fn enter_leaf_region() {
     PAR_BUDGET.with(|c| c.set(1));
 }
 
+/// Run `f` with this thread's parallelism budget pinned to `budget`
+/// (clamped to ≥ 1), restoring the previous budget afterwards (also
+/// on panic). Test support for the thread-determinism contract: the
+/// threaded kernels must produce bit-identical results across budgets
+/// {1, 2, max} — this is how a test forces each one deterministically
+/// regardless of the machine's core count.
+pub fn with_thread_budget<T>(budget: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            PAR_BUDGET.with(|c| c.set(self.0));
+        }
+    }
+    let prev = PAR_BUDGET.with(|c| c.get());
+    let _guard = Restore(prev);
+    PAR_BUDGET.with(|c| c.set(budget.max(1)));
+    f()
+}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 pub struct ThreadPool {

@@ -31,6 +31,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::kernel::{use_compact_pass, AliveSet, Dispatch};
 use crate::runtime::{lit_f32_shaped, lit_scalar_i32, lit_to_f32, lit_to_i32, Engine};
 use crate::tensor::{linalg, Tensor};
 use crate::util::threadpool::parallel_for_slices_mut;
@@ -255,6 +256,7 @@ fn obs_update_inplace(
 ) {
     let d_col = w.cols();
     let s0 = idx * g;
+    let kd = Dispatch::get();
     // P = Binv @ Hinv[S, :], built from the still-unmodified rows.
     p.clear();
     p.resize(g * d_col, 0.0);
@@ -266,9 +268,7 @@ fn obs_update_inplace(
                 continue;
             }
             let hrow = &hinv.data[(s0 + t) * d_col..(s0 + t + 1) * d_col];
-            for (pv, hv) in prow.iter_mut().zip(hrow) {
-                *pv += f * hv;
-            }
+            kd.axpy(prow, f, hrow);
         }
     }
     // W rows: w_i -= Σ_t w_i,S[t] · P[t, :], then exact-zero the block.
@@ -281,9 +281,7 @@ fn obs_update_inplace(
                 continue;
             }
             let prow = &p[t * d_col..(t + 1) * d_col];
-            for (rv, pv) in row.iter_mut().zip(prow) {
-                *rv -= wt * pv;
-            }
+            kd.axpy_minus(row, wt, prow);
         }
         row[s0..s0 + g].fill(0.0);
     }
@@ -302,9 +300,7 @@ fn obs_update_inplace(
             }
             let prow = &p[t * d_col..(t + 1) * d_col];
             let hrow = &mut hinv.data[r * d_col..(r + 1) * d_col];
-            for (hv, pv) in hrow.iter_mut().zip(prow) {
-                *hv -= c * pv;
-            }
+            kd.axpy_minus(hrow, c, prow);
         }
     }
     // scrub removed rows/cols, unit diagonal
@@ -327,10 +323,24 @@ impl ObsOps for NativeBackend {
             // Closed form: Binv is the scalar 1/Hinv_jj, so
             // score_j = Σ_i w_ij² / Hinv_jj — one vectorized
             // column-sum-of-squares pass over W, no temporaries.
+            // Below half density the pass walks the alive list instead
+            // of full rows: dead columns are never scored, so skipping
+            // them changes nothing (and never reads or writes them —
+            // the poison-sentinel invariant); at high density the
+            // full-width pass runs through the SIMD dispatch.
+            let kd = Dispatch::get();
+            let alive = AliveSet::from_active(&active[..n.min(active.len())]);
             let mut colsq = vec![0f64; d_col];
-            for i in 0..w.rows() {
-                for (acc, &v) in colsq.iter_mut().zip(w.row(i)) {
-                    *acc += (v as f64) * (v as f64);
+            if use_compact_pass(alive.len(), d_col) {
+                for i in 0..w.rows() {
+                    let row = w.row(i);
+                    for &c in alive.as_slice() {
+                        colsq[c] += (row[c] as f64) * (row[c] as f64);
+                    }
+                }
+            } else {
+                for i in 0..w.rows() {
+                    kd.colsq_accum(&mut colsq, w.row(i));
                 }
             }
             for j in 0..n {
@@ -401,15 +411,16 @@ impl ObsOps for NativeBackend {
         assert_eq!(self.g, 1, "multi_update is a g=1 path");
         let d_col = w.cols();
         let d_row = w.rows();
+        let kd = Dispatch::get();
         // One clone up front; every removal step then works in place
         // (the reference path re-cloned both matrices per step:
         // O(n·(d_col² + d_row·d_col)) copied floats).
         let mut w = w.clone();
         let mut h = hinv.clone();
         let mut act = active.to_vec();
-        // Incremental bookkeeping: ascending list of still-active
-        // columns, shrunk as structures are removed.
-        let mut alive: Vec<usize> = (0..d_col.min(act.len())).filter(|&j| act[j] > 0.0).collect();
+        // Incremental bookkeeping: compacted ascending alive-column
+        // list ([`AliveSet`]), shrunk as structures are removed.
+        let mut alive = AliveSet::from_active(&act[..d_col.min(act.len())]);
         let mut order = Vec::with_capacity(n);
         // Column sums of squares, computed ONCE and then maintained
         // incrementally inside the per-step W axpy pass (the pass
@@ -417,10 +428,26 @@ impl ObsOps for NativeBackend {
         // whole-matrix rescan per step is pure overhead). Accumulation
         // stays in f64; a column the downdates cancel to ~0 can drift
         // a few ulps negative, so scores clamp at 0 when read.
+        //
+        // Every per-step sweep has two variants picked by
+        // [`use_compact_pass`]: a dense full-width pass (SIMD through
+        // the dispatch layer) and a compact one that walks the alive
+        // list. Dead entries hold exact zeros, so both are
+        // bit-identical — the compact variant just skips the
+        // multiply-by-zero work, and never reads or writes dead
+        // entries at all (the poison-sentinel invariant the alive-set
+        // tests pin down).
         let mut colsq = vec![0f64; d_col];
-        for i in 0..d_row {
-            for (acc, &v) in colsq.iter_mut().zip(w.row(i)) {
-                *acc += (v as f64) * (v as f64);
+        if use_compact_pass(alive.len(), d_col) {
+            for i in 0..d_row {
+                let row = w.row(i);
+                for &c in alive.as_slice() {
+                    colsq[c] += (row[c] as f64) * (row[c] as f64);
+                }
+            }
+        } else {
+            for i in 0..d_row {
+                kd.colsq_accum(&mut colsq, w.row(i));
             }
         }
         let mut p = vec![0f32; d_col];
@@ -433,9 +460,9 @@ impl ObsOps for NativeBackend {
             // mirrors `argmin(&scores)` exactly (ascending scan,
             // strict <, f32 compare) so removal order is identical to
             // the step-by-step path up to f64 accumulation order.
-            let mut best = alive[0];
+            let mut best = alive.as_slice()[0];
             let mut best_s = f32::INFINITY;
-            for &j in &alive {
+            for &j in alive.as_slice() {
                 let s = (colsq[j].max(0.0) / h.at2(j, j) as f64) as f32;
                 if s < best_s {
                     best_s = s;
@@ -452,43 +479,80 @@ impl ObsOps for NativeBackend {
                 return Err(anyhow!("multi_update: singular pivot at {j}"));
             }
             let hjj_inv = 1.0 / hjj;
-            p.copy_from_slice(h.row(j));
-            for v in p.iter_mut() {
-                *v *= hjj_inv;
-            }
-            for i in 0..d_row {
-                let row = w.row_mut(i);
-                let wij = row[j];
-                if wij != 0.0 {
-                    for ((rv, pv), acc) in row.iter_mut().zip(&p).zip(colsq.iter_mut()) {
-                        let old = *rv as f64;
-                        *rv -= wij * pv;
-                        *acc += (*rv as f64) * (*rv as f64) - old * old;
+            if use_compact_pass(alive.len(), d_col) {
+                // Compact passes: gather p at alive positions, update
+                // only alive entries, scrub only alive entries of
+                // row/col j (the dead ones are exact zeros already).
+                let idx = alive.as_slice();
+                let na = idx.len();
+                for (t, &c) in idx.iter().enumerate() {
+                    p[t] = h.at2(j, c) * hjj_inv;
+                }
+                let pc = &p[..na];
+                for i in 0..d_row {
+                    let row = w.row_mut(i);
+                    let wij = row[j];
+                    if wij != 0.0 {
+                        for (t, &c) in idx.iter().enumerate() {
+                            let old = row[c] as f64;
+                            row[c] -= wij * pc[t];
+                            colsq[c] += (row[c] as f64) * (row[c] as f64) - old * old;
+                        }
+                    }
+                    row[j] = 0.0;
+                }
+                colsq[j] = 0.0;
+                // Reading h[r, j] inside the loop matches the dense
+                // path's pre-gathered cbuf: each row update only writes
+                // its own row, so every h[r, j] read is still pristine.
+                for &r in idx {
+                    if r == j {
+                        continue; // row j is scrubbed below either way
+                    }
+                    let c = h.at2(r, j);
+                    if c == 0.0 {
+                        continue;
+                    }
+                    for (t, &col) in idx.iter().enumerate() {
+                        h.data[r * d_col + col] -= c * pc[t];
                     }
                 }
-                row[j] = 0.0;
-            }
-            colsq[j] = 0.0;
-            for (r, c) in cbuf.iter_mut().enumerate() {
-                *c = h.at2(r, j);
-            }
-            for r in 0..d_col {
-                let c = cbuf[r];
-                if c == 0.0 {
-                    continue; // dead rows stay untouched — alive-set bookkeeping
+                for &c in idx {
+                    h.data[j * d_col + c] = 0.0;
+                    h.data[c * d_col + j] = 0.0;
                 }
-                let hrow = h.row_mut(r);
-                for (hv, pv) in hrow.iter_mut().zip(&p) {
-                    *hv -= c * pv;
+                h.data[j * d_col + j] = 1.0;
+            } else {
+                p.copy_from_slice(h.row(j));
+                kd.scale(&mut p, hjj_inv);
+                for i in 0..d_row {
+                    let row = w.row_mut(i);
+                    let wij = row[j];
+                    if wij != 0.0 {
+                        kd.axpy_minus_colsq(row, wij, &p, &mut colsq);
+                    }
+                    row[j] = 0.0;
                 }
+                colsq[j] = 0.0;
+                for (r, c) in cbuf.iter_mut().enumerate() {
+                    *c = h.at2(r, j);
+                }
+                for r in 0..d_col {
+                    let c = cbuf[r];
+                    if c == 0.0 {
+                        continue; // dead rows stay untouched — alive-set bookkeeping
+                    }
+                    let hrow = h.row_mut(r);
+                    kd.axpy_minus(hrow, c, &p);
+                }
+                h.row_mut(j).fill(0.0);
+                for r in 0..d_col {
+                    h.data[r * d_col + j] = 0.0;
+                }
+                h.data[j * d_col + j] = 1.0;
             }
-            h.row_mut(j).fill(0.0);
-            for r in 0..d_col {
-                h.data[r * d_col + j] = 0.0;
-            }
-            h.data[j * d_col + j] = 1.0;
             act[j] = 0.0;
-            alive.retain(|&x| x != j);
+            alive.remove(j);
             order.push(j);
         }
         Ok((w, h, act, order))

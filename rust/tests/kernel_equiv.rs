@@ -1,0 +1,620 @@
+//! Differential-testing wall for the SIMD dispatch layer (DESIGN.md
+//! §14): every (SIMD, scalar, reference) kernel triple over randomized
+//! shapes, with explicit remainder-lane lengths, g=1 vs g>1, the exact
+//! committed seeds from prior PRs' proptests re-run through the
+//! dispatch layer, alive-set poison/bookkeeping invariants, and
+//! thread-budget bit-identity for every threaded kernel.
+//!
+//! The contract under test is strict: a dispatch level or a thread
+//! budget may change throughput, never bits. Comparisons here are
+//! `to_bits` equality, not tolerances — tolerances are reserved for
+//! the genuinely different reference formulations (`scores_ref`,
+//! `update_ref`, `multi_update_ref`, `spd_inverse_ref`, naive GEMM).
+
+#![allow(clippy::disallowed_methods)] // test code: unwrap-on-failure is fine
+
+use ziplm::kernel::{use_compact_pass, with_level, AliveSet, Dispatch, Level};
+use ziplm::spdy::{self, LevelOpt, ModuleLevels, SpdyProblem};
+use ziplm::tensor::{linalg, Tensor};
+use ziplm::util::prop::{gen, Prop};
+use ziplm::util::rng::Rng;
+use ziplm::util::threadpool::{parallel_tasks, with_thread_budget};
+use ziplm::ziplm::{NativeBackend, ObsOps, BIG};
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tbits(t: &Tensor) -> Vec<u32> {
+    bits32(&t.data)
+}
+
+fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Inject exact `+0.0` and `-0.0` entries: the dead-column case the
+/// OBS passes lean on (and the one spot where a wrong negation idiom —
+/// subtract-from-zero instead of XOR — would flip bits).
+fn sprinkle_zeros(mut v: Vec<f32>) -> Vec<f32> {
+    for i in (0..v.len()).step_by(5) {
+        v[i] = 0.0;
+    }
+    for i in (2..v.len()).step_by(7) {
+        v[i] = -0.0;
+    }
+    v
+}
+
+// ------------------------------------------------- primitive triples
+
+/// Lengths covering every residue mod 4 (SSE2) and mod 8 (AVX2), the
+/// empty slice, exact multiples, and one long vector.
+const LENS: &[usize] = &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 11, 12, 13, 15, 16, 17, 31, 32, 33, 100];
+
+#[test]
+fn primitives_bit_identical_across_levels_at_all_remainder_lengths() {
+    let scalar = Dispatch::at(Level::Scalar);
+    let mut r = Rng::new(0x5a1b_c0de);
+    for &len in LENS {
+        let x = sprinkle_zeros(gen::vec_f32(&mut r, len, 1.0));
+        let d0 = sprinkle_zeros(gen::vec_f32(&mut r, len, 1.0));
+        let b0 = gen::vec_f32(&mut r, len, 1.0);
+        let b1 = sprinkle_zeros(gen::vec_f32(&mut r, len, 1.0));
+        let b2 = gen::vec_f32(&mut r, len, 1.0);
+        let b3 = gen::vec_f32(&mut r, len, 1.0);
+        let c0: Vec<f64> = (0..len).map(|_| r.normal_f32(1.0) as f64).collect();
+        let a = r.normal_f32(1.0);
+        let q = [r.normal_f32(1.0), -0.0, r.normal_f32(1.0), 0.0];
+        for &lvl in Level::available().iter().skip(1) {
+            let kd = Dispatch::at(lvl);
+            let mut want = d0.clone();
+            let mut got = d0.clone();
+            scalar.axpy(&mut want, a, &x);
+            kd.axpy(&mut got, a, &x);
+            assert_eq!(bits32(&got), bits32(&want), "axpy {lvl:?} len {len}");
+
+            let mut want = d0.clone();
+            let mut got = d0.clone();
+            scalar.axpy_minus(&mut want, a, &x);
+            kd.axpy_minus(&mut got, a, &x);
+            assert_eq!(bits32(&got), bits32(&want), "axpy_minus {lvl:?} len {len}");
+
+            let mut want = d0.clone();
+            let mut got = d0.clone();
+            scalar.scale(&mut want, a);
+            kd.scale(&mut got, a);
+            assert_eq!(bits32(&got), bits32(&want), "scale {lvl:?} len {len}");
+
+            let mut want = c0.clone();
+            let mut got = c0.clone();
+            scalar.colsq_accum(&mut want, &x);
+            kd.colsq_accum(&mut got, &x);
+            assert_eq!(bits64(&got), bits64(&want), "colsq_accum {lvl:?} len {len}");
+
+            let mut want = d0.clone();
+            let mut wantc = c0.clone();
+            let mut got = d0.clone();
+            let mut gotc = c0.clone();
+            scalar.axpy_minus_colsq(&mut want, a, &x, &mut wantc);
+            kd.axpy_minus_colsq(&mut got, a, &x, &mut gotc);
+            assert_eq!(bits32(&got), bits32(&want), "axpy_minus_colsq dst {lvl:?} len {len}");
+            assert_eq!(bits64(&gotc), bits64(&wantc), "axpy_minus_colsq acc {lvl:?} len {len}");
+
+            let mut want = d0.clone();
+            let mut got = d0.clone();
+            scalar.quad_axpy(&mut want, q, &b0, &b1, &b2, &b3);
+            kd.quad_axpy(&mut got, q, &b0, &b1, &b2, &b3);
+            assert_eq!(bits32(&got), bits32(&want), "quad_axpy {lvl:?} len {len}");
+        }
+    }
+}
+
+// -------------------------------------------------- SPD inverse triple
+
+#[test]
+fn spd_inverse_bit_identical_across_levels_incl_remainder_dims() {
+    // Dims deliberately straddle the lane widths: n < lanes exercises
+    // the padding lanes of a single remainder group, n ≡ 1..lane−1
+    // (mod lanes) exercises the final partial group, and the larger
+    // dims cover multiple full lane-blocks.
+    let mut r = Rng::new(0x5a1b_c0de);
+    for &n in &[1usize, 2, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 25, 33, 40] {
+        let a = Tensor::from_vec(&[n, n], gen::spd(&mut r, n, 0.5));
+        let base = with_level(Level::Scalar, || linalg::spd_inverse(&a).unwrap());
+        for lvl in Level::available() {
+            let got = with_level(lvl, || linalg::spd_inverse(&a).unwrap());
+            assert_eq!(tbits(&got), tbits(&base), "spd_inverse {lvl:?} n {n}");
+        }
+        let rf = linalg::spd_inverse_ref(&a).unwrap();
+        let d = base.max_abs_diff(&rf);
+        let tol = 1e-3 * (1.0 + n as f32 / 32.0);
+        assert!(d <= tol, "spd_inverse vs ref n {n}: diff {d} tol {tol}");
+    }
+}
+
+// ------------------------------------------------------- OBS triples
+
+/// Random structured-OBS problem — the committed generator from the
+/// proptests suite, reproduced verbatim so the DEFAULT_SEED + case
+/// seeds regenerate the exact instances prior PRs certified.
+fn random_obs_problem(r: &mut Rng, g: usize) -> (Tensor, Tensor, Vec<f32>) {
+    let n = 3 + r.below(6);
+    let d_row = 2 + r.below(8);
+    let d_col = n * g;
+    let w = Tensor::from_vec(&[d_row, d_col], gen::vec_f32(r, d_row * d_col, 1.0));
+    let h = Tensor::from_vec(&[d_col, d_col], gen::spd(r, d_col, 0.4));
+    let hinv = linalg::spd_inverse(&h).unwrap();
+    let mut active = vec![1.0f32; n];
+    for j in 0..n {
+        if r.f64() < 0.2 {
+            active[j] = 0.0;
+        }
+    }
+    if !active.iter().any(|&a| a > 0.0) {
+        active[r.below(n)] = 1.0;
+    }
+    (w, hinv, active)
+}
+
+#[test]
+fn scores_triple_levels_bit_identical_and_match_ref_g1_g8() {
+    for &g in &[1usize, 8] {
+        Prop::new(20).check_msg(
+            "dispatched scores: levels bit-identical, ref within 1e-4",
+            |r| random_obs_problem(r, g),
+            |(w, hinv, active)| {
+                let mut ops = NativeBackend::new(g);
+                let base = with_level(Level::Scalar, || ops.scores(w, hinv, active))
+                    .map_err(|e| e.to_string())?;
+                for lvl in Level::available() {
+                    let got = with_level(lvl, || ops.scores(w, hinv, active))
+                        .map_err(|e| e.to_string())?;
+                    if bits32(&got) != bits32(&base) {
+                        return Err(format!("g={g} level {lvl:?} diverged from scalar"));
+                    }
+                }
+                let slow = ops.scores_ref(w, hinv, active).map_err(|e| e.to_string())?;
+                for (j, (&f, &s)) in base.iter().zip(&slow).enumerate() {
+                    if active[j] <= 0.0 {
+                        if f < 1e29 || s < 1e29 {
+                            return Err(format!("g={g} j={j}: inactive not BIG ({f} vs {s})"));
+                        }
+                    } else if !rel_close(f, s, 1e-4) {
+                        return Err(format!("g={g} j={j}: fast {f} vs ref {s}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn update_triple_levels_bit_identical_and_match_ref_g1_g8() {
+    for &g in &[1usize, 8] {
+        Prop::new(15).check_msg(
+            "dispatched update: levels bit-identical, ref within 1e-4",
+            |r| {
+                let (w, hinv, active) = random_obs_problem(r, g);
+                let n = active.len();
+                let alive: Vec<usize> = (0..n).filter(|&j| active[j] > 0.0).collect();
+                let idx = alive[r.below(alive.len())];
+                (w, hinv, idx)
+            },
+            |(w, hinv, idx)| {
+                let mut ops = NativeBackend::new(g);
+                let (bw, bh) = with_level(Level::Scalar, || ops.update(w, hinv, *idx))
+                    .map_err(|e| e.to_string())?;
+                for lvl in Level::available() {
+                    let (gw, gh) = with_level(lvl, || ops.update(w, hinv, *idx))
+                        .map_err(|e| e.to_string())?;
+                    if tbits(&gw) != tbits(&bw) || tbits(&gh) != tbits(&bh) {
+                        return Err(format!("g={g} idx={idx} level {lvl:?} diverged"));
+                    }
+                }
+                let (rw, rh) = ops.update_ref(w, hinv, *idx).map_err(|e| e.to_string())?;
+                let (dw, dh) = (bw.max_abs_diff(&rw), bh.max_abs_diff(&rh));
+                if dw > 1e-4 || dh > 1e-4 {
+                    return Err(format!("g={g} idx={idx}: dW {dw} dH {dh}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn multi_update_deep_ladder_triple_committed_seeds() {
+    // The EXACT generator and seeds (DEFAULT_SEED + case) of PR 4's
+    // committed deep-removal proptest, re-run through the dispatch
+    // layer. The deep ladder starts dense and crosses the
+    // use_compact_pass threshold mid-run, so one instance exercises
+    // the dense SIMD pass, the compact alive-list pass, AND the
+    // handoff between them — all of which must be invisible in bits.
+    Prop::new(12).check_msg(
+        "deep multi_update: levels bit-identical, ref within 1e-4",
+        |r| {
+            let n = 12 + r.below(13); // 12..=24 columns
+            let d_row = 4 + r.below(13); // 4..=16 rows
+            let w = Tensor::from_vec(&[d_row, n], gen::vec_f32(r, d_row * n, 1.0));
+            let h = Tensor::from_vec(&[n, n], gen::spd(r, n, 0.4));
+            let hinv = linalg::spd_inverse(&h).unwrap();
+            let n_remove = n - 1 - r.below(3); // deep: 1..=3 survivors
+            (w, hinv, n, n_remove)
+        },
+        |(w, hinv, _n, n_remove)| {
+            let active = vec![1.0f32; w.cols()];
+            let mut ops = NativeBackend::new(1);
+            let (bw, bh, ba, bo) =
+                with_level(Level::Scalar, || ops.multi_update(w, hinv, &active, *n_remove))
+                    .map_err(|e| e.to_string())?;
+            for lvl in Level::available() {
+                let (gw, gh, ga, go) =
+                    with_level(lvl, || ops.multi_update(w, hinv, &active, *n_remove))
+                        .map_err(|e| e.to_string())?;
+                if go != bo || ga != ba || tbits(&gw) != tbits(&bw) || tbits(&gh) != tbits(&bh) {
+                    return Err(format!("level {lvl:?} diverged from scalar"));
+                }
+            }
+            let (rw, rh, ra, ro) =
+                ops.multi_update_ref(w, hinv, &active, *n_remove).map_err(|e| e.to_string())?;
+            if bo != ro {
+                let mut sf = bo.clone();
+                let mut sr = ro.clone();
+                sf.sort_unstable();
+                sr.sort_unstable();
+                if sf != sr {
+                    return Err(format!("removed sets differ: {bo:?} vs {ro:?}"));
+                }
+            }
+            if ba != ra {
+                return Err("active mask mismatch".into());
+            }
+            let (dw, dh) = (bw.max_abs_diff(&rw), bh.max_abs_diff(&rh));
+            if dw > 1e-4 || dh > 1e-4 {
+                return Err(format!("dW {dw} dH {dh}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------- GEMM triple
+
+fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for t in 0..k {
+            let av = a.at2(i, t);
+            for j in 0..n {
+                c.data[i * n + j] += av * b.at2(t, j);
+            }
+        }
+    }
+    c
+}
+
+#[test]
+fn matmul_bit_identical_across_levels_and_close_to_naive_ref() {
+    let mut r = Rng::new(0x5a1b_c0de);
+    let shapes = [(1usize, 1usize, 1usize), (3, 5, 7), (9, 17, 23), (33, 12, 65), (80, 70, 66)];
+    for &(m, k, n) in &shapes {
+        // zero quads exercise the structural-sparsity skip identically
+        // at every level (the skip sits above the dispatch layer)
+        let a = Tensor::from_vec(&[m, k], sprinkle_zeros(gen::vec_f32(&mut r, m * k, 1.0)));
+        let b = Tensor::from_vec(&[k, n], gen::vec_f32(&mut r, k * n, 1.0));
+        let base = with_level(Level::Scalar, || a.matmul(&b));
+        for lvl in Level::available() {
+            let got = with_level(lvl, || a.matmul(&b));
+            assert_eq!(tbits(&got), tbits(&base), "matmul {lvl:?} {m}x{k}x{n}");
+        }
+        let naive = matmul_naive(&a, &b);
+        let scale = naive.data.iter().fold(1.0f32, |mx, &v| mx.max(v.abs()));
+        let d = base.max_abs_diff(&naive);
+        assert!(d <= 1e-3 * scale, "matmul vs naive {m}x{k}x{n}: diff {d} scale {scale}");
+    }
+}
+
+// ------------------------------------------- alive-set invariants
+
+/// Poisoned clones of a clean (scrubbed) OBS instance: dead W columns
+/// and dead Hinv rows/cols hold loud sentinels instead of the zeros a
+/// real removal leaves behind. A pass that never reads dead entries
+/// produces bit-identical alive outputs; one that never writes them
+/// leaves every sentinel untouched.
+const W_POISON: f32 = 7777.5;
+const H_POISON: f32 = -3333.25;
+
+struct PoisonCase {
+    alive_idx: Vec<usize>,
+    d_row: usize,
+    d_col: usize,
+    active: Vec<f32>,
+    w_clean: Tensor,
+    h_clean: Tensor,
+    w_poison: Tensor,
+    h_poison: Tensor,
+}
+
+fn poison_case(alive_idx: Vec<usize>, d_row: usize, d_col: usize) -> PoisonCase {
+    let mut r = Rng::new(0x5a1b_c0de);
+    let mut w_clean = Tensor::from_vec(&[d_row, d_col], gen::vec_f32(&mut r, d_row * d_col, 1.0));
+    let h0 = Tensor::from_vec(&[d_col, d_col], gen::spd(&mut r, d_col, 0.4));
+    let mut h_clean = linalg::spd_inverse(&h0).unwrap();
+    let mut active = vec![0.0f32; d_col];
+    for &j in &alive_idx {
+        active[j] = 1.0;
+    }
+    // scrub dead structures exactly as a real removal would
+    for j in 0..d_col {
+        if active[j] > 0.0 {
+            continue;
+        }
+        for i in 0..d_row {
+            w_clean.data[i * d_col + j] = 0.0;
+        }
+        for k in 0..d_col {
+            h_clean.data[j * d_col + k] = 0.0;
+            h_clean.data[k * d_col + j] = 0.0;
+        }
+        h_clean.data[j * d_col + j] = 1.0;
+    }
+    let mut w_poison = w_clean.clone();
+    let mut h_poison = h_clean.clone();
+    for j in 0..d_col {
+        if active[j] > 0.0 {
+            continue;
+        }
+        for i in 0..d_row {
+            w_poison.data[i * d_col + j] = W_POISON;
+        }
+        for k in 0..d_col {
+            h_poison.data[j * d_col + k] = H_POISON;
+            h_poison.data[k * d_col + j] = H_POISON;
+        }
+    }
+    PoisonCase { alive_idx, d_row, d_col, active, w_clean, h_clean, w_poison, h_poison }
+}
+
+#[test]
+fn scores_compact_pass_never_reads_poisoned_dead_columns() {
+    let pc = poison_case(vec![0, 3, 5, 9, 12, 17, 21, 25, 28, 31], 9, 32);
+    assert!(use_compact_pass(pc.alive_idx.len(), pc.d_col));
+    let mut ops = NativeBackend::new(1);
+    let base =
+        with_level(Level::Scalar, || ops.scores(&pc.w_clean, &pc.h_clean, &pc.active)).unwrap();
+    for lvl in Level::available() {
+        for (tag, wv, hv) in
+            [("clean", &pc.w_clean, &pc.h_clean), ("poisoned", &pc.w_poison, &pc.h_poison)]
+        {
+            let got = with_level(lvl, || ops.scores(wv, hv, &pc.active)).unwrap();
+            assert_eq!(bits32(&got), bits32(&base), "scores {tag} {lvl:?}");
+        }
+    }
+    for j in 0..pc.d_col {
+        if !pc.alive_idx.contains(&j) {
+            assert!(base[j] >= BIG, "dead structure {j} not BIG");
+        }
+    }
+}
+
+#[test]
+fn multi_update_compact_ladder_never_touches_poisoned_dead_structures() {
+    let pc = poison_case(vec![1, 2, 4, 7, 9, 13, 16, 18, 22, 25, 27, 30], 10, 32);
+    // below half density from step 0, and the alive set only shrinks,
+    // so the ENTIRE removal ladder runs the compact passes
+    assert!(use_compact_pass(pc.alive_idx.len(), pc.d_col));
+    let n_remove = pc.alive_idx.len() - 2;
+    let is_alive = |j: usize| pc.alive_idx.contains(&j);
+    let mut ops = NativeBackend::new(1);
+    let (bw, bh, ba, bo) = with_level(Level::Scalar, || {
+        ops.multi_update(&pc.w_clean, &pc.h_clean, &pc.active, n_remove)
+    })
+    .unwrap();
+    for lvl in Level::available() {
+        let (cw, ch, ca, co) =
+            with_level(lvl, || ops.multi_update(&pc.w_clean, &pc.h_clean, &pc.active, n_remove))
+                .unwrap();
+        assert_eq!(co, bo, "clean order {lvl:?}");
+        assert_eq!(ca, ba, "clean mask {lvl:?}");
+        assert_eq!(tbits(&cw), tbits(&bw), "clean W {lvl:?}");
+        assert_eq!(tbits(&ch), tbits(&bh), "clean H {lvl:?}");
+        let (pw, ph, pa, po) =
+            with_level(lvl, || ops.multi_update(&pc.w_poison, &pc.h_poison, &pc.active, n_remove))
+                .unwrap();
+        assert_eq!(po, bo, "poisoned order {lvl:?}");
+        assert_eq!(pa, ba, "poisoned mask {lvl:?}");
+        for i in 0..pc.d_row {
+            for j in 0..pc.d_col {
+                let got = pw.at2(i, j);
+                if is_alive(j) {
+                    let want = bw.at2(i, j);
+                    assert_eq!(got.to_bits(), want.to_bits(), "W[{i},{j}] {lvl:?}");
+                } else {
+                    assert_eq!(got, W_POISON, "W sentinel overwritten at [{i},{j}] {lvl:?}");
+                }
+            }
+        }
+        for rr in 0..pc.d_col {
+            for cc in 0..pc.d_col {
+                let got = ph.at2(rr, cc);
+                if is_alive(rr) && is_alive(cc) {
+                    let want = bh.at2(rr, cc);
+                    assert_eq!(got.to_bits(), want.to_bits(), "H[{rr},{cc}] {lvl:?}");
+                } else {
+                    assert_eq!(got, H_POISON, "H sentinel overwritten at [{rr},{cc}] {lvl:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn alive_set_matches_set_difference_model() {
+    // Compaction bookkeeping: after ANY removal sequence (including
+    // misses and repeats) the alive list must equal the ascending
+    // set-difference of the initial indices and the removed ones, and
+    // contains/len/is_empty must agree with the model at every step.
+    Prop::new(150).check_msg(
+        "AliveSet ≡ ascending set difference",
+        |r| {
+            let n = 1 + r.below(64);
+            let mask: Vec<f32> =
+                (0..n).map(|_| if r.f64() < 0.3 { 0.0 } else { 1.0 }).collect();
+            let ops: Vec<usize> = (0..r.below(2 * n)).map(|_| r.below(n + 4)).collect();
+            (mask, ops)
+        },
+        |(mask, ops)| {
+            let n = mask.len();
+            let mut set = AliveSet::from_active(mask);
+            let mut model: Vec<usize> = (0..n).filter(|&j| mask[j] > 0.0).collect();
+            if set.as_slice() != &model[..] {
+                return Err(format!("init: {:?} vs {model:?}", set.as_slice()));
+            }
+            for &j in ops {
+                let pos = model.iter().position(|&x| x == j);
+                if set.remove(j) != pos.is_some() {
+                    return Err(format!("remove({j}) presence mismatch"));
+                }
+                if let Some(p) = pos {
+                    model.remove(p);
+                }
+                if set.as_slice() != &model[..] {
+                    return Err(format!("after remove({j}): {:?} vs {model:?}", set.as_slice()));
+                }
+                if set.len() != model.len() || set.is_empty() != model.is_empty() {
+                    return Err("len/is_empty disagree with model".into());
+                }
+                for probe in 0..n + 4 {
+                    if set.contains(probe) != model.contains(&probe) {
+                        return Err(format!("contains({probe}) disagrees"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------- thread determinism
+
+/// Random SPDY problem with up to ~40 levels per module: enough levels
+/// drop `solve_dp`'s per-chunk target below the 769-bucket row, so the
+/// bucket sweep genuinely spawns at budget ≥ 2 (few-level toys stay
+/// inline — both shapes are covered).
+fn random_dp_problem(r: &mut Rng) -> (SpdyProblem, Vec<f64>, f64) {
+    let nm = 1 + r.below(4);
+    let mut modules = Vec::new();
+    for l in 0..nm {
+        let n_levels = 2 + r.below(40);
+        let dense_cost = 0.5 + r.f64() * 9.5;
+        let mut options = Vec::new();
+        for k in 0..n_levels {
+            let frac = 1.0 - k as f64 / (n_levels - 1) as f64;
+            options.push(LevelOpt {
+                remaining: (frac * 8.0) as usize,
+                cost: dense_cost * frac * (0.5 + r.f64()),
+                prior: (1.0 - frac) * (0.5 + r.f64()),
+            });
+        }
+        options[0].cost = dense_cost;
+        options[0].prior = 0.0;
+        modules.push(ModuleLevels { layer: l, is_attn: l % 2 == 0, options });
+    }
+    let p = SpdyProblem { modules, overhead: r.f64() };
+    let budget = p.overhead + (p.dense_cost() - p.overhead) * (0.1 + 0.9 * r.f64());
+    let coeffs: Vec<f64> = (0..nm).map(|_| 0.1 + 2.0 * r.f64()).collect();
+    (p, coeffs, budget)
+}
+
+#[test]
+fn solve_dp_bit_identical_across_thread_budgets_and_nested() {
+    Prop::new(30).check_msg(
+        "solve_dp invariant under thread budget",
+        random_dp_problem,
+        |(p, coeffs, budget)| {
+            let base = with_thread_budget(1, || spdy::solve_dp(p, coeffs, *budget));
+            for b in [2usize, 8] {
+                let got = with_thread_budget(b, || spdy::solve_dp(p, coeffs, *budget));
+                if got != base {
+                    return Err(format!("budget {b}: {got:?} vs {base:?}"));
+                }
+            }
+            // inside an already-parallel region the sweep must
+            // degenerate to the inline loop — with identical output
+            let nested =
+                with_thread_budget(2, || parallel_tasks(2, |_| spdy::solve_dp(p, coeffs, *budget)));
+            for got in nested {
+                if got != base {
+                    return Err(format!("nested: {got:?} vs {base:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn threaded_kernels_bit_identical_across_budgets_and_nested() {
+    let mut r = Rng::new(0x5a1b_c0de);
+    // GEMM above its 64³ parallel gate
+    let a = Tensor::from_vec(&[80, 70], gen::vec_f32(&mut r, 80 * 70, 1.0));
+    let b = Tensor::from_vec(&[70, 66], gen::vec_f32(&mut r, 70 * 66, 1.0));
+    let base_mm = with_thread_budget(1, || a.matmul(&b));
+    // SPD inverse above its column-sweep chunk gate
+    let h = Tensor::from_vec(&[120, 120], gen::spd(&mut r, 120, 0.5));
+    let base_spd = with_thread_budget(1, || linalg::spd_inverse(&h).unwrap());
+    // g>1 score sweep above its ~64k-flop chunk gate
+    let (g, n, d_row) = (8usize, 16usize, 96usize);
+    let d_col = n * g;
+    let w = Tensor::from_vec(&[d_row, d_col], gen::vec_f32(&mut r, d_row * d_col, 1.0));
+    let hs = Tensor::from_vec(&[d_col, d_col], gen::spd(&mut r, d_col, 0.4));
+    let hinv = linalg::spd_inverse(&hs).unwrap();
+    let active = vec![1.0f32; n];
+    let mut ops = NativeBackend::new(g);
+    let base_sc = with_thread_budget(1, || ops.scores(&w, &hinv, &active).unwrap());
+
+    for budget in [2usize, 8] {
+        let mm = with_thread_budget(budget, || a.matmul(&b));
+        assert_eq!(tbits(&mm), tbits(&base_mm), "matmul budget {budget}");
+        let spd = with_thread_budget(budget, || linalg::spd_inverse(&h).unwrap());
+        assert_eq!(tbits(&spd), tbits(&base_spd), "spd_inverse budget {budget}");
+        let sc = with_thread_budget(budget, || ops.scores(&w, &hinv, &active).unwrap());
+        assert_eq!(bits32(&sc), bits32(&base_sc), "scores budget {budget}");
+    }
+    // dispatch level × thread budget: the forced level must reach the
+    // workers (kernels capture their Dispatch before spawning), and
+    // every (level, budget) cell must reproduce the scalar/serial bits
+    for lvl in Level::available() {
+        let mm = with_level(lvl, || with_thread_budget(2, || a.matmul(&b)));
+        assert_eq!(tbits(&mm), tbits(&base_mm), "matmul {lvl:?} budget 2");
+        let spd = with_level(lvl, || with_thread_budget(2, || linalg::spd_inverse(&h).unwrap()));
+        assert_eq!(tbits(&spd), tbits(&base_spd), "spd_inverse {lvl:?} budget 2");
+    }
+    // inside an already-parallel region: leaf workers run the kernels
+    // inline, and the bits still cannot move
+    let nested_mm = with_thread_budget(2, || parallel_tasks(2, |_| a.matmul(&b)));
+    for mm in nested_mm {
+        assert_eq!(tbits(&mm), tbits(&base_mm), "nested matmul");
+    }
+    let nested_spd =
+        with_thread_budget(2, || parallel_tasks(2, |_| linalg::spd_inverse(&h).unwrap()));
+    for spd in nested_spd {
+        assert_eq!(tbits(&spd), tbits(&base_spd), "nested spd_inverse");
+    }
+    let nested_sc = with_thread_budget(2, || {
+        parallel_tasks(2, |_| {
+            let mut o = NativeBackend::new(g);
+            o.scores(&w, &hinv, &active).unwrap()
+        })
+    });
+    for sc in nested_sc {
+        assert_eq!(bits32(&sc), bits32(&base_sc), "nested scores");
+    }
+}
